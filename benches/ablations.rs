@@ -1,0 +1,31 @@
+//! Bench: the DESIGN.md ablations — stage depth L, pairing schedule, and
+//! block variant at n=1024 on the teacher task.
+//! Results -> results/abl_{depth,pairing,variant}.csv.
+
+use spm_coordinator::{experiments, RunConfig};
+use spm_runtime::{Engine, Manifest};
+
+fn repo_path(rel: &str) -> String {
+    format!("{}/../../{}", env!("CARGO_MANIFEST_DIR"), rel)
+}
+
+
+fn env_steps(default: usize) -> usize {
+    std::env::var("SPM_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let man = Manifest::load(repo_path("artifacts"))?;
+    for which in ["depth", "pairing", "variant"] {
+        let cfg = RunConfig {
+            steps: env_steps(120),
+            eval_batches: 10,
+            out_csv: repo_path(&format!("results/abl_{which}.csv")),
+            ..Default::default()
+        };
+        let report = experiments::run_ablation(&engine, &man, which, &cfg)?;
+        println!("{report}\n");
+    }
+    Ok(())
+}

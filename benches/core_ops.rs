@@ -1,0 +1,42 @@
+//! Bench: raw operator complexity (paper §5) — native single-thread SPM
+//! stage cost O(nL) vs dense matmul O(n^2), plus per-stage fwd/bwd micro
+//! timings for both variants.
+
+use spm_core::rng::Rng;
+use spm_core::spm::{Spm, SpmSpec, Variant};
+use spm_core::tensor::Mat;
+use spm_coordinator::experiments;
+use std::time::Instant;
+
+fn main() {
+    // headline scaling table (§5: O(nL) vs O(n^2))
+    println!("{}", experiments::run_core_scaling(&[256, 512, 1024, 2048, 4096], 64));
+
+    // per-variant stage micro-bench at n=4096
+    spm_core::parallel::set_threads(1);
+    let n = 4096;
+    let batch = 64;
+    let mut rng = Rng::new(1);
+    let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+    println!("\nper-op micro (n={n}, batch={batch}, single thread)");
+    println!("{:<28} {:>10}", "op", "ms/call");
+    for variant in [Variant::Rotation, Variant::General] {
+        let op = Spm::new(SpmSpec::new(n, variant));
+        let params = op.init_params(&mut rng);
+        let reps = 10;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = op.forward(&params, &x);
+        }
+        let fwd = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let (y, trace) = op.forward_trace(&params, &x);
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            let _ = op.backward(&params, &x, &trace, &y);
+        }
+        let bwd = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("{:<28} {:>10.3}", format!("spm {} fwd (L=12)", variant.name()), fwd);
+        println!("{:<28} {:>10.3}", format!("spm {} bwd (L=12)", variant.name()), bwd);
+    }
+    spm_core::parallel::set_threads(0);
+}

@@ -1,0 +1,111 @@
+//! Perf bench (EXPERIMENTS.md §Perf): quantifies the two L3 hot-path
+//! optimizations:
+//!   1. buffer-resident stepping (execute_b + untuple_result patch) vs the
+//!      naive literal path (download+decompose+reupload all state per step);
+//!   2. prefetched batch generation vs inline generation.
+
+use std::time::Instant;
+
+use spm_coordinator::experiments::DataSource;
+use spm_data::batch::Prefetcher;
+use spm_runtime::{DType, Engine, HostTensor, Manifest, TrainSession};
+
+fn repo_path(rel: &str) -> String {
+    format!("{}/../../{}", env!("CARGO_MANIFEST_DIR"), rel)
+}
+
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let man = Manifest::load(repo_path("artifacts"))?;
+    let entry_name = std::env::var("SPM_PERF_ENTRY").unwrap_or("table2_spm_n2048".into());
+    let steps: usize =
+        std::env::var("SPM_PERF_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+
+    // ---- path A: buffer-resident (the production path) --------------------
+    let mut sess = TrainSession::new(&engine, &man, &entry_name, &["init", "train"])?;
+    sess.init(0)?;
+    let n = sess.entry.meta_usize("n")?;
+    let batch = sess.entry.meta_usize("batch")?;
+    let data = DataSource::Teacher { n, classes: 4, seed: 1 };
+    let (x0, y0) = data.batch(0, batch, true);
+    let x = HostTensor::F32(x0.data.clone());
+    let y = HostTensor::from_labels(&y0);
+    sess.train_step(&x, &y)?; // warmup
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        sess.train_step(&x, &y)?;
+    }
+    let buf_ms = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+
+    // ---- path B: naive literal path (state round-trips the host) ----------
+    let entry = man.entry(&entry_name)?.clone();
+    let train = engine.load(&entry.artifact("train")?.file)?;
+    let art = entry.artifact("train")?;
+    // initial state as literals
+    let mut state: Vec<xla::Literal> = Vec::new();
+    for spec in &art.inputs[..3 * entry.nleaves + 1] {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match spec.dtype {
+            DType::F32 => xla::Literal::vec1(&vec![0.05f32; spec.elements()]).reshape(&dims)?,
+            DType::I32 => xla::Literal::vec1(&vec![0i32; spec.elements()]).reshape(&dims)?,
+        };
+        state.push(lit);
+    }
+    let x_lit = {
+        let spec = &art.inputs[3 * entry.nleaves + 1];
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&x0.data).reshape(&dims)?
+    };
+    let y_lit = {
+        let spec = &art.inputs[3 * entry.nleaves + 2];
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let yv: Vec<i32> = y0.iter().map(|&v| v as i32).collect();
+        xla::Literal::vec1(&yv).reshape(&dims)?
+    };
+    let run_literal_step = |state: &mut Vec<xla::Literal>| -> anyhow::Result<f64> {
+        let t = Instant::now();
+        let mut args: Vec<&xla::Literal> = state.iter().collect();
+        args.push(&x_lit);
+        args.push(&y_lit);
+        let outs = train.execute::<&xla::Literal>(&args)?;
+        // download every state output back to host literals (the naive cost)
+        let mut new_state = Vec::with_capacity(3 * entry.nleaves + 1);
+        for b in outs[0][..3 * entry.nleaves + 1].iter() {
+            new_state.push(b.to_literal_sync()?);
+        }
+        *state = new_state;
+        Ok(t.elapsed().as_secs_f64() * 1e3)
+    };
+    run_literal_step(&mut state)?; // warmup
+    let mut lit_ms = 0.0;
+    for _ in 0..steps {
+        lit_ms += run_literal_step(&mut state)?;
+    }
+    lit_ms /= steps as f64;
+
+    // ---- prefetch vs inline batch generation ------------------------------
+    let gen_steps = 50;
+    let t0 = Instant::now();
+    for i in 0..gen_steps {
+        let _ = data.batch(i, batch, true);
+    }
+    let gen_ms = t0.elapsed().as_secs_f64() * 1e3 / gen_steps as f64;
+    let data2 = data.clone();
+    let mut pf = Prefetcher::new(gen_steps, 4, move |i| data2.batch(i, batch, true));
+    let t1 = Instant::now();
+    while let Some(b) = pf.next() {
+        drop(b);
+        // simulate a device step long enough for the producer to keep up
+        std::thread::sleep(std::time::Duration::from_micros(500));
+    }
+    let pf_ms = t1.elapsed().as_secs_f64() * 1e3 / gen_steps as f64 - 0.5;
+
+    println!("perf paths ({entry_name}, {steps} steps, batch {batch}, n {n})");
+    println!("{:<44} {:>10.2} ms/step", "buffer-resident step (production)", buf_ms);
+    println!("{:<44} {:>10.2} ms/step", "literal round-trip step (naive)", lit_ms);
+    println!("{:<44} {:>10.2}x", "state-residency speedup", lit_ms / buf_ms);
+    println!("{:<44} {:>10.2} ms", "batch generation inline", gen_ms);
+    println!("{:<44} {:>10.2} ms", "batch generation prefetched (hidden)", pf_ms.max(0.0));
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerates paper Tables 3 & 4 (char-LM d=4096, dense vs SPM
+//! butterfly L=12). SPM_BENCH_STEPS overrides the step count (paper: 2000
+//! steps, eval every 200). Results -> results/table3.csv, results/table4.csv.
+
+use spm_coordinator::{experiments, RunConfig};
+use spm_runtime::{Engine, Manifest};
+
+fn repo_path(rel: &str) -> String {
+    format!("{}/../../{}", env!("CARGO_MANIFEST_DIR"), rel)
+}
+
+
+fn env_steps(default: usize) -> usize {
+    std::env::var("SPM_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = env_steps(30);
+    let engine = Engine::cpu()?;
+    let man = Manifest::load(repo_path("artifacts"))?;
+    for (table, entry, csv) in [
+        ("Table 3 (dense)", "charlm_dense_d4096", repo_path("results/table3.csv")),
+        ("Table 4 (SPM)", "charlm_spm_d4096", repo_path("results/table4.csv")),
+    ] {
+        let cfg = RunConfig {
+            steps,
+            eval_every: (steps / 3).max(1),
+            eval_batches: 10,
+            out_csv: csv.clone(),
+            ..Default::default()
+        };
+        let rows = experiments::run_charlm(&engine, &man, entry, &cfg)?;
+        println!("{}", experiments::render_charlm_table(table, &rows));
+    }
+    println!("paper reference: dense ~22000 ms/step, BPC 3.08@800; SPM ~5700 ms/step, BPC 2.98@1000");
+    Ok(())
+}

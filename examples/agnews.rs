@@ -1,0 +1,29 @@
+//! Table 2 reproduction (paper §9.2): AG-News-proxy text classification on
+//! hashed sparse features, Dense vs SPM (L=12) at n in {2048, 4096}.
+//!
+//! Run: cargo run --release --example agnews -- [--widths 2048] [--steps 300] [--native]
+
+use spm_coordinator::{experiments, RunConfig};
+use spm_runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |key: &str| args.iter().position(|a| a == key).and_then(|i| args.get(i + 1));
+    let widths: Vec<usize> = get("--widths")
+        .map(|s| s.split(',').map(|w| w.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![2048]);
+    let native = args.iter().any(|a| a == "--native");
+    let mut cfg = RunConfig { steps: 200, eval_batches: 10, ..Default::default() };
+    if let Some(s) = get("--steps") {
+        cfg.steps = s.parse()?;
+    }
+    let report = if native {
+        experiments::run_table2(None, None, &widths, &cfg, true)?
+    } else {
+        let engine = Engine::cpu()?;
+        let man = Manifest::load(&cfg.artifacts)?;
+        experiments::run_table2(Some(&engine), Some(&man), &widths, &cfg, false)?
+    };
+    println!("{report}");
+    Ok(())
+}

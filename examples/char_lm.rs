@@ -1,0 +1,38 @@
+//! Tables 3 & 4 reproduction (paper §9.3) — the end-to-end driver:
+//! char-level language modeling on the Shakespeare-like corpus (~1 MB
+//! train / 111 KB valid), d=4096 projection, T=128, B=32, eval every 200
+//! steps over 10 valid batches, NLL (nats) + BPC.
+//!
+//! Run (full, matches the paper recipe but fewer steps by default):
+//!   cargo run --release --example char_lm -- --entry charlm_spm_d4096 --steps 400 --eval-every 100
+//! Quick CI profile:
+//!   cargo run --release --example char_lm -- --small
+
+use spm_coordinator::{experiments, RunConfig};
+use spm_runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |key: &str| args.iter().position(|a| a == key).and_then(|i| args.get(i + 1));
+    let small = args.iter().any(|a| a == "--small");
+    let entry = get("--entry").cloned().unwrap_or_else(|| {
+        if small { "charlm_spm_small".into() } else { "charlm_spm_d4096".into() }
+    });
+    let mut cfg = RunConfig {
+        steps: if small { 60 } else { 400 },
+        eval_every: if small { 20 } else { 100 },
+        eval_batches: 10,
+        ..Default::default()
+    };
+    if let Some(s) = get("--steps") {
+        cfg.steps = s.parse()?;
+    }
+    if let Some(s) = get("--eval-every") {
+        cfg.eval_every = s.parse()?;
+    }
+    let engine = Engine::cpu()?;
+    let man = Manifest::load(&cfg.artifacts)?;
+    let rows = experiments::run_charlm(&engine, &man, &entry, &cfg)?;
+    println!("{}", experiments::render_charlm_table(&format!("char-LM ({entry})"), &rows));
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Table 1 reproduction (paper §9.1): compositional-teacher width sweep,
+//! Dense vs SPM students, accuracy + wall-clock crossover.
+//!
+//! Run: cargo run --release --example compositional_teacher -- [--widths 256,512] [--steps 1200] [--native]
+//! Defaults keep runtime modest; pass the paper's 1200 steps for the full row.
+
+use spm_coordinator::{experiments, RunConfig};
+use spm_runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |key: &str| args.iter().position(|a| a == key).and_then(|i| args.get(i + 1));
+    let widths: Vec<usize> = get("--widths")
+        .map(|s| s.split(',').map(|w| w.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![256, 512]);
+    let native = args.iter().any(|a| a == "--native");
+    let mut cfg = RunConfig { steps: 300, eval_batches: 10, ..Default::default() };
+    if let Some(s) = get("--steps") {
+        cfg.steps = s.parse()?;
+    }
+    let report = if native {
+        experiments::run_table1(None, None, &widths, &cfg, true)?
+    } else {
+        let engine = Engine::cpu()?;
+        let man = Manifest::load(&cfg.artifacts)?;
+        experiments::run_table1(Some(&engine), Some(&man), &widths, &cfg, false)?
+    };
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,354 @@
+"""AOT lowering driver: python runs ONCE, at build time, and never again.
+
+For every experiment configuration this script lowers four flat-signature
+functions (init / train / eval / forward, see train.py) to **HLO text** and
+writes them to ``artifacts/`` together with ``manifest.json`` describing
+each artifact's inputs/outputs and the parameter-leaf layout.
+
+HLO *text* — not ``lowered.compile()`` output, not a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 serializes protos
+with 64-bit instruction ids that the ``xla`` crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs are lowered **untupled** (``return_tuple=False``) so the PJRT
+runtime hands the rust side one buffer per output; parameters and optimizer
+state stay resident on device across the whole training run.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--sets table1,charlm,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import time
+
+# AOT artifacts use the plain-jnp stage math: the xla_extension 0.5.1
+# runtime the rust side links against mis-executes deep compositions of
+# interpret-mode pallas grid loops at some (n, L) shapes (silent zeros),
+# and the fused elementwise HLO is faster on CPU anyway. The pallas path
+# remains the TPU-authoring path, pytest-verified against the oracle AND
+# against this path.
+os.environ.setdefault("SPM_STAGE_IMPL", "jnp")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    # print_large_constants=True is LOAD-BEARING: the default printer elides
+    # big constant literals as `constant({...})` and the xla_extension 0.5.1
+    # text parser silently materializes those as ZEROS — corrupting e.g. the
+    # SPM pairing-permutation index arrays (diagnosed in EXPERIMENTS.md §Perf).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Entry registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Entry:
+    """One model configuration -> up to four artifacts."""
+
+    name: str
+    sets: tuple[str, ...]
+    init_fn: object
+    apply_fn: object
+    loss: object
+    x_spec: jax.ShapeDtypeStruct
+    y_spec: jax.ShapeDtypeStruct
+    meta: dict
+    adam: T.AdamCfg = dataclasses.field(default_factory=T.AdamCfg)
+    emit: tuple[str, ...] = ("init", "train", "eval", "forward")
+
+
+ENTRIES: list[Entry] = []
+
+
+def classifier_entry(name, sets, n, num_classes, kind, batch,
+                     variant="general", schedule="butterfly",
+                     num_stages=None, seed=0, lr=1e-3, **extra):
+    mixer = M.MixerCfg(n=n, kind=kind, variant=variant, schedule=schedule,
+                       num_stages=num_stages, seed=seed)
+    cfg = M.ClassifierCfg(mixer=mixer, num_classes=num_classes)
+    meta = {
+        "model": "classifier", "n": n, "num_classes": num_classes,
+        "kind": kind, "batch": batch,
+        "variant": variant, "schedule": schedule,
+        "num_stages": mixer.stages() if kind == "spm" else 0,
+        "fingerprint": mixer.spec().fingerprint() if kind == "spm" else "",
+        "param_count": None,  # filled at build
+        **extra,
+    }
+    ENTRIES.append(Entry(
+        name=name, sets=tuple(sets),
+        init_fn=lambda key: M.init_classifier(key, cfg),
+        apply_fn=lambda p, x: M.apply_classifier(cfg, p, x),
+        loss=T.classifier_loss,
+        x_spec=spec((batch, n)), y_spec=spec((batch,), I32),
+        meta=meta, adam=T.AdamCfg(lr=lr),
+    ))
+
+
+def charlm_entry(name, sets, d, kind, batch, seq_len,
+                 variant="rotation", schedule="butterfly",
+                 num_stages=None, seed=0, lr=1e-3):
+    mixer = M.MixerCfg(n=d, kind=kind, variant=variant, schedule=schedule,
+                       num_stages=num_stages, seed=seed)
+    cfg = M.CharLMCfg(mixer=mixer, seq_len=seq_len)
+    meta = {
+        "model": "charlm", "n": d, "vocab": cfg.vocab,
+        "kind": kind, "batch": batch, "seq_len": seq_len,
+        "variant": variant, "schedule": schedule,
+        "num_stages": mixer.stages() if kind == "spm" else 0,
+        "fingerprint": mixer.spec().fingerprint() if kind == "spm" else "",
+        "param_count": None,
+    }
+    ENTRIES.append(Entry(
+        name=name, sets=tuple(sets),
+        init_fn=lambda key: M.init_charlm(key, cfg),
+        apply_fn=lambda p, x: M.apply_charlm(cfg, p, x),
+        loss=T.charlm_loss,
+        x_spec=spec((batch, seq_len), I32), y_spec=spec((batch, seq_len), I32),
+        meta=meta, adam=T.AdamCfg(lr=lr),
+    ))
+
+
+def gru_entry(name, sets, n, num_classes, kind, batch, seq_len,
+              variant="general", schedule="shift", num_stages=None, lr=1e-3):
+    mixer = M.MixerCfg(n=n, kind=kind, variant=variant, schedule=schedule,
+                       num_stages=num_stages)
+    cfg = M.GRUCfg(mixer=mixer, num_classes=num_classes)
+    meta = {
+        "model": "gru", "n": n, "num_classes": num_classes, "kind": kind,
+        "batch": batch, "seq_len": seq_len, "variant": variant,
+        "schedule": schedule,
+        "num_stages": mixer.stages() if kind == "spm" else 0,
+        "fingerprint": mixer.spec().fingerprint() if kind == "spm" else "",
+        "param_count": None,
+    }
+    ENTRIES.append(Entry(
+        name=name, sets=tuple(sets),
+        init_fn=lambda key: M.init_gru(key, cfg),
+        apply_fn=lambda p, x: M.apply_gru(cfg, p, x),
+        loss=T.classifier_loss,
+        x_spec=spec((batch, seq_len, n)), y_spec=spec((batch,), I32),
+        meta=meta, adam=T.AdamCfg(lr=lr),
+    ))
+
+
+def attention_entry(name, sets, d, kind, batch, seq_len, heads=4,
+                    variant="rotation", schedule="butterfly",
+                    num_stages=None, lr=1e-3):
+    mixer = M.MixerCfg(n=d, kind=kind, variant=variant, schedule=schedule,
+                       num_stages=num_stages)
+    cfg = M.AttentionCfg(mixer=mixer, num_heads=heads)
+
+    def mse(out, y):
+        l = jnp.mean((out - y) ** 2)
+        return l, l
+
+    meta = {
+        "model": "attention", "n": d, "heads": heads, "kind": kind,
+        "batch": batch, "seq_len": seq_len, "variant": variant,
+        "schedule": schedule,
+        "num_stages": mixer.stages() if kind == "spm" else 0,
+        "fingerprint": mixer.spec().fingerprint() if kind == "spm" else "",
+        "param_count": None,
+    }
+    ENTRIES.append(Entry(
+        name=name, sets=tuple(sets),
+        init_fn=lambda key: M.init_attention(key, cfg),
+        apply_fn=lambda p, x: M.apply_attention(cfg, p, x),
+        loss=mse,
+        x_spec=spec((batch, seq_len, d)), y_spec=spec((batch, seq_len, d)),
+        meta=meta, adam=T.AdamCfg(lr=lr),
+    ))
+
+
+def teacher_entry(name, sets, n, num_classes, batch, schedule="butterfly", seed=7):
+    """Teacher forward only: labels are generated on the rust side by
+    calling this artifact (init once, forward per batch)."""
+    cfg = M.TeacherCfg(n=n, num_classes=num_classes, schedule=schedule, seed=seed)
+    meta = {
+        "model": "teacher", "n": n, "num_classes": num_classes,
+        "kind": "spm", "batch": batch, "variant": "general",
+        "schedule": schedule, "num_stages": 0, "fingerprint": "",
+        "param_count": None,
+    }
+    ENTRIES.append(Entry(
+        name=name, sets=tuple(sets),
+        init_fn=lambda key: M.init_teacher(key, cfg),
+        apply_fn=lambda p, x: M.teacher_labels(cfg, p, x),
+        loss=None,
+        x_spec=spec((batch, n)), y_spec=None,
+        meta=meta, emit=("init", "forward"),
+    ))
+
+
+def register_all():
+    # --- Table 1: compositional teacher, width sweep (paper §9.1) ----------
+    for n in (256, 512, 1024, 2048):
+        sets = ("table1", f"table1_n{n}")
+        teacher_entry(f"teacher_n{n}", sets, n, 10, 256)
+        classifier_entry(f"table1_dense_n{n}", sets, n, 10, "dense", 256)
+        classifier_entry(f"table1_spm_n{n}", sets, n, 10, "spm", 256,
+                         variant="general", schedule="butterfly")
+    # --- Table 2: AG-News proxy, hashed sparse features (paper §9.2) -------
+    for n in (2048, 4096):
+        sets = ("table2", f"table2_n{n}")
+        classifier_entry(f"table2_dense_n{n}", sets, n, 4, "dense", 256)
+        classifier_entry(f"table2_spm_n{n}", sets, n, 4, "spm", 256,
+                         variant="general", schedule="butterfly", num_stages=12)
+    # --- Tables 3/4: char-level LM (paper §9.3) -----------------------------
+    charlm_entry("charlm_dense_d4096", ("charlm",), 4096, "dense", 32, 128)
+    charlm_entry("charlm_spm_d4096", ("charlm",), 4096, "spm", 32, 128,
+                 variant="rotation", schedule="butterfly", num_stages=12)
+    # --- Small configs: tests, quickstart, demos ----------------------------
+    classifier_entry("clf_dense_small", ("test",), 64, 10, "dense", 32)
+    classifier_entry("clf_spm_small", ("test",), 64, 10, "spm", 32)
+    teacher_entry("teacher_small", ("test",), 64, 10, 32)
+    charlm_entry("charlm_dense_small", ("test",), 256, "dense", 8, 32)
+    charlm_entry("charlm_spm_small", ("test",), 256, "spm", 8, 32,
+                 variant="rotation", num_stages=8)
+    gru_entry("gru_dense_small", ("gru", "test"), 64, 4, "dense", 32, 8)
+    # keep the SPM GRU artifact small: interpret-mode pallas unrolls
+    # T x 6 maps x L stages x (fwd+bwd) kernels and XLA compile time grows
+    # superlinearly in the resulting HLO; T=4, L=3 keeps it tractable.
+    gru_entry("gru_spm_small", ("gru", "test"), 64, 4, "spm", 32, 4, num_stages=3)
+    attention_entry("attn_dense_small", ("attention", "test"), 64, "dense", 8, 32)
+    attention_entry("attn_spm_small", ("attention", "test"), 64, "spm", 8, 32)
+    # --- Ablations: depth / schedule / variant at n=1024 (DESIGN Abl-*) -----
+    n = 1024
+    for L in (1, 2, 5, 10, 20):
+        classifier_entry(f"abl_depth_L{L}", ("ablation_depth",), n, 10, "spm",
+                         256, variant="general", num_stages=L)
+    for sched in ("butterfly", "shift", "random"):
+        classifier_entry(f"abl_sched_{sched}", ("ablation_pairing",), n, 10,
+                         "spm", 256, variant="general", schedule=sched)
+    for var in ("rotation", "general"):
+        classifier_entry(f"abl_variant_{var}", ("ablation_variant",), n, 10,
+                         "spm", 256, variant=var)
+    # paper §11 future work: hybrid SPM + low-rank dense correction
+    classifier_entry("abl_hybrid_r16", ("ablation_hybrid", "hybrid"), n, 10,
+                     "hybrid", 256, variant="general")
+    if not any(e.name == "teacher_n1024" for e in ENTRIES):
+        teacher_entry("teacher_n1024", ("ablation",), n, 10, 256)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def arg_descr(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(e: Entry, out_dir: str) -> dict:
+    fns = T.make_flat_fns(e.init_fn, e.apply_fn, e.loss or (lambda o, y: (o, o)),
+                          e.adam)
+    n = fns["nleaves"]
+    pspecs = [spec(s, d) for s, d in zip(fns["leaf_shapes"], fns["leaf_dtypes"])]
+    record = {
+        "name": e.name,
+        "meta": {**e.meta, "param_count": int(sum(int(np.prod(s)) for s in fns["leaf_shapes"]))},
+        "nleaves": n,
+        "leaves": [
+            {"name": nm, "shape": list(s), "dtype": d}
+            for nm, s, d in zip(fns["leaf_names"], fns["leaf_shapes"], fns["leaf_dtypes"])
+        ],
+        "artifacts": {},
+    }
+
+    def emit(kind, fn, arg_specs, arg_names):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{e.name}.{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *arg_specs)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        record["artifacts"][kind] = {
+            "file": fname,
+            "inputs": [arg_descr(nm, s) for nm, s in zip(arg_names, arg_specs)],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in out_shapes],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  [{e.name}.{kind}] {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s")
+
+    pnames = fns["leaf_names"]
+    if "init" in e.emit:
+        emit("init", fns["init"], [spec((), I32)], ["seed"])
+    if "train" in e.emit:
+        emit("train", fns["train"],
+             pspecs + pspecs + pspecs + [spec((), F32), e.x_spec, e.y_spec],
+             pnames + [f"m.{p}" for p in pnames] + [f"v.{p}" for p in pnames]
+             + ["step", "x", "y"])
+    if "eval" in e.emit:
+        emit("eval", fns["eval"], pspecs + [e.x_spec, e.y_spec],
+             pnames + ["x", "y"])
+    if "forward" in e.emit:
+        emit("forward", fns["forward"], pspecs + [e.x_spec], pnames + ["x"])
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sets", default="all",
+                    help="comma-separated artifact sets (e.g. test,table1) or 'all'")
+    args = ap.parse_args()
+
+    register_all()
+    wanted = None if args.sets == "all" else set(args.sets.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"entries": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    built = 0
+    for e in ENTRIES:
+        if wanted is not None and not (wanted & set(e.sets)):
+            continue
+        print(f"[aot] lowering {e.name} (sets={','.join(e.sets)})")
+        manifest["entries"][e.name] = lower_entry(e, args.out_dir)
+        built += 1
+
+    manifest["format_version"] = 1
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] built {built} entries in {time.time()-t0:.1f}s -> {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Pure-jnp reference oracle for SPM (paper §2-§4).
+
+Everything here is written in the most literal way possible — explicit
+gathers, explicit per-pair 2x2 math following equations (2)-(19) of the
+paper — so that the Pallas kernels and the rust implementation both have an
+unambiguous ground truth to match.  No pallas, no custom_vjp, no cleverness.
+
+Parameter conventions (shared across python and rust):
+
+* rotation variant (paper §3.1): per stage, ``theta`` of shape ``(P,)``
+  (``P = floor(n/2)`` pairs).
+* general variant (paper §3.2): per stage, ``abcd`` of shape ``(P, 4)``
+  laid out ``[a, b, c, d]``.
+* odd-n leftover coordinate: mixed by a learned 1x1 scale, one scalar per
+  stage (paper §5 option (ii)); shape ``(1,)`` (present even for even n,
+  unused, to keep pytrees static).
+* full operator: ``d_in (n,)``, ``d_out (n,)``, ``bias (n,)`` and the
+  per-stage mixing parameters (paper §2.1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Per-stage forward (eqs. 5-6 / 10-11)
+# ---------------------------------------------------------------------------
+
+def stage_fwd_rotation(x, left, right, leftover, theta, lone_scale):
+    """One rotation stage applied to ``x`` of shape (..., n)."""
+    x1 = x[..., left]
+    x2 = x[..., right]
+    c = jnp.cos(theta)
+    s = jnp.sin(theta)
+    y1 = c * x1 - s * x2  # eq. (5)
+    y2 = s * x1 + c * x2  # eq. (6)
+    y = jnp.zeros_like(x)
+    y = y.at[..., left].set(y1)
+    y = y.at[..., right].set(y2)
+    if leftover is not None:
+        y = y.at[..., leftover].set(lone_scale[0] * x[..., leftover])
+    return y
+
+
+def stage_fwd_general(x, left, right, leftover, abcd, lone_scale):
+    """One general 2x2 stage applied to ``x`` of shape (..., n)."""
+    x1 = x[..., left]
+    x2 = x[..., right]
+    a, b, c, d = abcd[:, 0], abcd[:, 1], abcd[:, 2], abcd[:, 3]
+    y1 = a * x1 + b * x2  # eq. (10)
+    y2 = c * x1 + d * x2  # eq. (11)
+    y = jnp.zeros_like(x)
+    y = y.at[..., left].set(y1)
+    y = y.at[..., right].set(y2)
+    if leftover is not None:
+        y = y.at[..., leftover].set(lone_scale[0] * x[..., leftover])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Per-stage backward (eqs. 7-9 / 12-14), closed form per the paper
+# ---------------------------------------------------------------------------
+
+def stage_bwd_rotation(x, g, left, right, leftover, theta, lone_scale):
+    """Returns (g_x, g_theta, g_lone) for one rotation stage.
+
+    ``x`` is the *stage input*, ``g`` the gradient w.r.t. the stage output.
+    Batch dims are summed into the parameter gradients (paper §4, batch
+    setting).
+    """
+    x1 = x[..., left]
+    x2 = x[..., right]
+    d1 = g[..., left]
+    d2 = g[..., right]
+    c = jnp.cos(theta)
+    s = jnp.sin(theta)
+    gx1 = c * d1 + s * d2     # eq. (7)
+    gx2 = -s * d1 + c * d2    # eq. (8)
+    # eq. (9)
+    gth = d1 * (-s * x1 - c * x2) + d2 * (c * x1 - s * x2)
+    bdims = tuple(range(x.ndim - 1))
+    g_theta = jnp.sum(gth, axis=bdims) if bdims else gth
+    gx = jnp.zeros_like(x)
+    gx = gx.at[..., left].set(gx1)
+    gx = gx.at[..., right].set(gx2)
+    g_lone = jnp.zeros((1,), x.dtype)
+    if leftover is not None:
+        gx = gx.at[..., leftover].set(lone_scale[0] * g[..., leftover])
+        gl = g[..., leftover] * x[..., leftover]
+        g_lone = (jnp.sum(gl) if bdims else gl).reshape(1)
+    return gx, g_theta, g_lone
+
+
+def stage_bwd_general(x, g, left, right, leftover, abcd, lone_scale):
+    """Returns (g_x, g_abcd, g_lone) for one general stage."""
+    x1 = x[..., left]
+    x2 = x[..., right]
+    d1 = g[..., left]
+    d2 = g[..., right]
+    a, b, c, d = abcd[:, 0], abcd[:, 1], abcd[:, 2], abcd[:, 3]
+    gx1 = a * d1 + c * d2  # eq. (12)
+    gx2 = b * d1 + d * d2  # eq. (13)
+    bdims = tuple(range(x.ndim - 1))
+    # eq. (14)
+    ga = jnp.sum(d1 * x1, axis=bdims)
+    gb = jnp.sum(d1 * x2, axis=bdims)
+    gc = jnp.sum(d2 * x1, axis=bdims)
+    gd = jnp.sum(d2 * x2, axis=bdims)
+    g_abcd = jnp.stack([ga, gb, gc, gd], axis=-1)
+    gx = jnp.zeros_like(x)
+    gx = gx.at[..., left].set(gx1)
+    gx = gx.at[..., right].set(gx2)
+    g_lone = jnp.zeros((1,), x.dtype)
+    if leftover is not None:
+        gx = gx.at[..., leftover].set(lone_scale[0] * g[..., leftover])
+        gl = g[..., leftover] * x[..., leftover]
+        g_lone = (jnp.sum(gl) if bdims else gl).reshape(1)
+    return gx, g_abcd, g_lone
+
+
+# ---------------------------------------------------------------------------
+# Full operator (eqs. 2-4) and its materialization
+# ---------------------------------------------------------------------------
+
+def spm_fwd(params, x, stages, variant):
+    """Full SPM forward: y = D_out (prod_l B_l) D_in x + bias.
+
+    ``params`` is a dict with keys ``d_in``, ``d_out``, ``bias``, ``mix``
+    (list of per-stage theta/abcd), ``lone`` (list of per-stage 1x1 scales).
+    ``stages`` is a list of StagePairing.  Returns ``y``.
+    """
+    z = params["d_in"] * x  # eq. (2)
+    for l, st in enumerate(stages):  # eq. (3)
+        lv = None if st.leftover is None else int(st.leftover)
+        if variant == "rotation":
+            z = stage_fwd_rotation(z, st.left, st.right, lv,
+                                   params["mix"][l], params["lone"][l])
+        else:
+            z = stage_fwd_general(z, st.left, st.right, lv,
+                                  params["mix"][l], params["lone"][l])
+    return params["d_out"] * z + params["bias"]  # eq. (4)
+
+
+def spm_materialize(params, n, stages, variant):
+    """Materialize the full n x n matrix W with SPM(x) = W x + bias.
+
+    Used by tests to check dense-equivalence and operator-norm properties
+    (paper §8.4).  O(n^2 L) — test-only.
+    """
+    eye = jnp.eye(n, dtype=jnp.float32)
+    cols = spm_fwd(params, eye, stages, variant) - params["bias"]
+    # row k of `cols` is SPM(e_k) = W e_k = column k of W
+    return jnp.transpose(cols)
+
+
+def dense_fwd(w, b, x):
+    """The dense comparator: y = x @ W^T + b (paper §1)."""
+    return x @ w.T + b

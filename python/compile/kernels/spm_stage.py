@@ -1,0 +1,208 @@
+"""L1 Pallas kernels: the SPM stage hot-spot (paper §3).
+
+Layout strategy (DESIGN.md §2 "Hardware adaptation"): the per-stage pairing
+is compiled into a *static permutation outside the kernel*, so the kernel
+itself never gathers.  It sees two contiguous half-tensors
+
+    xa = z[:, left]   (B, P)
+    xb = z[:, right]  (B, P)
+
+and performs the pure elementwise 2x2 mix over ``(block_b, P)`` tiles:
+
+    rotation (eqs. 5-6):   ya = cos*xa - sin*xb ;  yb = sin*xa + cos*xb
+    general  (eqs. 10-11): ya = a*xa + b*xb     ;  yb = c*xa + d*xb
+
+The grid walks the batch dimension; each grid step streams one
+``(block_b, P)`` slab of each operand HBM->VMEM, mixes with 4-6 VPU FMAs
+per element, and writes back.  VMEM footprint per step is
+``(2 inputs + 2 outputs) * block_b * P * 4B + params`` — for the paper's
+largest configuration (n=4096 => P=2048, block_b=256) that is ~8.4 MiB;
+``block_b`` is chosen per width to stay under ~8 MiB (see ``pick_block_b``).
+
+TPU note: the op is elementwise, so the MXU is idle by design — the roofline
+is memory bandwidth, and the BlockSpec schedule above is exactly the
+HBM<->VMEM streaming plan.  ``interpret=True`` everywhere: the CPU PJRT
+client cannot execute Mosaic custom-calls, and interpret-mode lowers to
+plain HLO that both pytest and the rust runtime can run.
+
+Backward kernels implement the closed-form input gradients (eqs. 7-8 /
+12-13).  Parameter gradients need a cross-batch reduction; the kernels emit
+the elementwise integrand and the (jnp) wrapper reduces — XLA fuses the
+reduction with the kernel output, so nothing is materialized beyond one
+slab.  For the rotation variant the wrapper exploits the identity
+
+    dL/dtheta = delta2 * y1 - delta1 * y2        (eq. 9 rewritten)
+
+so the backward needs only the stage *outputs*, enabling O(Bn)-memory
+backprop through the whole operator (see spm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget per grid step (bytes); block_b is chosen to respect it.
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def stage_impl() -> str:
+    """Which stage implementation to trace into the graph.
+
+    * ``"pallas"`` (default) — the kernels below, interpret=True. This is
+      the TPU-authoring path and what pytest verifies against the oracle.
+    * ``"jnp"`` — identical math as plain jnp elementwise ops. Used by
+      aot.py for the artifacts the rust runtime executes: the bundled
+      xla_extension 0.5.1 runtime mis-executes deep compositions of the
+      interpret-mode grid machinery at some (n, L) shapes (returns zeros;
+      see EXPERIMENTS.md §Perf for the bisect), and the fused elementwise
+      HLO is also faster on CPU. Numerics of the two paths are asserted
+      equal in python/tests/test_kernel.py.
+    """
+    return os.environ.get("SPM_STAGE_IMPL", "pallas")
+
+
+def pick_block_b(batch: int, num_pairs: int, n_operands: int = 4) -> int:
+    """Largest power-of-two batch tile keeping the slab under the VMEM budget."""
+    if batch <= 0:
+        raise ValueError("batch must be positive")
+    per_row = max(1, n_operands * num_pairs * 4)
+    bb = _VMEM_BUDGET // per_row
+    bb = 1 << max(0, int(math.floor(math.log2(bb)))) if bb >= 1 else 1
+    return int(max(1, min(bb, batch, 512)))
+
+
+def _pad_batch(arrs, block_b):
+    b = arrs[0].shape[0]
+    pb = (-b) % block_b
+    if pb == 0:
+        return arrs, b
+    return [jnp.pad(a, ((0, pb), (0, 0))) for a in arrs], b
+
+
+# ---------------------------------------------------------------------------
+# Rotation variant (paper §3.1)
+# ---------------------------------------------------------------------------
+
+def _rot_fwd_kernel(cos_ref, sin_ref, xa_ref, xb_ref, ya_ref, yb_ref):
+    c = cos_ref[...]
+    s = sin_ref[...]
+    xa = xa_ref[...]
+    xb = xb_ref[...]
+    ya_ref[...] = c * xa - s * xb  # eq. (5)
+    yb_ref[...] = s * xa + c * xb  # eq. (6)
+
+
+def _rot_bwd_kernel(cos_ref, sin_ref, da_ref, db_ref, ga_ref, gb_ref):
+    c = cos_ref[...]
+    s = sin_ref[...]
+    da = da_ref[...]
+    db = db_ref[...]
+    ga_ref[...] = c * da + s * db   # eq. (7)
+    gb_ref[...] = -s * da + c * db  # eq. (8)
+
+
+# ---------------------------------------------------------------------------
+# General 2x2 variant (paper §3.2)
+# ---------------------------------------------------------------------------
+
+def _gen_fwd_kernel(a_ref, b_ref, c_ref, d_ref, xa_ref, xb_ref, ya_ref, yb_ref):
+    xa = xa_ref[...]
+    xb = xb_ref[...]
+    ya_ref[...] = a_ref[...] * xa + b_ref[...] * xb  # eq. (10)
+    yb_ref[...] = c_ref[...] * xa + d_ref[...] * xb  # eq. (11)
+
+
+def _gen_bwd_kernel(a_ref, b_ref, c_ref, d_ref, da_ref, db_ref, ga_ref, gb_ref):
+    da = da_ref[...]
+    db = db_ref[...]
+    ga_ref[...] = a_ref[...] * da + c_ref[...] * db  # eq. (12)
+    gb_ref[...] = b_ref[...] * da + d_ref[...] * db  # eq. (13)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _mix_call(kernel, params, halves, block_b=None):
+    """Run an elementwise pair-mix kernel over (B, P) halves.
+
+    ``params``: list of (P,) vectors broadcast to every batch tile.
+    ``halves``: list of (B, P) arrays.
+    Returns two (B, P) outputs.
+    """
+    P = halves[0].shape[1]
+    if block_b is None:
+        block_b = pick_block_b(halves[0].shape[0], P)
+    halves, b0 = _pad_batch(list(halves), block_b)
+    bpad = halves[0].shape[0]
+    grid = (bpad // block_b,)
+    # params live in one (1, P) row so TPU tiling stays 2D
+    params = [p.reshape(1, P) for p in params]
+    param_spec = pl.BlockSpec((1, P), lambda i: (0, 0))
+    half_spec = pl.BlockSpec((block_b, P), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((bpad, P), halves[0].dtype)] * 2
+    ya, yb = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[param_spec] * len(params) + [half_spec] * len(halves),
+        out_specs=[half_spec, half_spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*params, *halves)
+    return ya[:b0], yb[:b0]
+
+
+def stage_fwd_rotation(xa, xb, cos, sin, block_b=None):
+    """Forward rotation mix on contiguous halves: returns (ya, yb)."""
+    if stage_impl() == "jnp":
+        return cos * xa - sin * xb, sin * xa + cos * xb
+    return _mix_call(_rot_fwd_kernel, [cos, sin], [xa, xb], block_b)
+
+
+def stage_bwd_rotation_inputs(da, db, cos, sin, block_b=None):
+    """Closed-form input gradients (eqs. 7-8): returns (gxa, gxb)."""
+    if stage_impl() == "jnp":
+        return cos * da + sin * db, -sin * da + cos * db
+    return _mix_call(_rot_bwd_kernel, [cos, sin], [da, db], block_b)
+
+
+def stage_fwd_general(xa, xb, a, b, c, d, block_b=None):
+    """Forward general mix on contiguous halves: returns (ya, yb)."""
+    if stage_impl() == "jnp":
+        return a * xa + b * xb, c * xa + d * xb
+    return _mix_call(_gen_fwd_kernel, [a, b, c, d], [xa, xb], block_b)
+
+
+def stage_bwd_general_inputs(da, db, a, b, c, d, block_b=None):
+    """Closed-form input gradients (eqs. 12-13): returns (gxa, gxb)."""
+    if stage_impl() == "jnp":
+        return a * da + c * db, b * da + d * db
+    return _mix_call(_gen_bwd_kernel, [a, b, c, d], [da, db], block_b)
+
+
+# ---------------------------------------------------------------------------
+# Parameter-gradient integrands (reduced by the caller; XLA fuses)
+# ---------------------------------------------------------------------------
+
+def rotation_theta_grad(da, db, ya, yb):
+    """eq. (9) via outputs: dL/dtheta_k = sum_batch (db*ya - da*yb)."""
+    return jnp.sum(db * ya - da * yb, axis=0)
+
+
+def general_abcd_grad(da, db, xa, xb):
+    """eq. (14): per-pair [ga, gb, gc, gd] stacked on the last axis."""
+    return jnp.stack(
+        [
+            jnp.sum(da * xa, axis=0),
+            jnp.sum(da * xb, axis=0),
+            jnp.sum(db * xa, axis=0),
+            jnp.sum(db * xb, axis=0),
+        ],
+        axis=-1,
+    )

@@ -1,0 +1,307 @@
+"""L2 model zoo: every network the paper trains or describes.
+
+All models follow one convention:
+
+    cfg     — frozen dataclass (static; hashable; goes in the manifest)
+    init(key, cfg)            -> params (pytree of jnp arrays)
+    apply(cfg, params, *ins)  -> outputs
+
+Each model exists in a ``"dense"`` and an ``"spm"`` flavour; the only
+difference is the implementation of its square linear maps, exactly the
+paper's drop-in-replacement protocol (§2, §6.2, §7.2):
+
+  * ``Classifier`` — the Table 1/2 student: mixer(n->n) -> ReLU -> head.
+  * ``CharLM``     — the Table 3/4 char-level LM: embed -> mixer(d->d)
+                     -> ReLU -> vocab head.
+  * ``GRU``        — §6: gated recurrent unit whose six square maps
+                     (W_z, U_z, W_r, U_r, W_h, U_h) are dense or SPM.
+  * ``Attention``  — §7: scaled dot-product attention whose Q/K/V/O
+                     projections are dense or SPM.
+
+Rectangular maps (class heads, embeddings) stay dense in both flavours —
+the paper only replaces square projections.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import spm as spm_mod
+
+
+# ---------------------------------------------------------------------------
+# The square linear map: dense or SPM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MixerCfg:
+    """Configuration of one square n->n linear map.
+
+    Kinds:
+      * ``"dense"``  — the paper's baseline, y = W x + b.
+      * ``"spm"``    — the paper's operator (§2).
+      * ``"hybrid"`` — paper §11 future work: SPM interleaved with a
+        *selective* dense transformation. Implemented as
+        ``y = SPM(x) + U V x`` with a rank-``hybrid_rank`` bottleneck
+        (V: n→k, U: k→n), preserving near-linear cost O(nL + nk) while
+        restoring a controlled amount of instantaneous global interaction.
+    """
+
+    n: int
+    kind: str = "spm"  # "dense" | "spm" | "hybrid"
+    variant: str = "general"
+    schedule: str = "butterfly"
+    num_stages: int | None = None  # default: log2(n)
+    seed: int = 0
+    hybrid_rank: int = 16
+
+    def spec(self) -> spm_mod.SPMSpec:
+        return spm_mod.default_spec(
+            self.n, variant=self.variant, schedule=self.schedule,
+            num_stages=self.num_stages, seed=self.seed,
+        )
+
+    def stages(self) -> int:
+        return self.spec().num_stages
+
+
+def init_mixer(key, cfg: MixerCfg):
+    if cfg.kind == "dense":
+        kw, _ = jax.random.split(key)
+        scale = 1.0 / jnp.sqrt(cfg.n)
+        return {
+            "w": jax.random.normal(kw, (cfg.n, cfg.n)) * scale,
+            "b": jnp.zeros((cfg.n,)),
+        }
+    if cfg.kind == "hybrid":
+        k1, k2, k3 = jax.random.split(key, 3)
+        r = cfg.hybrid_rank
+        return {
+            "spm": spm_mod.init_spm_params(k1, cfg.spec()),
+            "u": jax.random.normal(k2, (cfg.n, r)) / jnp.sqrt(r),
+            "v": jax.random.normal(k3, (r, cfg.n)) / jnp.sqrt(cfg.n),
+        }
+    return spm_mod.init_spm_params(key, cfg.spec())
+
+
+def apply_mixer(cfg: MixerCfg, params, x):
+    """x: (B, n) -> (B, n)."""
+    if cfg.kind == "dense":
+        return x @ params["w"].T + params["b"]
+    if cfg.kind == "hybrid":
+        structured = spm_mod.spm_apply(cfg.spec(), params["spm"], x)
+        return structured + (x @ params["v"].T) @ params["u"].T
+    return spm_mod.spm_apply(cfg.spec(), params, x)
+
+
+def mixer_param_count(cfg: MixerCfg) -> int:
+    if cfg.kind == "dense":
+        return cfg.n * cfg.n + cfg.n
+    if cfg.kind == "hybrid":
+        return cfg.spec().param_count() + 2 * cfg.n * cfg.hybrid_rank
+    return cfg.spec().param_count()
+
+
+# ---------------------------------------------------------------------------
+# Classifier (Tables 1 & 2 student)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierCfg:
+    mixer: MixerCfg
+    num_classes: int
+
+    @property
+    def n(self) -> int:
+        return self.mixer.n
+
+
+def init_classifier(key, cfg: ClassifierCfg):
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(cfg.n)
+    return {
+        "mixer": init_mixer(k1, cfg.mixer),
+        "head_w": jax.random.normal(k2, (cfg.num_classes, cfg.n)) * scale,
+        "head_b": jnp.zeros((cfg.num_classes,)),
+    }
+
+
+def apply_classifier(cfg: ClassifierCfg, params, x):
+    """x: (B, n) -> logits (B, C)."""
+    h = jax.nn.relu(apply_mixer(cfg.mixer, params["mixer"], x))
+    return h @ params["head_w"].T + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# Char-level language model (Tables 3 & 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CharLMCfg:
+    mixer: MixerCfg
+    vocab: int = 256
+    seq_len: int = 128
+
+    @property
+    def d(self) -> int:
+        return self.mixer.n
+
+
+def init_charlm(key, cfg: CharLMCfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": jax.random.normal(k1, (cfg.vocab, cfg.d)) * 0.02,
+        "mixer": init_mixer(k2, cfg.mixer),
+        "head_w": jax.random.normal(k3, (cfg.vocab, cfg.d)) / jnp.sqrt(cfg.d),
+        "head_b": jnp.zeros((cfg.vocab,)),
+    }
+
+
+def apply_charlm(cfg: CharLMCfg, params, tokens):
+    """tokens: (B, T) int32 -> logits (B, T, V).
+
+    Matches the paper's §9.3 architecture: one large d x d projection
+    (dense baseline vs SPM butterfly L=12) between embedding and head.
+    """
+    B, T = tokens.shape
+    h = params["embed"][tokens]  # (B, T, d)
+    h = apply_mixer(cfg.mixer, params["mixer"], h.reshape(B * T, cfg.d))
+    h = jax.nn.relu(h).reshape(B, T, cfg.d)
+    return h @ params["head_w"].T + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# GRU (§6) — six square maps replaced wholesale
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GRUCfg:
+    mixer: MixerCfg  # template; each of the 6 maps gets its own params
+    num_classes: int
+
+    @property
+    def n(self) -> int:
+        return self.mixer.n
+
+
+_GRU_MAPS = ("w_z", "u_z", "w_r", "u_r", "w_h", "u_h")
+
+
+def init_gru(key, cfg: GRUCfg):
+    keys = jax.random.split(key, len(_GRU_MAPS) + 2)
+    params = {name: init_mixer(k, dataclasses.replace(cfg.mixer, seed=cfg.mixer.seed + i))
+              for i, (name, k) in enumerate(zip(_GRU_MAPS, keys))}
+    n = cfg.n
+    params["b_z"] = jnp.zeros((n,))
+    params["b_r"] = jnp.zeros((n,))
+    params["b_h"] = jnp.zeros((n,))
+    scale = 1.0 / jnp.sqrt(n)
+    params["head_w"] = jax.random.normal(keys[-2], (cfg.num_classes, n)) * scale
+    params["head_b"] = jnp.zeros((cfg.num_classes,))
+    return params
+
+
+def _gru_cell(cfg: GRUCfg, p, h_prev, x_t):
+    """Eqs. (20)-(23) with every dense map swapped per §6.2."""
+    mc = lambda i: dataclasses.replace(cfg.mixer, seed=cfg.mixer.seed + i)
+    z = jax.nn.sigmoid(apply_mixer(mc(0), p["w_z"], x_t)
+                       + apply_mixer(mc(1), p["u_z"], h_prev) + p["b_z"])
+    r = jax.nn.sigmoid(apply_mixer(mc(2), p["w_r"], x_t)
+                       + apply_mixer(mc(3), p["u_r"], h_prev) + p["b_r"])
+    h_tilde = jnp.tanh(apply_mixer(mc(4), p["w_h"], x_t)
+                       + apply_mixer(mc(5), p["u_h"], r * h_prev) + p["b_h"])
+    return (1.0 - z) * h_prev + z * h_tilde
+
+
+def apply_gru(cfg: GRUCfg, params, xs):
+    """xs: (B, T, n) -> logits (B, C) from the final hidden state."""
+    B, T, n = xs.shape
+    h = jnp.zeros((B, n))
+    # python loop (static unroll): keeps SPM pairings static per call site
+    for t in range(T):
+        h = _gru_cell(cfg, params, h, xs[:, t, :])
+    return h @ params["head_w"].T + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# Attention (§7) — Q/K/V/O projections replaced
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionCfg:
+    mixer: MixerCfg  # template for the four projections
+    num_heads: int = 4
+
+    @property
+    def d(self) -> int:
+        return self.mixer.n
+
+
+_ATTN_MAPS = ("w_q", "w_k", "w_v", "w_o")
+
+
+def init_attention(key, cfg: AttentionCfg):
+    keys = jax.random.split(key, len(_ATTN_MAPS))
+    return {name: init_mixer(k, dataclasses.replace(cfg.mixer, seed=cfg.mixer.seed + i))
+            for i, (name, k) in enumerate(zip(_ATTN_MAPS, keys))}
+
+
+def apply_attention(cfg: AttentionCfg, params, x):
+    """x: (B, T, d) -> (B, T, d). Eqs. (29)-(35) with SPM projections."""
+    B, T, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    mc = lambda i: dataclasses.replace(cfg.mixer, seed=cfg.mixer.seed + i)
+    flat = x.reshape(B * T, d)
+    q = apply_mixer(mc(0), params["w_q"], flat).reshape(B, T, h, dh)
+    k = apply_mixer(mc(1), params["w_k"], flat).reshape(B, T, h, dh)
+    v = apply_mixer(mc(2), params["w_v"], flat).reshape(B, T, h, dh)
+    # (B, h, T, T) scores, eq. (32)
+    s = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(dh)
+    a = jax.nn.softmax(s, axis=-1)  # eq. (33)
+    ctx = jnp.einsum("bhts,bshd->bthd", a, v).reshape(B * T, d)  # eq. (34)
+    return apply_mixer(mc(3), params["w_o"], ctx).reshape(B, T, d)  # eq. (35)
+
+
+# ---------------------------------------------------------------------------
+# Compositional teacher (§9.1): SPM -> ReLU -> Dense -> argmax
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TeacherCfg:
+    n: int
+    num_classes: int = 10
+    num_stages: int | None = None
+    schedule: str = "butterfly"
+    seed: int = 7
+
+
+def _teacher_spec(cfg: TeacherCfg) -> spm_mod.SPMSpec:
+    return spm_mod.default_spec(
+        cfg.n, variant="general", schedule=cfg.schedule,
+        num_stages=cfg.num_stages, seed=cfg.seed,
+    )
+
+
+def init_teacher(key, cfg: TeacherCfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = spm_mod.init_spm_params(k1, _teacher_spec(cfg))
+    # a non-trivial teacher: random rotations + random diagonal emphasis
+    p["d_in"] = 1.0 + 0.5 * jax.random.normal(k2, (cfg.n,))
+    return {
+        "spm": p,
+        "w2": jax.random.normal(k3, (cfg.num_classes, cfg.n)) / jnp.sqrt(cfg.n),
+    }
+
+
+def teacher_logits(cfg: TeacherCfg, params, x):
+    h = jax.nn.relu(spm_mod.spm_apply(_teacher_spec(cfg), params["spm"], x))
+    return h @ params["w2"].T
+
+
+def teacher_labels(cfg: TeacherCfg, params, x):
+    """Hard labels, §9.1: argmax_k of the teacher logits."""
+    return jnp.argmax(teacher_logits(cfg, params, x), axis=-1).astype(jnp.int32)

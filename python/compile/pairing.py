@@ -1,0 +1,173 @@
+"""Pairing schedules for Stagewise Pairwise Mixers (paper §2.1, §5).
+
+A *pairing schedule* assigns, for each stage ``l``, a partition of the
+coordinate set ``{0..n-1}`` into ``floor(n/2)`` disjoint pairs (plus one
+optional leftover coordinate when ``n`` is odd).  The paper deliberately does
+NOT tie pairings to FFT/radix layouts — any per-stage partition is valid
+(§5, §9.5) — so schedules are first-class objects here.
+
+Representation
+--------------
+A stage pairing is stored as two index vectors ``left`` and ``right`` of
+length ``P = n // 2`` (pair ``k`` mixes coordinates ``left[k]`` and
+``right[k]``) plus an optional ``leftover`` index for odd ``n``.
+
+For the kernel this is compiled into a *static permutation*
+``perm = concat(left, right, [leftover])`` and its inverse, so that a stage
+becomes two contiguous half-reads, an elementwise 2x2 mix, and one
+inverse-permuted write — no gather inside the hot loop (DESIGN.md §2,
+"Hardware adaptation").
+
+The exact same schedule construction is mirrored in rust
+(``rust/spm-core/src/spm/pairing.rs``); ``schedule_fingerprint`` lets the two
+sides assert they agree (the fingerprint is recorded in the artifact
+manifest).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+SCHEDULES = ("butterfly", "shift", "random")
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePairing:
+    """One stage's pairing: ``left[k]`` mixes with ``right[k]``."""
+
+    left: np.ndarray  # (P,) int32
+    right: np.ndarray  # (P,) int32
+    leftover: int | None  # unpaired coordinate for odd n (paper §5)
+
+    @property
+    def num_pairs(self) -> int:
+        return int(self.left.shape[0])
+
+    def perm(self) -> np.ndarray:
+        """Permutation sending x -> [x[left], x[right], x[leftover]?]."""
+        parts = [self.left, self.right]
+        if self.leftover is not None:
+            parts.append(np.array([self.leftover], dtype=np.int32))
+        return np.concatenate(parts).astype(np.int32)
+
+    def inverse_perm(self) -> np.ndarray:
+        p = self.perm()
+        inv = np.empty_like(p)
+        inv[p] = np.arange(p.shape[0], dtype=np.int32)
+        return inv
+
+    def validate(self, n: int) -> None:
+        p = np.sort(self.perm())
+        if not np.array_equal(p, np.arange(n, dtype=np.int32)):
+            raise ValueError("pairing is not a partition of 0..n-1")
+
+
+def butterfly_stage(n: int, stage: int) -> StagePairing:
+    """FFT-style stride pairing: stage ``l`` mixes ``i`` with ``i + 2^l``.
+
+    Defined for any even chunk; strides wrap modulo ``log2`` span.  This is
+    the "butterfly-style pairing schedule" used for the paper's char-LM
+    experiment (§9.3).  Requires ``n`` to be even; power-of-two ``n`` gives
+    the classical butterfly, other even ``n`` fall back to stride pairing
+    within the largest aligned prefix and shift pairing on the remainder.
+    """
+    if n < 2:
+        raise ValueError("n must be >= 2")
+    levels = max(1, int(np.floor(np.log2(n))))
+    s = 1 << (stage % levels)
+    left, right = [], []
+    # aligned blocks of size 2s: within each block, i pairs with i+s
+    nb = n // (2 * s)
+    for b in range(nb):
+        base = b * 2 * s
+        for i in range(s):
+            left.append(base + i)
+            right.append(base + s + i)
+    # non-power-of-two tail: pair the remaining coordinates adjacently
+    tail = list(range(nb * 2 * s, n))
+    for k in range(0, len(tail) - 1, 2):
+        left.append(tail[k])
+        right.append(tail[k + 1])
+    leftover = tail[-1] if len(tail) % 2 == 1 else None
+    return StagePairing(
+        np.asarray(left, np.int32), np.asarray(right, np.int32), leftover
+    )
+
+
+def shift_stage(n: int, stage: int) -> StagePairing:
+    """Rotating adjacent pairing: stage ``l`` pairs ``(2k+l, 2k+1+l) mod n``.
+
+    Scales smoothly to arbitrary ``n`` (paper §5): coordinates are paired
+    adjacently on a ring whose origin rotates by one each stage, so every
+    coordinate interacts with a growing neighbourhood as stages compose.
+    """
+    if n < 2:
+        raise ValueError("n must be >= 2")
+    P = n // 2
+    offs = stage % n
+    idx = (np.arange(2 * P, dtype=np.int64) + offs) % n
+    if n % 2 == 1:
+        # drop the rotating leftover coordinate
+        leftover = int((2 * P + offs) % n)
+    else:
+        leftover = None
+    left = idx[0::2].astype(np.int32)
+    right = idx[1::2].astype(np.int32)
+    return StagePairing(left, right, leftover)
+
+
+def random_stage(n: int, stage: int, seed: int = 0) -> StagePairing:
+    """Seeded random disjoint pairing, independent per stage (paper §5)."""
+    if n < 2:
+        raise ValueError("n must be >= 2")
+    rng = np.random.default_rng(np.uint64(seed) * np.uint64(0x9E3779B9) + np.uint64(stage))
+    p = rng.permutation(n).astype(np.int32)
+    P = n // 2
+    leftover = int(p[-1]) if n % 2 == 1 else None
+    return StagePairing(p[0:2 * P:2], p[1:2 * P:2], leftover)
+
+
+def make_schedule(kind: str, n: int, num_stages: int, seed: int = 0) -> list[StagePairing]:
+    """Build a full ``L``-stage schedule of the given kind."""
+    if kind == "butterfly":
+        stages = [butterfly_stage(n, l) for l in range(num_stages)]
+    elif kind == "shift":
+        stages = [shift_stage(n, l) for l in range(num_stages)]
+    elif kind == "random":
+        stages = [random_stage(n, l, seed) for l in range(num_stages)]
+    else:
+        raise ValueError(f"unknown schedule kind {kind!r}; want one of {SCHEDULES}")
+    for st in stages:
+        st.validate(n)
+    return stages
+
+
+def default_num_stages(n: int) -> int:
+    """Paper §2.2: ``L = log2 n`` for best results at large n."""
+    return max(1, int(round(np.log2(n))))
+
+
+def schedule_fingerprint(stages: list[StagePairing]) -> str:
+    """Stable FNV-1a-64 hash of a schedule.
+
+    Mirrored bit-for-bit by ``rust/spm-core/src/pairing.rs`` so the manifest
+    can carry the python-side fingerprint and the rust coordinator can verify
+    that both languages constructed the identical schedule.
+    """
+    h = np.uint64(0xCBF29CE484222325)
+    prime = np.uint64(0x100000001B3)
+    with np.errstate(over="ignore"):
+        def mix(v: int):
+            nonlocal h
+            for shift in (0, 8, 16, 24):
+                h = (h ^ np.uint64((v >> shift) & 0xFF)) * prime
+
+        for st in stages:
+            for arr in (st.left, st.right):
+                for v in arr.tolist():
+                    mix(int(v))
+            mix(0xFFFFFFFF if st.leftover is None else int(st.leftover))
+    return f"{int(h):016x}"

@@ -1,0 +1,313 @@
+"""L2 SPM operator: the paper's drop-in replacement for dense linear layers.
+
+``spm_apply`` implements  y = D_out (B_L ... B_1) D_in x + bias  (eq. 1)
+as a ``jax.custom_vjp`` whose backward pass is the paper's exact closed form
+(§4), built from the L1 Pallas stage kernels in ``kernels/spm_stage.py``.
+
+Variants (paper §3):
+  * ``"rotation"``  — one angle per pair, orthogonal by construction.
+    Backward uses O(B n) memory: since each stage is orthogonal, the stage
+    *inputs* are recomputed from the outputs (z_{l-1} = B_l^T z_l) while the
+    adjoint is propagated, and the theta gradient is evaluated from outputs
+    via  dL/dtheta = delta2*y1 - delta1*y2  (eq. 9 rewritten).  The leftover
+    coordinate for odd n is passed through unchanged (paper §5 option (i)),
+    keeping every stage exactly orthogonal/invertible.
+  * ``"general"``   — four free scalars per pair.  Stage inputs are saved as
+    residuals (or rematerialized when ``remat=True``); the leftover
+    coordinate gets a learned 1x1 scale (paper §5 option (ii)).
+
+The pairing schedule is static (see ``pairing.py``), so the half-gathers
+``x[:, left]`` lower to constant-index gathers and the kernels themselves
+stay gather-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pairing as pairing_mod
+from .kernels import spm_stage as K
+
+
+@dataclasses.dataclass(frozen=True)
+class SPMSpec:
+    """Static configuration of one SPM operator."""
+
+    n: int
+    num_stages: int
+    variant: str = "general"  # "rotation" | "general"
+    schedule: str = "butterfly"  # "butterfly" | "shift" | "random"
+    seed: int = 0
+    remat: bool = False  # general variant: recompute fwd in bwd (O(Bn) mem)
+
+    def __post_init__(self):
+        if self.variant not in ("rotation", "general"):
+            raise ValueError(f"unknown variant {self.variant!r}")
+        if self.schedule not in pairing_mod.SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.n < 2:
+            raise ValueError("n must be >= 2")
+
+    @functools.cached_property
+    def stages(self):
+        return pairing_mod.make_schedule(
+            self.schedule, self.n, self.num_stages, self.seed
+        )
+
+    @property
+    def num_pairs(self) -> int:
+        return self.n // 2
+
+    def fingerprint(self) -> str:
+        return pairing_mod.schedule_fingerprint(self.stages)
+
+    def param_count(self) -> int:
+        per_stage = self.num_pairs * (1 if self.variant == "rotation" else 4)
+        lone = self.num_stages if self.n % 2 == 1 and self.variant == "general" else 0
+        return 3 * self.n + self.num_stages * per_stage + lone
+
+
+def default_spec(n: int, variant: str = "general", schedule: str = "butterfly",
+                 num_stages: int | None = None, seed: int = 0) -> SPMSpec:
+    """Paper §2.2 default: L = log2(n) stages."""
+    L = pairing_mod.default_num_stages(n) if num_stages is None else num_stages
+    return SPMSpec(n=n, num_stages=L, variant=variant, schedule=schedule, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_spm_params(key, spec: SPMSpec, dtype=jnp.float32):
+    """Orthogonal-at-init parameters.
+
+    Both variants start as a product of random planar rotations (exactly
+    norm-preserving, paper §8.4), with identity diagonals and zero bias, so
+    composition depth never amplifies or attenuates signals at init.
+    """
+    k_theta, = jax.random.split(key, 1)
+    L, P, n = spec.num_stages, spec.num_pairs, spec.n
+    theta = jax.random.uniform(k_theta, (L, P), dtype, -np.pi, np.pi)
+    if spec.variant == "rotation":
+        mix = theta
+    else:
+        c, s = jnp.cos(theta), jnp.sin(theta)
+        mix = jnp.stack([c, -s, s, c], axis=-1)  # (L, P, 4) = rotation blocks
+    return {
+        "d_in": jnp.ones((n,), dtype),
+        "d_out": jnp.ones((n,), dtype),
+        "bias": jnp.zeros((n,), dtype),
+        "mix": mix,
+        "lone": jnp.ones((L, 1), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Stage application on full vectors (permute -> kernel -> inverse permute)
+#
+# Two layouts:
+#  * GENERIC: gather by the pairing index arrays. Works for any schedule but
+#    XLA-CPU executes large gathers with a scalar loop — measured ~0.8 s per
+#    (4096, 4096) gather, which dominated the d=4096 char-LM step
+#    (EXPERIMENTS.md §Perf).
+#  * BUTTERFLY FAST PATH: for the butterfly schedule at power-of-two n the
+#    stride-s pairing is exactly a (B, n/2s, 2, s) reshape — both halves are
+#    strided slices and the inverse is a stack+reshape. No gather anywhere;
+#    everything fuses into the elementwise mix.
+# ---------------------------------------------------------------------------
+
+def _is_pow2(n: int) -> bool:
+    return n & (n - 1) == 0
+
+
+def _butterfly_stride(spec: "SPMSpec", l: int) -> int:
+    levels = max(1, int(np.floor(np.log2(spec.n))))
+    return 1 << (l % levels)
+
+
+def _fast_layout(spec: "SPMSpec", l: int) -> int | None:
+    """Return the stage stride if the reshape fast path applies."""
+    if spec.schedule == "butterfly" and _is_pow2(spec.n) and spec.n >= 2:
+        return _butterfly_stride(spec, l)
+    return None
+
+
+def _halves(spec, l, st, z):
+    s = _fast_layout(spec, l)
+    if s is not None:
+        B, n = z.shape
+        z4 = z.reshape(B, n // (2 * s), 2, s)
+        return (z4[:, :, 0, :].reshape(B, n // 2),
+                z4[:, :, 1, :].reshape(B, n // 2))
+    return z[:, st.left], z[:, st.right]
+
+
+def _unhalves(spec, l, st, ya, yb, z_lone):
+    s = _fast_layout(spec, l)
+    if s is not None:
+        B = ya.shape[0]
+        n = spec.n
+        nb = n // (2 * s)
+        y4 = jnp.stack([ya.reshape(B, nb, s), yb.reshape(B, nb, s)], axis=2)
+        return y4.reshape(B, n)
+    parts = [ya, yb]
+    if st.leftover is not None:
+        parts.append(z_lone)
+    cat = jnp.concatenate(parts, axis=1)
+    return cat[:, st.inverse_perm()]
+
+
+def _stage_fwd(spec, l, st, mix_l, lone_l, z):
+    xa, xb = _halves(spec, l, st, z)
+    if spec.variant == "rotation":
+        ya, yb = K.stage_fwd_rotation(xa, xb, jnp.cos(mix_l), jnp.sin(mix_l))
+        z_lone = z[:, st.leftover:st.leftover + 1] if st.leftover is not None else None
+    else:
+        ya, yb = K.stage_fwd_general(
+            xa, xb, mix_l[:, 0], mix_l[:, 1], mix_l[:, 2], mix_l[:, 3]
+        )
+        z_lone = (lone_l[0] * z[:, st.leftover:st.leftover + 1]
+                  if st.leftover is not None else None)
+    return _unhalves(spec, l, st, ya, yb, z_lone)
+
+
+def _stage_bwd_rotation_pair(spec, l, st, mix_l, z_out, g):
+    """Rotation stage: propagate BOTH the adjoint and the recomputed input.
+
+    z_{l-1} = B_l^T z_l and g_{l-1} = B_l^T g_l share the same transpose
+    apply, so the two are stacked into one kernel launch.
+    """
+    c, s = jnp.cos(mix_l), jnp.sin(mix_l)
+    both = jnp.concatenate([g, z_out], axis=0)
+    da, db = _halves(spec, l, st, both)
+    ga, gb = K.stage_bwd_rotation_inputs(da, db, c, s)
+    lone = (both[:, st.leftover:st.leftover + 1]
+            if st.leftover is not None else None)  # passthrough leftover
+    back = _unhalves(spec, l, st, ga, gb, lone)
+    B = g.shape[0]
+    g_prev, z_prev = back[:B], back[B:]
+    # theta grad from stage outputs (eq. 9 rewritten): d2*y1 - d1*y2
+    ya, yb = _halves(spec, l, st, z_out)
+    d1, d2 = _halves(spec, l, st, g)
+    g_theta = jnp.sum(d2 * ya - d1 * yb, axis=0)
+    return g_prev, z_prev, g_theta
+
+
+def _stage_bwd_general(spec, l, st, mix_l, lone_l, z_in, g):
+    xa, xb = _halves(spec, l, st, z_in)
+    d1, d2 = _halves(spec, l, st, g)
+    ga, gb = K.stage_bwd_general_inputs(
+        d1, d2, mix_l[:, 0], mix_l[:, 1], mix_l[:, 2], mix_l[:, 3]
+    )
+    g_mix = K.general_abcd_grad(d1, d2, xa, xb)
+    if st.leftover is not None:
+        g_lone_in = lone_l[0] * g[:, st.leftover:st.leftover + 1]
+        g_lone = jnp.sum(
+            g[:, st.leftover] * z_in[:, st.leftover]
+        ).reshape(1)
+    else:
+        g_lone_in, g_lone = None, jnp.zeros((1,), g.dtype)
+    g_prev = _unhalves(spec, l, st, ga, gb, g_lone_in)
+    return g_prev, g_mix, g_lone
+
+
+# ---------------------------------------------------------------------------
+# Full operator with custom VJP
+# ---------------------------------------------------------------------------
+
+def _forward(spec, params, x):
+    """Returns (y, z_trace) where z_trace content depends on the variant."""
+    z = params["d_in"] * x  # eq. (2)
+    zs = [z]
+    for l, st in enumerate(spec.stages):  # eq. (3)
+        z = _stage_fwd(spec, l, st, params["mix"][l], params["lone"][l], z)
+        zs.append(z)
+    y = params["d_out"] * z + params["bias"]  # eq. (4)
+    return y, zs
+
+
+@functools.lru_cache(maxsize=None)
+def _make_apply(spec: SPMSpec):
+    @jax.custom_vjp
+    def apply(params, x):
+        return _forward(spec, params, x)[0]
+
+    def fwd(params, x):
+        y, zs = _forward(spec, params, x)
+        if spec.variant == "rotation":
+            res = (params, x, zs[-1])  # O(Bn): inputs recomputed in bwd
+        elif spec.remat:
+            res = (params, x, None)
+        else:
+            res = (params, x, zs)  # store all stage inputs/outputs
+        return y, res
+
+    def bwd(res, g_y):
+        params, x, trace = res
+        L = spec.num_stages
+        if spec.variant == "rotation":
+            z_last = trace
+        elif trace is None:  # remat: rebuild the trace with a second forward
+            z_last = None
+            trace = _forward(spec, params, x)[1]
+        # eqs. (15)-(17)
+        g_bias = jnp.sum(g_y, axis=0)
+        zL = z_last if spec.variant == "rotation" else trace[-1]
+        g_dout = jnp.sum(g_y * zL, axis=0)
+        g = params["d_out"] * g_y
+        g_mix = []
+        g_lone = []
+        if spec.variant == "rotation":
+            z = zL
+            for l in range(L - 1, -1, -1):
+                g, z, g_th = _stage_bwd_rotation_pair(
+                    spec, l, spec.stages[l], params["mix"][l], z, g
+                )
+                g_mix.append(g_th)
+                g_lone.append(jnp.zeros((1,), g.dtype))
+            z0 = z
+        else:
+            for l in range(L - 1, -1, -1):
+                g, g_m, g_l = _stage_bwd_general(
+                    spec, l, spec.stages[l], params["mix"][l],
+                    params["lone"][l], trace[l], g
+                )
+                g_mix.append(g_m)
+                g_lone.append(g_l)
+            z0 = trace[0]
+        # eqs. (18)-(19)
+        g_din = jnp.sum(g * x, axis=0)
+        g_x = params["d_in"] * g
+        g_params = {
+            "d_in": g_din,
+            "d_out": g_dout,
+            "bias": g_bias,
+            "mix": jnp.stack(g_mix[::-1], axis=0),
+            "lone": jnp.stack(g_lone[::-1], axis=0),
+        }
+        return g_params, g_x
+
+    apply.defvjp(fwd, bwd)
+    return apply
+
+
+def spm_apply(spec: SPMSpec, params, x):
+    """Apply the SPM operator to ``x`` of shape (B, n) -> (B, n).
+
+    Exact closed-form gradients (paper §4) flow to both ``params`` and ``x``.
+    """
+    if x.ndim != 2 or x.shape[1] != spec.n:
+        raise ValueError(f"expected (B, {spec.n}) input, got {x.shape}")
+    return _make_apply(spec)(params, x)
+
+
+def spm_apply_nd(spec: SPMSpec, params, x):
+    """Apply over the last axis of an arbitrary-rank input (e.g. (B,T,d))."""
+    lead = x.shape[:-1]
+    y = spm_apply(spec, params, x.reshape(-1, spec.n))
+    return y.reshape(*lead, spec.n)

@@ -1,0 +1,167 @@
+"""L2 training graphs: losses, in-graph Adam, and flat-signature steps.
+
+The rust coordinator drives training through AOT-compiled *flat* functions:
+
+    train_step(*param_leaves, *m_leaves, *v_leaves, step, x, y)
+        -> (*param_leaves', *m_leaves', *v_leaves', step', loss, metric)
+
+    eval_step(*param_leaves, x, y) -> (loss, metric)
+    init(seed) -> (*param_leaves,)
+    forward(*param_leaves, x) -> outputs
+
+Leaves are ordered by ``jax.tree_util.tree_flatten`` of the params pytree;
+the ordering plus every leaf's name/shape/dtype is recorded in the artifact
+manifest so the two sides can never disagree silently.
+
+The optimizer lives **inside the graph** (Adam, paper §9.4 "identical
+optimizers ... identical training schedules"): the rust hot loop only
+uploads a batch and swaps output buffers for input buffers — python is never
+on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy; labels are int class ids. logits: (..., C)."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Adam (in-graph)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamCfg:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def adam_update(cfg: AdamCfg, params, grads, m, v, step):
+    """One Adam step over arbitrary pytrees. ``step`` is an f32 scalar
+    holding the *previous* step count; returns the incremented value."""
+    t = step + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    new_m = jax.tree.map(lambda mi, gi: cfg.b1 * mi + (1 - cfg.b1) * gi, m, grads)
+    new_v = jax.tree.map(lambda vi, gi: cfg.b2 * vi + (1 - cfg.b2) * gi * gi, v, grads)
+    new_p = jax.tree.map(
+        lambda pi, mi, vi: pi - cfg.lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + cfg.eps),
+        params, new_m, new_v,
+    )
+    return new_p, new_m, new_v, t
+
+
+def zeros_like_tree(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+# ---------------------------------------------------------------------------
+# Flat-signature step factories
+# ---------------------------------------------------------------------------
+
+def leaf_names(params) -> list[str]:
+    """Deterministic dotted names for every leaf, matching tree_flatten order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    names = []
+    for path, _leaf in flat:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts) if parts else "param")
+    return names
+
+
+def make_flat_fns(init_fn, apply_fn, loss_and_metric, adam: AdamCfg):
+    """Build the four flat-signature functions for one model.
+
+    ``init_fn(key) -> params``;  ``apply_fn(params, x) -> outputs``;
+    ``loss_and_metric(outputs, y) -> (loss, metric)``.
+
+    Returns dict with 'init', 'train', 'eval', 'forward' callables plus the
+    treedef/leaf metadata needed by the manifest.
+    """
+    params0 = jax.eval_shape(lambda s: init_fn(jax.random.PRNGKey(s)), 0)
+    flat0, treedef = jax.tree_util.tree_flatten(params0)
+    nleaves = len(flat0)
+
+    def init(seed):
+        params = init_fn(jax.random.PRNGKey(seed))
+        return tuple(jax.tree_util.tree_flatten(params)[0])
+
+    def unflatten(leaves):
+        return jax.tree_util.tree_unflatten(treedef, list(leaves))
+
+    def loss_fn(params, x, y):
+        out = apply_fn(params, x)
+        return loss_and_metric(out, y)
+
+    def train(*args):
+        p = unflatten(args[:nleaves])
+        m = unflatten(args[nleaves:2 * nleaves])
+        v = unflatten(args[2 * nleaves:3 * nleaves])
+        step, x, y = args[3 * nleaves], args[3 * nleaves + 1], args[3 * nleaves + 2]
+        (loss, metric), grads = jax.value_and_grad(
+            lambda pp: loss_fn(pp, x, y), has_aux=True
+        )(p)
+        new_p, new_m, new_v, new_step = adam_update(adam, p, grads, m, v, step)
+        return (
+            *jax.tree_util.tree_flatten(new_p)[0],
+            *jax.tree_util.tree_flatten(new_m)[0],
+            *jax.tree_util.tree_flatten(new_v)[0],
+            new_step, loss, metric,
+        )
+
+    def evaluate(*args):
+        p = unflatten(args[:nleaves])
+        x, y = args[nleaves], args[nleaves + 1]
+        loss, metric = loss_fn(p, x, y)
+        return loss, metric
+
+    def forward(*args):
+        p = unflatten(args[:nleaves])
+        x = args[nleaves]
+        return (apply_fn(p, x),)
+
+    return {
+        "init": init,
+        "train": train,
+        "eval": evaluate,
+        "forward": forward,
+        "nleaves": nleaves,
+        "leaf_names": leaf_names(params0),
+        "leaf_shapes": [tuple(l.shape) for l in flat0],
+        "leaf_dtypes": [str(l.dtype) for l in flat0],
+    }
+
+
+def classifier_loss(logits, labels):
+    return softmax_xent(logits, labels), accuracy(logits, labels)
+
+
+def charlm_loss(logits, targets):
+    """Next-char NLL in nats (metric = same loss; BPC = NLL/ln2 downstream)."""
+    nll = softmax_xent(logits, targets)
+    return nll, nll

@@ -1,0 +1,10 @@
+import os
+import sys
+
+import jax
+
+# tests import the build-time package directly
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+jax.config.update("jax_platform_name", "cpu")
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,242 @@
+"""L1 Pallas stage kernels vs the pure-jnp oracle — the CORE correctness
+signal for the compiled hot path (kernel outputs flow into every artifact).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import spm_stage as K
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotation variant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,P", [(1, 1), (3, 5), (16, 64), (100, 33), (257, 8)])
+def test_rotation_fwd_matches_ref(B, P):
+    xa, xb = rand(0, B, P), rand(1, B, P)
+    theta = rand(2, P)
+    ya, yb = K.stage_fwd_rotation(xa, xb, jnp.cos(theta), jnp.sin(theta))
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    np.testing.assert_allclose(ya, c * xa - s * xb, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(yb, s * xa + c * xb, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,P", [(4, 7), (64, 128)])
+def test_rotation_bwd_inputs_is_transpose(B, P):
+    """eq. (7)-(8): the input-gradient map is exactly B^T."""
+    da, db = rand(3, B, P), rand(4, B, P)
+    theta = rand(5, P)
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    ga, gb = K.stage_bwd_rotation_inputs(da, db, c, s)
+    np.testing.assert_allclose(ga, c * da + s * db, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gb, -s * da + c * db, rtol=1e-5, atol=1e-6)
+
+
+def test_rotation_bwd_adjoint_identity():
+    """<Bx, d> == <x, B^T d> for every pair (transpose consistency)."""
+    B, P = 32, 40
+    xa, xb, da, db = rand(0, B, P), rand(1, B, P), rand(2, B, P), rand(3, B, P)
+    theta = rand(4, P)
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    ya, yb = K.stage_fwd_rotation(xa, xb, c, s)
+    ga, gb = K.stage_bwd_rotation_inputs(da, db, c, s)
+    lhs = jnp.sum(ya * da + yb * db)
+    rhs = jnp.sum(xa * ga + xb * gb)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+def test_rotation_theta_grad_identity():
+    """eq. (9) == delta2*y1 - delta1*y2 (the O(Bn)-memory rewrite)."""
+    B, P = 16, 24
+    xa, xb, da, db = rand(0, B, P), rand(1, B, P), rand(2, B, P), rand(3, B, P)
+    theta = rand(4, P)
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    ya, yb = K.stage_fwd_rotation(xa, xb, c, s)
+    got = K.rotation_theta_grad(da, db, ya, yb)
+    # literal eq. (9)
+    want = jnp.sum(da * (-s * xa - c * xb) + db * (c * xa - s * xb), axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_rotation_norm_preserving():
+    """Orthogonality: per-sample l2 norm is exactly preserved (§3.1)."""
+    B, P = 8, 100
+    xa, xb = rand(0, B, P), rand(1, B, P)
+    theta = rand(2, P) * 3.0
+    ya, yb = K.stage_fwd_rotation(xa, xb, jnp.cos(theta), jnp.sin(theta))
+    before = jnp.sum(xa**2 + xb**2, axis=1)
+    after = jnp.sum(ya**2 + yb**2, axis=1)
+    np.testing.assert_allclose(before, after, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# General variant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,P", [(1, 1), (5, 9), (64, 64), (130, 17)])
+def test_general_fwd_matches_ref(B, P):
+    xa, xb = rand(0, B, P), rand(1, B, P)
+    a, b, c, d = rand(2, P), rand(3, P), rand(4, P), rand(5, P)
+    ya, yb = K.stage_fwd_general(xa, xb, a, b, c, d)
+    np.testing.assert_allclose(ya, a * xa + b * xb, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(yb, c * xa + d * xb, rtol=1e-5, atol=1e-6)
+
+
+def test_general_bwd_inputs():
+    B, P = 12, 30
+    da, db = rand(0, B, P), rand(1, B, P)
+    a, b, c, d = rand(2, P), rand(3, P), rand(4, P), rand(5, P)
+    ga, gb = K.stage_bwd_general_inputs(da, db, a, b, c, d)
+    np.testing.assert_allclose(ga, a * da + c * db, rtol=1e-5, atol=1e-6)  # eq. 12
+    np.testing.assert_allclose(gb, b * da + d * db, rtol=1e-5, atol=1e-6)  # eq. 13
+
+
+def test_general_abcd_grad_matches_eq14():
+    B, P = 20, 11
+    xa, xb, da, db = rand(0, B, P), rand(1, B, P), rand(2, B, P), rand(3, B, P)
+    g = K.general_abcd_grad(da, db, xa, xb)
+    np.testing.assert_allclose(g[:, 0], jnp.sum(da * xa, 0), rtol=1e-5)
+    np.testing.assert_allclose(g[:, 1], jnp.sum(da * xb, 0), rtol=1e-5)
+    np.testing.assert_allclose(g[:, 2], jnp.sum(db * xa, 0), rtol=1e-5)
+    np.testing.assert_allclose(g[:, 3], jnp.sum(db * xb, 0), rtol=1e-5)
+
+
+def test_general_subsumes_rotation():
+    """§3.2: the general block with (a,b,c,d)=(c,-s,s,c) equals rotation."""
+    B, P = 9, 21
+    xa, xb = rand(0, B, P), rand(1, B, P)
+    theta = rand(2, P)
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    ya_r, yb_r = K.stage_fwd_rotation(xa, xb, c, s)
+    ya_g, yb_g = K.stage_fwd_general(xa, xb, c, -s, s, c)
+    np.testing.assert_allclose(ya_r, ya_g, rtol=1e-6)
+    np.testing.assert_allclose(yb_r, yb_g, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Blocking / padding behaviour
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_b", [1, 2, 3, 8])
+def test_explicit_block_sizes_agree(block_b):
+    """Batch tiling must never change the numbers (incl. ragged tails)."""
+    B, P = 13, 6
+    xa, xb = rand(0, B, P), rand(1, B, P)
+    theta = rand(2, P)
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    base = K.stage_fwd_rotation(xa, xb, c, s, block_b=B)
+    tiled = K.stage_fwd_rotation(xa, xb, c, s, block_b=block_b)
+    np.testing.assert_allclose(base[0], tiled[0], rtol=1e-6)
+    np.testing.assert_allclose(base[1], tiled[1], rtol=1e-6)
+
+
+def test_pick_block_b_vmem_budget():
+    # huge P forces a small block; tiny P allows the 512 cap
+    assert K.pick_block_b(1024, 2048) * 2048 * 4 * 4 <= 8 * 1024 * 1024
+    assert K.pick_block_b(1024, 4) == 512
+    assert K.pick_block_b(3, 4) == 3 or K.pick_block_b(3, 4) <= 3
+    with pytest.raises(ValueError):
+        K.pick_block_b(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: shapes x variants (guide requirement)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(min_value=1, max_value=70),
+    P=st.integers(min_value=1, max_value=70),
+    seed=st.integers(min_value=0, max_value=1000),
+    variant=st.sampled_from(["rotation", "general"]),
+)
+def test_kernel_vs_ref_property(B, P, seed, variant):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 6)
+    xa = jax.random.normal(ks[0], (B, P))
+    xb = jax.random.normal(ks[1], (B, P))
+    if variant == "rotation":
+        theta = jax.random.normal(ks[2], (P,))
+        c, s = jnp.cos(theta), jnp.sin(theta)
+        ya, yb = K.stage_fwd_rotation(xa, xb, c, s)
+        np.testing.assert_allclose(ya, c * xa - s * xb, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(yb, s * xa + c * xb, rtol=1e-4, atol=1e-5)
+    else:
+        a, b = jax.random.normal(ks[2], (P,)), jax.random.normal(ks[3], (P,))
+        c_, d = jax.random.normal(ks[4], (P,)), jax.random.normal(ks[5], (P,))
+        ya, yb = K.stage_fwd_general(xa, xb, a, b, c_, d)
+        np.testing.assert_allclose(ya, a * xa + b * xb, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(yb, c_ * xa + d * xb, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Full-stage (permute -> kernel -> unpermute) vs the oracle stage fns
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [6, 16, 33])
+@pytest.mark.parametrize("variant", ["rotation", "general"])
+def test_full_stage_vs_oracle(n, variant):
+    from compile import pairing, spm as spm_mod
+
+    st_ = pairing.shift_stage(n, 1)
+    B = 7
+    z = rand(0, B, n)
+    lv = st_.leftover
+    if variant == "rotation":
+        theta = rand(1, n // 2)
+        spec = spm_mod.SPMSpec(n=n, num_stages=1, variant="rotation", schedule="shift")
+        got = spm_mod._stage_fwd(spec, 1, st_, theta, jnp.ones((1,)), z)
+        want = ref.stage_fwd_rotation(z, st_.left, st_.right, lv, theta, jnp.ones((1,)))
+    else:
+        abcd = rand(1, n // 2, 4)
+        spec = spm_mod.SPMSpec(n=n, num_stages=1, variant="general", schedule="shift")
+        got = spm_mod._stage_fwd(spec, 1, st_, abcd, jnp.full((1,), 1.3), z)
+        want = ref.stage_fwd_general(z, st_.left, st_.right, lv, abcd, jnp.full((1,), 1.3))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pallas path == jnp path (the AOT artifacts use the latter; see stage_impl)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["rotation", "general"])
+def test_pallas_and_jnp_impls_agree(variant, monkeypatch):
+    B, P = 37, 129
+    xa, xb = rand(0, B, P), rand(1, B, P)
+    ps = [rand(2 + i, P) for i in range(4)]
+    def run():
+        if variant == "rotation":
+            c, s = jnp.cos(ps[0]), jnp.sin(ps[0])
+            return (*K.stage_fwd_rotation(xa, xb, c, s),
+                    *K.stage_bwd_rotation_inputs(xa, xb, c, s))
+        return (*K.stage_fwd_general(xa, xb, *ps),
+                *K.stage_bwd_general_inputs(xa, xb, *ps))
+    monkeypatch.setenv("SPM_STAGE_IMPL", "pallas")
+    pal = run()
+    monkeypatch.setenv("SPM_STAGE_IMPL", "jnp")
+    jn = run()
+    for a, b in zip(pal, jn):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_full_spm_agrees_across_impls(monkeypatch):
+    from compile import spm as spm_mod
+    spec = spm_mod.SPMSpec(n=64, num_stages=10, variant="general", schedule="butterfly")
+    params = spm_mod.init_spm_params(jax.random.PRNGKey(3), spec)
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, 64))
+    monkeypatch.setenv("SPM_STAGE_IMPL", "pallas")
+    y_pal = spm_mod.spm_apply(spec, params, x)
+    monkeypatch.setenv("SPM_STAGE_IMPL", "jnp")
+    spm_mod._make_apply.cache_clear()  # retrace with the other impl
+    y_jnp = spm_mod.spm_apply(spec, params, x)
+    np.testing.assert_allclose(y_pal, y_jnp, rtol=1e-5, atol=1e-6)
+    spm_mod._make_apply.cache_clear()

@@ -1,0 +1,242 @@
+"""Model zoo: shapes, GRU/attention semantics vs the paper's equations,
+teacher determinism."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import spm as spm_mod
+
+
+def mixer(n, kind, **kw):
+    return M.MixerCfg(n=n, kind=kind, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mixer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "spm"])
+def test_mixer_shapes(kind):
+    cfg = mixer(32, kind)
+    p = M.init_mixer(jax.random.PRNGKey(0), cfg)
+    y = M.apply_mixer(cfg, p, jnp.ones((5, 32)))
+    assert y.shape == (5, 32)
+
+
+def test_mixer_param_count_near_linear():
+    """§5: SPM param count grows ~nL, dense grows n^2."""
+    for n in (64, 256, 1024):
+        d = M.mixer_param_count(mixer(n, "dense"))
+        s = M.mixer_param_count(mixer(n, "spm"))
+        assert d == n * n + n
+        assert s < d / 4
+
+
+# ---------------------------------------------------------------------------
+# Classifier
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "spm"])
+def test_classifier(kind):
+    cfg = M.ClassifierCfg(mixer=mixer(16, kind), num_classes=7)
+    p = M.init_classifier(jax.random.PRNGKey(0), cfg)
+    logits = M.apply_classifier(cfg, p, jnp.ones((3, 16)))
+    assert logits.shape == (3, 7)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ---------------------------------------------------------------------------
+# Char LM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "spm"])
+def test_charlm(kind):
+    cfg = M.CharLMCfg(mixer=mixer(32, kind, variant="rotation"), seq_len=10)
+    p = M.init_charlm(jax.random.PRNGKey(0), cfg)
+    toks = jnp.arange(20, dtype=jnp.int32).reshape(2, 10) % 256
+    logits = M.apply_charlm(cfg, p, toks)
+    assert logits.shape == (2, 10, 256)
+
+
+# ---------------------------------------------------------------------------
+# GRU (§6): dense flavour must equal the literal GRU equations
+# ---------------------------------------------------------------------------
+
+def test_gru_dense_matches_equations():
+    n = 8
+    cfg = M.GRUCfg(mixer=mixer(n, "dense"), num_classes=3)
+    p = M.init_gru(jax.random.PRNGKey(1), cfg)
+    B, T = 4, 5
+    xs = jax.random.normal(jax.random.PRNGKey(2), (B, T, n))
+
+    # literal eqs. (20)-(23)
+    sig = jax.nn.sigmoid
+    h = jnp.zeros((B, n))
+    lin = lambda mp, v: v @ mp["w"].T + mp["b"]
+    for t in range(T):
+        x_t = xs[:, t, :]
+        z = sig(lin(p["w_z"], x_t) + lin(p["u_z"], h) + p["b_z"])
+        r = sig(lin(p["w_r"], x_t) + lin(p["u_r"], h) + p["b_r"])
+        h_tilde = jnp.tanh(lin(p["w_h"], x_t) + lin(p["u_h"], r * h) + p["b_h"])
+        h = (1 - z) * h + z * h_tilde
+    want = h @ p["head_w"].T + p["head_b"]
+
+    got = M.apply_gru(cfg, p, xs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_gru_spm_runs_and_differs_from_zero():
+    cfg = M.GRUCfg(mixer=mixer(16, "spm", schedule="shift"), num_classes=3)
+    p = M.init_gru(jax.random.PRNGKey(1), cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(2), (2, 4, 16))
+    out = M.apply_gru(cfg, p, xs)
+    assert out.shape == (2, 3)
+    assert float(jnp.max(jnp.abs(out))) > 0
+
+
+def test_gru_spm_gradients_flow_to_all_maps():
+    """§6.4: gradients reach every SPM operator's parameters."""
+    cfg = M.GRUCfg(mixer=mixer(8, "spm", schedule="shift"), num_classes=2)
+    p = M.init_gru(jax.random.PRNGKey(1), cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 8))
+    g = jax.grad(lambda pp: jnp.sum(M.apply_gru(cfg, pp, xs) ** 2))(p)
+    for name in M._GRU_MAPS:
+        norm = sum(float(jnp.sum(jnp.abs(v))) for v in jax.tree.leaves(g[name]))
+        assert norm > 0, f"no gradient reached {name}"
+
+
+# ---------------------------------------------------------------------------
+# Attention (§7): dense flavour must equal the literal equations
+# ---------------------------------------------------------------------------
+
+def test_attention_dense_matches_equations():
+    d, h, B, T = 16, 2, 3, 6
+    cfg = M.AttentionCfg(mixer=mixer(d, "dense"), num_heads=h)
+    p = M.init_attention(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, T, d))
+
+    # literal eqs. (29)-(35), multi-head
+    lin = lambda mp, v: v @ mp["w"].T + mp["b"]
+    dh = d // h
+    q = lin(p["w_q"], x.reshape(-1, d)).reshape(B, T, h, dh)
+    k = lin(p["w_k"], x.reshape(-1, d)).reshape(B, T, h, dh)
+    v = lin(p["w_v"], x.reshape(-1, d)).reshape(B, T, h, dh)
+    want = jnp.zeros((B, T, d))
+    outs = []
+    for head in range(h):
+        s = q[:, :, head] @ jnp.swapaxes(k[:, :, head], 1, 2) / jnp.sqrt(dh)
+        a = jax.nn.softmax(s, axis=-1)
+        outs.append(a @ v[:, :, head])
+    ctx = jnp.stack(outs, axis=2).reshape(B * T, d)
+    want = lin(p["w_o"], ctx).reshape(B, T, d)
+
+    got = M.apply_attention(cfg, p, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_softmax_backward_closed_form():
+    """§7.4: autodiff through row-softmax equals the paper's closed form."""
+    T = 5
+    s = jax.random.normal(jax.random.PRNGKey(5), (T, T))
+    ga = jax.random.normal(jax.random.PRNGKey(6), (T, T))
+    a, vjp = jax.vjp(lambda z: jax.nn.softmax(z, axis=-1), s)
+    (gs_auto,) = vjp(ga)
+    # (G_S)_i = A_i (Ga_i - sum_j A_j Ga_j) rowwise
+    inner = jnp.sum(a * ga, axis=-1, keepdims=True)
+    gs_paper = a * (ga - inner)
+    np.testing.assert_allclose(gs_auto, gs_paper, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_qk_grads_closed_form():
+    """§7.5: G_Q = G_S K / sqrt(dh), G_K = G_S^T Q / sqrt(dh)."""
+    T, dh = 4, 8
+    q = jax.random.normal(jax.random.PRNGKey(7), (T, dh))
+    k = jax.random.normal(jax.random.PRNGKey(8), (T, dh))
+    gs = jax.random.normal(jax.random.PRNGKey(9), (T, T))
+    f = lambda q_, k_: q_ @ k_.T / jnp.sqrt(dh)
+    _, vjp = jax.vjp(f, q, k)
+    gq_auto, gk_auto = vjp(gs)
+    np.testing.assert_allclose(gq_auto, gs @ k / jnp.sqrt(dh), rtol=1e-5)
+    np.testing.assert_allclose(gk_auto, gs.T @ q / jnp.sqrt(dh), rtol=1e-5)
+
+
+def test_attention_spm_rotation_projections_norm():
+    """§7.6: rotation projections preserve l2 norms of each row."""
+    d = 32
+    cfg = M.AttentionCfg(mixer=mixer(d, "spm", variant="rotation"), num_heads=4)
+    p = M.init_attention(jax.random.PRNGKey(10), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 3, d))
+    spec = cfg.mixer.spec()
+    q = spm_mod.spm_apply(spec, p["w_q"], x.reshape(-1, d))
+    np.testing.assert_allclose(
+        jnp.linalg.norm(q, axis=1),
+        jnp.linalg.norm(x.reshape(-1, d), axis=1), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Teacher (§9.1)
+# ---------------------------------------------------------------------------
+
+def test_teacher_labels_deterministic_and_multiclass():
+    cfg = M.TeacherCfg(n=64, num_classes=10)
+    p = M.init_teacher(jax.random.PRNGKey(42), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(43), (512, 64))
+    y1 = M.teacher_labels(cfg, p, x)
+    y2 = M.teacher_labels(cfg, p, x)
+    assert jnp.array_equal(y1, y2)
+    assert y1.dtype == jnp.int32
+    # labels should use a healthy number of classes
+    assert len(np.unique(np.asarray(y1))) >= 5
+
+
+# ---------------------------------------------------------------------------
+# Hybrid mixer (paper §11 future work: SPM + selective dense interaction)
+# ---------------------------------------------------------------------------
+
+def test_hybrid_mixer_shapes_and_decomposition():
+    cfg = M.MixerCfg(n=32, kind="hybrid", hybrid_rank=4)
+    p = M.init_mixer(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 32))
+    y = M.apply_mixer(cfg, p, x)
+    assert y.shape == (6, 32)
+    # hybrid = spm part + low-rank part, by construction
+    spm_part = M.apply_mixer(dataclasses.replace(cfg, kind="spm"), p["spm"], x)
+    lowrank = (x @ p["v"].T) @ p["u"].T
+    np.testing.assert_allclose(y, spm_part + lowrank, rtol=1e-5, atol=1e-6)
+
+
+def test_hybrid_param_count_near_linear():
+    cfg = M.MixerCfg(n=1024, kind="hybrid", hybrid_rank=16)
+    assert M.mixer_param_count(cfg) < 1024 * 1024 / 8  # far below dense
+
+
+def test_hybrid_classifier_trains():
+    from compile import train as T
+    cfg = M.ClassifierCfg(mixer=M.MixerCfg(n=16, kind="hybrid", hybrid_rank=4),
+                          num_classes=3)
+    fns = T.make_flat_fns(lambda k: M.init_classifier(k, cfg),
+                          lambda p, x: M.apply_classifier(cfg, p, x),
+                          T.classifier_loss, T.AdamCfg(lr=5e-3))
+    import jax.numpy as jnp
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
+    y = jnp.argmax(x[:, :3], axis=1).astype(jnp.int32)
+    params = fns["init"](0)
+    nl = fns["nleaves"]
+    m = tuple(jnp.zeros_like(p) for p in params)
+    v = tuple(jnp.zeros_like(p) for p in params)
+    step = jnp.array(0.0)
+    train = jax.jit(fns["train"])
+    first = None
+    last = None
+    for _ in range(50):
+        out = train(*params, *m, *v, step, x, y)
+        params, m, v, step = out[:nl], out[nl:2*nl], out[2*nl:3*nl], out[3*nl]
+        if first is None:
+            first = float(out[3*nl+1])
+        last = float(out[3*nl+1])
+    assert last < first * 0.7, (first, last)

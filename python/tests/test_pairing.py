@@ -1,0 +1,102 @@
+"""Pairing-schedule invariants (paper §2.1, §5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import pairing
+
+
+ALL_KINDS = list(pairing.SCHEDULES)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 7, 8, 15, 16, 31, 64, 100, 257])
+def test_partition(kind, n):
+    """Every stage pairing is a disjoint partition of 0..n-1."""
+    for st_ in pairing.make_schedule(kind, n, 6, seed=1):
+        st_.validate(n)
+        assert st_.num_pairs == n // 2
+        assert (st_.leftover is None) == (n % 2 == 0)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_perm_inverse(kind):
+    for st_ in pairing.make_schedule(kind, 33, 4, seed=5):
+        p, inv = st_.perm(), st_.inverse_perm()
+        assert np.array_equal(p[inv], np.arange(33))
+        assert np.array_equal(inv[p], np.arange(33))
+
+
+def test_butterfly_matches_fft_layout():
+    """Power-of-two butterfly = classical radix-2 butterfly strides."""
+    n = 8
+    s0 = pairing.butterfly_stage(n, 0)
+    assert list(s0.left) == [0, 2, 4, 6] and list(s0.right) == [1, 3, 5, 7]
+    s1 = pairing.butterfly_stage(n, 1)
+    assert list(s1.left) == [0, 1, 4, 5] and list(s1.right) == [2, 3, 6, 7]
+    s2 = pairing.butterfly_stage(n, 2)
+    assert list(s2.left) == [0, 1, 2, 3] and list(s2.right) == [4, 5, 6, 7]
+
+
+def test_butterfly_wraps_strides():
+    """Stages beyond log2(n) reuse strides cyclically."""
+    n = 16
+    a = pairing.butterfly_stage(n, 0)
+    b = pairing.butterfly_stage(n, 4)  # 4 % log2(16) == 0
+    assert np.array_equal(a.perm(), b.perm())
+
+
+def test_shift_rotates():
+    a = pairing.shift_stage(6, 0)
+    b = pairing.shift_stage(6, 1)
+    assert not np.array_equal(a.perm(), b.perm())
+    assert list(a.left) == [0, 2, 4]
+    assert list(b.left) == [1, 3, 5]
+
+
+def test_random_seeded_deterministic():
+    a = pairing.make_schedule("random", 40, 5, seed=9)
+    b = pairing.make_schedule("random", 40, 5, seed=9)
+    c = pairing.make_schedule("random", 40, 5, seed=10)
+    assert pairing.schedule_fingerprint(a) == pairing.schedule_fingerprint(b)
+    assert pairing.schedule_fingerprint(a) != pairing.schedule_fingerprint(c)
+
+
+def test_random_stages_differ():
+    sched = pairing.make_schedule("random", 64, 3, seed=0)
+    fps = {s.perm().tobytes() for s in sched}
+    assert len(fps) == 3
+
+
+def test_default_num_stages():
+    assert pairing.default_num_stages(256) == 8
+    assert pairing.default_num_stages(4096) == 12
+    assert pairing.default_num_stages(2) == 1
+
+
+def test_odd_n_leftover_rotates_for_shift():
+    """The unpaired coordinate should not always be the same one (§5)."""
+    leftovers = {pairing.shift_stage(9, l).leftover for l in range(9)}
+    assert len(leftovers) > 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    kind=st.sampled_from(ALL_KINDS),
+    n=st.integers(min_value=2, max_value=300),
+    L=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partition_property(kind, n, L, seed):
+    for st_ in pairing.make_schedule(kind, n, L, seed=seed):
+        st_.validate(n)
+
+
+def test_bad_inputs():
+    with pytest.raises(ValueError):
+        pairing.make_schedule("nope", 8, 2)
+    with pytest.raises(ValueError):
+        pairing.butterfly_stage(1, 0)
+    with pytest.raises(ValueError):
+        pairing.shift_stage(0, 0)

@@ -1,0 +1,175 @@
+"""Full SPM operator: custom-VJP vs autodiff-of-oracle, operator properties
+from paper §2, §5, §8.4."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import pairing, spm
+from compile.kernels import ref
+
+
+def ref_params(params, L):
+    return {
+        "d_in": params["d_in"], "d_out": params["d_out"], "bias": params["bias"],
+        "mix": [params["mix"][l] for l in range(L)],
+        "lone": [params["lone"][l] for l in range(L)],
+    }
+
+
+def make(n, variant, schedule="butterfly", L=None, remat=False, seed=0):
+    spec = spm.default_spec(n, variant=variant, schedule=schedule, num_stages=L)
+    if remat:
+        spec = spm.SPMSpec(**{**spec.__dict__, "remat": True})
+    params = spm.init_spm_params(jax.random.PRNGKey(seed), spec)
+    return spec, params
+
+
+@pytest.mark.parametrize("variant", ["rotation", "general"])
+@pytest.mark.parametrize("n,schedule", [(8, "butterfly"), (33, "shift"), (64, "random")])
+def test_forward_matches_oracle(variant, n, schedule):
+    spec, params = make(n, variant, schedule)
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, n))
+    y = spm.spm_apply(spec, params, x)
+    yr = ref.spm_fwd(ref_params(params, spec.num_stages), x, spec.stages, variant)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["rotation", "general"])
+@pytest.mark.parametrize("n", [8, 32])
+def test_custom_vjp_matches_autodiff_of_oracle(variant, n):
+    spec, params = make(n, variant, "shift")
+    x = jax.random.normal(jax.random.PRNGKey(2), (6, n))
+
+    def loss_spm(p, xx):
+        return jnp.sum(jnp.tanh(spm.spm_apply(spec, p, xx)))
+
+    def loss_ref(p, xx):
+        return jnp.sum(jnp.tanh(
+            ref.spm_fwd(ref_params(p, spec.num_stages), xx, spec.stages, variant)))
+
+    gp1, gx1 = jax.grad(loss_spm, argnums=(0, 1))(params, x)
+    gp2, gx2 = jax.grad(loss_ref, argnums=(0, 1))(params, x)
+    np.testing.assert_allclose(gx1, gx2, rtol=1e-4, atol=1e-5)
+    for k in ("d_in", "d_out", "bias", "mix"):
+        np.testing.assert_allclose(gp1[k], gp2[k], rtol=1e-4, atol=1e-5,
+                                   err_msg=f"leaf {k}")
+
+
+def test_general_remat_matches_stored():
+    """remat=True recomputes the trace; gradients must be identical."""
+    n = 16
+    spec_s, params = make(n, "general")
+    spec_r = spm.SPMSpec(n=n, num_stages=spec_s.num_stages, variant="general",
+                         schedule="butterfly", remat=True)
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, n))
+
+    def loss(spec):
+        return jax.grad(lambda p: jnp.sum(spm.spm_apply(spec, p, x) ** 2))(params)
+
+    g1, g2 = loss(spec_s), loss(spec_r)
+    for k in g1:
+        np.testing.assert_allclose(g1[k], g2[k], rtol=1e-5, atol=1e-6)
+
+
+def test_rotation_norm_preservation_full_operator():
+    """§8.4: with D_in = D_out = I and b = 0, ||SPM(x)|| == ||x||."""
+    spec, params = make(128, "rotation")
+    x = jax.random.normal(jax.random.PRNGKey(4), (20, 128))
+    y = spm.spm_apply(spec, params, x)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=1), jnp.linalg.norm(x, axis=1), rtol=1e-4)
+
+
+def test_rotation_materialized_matrix_is_orthogonal():
+    spec, params = make(32, "rotation")
+    W = ref.spm_materialize(ref_params(params, spec.num_stages), 32,
+                            spec.stages, "rotation")
+    np.testing.assert_allclose(W @ W.T, jnp.eye(32), atol=1e-4)
+    # operator norm == 1 (||B_l||_2 = 1 composed, §8.4)
+    s = jnp.linalg.svd(W, compute_uv=False)
+    np.testing.assert_allclose(s, jnp.ones(32), atol=1e-4)
+
+
+def test_linearity():
+    """SPM minus bias is linear: f(ax+by) = a f(x) + b f(y)."""
+    spec, params = make(64, "general")
+    key = jax.random.PRNGKey(5)
+    x, y = jax.random.normal(key, (2, 3, 64))
+    f = lambda v: spm.spm_apply(spec, params, v) - params["bias"]
+    lhs = f(2.5 * x - 1.5 * y)
+    rhs = 2.5 * f(x) - 1.5 * f(y)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-4)
+
+
+def test_materialize_dense_equivalence():
+    """Materialized W applied densely == SPM applied directly."""
+    spec, params = make(24, "general", "random")
+    x = jax.random.normal(jax.random.PRNGKey(6), (7, 24))
+    W = ref.spm_materialize(ref_params(params, spec.num_stages), 24,
+                            spec.stages, "general")
+    np.testing.assert_allclose(
+        spm.spm_apply(spec, params, x), x @ W.T + params["bias"],
+        rtol=1e-3, atol=1e-4)
+
+
+def test_param_count_formula():
+    """Paper §5: parameters are O(nL), vs n^2 dense."""
+    for n, variant in [(256, "rotation"), (256, "general"), (33, "general")]:
+        spec, params = make(n, variant)
+        total = sum(int(np.prod(v.shape)) for v in params.values())
+        # lone params are carried but only count when odd-n general
+        expected = spec.param_count()
+        carried = total - expected
+        assert carried >= 0 and carried <= spec.num_stages  # unused lone slots
+        assert expected < n * n  # strictly below dense for all tested n
+
+
+def test_odd_n_all_variants():
+    for variant in ("rotation", "general"):
+        spec, params = make(17, variant, "shift")
+        x = jax.random.normal(jax.random.PRNGKey(7), (4, 17))
+        y = spm.spm_apply(spec, params, x)
+        assert y.shape == (4, 17)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_apply_nd():
+    spec, params = make(16, "general")
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 5, 16))
+    y = spm.spm_apply_nd(spec, params, x)
+    assert y.shape == (2, 5, 16)
+    y2 = spm.spm_apply(spec, params, x.reshape(10, 16)).reshape(2, 5, 16)
+    np.testing.assert_allclose(y, y2, rtol=1e-6)
+
+
+def test_shape_errors():
+    spec, params = make(16, "general")
+    with pytest.raises(ValueError):
+        spm.spm_apply(spec, params, jnp.zeros((4, 8)))
+    with pytest.raises(ValueError):
+        spm.SPMSpec(n=8, num_stages=2, variant="bogus")
+    with pytest.raises(ValueError):
+        spm.SPMSpec(n=8, num_stages=2, schedule="bogus")
+    with pytest.raises(ValueError):
+        spm.SPMSpec(n=1, num_stages=2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=80),
+    L=st.integers(min_value=1, max_value=6),
+    variant=st.sampled_from(["rotation", "general"]),
+    schedule=st.sampled_from(list(pairing.SCHEDULES)),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_forward_property(n, L, variant, schedule, seed):
+    spec = spm.SPMSpec(n=n, num_stages=L, variant=variant, schedule=schedule,
+                       seed=seed % 3)
+    params = spm.init_spm_params(jax.random.PRNGKey(seed), spec)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (3, n))
+    y = spm.spm_apply(spec, params, x)
+    yr = ref.spm_fwd(ref_params(params, L), x, spec.stages, variant)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-5)

@@ -1,0 +1,127 @@
+"""Training graphs: Adam math, flat signatures, loss decrease."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+
+def test_softmax_xent_matches_manual():
+    logits = jnp.array([[2.0, 1.0, 0.1], [0.0, 0.0, 0.0]])
+    labels = jnp.array([0, 2], dtype=jnp.int32)
+    got = T.softmax_xent(logits, labels)
+    p = jax.nn.softmax(logits)
+    want = -(jnp.log(p[0, 0]) + jnp.log(p[1, 2])) / 2
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_accuracy():
+    logits = jnp.array([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+    labels = jnp.array([0, 1, 1], dtype=jnp.int32)
+    np.testing.assert_allclose(T.accuracy(logits, labels), 2.0 / 3.0, rtol=1e-6)
+
+
+def test_adam_matches_manual_numpy():
+    """One pytree Adam step vs a hand-rolled numpy Adam on the same grads."""
+    cfg = T.AdamCfg(lr=0.01)
+    p = {"a": jnp.array([1.0, 2.0]), "b": jnp.array([[3.0]])}
+    g = {"a": jnp.array([0.5, -1.0]), "b": jnp.array([[2.0]])}
+    m = T.zeros_like_tree(p)
+    v = T.zeros_like_tree(p)
+    new_p, new_m, new_v, t = T.adam_update(cfg, p, g, m, v, jnp.array(0.0))
+    assert float(t) == 1.0
+    for k in ("a", "b"):
+        gm = 0.1 * np.asarray(g[k])          # (1-b1) g
+        gv = 0.001 * np.asarray(g[k]) ** 2   # (1-b2) g^2
+        mhat = gm / (1 - 0.9)
+        vhat = gv / (1 - 0.999)
+        want = np.asarray(p[k]) - 0.01 * mhat / (np.sqrt(vhat) + 1e-8)
+        np.testing.assert_allclose(new_p[k], want, rtol=1e-5)
+        np.testing.assert_allclose(new_m[k], gm, rtol=1e-6)
+        np.testing.assert_allclose(new_v[k], gv, rtol=1e-6)
+
+
+def test_adam_two_steps_bias_correction():
+    cfg = T.AdamCfg(lr=0.1)
+    p = {"w": jnp.array([0.0])}
+    g = {"w": jnp.array([1.0])}
+    m = T.zeros_like_tree(p)
+    v = T.zeros_like_tree(p)
+    p1, m1, v1, t1 = T.adam_update(cfg, p, g, m, v, jnp.array(0.0))
+    p2, _, _, t2 = T.adam_update(cfg, p1, g, m1, v1, t1)
+    assert float(t2) == 2.0
+    # with constant unit gradient, both steps move ~ -lr
+    np.testing.assert_allclose(float(p1["w"][0]), -0.1, atol=1e-6)
+    np.testing.assert_allclose(float(p2["w"][0]), -0.2, atol=1e-4)
+
+
+def test_leaf_names_deterministic():
+    p = {"outer": {"z": jnp.zeros(1), "a": jnp.zeros(2)}, "b": jnp.zeros(3)}
+    names = T.leaf_names(p)
+    assert names == ["b", "outer.a", "outer.z"]  # tree_flatten sorts dict keys
+
+
+@pytest.mark.parametrize("kind", ["dense", "spm"])
+def test_flat_train_step_reduces_loss(kind):
+    """A few flat-signature steps on a learnable toy problem."""
+    n, C, B = 16, 4, 64
+    cfg = M.ClassifierCfg(mixer=M.MixerCfg(n=n, kind=kind, schedule="shift"),
+                          num_classes=C)
+    fns = T.make_flat_fns(
+        lambda key: M.init_classifier(key, cfg),
+        lambda p, x: M.apply_classifier(cfg, p, x),
+        T.classifier_loss, T.AdamCfg(lr=5e-3))
+
+    # learnable rule: class = argmax over first C coords
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, n))
+    y = jnp.argmax(x[:, :C], axis=1).astype(jnp.int32)
+
+    params = fns["init"](0)
+    nl = fns["nleaves"]
+    m = tuple(jnp.zeros_like(p) for p in params)
+    v = tuple(jnp.zeros_like(p) for p in params)
+    step = jnp.array(0.0)
+
+    train = jax.jit(fns["train"])
+    losses = []
+    for _ in range(60):
+        out = train(*params, *m, *v, step, x, y)
+        params, m, v = out[:nl], out[nl:2 * nl], out[2 * nl:3 * nl]
+        step, loss = out[3 * nl], out[3 * nl + 1]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+    ev = jax.jit(fns["eval"])
+    loss, acc = ev(*params, x, y)
+    assert float(acc) > 0.5
+
+
+def test_flat_eval_matches_train_loss_at_same_params():
+    n, C, B = 8, 3, 16
+    cfg = M.ClassifierCfg(mixer=M.MixerCfg(n=n, kind="dense"), num_classes=C)
+    fns = T.make_flat_fns(
+        lambda key: M.init_classifier(key, cfg),
+        lambda p, x: M.apply_classifier(cfg, p, x),
+        T.classifier_loss, T.AdamCfg())
+    params = fns["init"](3)
+    nl = fns["nleaves"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, n))
+    y = jnp.zeros((B,), jnp.int32)
+    m = tuple(jnp.zeros_like(p) for p in params)
+    v = tuple(jnp.zeros_like(p) for p in params)
+    out = fns["train"](*params, *m, *v, jnp.array(0.0), x, y)
+    train_loss = float(out[3 * nl + 1])
+    eval_loss = float(fns["eval"](*params, x, y)[0])
+    np.testing.assert_allclose(train_loss, eval_loss, rtol=1e-5)
+
+
+def test_charlm_loss_is_nll_nats():
+    V = 8
+    logits = jnp.zeros((2, 3, V))  # uniform -> NLL = ln V
+    targets = jnp.zeros((2, 3), jnp.int32)
+    nll, metric = T.charlm_loss(logits, targets)
+    np.testing.assert_allclose(nll, jnp.log(V), rtol=1e-6)
+    np.testing.assert_allclose(metric, nll)

@@ -1,0 +1,15 @@
+use spm_runtime::{Engine, HostTensor, Manifest, TrainSession};
+use std::io::Write;
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let man = Manifest::load("artifacts")?;
+    let mut sess = TrainSession::new(&engine, &man, "table2_spm_n2048", &["init", "forward"])?;
+    sess.init(0)?;
+    let xb: Vec<f32> = std::fs::read("/tmp/agnews_x.bin")?
+        .chunks(4).map(|c| f32::from_le_bytes([c[0],c[1],c[2],c[3]])).collect();
+    let logits = sess.forward(&HostTensor::F32(xb))?;
+    let mut f = std::fs::File::create("/tmp/rust_logits.bin")?;
+    for v in &logits { f.write_all(&v.to_le_bytes())?; }
+    println!("rust logits[0..4] = {:?}", &logits[..4]);
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Checkpointing: save/restore the full device-resident training state
+//! (parameter leaves) to a self-describing binary file, so long runs
+//! (Tables 3/4 at full step counts) can be resumed and trained models can
+//! be served later.
+//!
+//! Format (little-endian):
+//!   magic "SPMCKPT1" | u32 entry-name len | name bytes
+//!   | u32 leaf count | per leaf: u32 name len, name, u32 elems, f32 data[]
+//!
+//! Only f32 leaves are stored (all current models); the manifest leaf list
+//! is the schema against which a load is validated.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use spm_runtime::{Entry, TensorSpec};
+
+const MAGIC: &[u8; 8] = b"SPMCKPT1";
+
+pub struct Checkpoint {
+    pub entry_name: String,
+    pub leaves: Vec<(String, Vec<f32>)>,
+}
+
+fn w_u32(f: &mut impl Write, v: u32) -> Result<()> {
+    f.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn r_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn save(path: &Path, entry: &Entry, leaves: &[Vec<f32>]) -> Result<()> {
+    if leaves.len() != entry.leaves.len() {
+        bail!("leaf count {} != manifest {}", leaves.len(), entry.leaves.len());
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating checkpoint {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    w_u32(&mut f, entry.name.len() as u32)?;
+    f.write_all(entry.name.as_bytes())?;
+    w_u32(&mut f, leaves.len() as u32)?;
+    for (spec, data) in entry.leaves.iter().zip(leaves) {
+        if data.len() != spec.elements() {
+            bail!("{}: {} values, want {}", spec.name, data.len(), spec.elements());
+        }
+        w_u32(&mut f, spec.name.len() as u32)?;
+        f.write_all(spec.name.as_bytes())?;
+        w_u32(&mut f, data.len() as u32)?;
+        for v in data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an SPM checkpoint", path.display());
+    }
+    let nlen = r_u32(&mut f)? as usize;
+    let mut name = vec![0u8; nlen];
+    f.read_exact(&mut name)?;
+    let entry_name = String::from_utf8(name).context("entry name not utf-8")?;
+    let count = r_u32(&mut f)? as usize;
+    let mut leaves = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ln = r_u32(&mut f)? as usize;
+        let mut lname = vec![0u8; ln];
+        f.read_exact(&mut lname)?;
+        let elems = r_u32(&mut f)? as usize;
+        let mut raw = vec![0u8; elems * 4];
+        f.read_exact(&mut raw)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        leaves.push((String::from_utf8(lname).context("leaf name")?, data));
+    }
+    Ok(Checkpoint { entry_name, leaves })
+}
+
+/// Validate a checkpoint against a manifest entry (names, order, sizes).
+pub fn validate(ckpt: &Checkpoint, entry: &Entry) -> Result<()> {
+    if ckpt.entry_name != entry.name {
+        bail!("checkpoint is for '{}', not '{}'", ckpt.entry_name, entry.name);
+    }
+    if ckpt.leaves.len() != entry.leaves.len() {
+        bail!("leaf count mismatch");
+    }
+    for ((cn, cd), spec) in ckpt.leaves.iter().zip(&entry.leaves) {
+        if cn != &spec.name {
+            bail!("leaf order mismatch: {} vs {}", cn, spec.name);
+        }
+        if cd.len() != spec.elements() {
+            bail!("{}: {} values, want {}", cn, cd.len(), spec.elements());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use spm_runtime::DType;
+    use std::collections::BTreeMap;
+
+    fn toy_entry() -> Entry {
+        Entry {
+            name: "toy".into(),
+            nleaves: 2,
+            leaves: vec![
+                TensorSpec { name: "w".into(), shape: vec![2, 3], dtype: DType::F32 },
+                TensorSpec { name: "b".into(), shape: vec![3], dtype: DType::F32 },
+            ],
+            artifacts: BTreeMap::new(),
+            meta: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let entry = toy_entry();
+        let leaves = vec![vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![-1.0, 0.5, 2.25]];
+        let path = std::env::temp_dir().join("spm_ckpt_test.bin");
+        save(&path, &entry, &leaves).unwrap();
+        let ck = load(&path).unwrap();
+        validate(&ck, &entry).unwrap();
+        assert_eq!(ck.entry_name, "toy");
+        assert_eq!(ck.leaves[0].1, leaves[0]);
+        assert_eq!(ck.leaves[1].1, leaves[1]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_wrong_entry() {
+        let entry = toy_entry();
+        let leaves = vec![vec![0.0; 6], vec![0.0; 3]];
+        let path = std::env::temp_dir().join("spm_ckpt_test2.bin");
+        save(&path, &entry, &leaves).unwrap();
+        let ck = load(&path).unwrap();
+        let mut other = toy_entry();
+        other.name = "other".into();
+        assert!(validate(&ck, &other).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = std::env::temp_dir().join("spm_ckpt_test3.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        let entry = toy_entry();
+        let leaves = vec![vec![0.0; 5], vec![0.0; 3]]; // 5 != 6
+        let path = std::env::temp_dir().join("spm_ckpt_test4.bin");
+        assert!(save(&path, &entry, &leaves).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Experiment configuration: a TOML-subset parser (toml is not in the
+//! offline vendor set) + typed run configs with file/CLI overrides.
+//!
+//! Supported TOML subset — exactly what experiment configs need:
+//! `[section]` headers, `key = value` with string/int/float/bool values,
+//! `#` comments, blank lines.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value ("" = top level section)
+pub type Toml = BTreeMap<String, BTreeMap<String, Value>>;
+
+pub fn parse_toml(text: &str) -> Result<Toml> {
+    let mut out: Toml = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().to_string();
+        let val = val.trim();
+        // strip trailing comment outside quotes
+        let val = if val.starts_with('"') {
+            val
+        } else {
+            val.split('#').next().unwrap().trim()
+        };
+        let parsed = if let Some(s) = val.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            Value::Str(s.to_string())
+        } else if val == "true" {
+            Value::Bool(true)
+        } else if val == "false" {
+            Value::Bool(false)
+        } else if let Ok(i) = val.parse::<i64>() {
+            Value::Int(i)
+        } else if let Ok(f) = val.parse::<f64>() {
+            Value::Float(f)
+        } else {
+            bail!("line {}: cannot parse value '{val}'", lineno + 1);
+        };
+        out.entry(section.clone()).or_default().insert(key, parsed);
+    }
+    Ok(out)
+}
+
+/// Run-level knobs every experiment honours. Training hyper-parameters
+/// (lr, batch, L, schedule) are baked into the AOT artifacts; the run config
+/// controls duration, cadence, seeds and reporting.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// training steps per model
+    pub steps: usize,
+    /// evaluate every k steps (0 = only at the end)
+    pub eval_every: usize,
+    /// number of eval batches
+    pub eval_batches: usize,
+    /// timing warmup steps excluded from ms/step
+    pub warmup: usize,
+    /// data/init seed
+    pub seed: u64,
+    /// CSV output path ("" = none)
+    pub out_csv: String,
+    /// worker threads for the native engine (0 = all cores)
+    pub threads: usize,
+    /// artifacts directory
+    pub artifacts: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            steps: 200,
+            eval_every: 0,
+            eval_batches: 10,
+            warmup: 3,
+            seed: 0,
+            out_csv: String::new(),
+            threads: 0,
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply `[run]` (or top-level) keys from a TOML file.
+    pub fn apply_toml(&mut self, doc: &Toml) {
+        for section in ["", "run"] {
+            if let Some(map) = doc.get(section) {
+                if let Some(v) = map.get("steps").and_then(Value::as_usize) {
+                    self.steps = v;
+                }
+                if let Some(v) = map.get("eval_every").and_then(Value::as_usize) {
+                    self.eval_every = v;
+                }
+                if let Some(v) = map.get("eval_batches").and_then(Value::as_usize) {
+                    self.eval_batches = v;
+                }
+                if let Some(v) = map.get("warmup").and_then(Value::as_usize) {
+                    self.warmup = v;
+                }
+                if let Some(v) = map.get("seed").and_then(Value::as_usize) {
+                    self.seed = v as u64;
+                }
+                if let Some(v) = map.get("out_csv").and_then(Value::as_str) {
+                    self.out_csv = v.to_string();
+                }
+                if let Some(v) = map.get("threads").and_then(Value::as_usize) {
+                    self.threads = v;
+                }
+                if let Some(v) = map.get("artifacts").and_then(Value::as_str) {
+                    self.artifacts = v.to_string();
+                }
+            }
+        }
+    }
+
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let doc = parse_toml(&text)?;
+        self.apply_toml(&doc);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            r#"
+# comment
+steps = 100
+[run]
+eval_every = 25   # inline comment
+out_csv = "results.csv"
+lr = 0.001
+fast = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["steps"], Value::Int(100));
+        assert_eq!(doc["run"]["eval_every"], Value::Int(25));
+        assert_eq!(doc["run"]["out_csv"], Value::Str("results.csv".into()));
+        assert_eq!(doc["run"]["lr"], Value::Float(0.001));
+        assert_eq!(doc["run"]["fast"], Value::Bool(true));
+    }
+
+    #[test]
+    fn run_config_applies() {
+        let doc = parse_toml("[run]\nsteps = 42\nseed = 7\nout_csv = \"x.csv\"\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc);
+        assert_eq!(rc.steps, 42);
+        assert_eq!(rc.seed, 7);
+        assert_eq!(rc.out_csv, "x.csv");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_toml("this is not toml").is_err());
+        assert!(parse_toml("x = @@@").is_err());
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Int(-1).as_usize(), None);
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,15 @@
+//! # spm-coordinator
+//!
+//! L3 of the three-layer stack: the experiment coordinator. Owns the
+//! config system, CLI launcher (`spm`), metrics, the prefetching data
+//! pipeline, every table/ablation driver, and the batched-serving demo.
+//! Examples and benches call into this library so every reported number has
+//! a single source of truth.
+
+pub mod checkpoint;
+pub mod config;
+pub mod experiments;
+pub mod metrics;
+pub mod serve;
+
+pub use config::RunConfig;

@@ -1,0 +1,257 @@
+//! `spm` — the experiment launcher.
+//!
+//! Subcommands (hand-rolled CLI; clap is not in the offline vendor set):
+//!   spm list                              list manifest entries
+//!   spm info                              platform / artifact summary
+//!   spm run <experiment> [opts]           run a paper experiment
+//!   spm train <entry> [opts]              generic train loop (+checkpoints)
+//!   spm serve <entry> [opts]              batched serving demo
+//!
+//! Experiments: table1, table2, table3, table4, table1-native,
+//! table2-native, abl-depth, abl-pairing, abl-variant, core-scaling.
+//!
+//! Common options:
+//!   --steps N --eval-every N --eval-batches N --seed N --warmup N
+//!   --csv PATH --config FILE.toml --artifacts DIR --threads N
+//!   --widths 256,512 (table1/2)
+
+use anyhow::{bail, Context, Result};
+
+use spm_coordinator::config::RunConfig;
+use spm_coordinator::{experiments, serve};
+use spm_runtime::{Engine, Manifest};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: spm <list|info|run <experiment>|serve <entry>> [options]\n\
+         experiments: table1 table2 table3 table4 table1-native table2-native\n\
+                      abl-depth abl-pairing abl-variant core-scaling\n\
+         options: --steps N --eval-every N --eval-batches N --seed N --warmup N\n\
+                  --csv PATH --config FILE --artifacts DIR --threads N --widths a,b\n\
+                  --requests N --clients N (serve)"
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    positional: Vec<String>,
+    options: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut options = std::collections::BTreeMap::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = it.next().unwrap_or_else(|| {
+                eprintln!("option --{key} needs a value");
+                std::process::exit(2);
+            });
+            options.insert(key.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, options }
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.options.get("config") {
+        cfg.load_file(path)?;
+    }
+    let get_usize = |key: &str| -> Result<Option<usize>> {
+        match args.options.get(key) {
+            Some(v) => Ok(Some(v.parse::<usize>().with_context(|| format!("--{key}"))?)),
+            None => Ok(None),
+        }
+    };
+    if let Some(v) = get_usize("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(v) = get_usize("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = get_usize("eval-batches")? {
+        cfg.eval_batches = v;
+    }
+    if let Some(v) = get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = get_usize("warmup")? {
+        cfg.warmup = v;
+    }
+    if let Some(v) = get_usize("threads")? {
+        cfg.threads = v;
+    }
+    if let Some(v) = args.options.get("csv") {
+        cfg.out_csv = v.clone();
+    }
+    if let Some(v) = args.options.get("artifacts") {
+        cfg.artifacts = v.clone();
+    }
+    if cfg.threads > 0 {
+        spm_core::parallel::set_threads(cfg.threads);
+    }
+    Ok(cfg)
+}
+
+fn parse_widths(args: &Args, default: &[usize]) -> Result<Vec<usize>> {
+    match args.options.get("widths") {
+        None => Ok(default.to_vec()),
+        Some(s) => s
+            .split(',')
+            .map(|w| w.trim().parse::<usize>().context("--widths"))
+            .collect(),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    if args.positional.is_empty() {
+        usage();
+    }
+    let cfg = build_config(&args)?;
+    match args.positional[0].as_str() {
+        "list" => {
+            let man = Manifest::load(&cfg.artifacts)?;
+            println!("{:<28} {:>8} {:>10} {:>7}  artifacts", "entry", "n", "params", "kind");
+            for (name, e) in &man.entries {
+                println!(
+                    "{:<28} {:>8} {:>10} {:>7}  {}",
+                    name,
+                    e.meta_str("n"),
+                    e.meta_str("param_count"),
+                    e.meta_str("kind"),
+                    e.artifacts.keys().cloned().collect::<Vec<_>>().join(",")
+                );
+            }
+        }
+        "info" => {
+            let engine = Engine::cpu()?;
+            let man = Manifest::load(&cfg.artifacts)?;
+            println!("platform : {}", engine.platform());
+            println!("entries  : {}", man.entries.len());
+            println!("artifacts: {}", cfg.artifacts);
+            println!("threads  : {}", spm_core::parallel::num_threads());
+        }
+        "run" => {
+            if args.positional.len() < 2 {
+                usage();
+            }
+            let exp = args.positional[1].as_str();
+            let report = match exp {
+                "table1" | "table2" => {
+                    let engine = Engine::cpu()?;
+                    let man = Manifest::load(&cfg.artifacts)?;
+                    if exp == "table1" {
+                        let widths = parse_widths(&args, &[256, 512, 1024, 2048])?;
+                        experiments::run_table1(Some(&engine), Some(&man), &widths, &cfg, false)?
+                    } else {
+                        let widths = parse_widths(&args, &[2048, 4096])?;
+                        experiments::run_table2(Some(&engine), Some(&man), &widths, &cfg, false)?
+                    }
+                }
+                "table1-native" => {
+                    let widths = parse_widths(&args, &[256, 512, 1024, 2048])?;
+                    experiments::run_table1(None, None, &widths, &cfg, true)?
+                }
+                "table2-native" => {
+                    let widths = parse_widths(&args, &[2048, 4096])?;
+                    experiments::run_table2(None, None, &widths, &cfg, true)?
+                }
+                "table3" | "table4" => {
+                    let engine = Engine::cpu()?;
+                    let man = Manifest::load(&cfg.artifacts)?;
+                    let entry =
+                        if exp == "table3" { "charlm_dense_d4096" } else { "charlm_spm_d4096" };
+                    let rows = experiments::run_charlm(&engine, &man, entry, &cfg)?;
+                    experiments::render_charlm_table(
+                        &format!(
+                            "{} — char-LM {} (d=4096)",
+                            if exp == "table3" { "Table 3" } else { "Table 4" },
+                            entry
+                        ),
+                        &rows,
+                    )
+                }
+                "abl-depth" | "abl-pairing" | "abl-variant" => {
+                    let engine = Engine::cpu()?;
+                    let man = Manifest::load(&cfg.artifacts)?;
+                    experiments::run_ablation(&engine, &man, &exp[4..], &cfg)?
+                }
+                "core-scaling" => {
+                    let widths = parse_widths(&args, &[256, 512, 1024, 2048, 4096])?;
+                    experiments::run_core_scaling(&widths, 64)
+                }
+                other => bail!("unknown experiment '{other}'"),
+            };
+            println!("{report}");
+        }
+        "train" => {
+            // generic training with checkpoint save/resume:
+            //   spm train <entry> --steps N [--save ckpt] [--load ckpt]
+            if args.positional.len() < 2 {
+                usage();
+            }
+            let entry_name = args.positional[1].as_str();
+            let engine = Engine::cpu()?;
+            let man = Manifest::load(&cfg.artifacts)?;
+            let mut sess = spm_runtime::TrainSession::new(
+                &engine, &man, entry_name, &["init", "train", "eval"])?;
+            if let Some(path) = args.options.get("load") {
+                let ck = spm_coordinator::checkpoint::load(std::path::Path::new(path))?;
+                spm_coordinator::checkpoint::validate(&ck, &sess.entry)?;
+                let leaves: Vec<Vec<f32>> = ck.leaves.into_iter().map(|(_, d)| d).collect();
+                sess.load_params(&leaves)?;
+                println!("resumed from {path}");
+            } else {
+                sess.init(cfg.seed as i32)?;
+            }
+            let n = sess.entry.meta_usize("n")?;
+            let batch = sess.entry.meta_usize("batch")?;
+            let classes = sess.entry.meta_usize("num_classes").unwrap_or(10);
+            let data = experiments::DataSource::Teacher { n, classes, seed: 7 + n as u64 };
+            for step in 0..cfg.steps {
+                let (x, y) = data.batch(step, batch, true);
+                let (loss, metric) = sess.train_step(
+                    &spm_runtime::HostTensor::F32(x.data),
+                    &spm_runtime::HostTensor::from_labels(&y))?;
+                if step % 20 == 0 || step + 1 == cfg.steps {
+                    println!("step {step:>5}: loss {loss:.4} metric {metric:.4}");
+                }
+            }
+            if let Some(path) = args.options.get("save") {
+                let leaves = sess.params_host()?;
+                spm_coordinator::checkpoint::save(
+                    std::path::Path::new(path), &sess.entry, &leaves)?;
+                println!("saved checkpoint to {path}");
+            }
+        }
+        "serve" => {
+            if args.positional.len() < 2 {
+                usage();
+            }
+            let entry = args.positional[1].as_str();
+            let requests: usize = args
+                .options
+                .get("requests")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(512);
+            let clients: usize = args
+                .options
+                .get("clients")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(4);
+            let engine = Engine::cpu()?;
+            let man = Manifest::load(&cfg.artifacts)?;
+            let report = serve::serve_demo(&engine, &man, entry, requests, clients, cfg.seed)?;
+            println!("{report}");
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Metrics: step timing (warmup-aware), CSV sink, and paper-style table
+//! rendering. Every experiment reports through this module so EXPERIMENTS.md
+//! rows are regenerated identically.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Mean ms/step excluding the first `warmup` steps (compile/cache effects).
+pub struct StepTimer {
+    warmup: usize,
+    count: usize,
+    total_ms: f64,
+    last_start: Option<Instant>,
+}
+
+impl StepTimer {
+    pub fn new(warmup: usize) -> Self {
+        StepTimer { warmup, count: 0, total_ms: 0.0, last_start: None }
+    }
+
+    pub fn start(&mut self) {
+        self.last_start = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        let t = self.last_start.take().expect("stop without start");
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        self.count += 1;
+        if self.count > self.warmup {
+            self.total_ms += ms;
+        }
+    }
+
+    pub fn steps_timed(&self) -> usize {
+        self.count.saturating_sub(self.warmup)
+    }
+
+    pub fn ms_per_step(&self) -> f64 {
+        if self.steps_timed() == 0 {
+            0.0
+        } else {
+            self.total_ms / self.steps_timed() as f64
+        }
+    }
+}
+
+/// Append-only CSV writer.
+pub struct Csv {
+    file: Option<std::fs::File>,
+}
+
+impl Csv {
+    /// `path` empty => disabled sink.
+    pub fn create(path: &str, header: &str) -> Result<Csv> {
+        if path.is_empty() {
+            return Ok(Csv { file: None });
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+        writeln!(f, "{header}")?;
+        Ok(Csv { file: Some(f) })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{}", fields.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Fixed-width table printer (paper-style rows on stdout).
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+            let mut first = true;
+            for (c, w) in cells.iter().zip(widths) {
+                if !first {
+                    let _ = write!(out, "  ");
+                }
+                let _ = write!(out, "{c:>w$}", w = w);
+                first = false;
+            }
+            let _ = writeln!(out);
+        };
+        line(&mut out, &self.headers, &widths);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row, &widths);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_excludes_warmup() {
+        let mut t = StepTimer::new(2);
+        for _ in 0..5 {
+            t.start();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            t.stop();
+        }
+        assert_eq!(t.steps_timed(), 3);
+        assert!(t.ms_per_step() >= 1.0);
+    }
+
+    #[test]
+    fn timer_empty_is_zero() {
+        let t = StepTimer::new(0);
+        assert_eq!(t.ms_per_step(), 0.0);
+    }
+
+    #[test]
+    fn csv_disabled_is_noop() {
+        let mut c = Csv::create("", "a,b").unwrap();
+        c.row(&["1".into(), "2".into()]).unwrap();
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let path = std::env::temp_dir().join("spm_test_metrics.csv");
+        let p = path.to_str().unwrap();
+        let mut c = Csv::create(p, "a,b").unwrap();
+        c.row(&["1".into(), "2".into()]).unwrap();
+        drop(c);
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["n", "acc"]);
+        t.row(vec!["256".into(), "0.99".into()]);
+        let s = t.render();
+        assert!(s.contains("n"));
+        assert!(s.contains("256"));
+        assert!(s.lines().count() == 3);
+    }
+}

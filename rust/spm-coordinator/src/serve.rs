@@ -1,0 +1,159 @@
+//! Serving demo: a batched request router in front of a PJRT forward
+//! executable (the §7 "projection layers dominate serving cost" story).
+//!
+//! Client threads submit single-row requests through an mpsc channel; the
+//! router (on the engine thread — PJRT clients are not Send) drains up to
+//! the artifact's batch size, pads the tail, runs one forward, and fans the
+//! rows back out through per-request reply channels. Latency percentiles
+//! and throughput are reported.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use spm_core::rng::Rng;
+use spm_runtime::{Engine, HostTensor, Manifest, TrainSession};
+
+pub struct Request {
+    pub features: Vec<f32>,
+    pub reply: mpsc::Sender<Vec<f32>>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch_fill: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "requests      : {}", self.requests)?;
+        writeln!(f, "batches       : {} (mean fill {:.1})", self.batches, self.mean_batch_fill)?;
+        writeln!(f, "latency p50   : {:.2} ms", self.p50_ms)?;
+        writeln!(f, "latency p95   : {:.2} ms", self.p95_ms)?;
+        writeln!(f, "latency p99   : {:.2} ms", self.p99_ms)?;
+        write!(f, "throughput    : {:.0} req/s", self.throughput_rps)
+    }
+}
+
+/// Run the serving demo against one manifest entry's `forward` artifact.
+/// `entry_name` must be a classifier/teacher-style model taking (B, n) f32.
+pub fn serve_demo(
+    engine: &Engine,
+    manifest: &Manifest,
+    entry_name: &str,
+    num_requests: usize,
+    num_clients: usize,
+    seed: u64,
+) -> Result<ServeReport> {
+    let mut sess = TrainSession::new(engine, manifest, entry_name, &["init", "forward"])?;
+    sess.init(seed as i32)?;
+    let batch = sess.entry.meta_usize("batch")?;
+    let n = sess.entry.meta_usize("n")?;
+    let out_width = {
+        let art = sess.entry.artifact("forward")?;
+        let shape = &art.outputs[0].shape;
+        if shape.len() >= 2 { shape[1..].iter().product() } else { 1 }
+    };
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    // client threads: generate feature rows and wait for replies
+    let per_client = num_requests / num_clients;
+    let handles: Vec<_> = (0..num_clients)
+        .map(|c| {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed ^ (c as u64 + 1) * 0xABCD);
+                let mut latencies = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let features = rng.normal_vec(n, 1.0);
+                    let (rtx, rrx) = mpsc::channel();
+                    let started = Instant::now();
+                    tx.send(Request { features, reply: rtx, submitted: started })
+                        .expect("router gone");
+                    let _out = rrx.recv().expect("no reply");
+                    latencies.push(started.elapsed().as_secs_f64() * 1e3);
+                    // small jitter so batching has something to do
+                    if c % 2 == 0 {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+                latencies
+            })
+        })
+        .collect();
+    drop(tx);
+
+    // router loop (engine thread)
+    let t0 = Instant::now();
+    let mut batches = 0usize;
+    let mut served = 0usize;
+    let mut fill_sum = 0usize;
+    loop {
+        // block for the first request, then drain greedily up to `batch`
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let mut pending = vec![first];
+        while pending.len() < batch {
+            match rx.try_recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        let fill = pending.len();
+        let mut flat = vec![0.0f32; batch * n];
+        for (i, r) in pending.iter().enumerate() {
+            flat[i * n..(i + 1) * n].copy_from_slice(&r.features);
+        }
+        let out = if sess.entry.meta_str("model") == "teacher" {
+            // teacher forward returns i32 labels
+            sess.forward_i32(&HostTensor::F32(flat))?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect::<Vec<f32>>()
+        } else {
+            sess.forward(&HostTensor::F32(flat))?
+        };
+        let per_row = out.len() / batch.max(1);
+        debug_assert!(per_row == out_width || per_row == 1);
+        for (i, r) in pending.into_iter().enumerate() {
+            let row = out[i * per_row..(i + 1) * per_row].to_vec();
+            let _ = r.reply.send(row);
+        }
+        batches += 1;
+        served += fill;
+        fill_sum += fill;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<f64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("client panicked"))
+        .collect();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies.len() as f64 - 1.0) * p).round() as usize;
+        latencies[idx]
+    };
+    Ok(ServeReport {
+        requests: served,
+        batches,
+        mean_batch_fill: fill_sum as f64 / batches.max(1) as f64,
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+        throughput_rps: served as f64 / wall.max(1e-9),
+    })
+}

@@ -1,0 +1,165 @@
+//! Integration tests: every layer composed — manifest -> PJRT sessions ->
+//! data substrates -> experiment drivers -> serving router.
+//!
+//! These use the small "test" artifact set (built by `make artifacts`).
+
+use spm_coordinator::config::{parse_toml, RunConfig};
+use spm_coordinator::experiments::{self, DataSource};
+use spm_coordinator::serve::serve_demo;
+use spm_runtime::{Engine, HostTensor, Manifest, TrainSession};
+
+fn artifacts() -> String {
+    format!("{}/../../artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn quick_cfg() -> RunConfig {
+    RunConfig {
+        steps: 6,
+        eval_batches: 2,
+        warmup: 1,
+        artifacts: artifacts(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_manifest_entry_loads_and_inits() {
+    let engine = Engine::cpu().unwrap();
+    let man = Manifest::load(artifacts()).unwrap();
+    // compile + init every SMALL entry (large ones are exercised by benches)
+    for (name, e) in &man.entries {
+        if e.meta_usize("n").unwrap_or(9999) > 64 {
+            continue;
+        }
+        let mut sess = TrainSession::new(&engine, &man, name, &["init"]).unwrap();
+        sess.init(3).unwrap_or_else(|e| panic!("init {name}: {e}"));
+        let leaves = sess.params_host().unwrap();
+        assert_eq!(leaves.len(), sess.entry.nleaves, "{name}");
+        for (leaf, spec) in leaves.iter().zip(&sess.entry.leaves) {
+            assert!(
+                leaf.iter().all(|v| v.is_finite()),
+                "{name}: non-finite init in {}",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn clf_trains_via_experiment_driver() {
+    let engine = Engine::cpu().unwrap();
+    let man = Manifest::load(artifacts()).unwrap();
+    let data = DataSource::Teacher { n: 64, classes: 10, seed: 5 };
+    let cfg = quick_cfg();
+    let out = experiments::run_clf_xla(&engine, &man, "clf_spm_small", &data, &cfg).unwrap();
+    assert_eq!(out.n, 64);
+    assert!(out.loss.is_finite());
+    assert!(out.ms_per_step > 0.0);
+    assert!((0.0..=1.0).contains(&out.acc));
+}
+
+#[test]
+fn charlm_small_runs_and_reports_bpc() {
+    let engine = Engine::cpu().unwrap();
+    let man = Manifest::load(artifacts()).unwrap();
+    let cfg = RunConfig { steps: 4, eval_every: 2, eval_batches: 2, warmup: 1,
+                          artifacts: artifacts(), ..Default::default() };
+    let rows = experiments::run_charlm(&engine, &man, "charlm_spm_small", &cfg).unwrap();
+    assert!(!rows.is_empty());
+    for r in &rows {
+        assert!(r.valid_nll.is_finite());
+        assert!((r.valid_bpc - r.valid_nll / std::f32::consts::LN_2).abs() < 1e-5);
+    }
+    // untrained char-LM should start near uniform over 256 bytes
+    assert!(rows[0].valid_nll < 7.0, "nll {}", rows[0].valid_nll);
+}
+
+#[test]
+fn native_and_xla_teacher_tasks_agree_roughly() {
+    // both engines should learn the same small teacher task to similar
+    // accuracy under the same budget — a cross-engine consistency check
+    let engine = Engine::cpu().unwrap();
+    let man = Manifest::load(artifacts()).unwrap();
+    let data = DataSource::Teacher { n: 64, classes: 10, seed: 9 };
+    let cfg = RunConfig { steps: 150, eval_batches: 4, warmup: 1,
+                          artifacts: artifacts(), ..Default::default() };
+    let xla = experiments::run_clf_xla(&engine, &man, "clf_spm_small", &data, &cfg).unwrap();
+    let native = experiments::run_clf_native(
+        "native",
+        spm_core::models::mixer::MixerCfg::spm(64, spm_core::spm::Variant::General),
+        10,
+        32,
+        &data,
+        &cfg,
+    )
+    .unwrap();
+    assert!(xla.acc > 0.15, "xla acc {}", xla.acc);
+    assert!(native.acc > 0.15, "native acc {}", native.acc);
+    assert!((xla.acc - native.acc).abs() < 0.4, "{} vs {}", xla.acc, native.acc);
+}
+
+#[test]
+fn gru_and_attention_artifacts_train() {
+    let engine = Engine::cpu().unwrap();
+    let man = Manifest::load(artifacts()).unwrap();
+    // GRU: (B, T, n) f32 -> 4 classes; shapes come from the manifest
+    let mut gru = TrainSession::new(&engine, &man, "gru_spm_small", &["init", "train"]).unwrap();
+    gru.init(0).unwrap();
+    let t = gru.entry.meta_usize("seq_len").unwrap();
+    let x = HostTensor::F32((0..32 * t * 64).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect());
+    let y = HostTensor::I32((0..32).map(|i| (i % 4) as i32).collect());
+    let (l1, _) = gru.train_step(&x, &y).unwrap();
+    let (l2, _) = gru.train_step(&x, &y).unwrap();
+    assert!(l1.is_finite() && l2.is_finite());
+    assert!(l2 <= l1 + 0.5);
+
+    // attention: (B=8, T=32, d=64) -> same-shape regression
+    let mut attn =
+        TrainSession::new(&engine, &man, "attn_spm_small", &["init", "train"]).unwrap();
+    attn.init(0).unwrap();
+    let xv: Vec<f32> = (0..8 * 32 * 64).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+    let x = HostTensor::F32(xv.clone());
+    let y = HostTensor::F32(xv);
+    let (a1, _) = attn.train_step(&x, &y).unwrap();
+    for _ in 0..5 {
+        attn.train_step(&x, &y).unwrap();
+    }
+    let (a2, _) = attn.train_step(&x, &y).unwrap();
+    assert!(a2 < a1, "attention mse {a1} -> {a2}");
+}
+
+#[test]
+fn serving_router_end_to_end() {
+    let engine = Engine::cpu().unwrap();
+    let man = Manifest::load(artifacts()).unwrap();
+    let report = serve_demo(&engine, &man, "clf_spm_small", 96, 3, 2).unwrap();
+    assert_eq!(report.requests, 96);
+    assert!(report.batches >= 3); // 96 requests can't fit one 32-batch
+    assert!(report.p99_ms >= report.p50_ms);
+    assert!(report.throughput_rps > 0.0);
+}
+
+#[test]
+fn datasource_batches_are_deterministic_and_split() {
+    let d = DataSource::AgNews { n: 128 };
+    let (x1, y1) = d.batch(3, 16, true);
+    let (x2, y2) = d.batch(3, 16, true);
+    assert_eq!(x1.data, x2.data);
+    assert_eq!(y1, y2);
+    let (xt, _yt) = d.batch(3, 16, false);
+    assert_ne!(x1.data, xt.data, "train/test streams must differ");
+
+    let t = DataSource::Teacher { n: 32, classes: 10, seed: 1 };
+    let (a1, b1) = t.batch(0, 8, true);
+    let (a2, b2) = t.batch(0, 8, true);
+    assert_eq!(a1.data, a2.data);
+    assert_eq!(b1, b2);
+}
+
+#[test]
+fn toml_config_drives_runconfig() {
+    let doc = parse_toml("[run]\nsteps = 9\neval_batches = 3\nseed = 4\n").unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.apply_toml(&doc);
+    assert_eq!((cfg.steps, cfg.eval_batches, cfg.seed), (9, 3, 4));
+}

@@ -1,0 +1,106 @@
+//! The dense comparator (paper §1): y = x W^T + b with exact backward.
+//! This is the baseline every experiment compares SPM against.
+
+use crate::rng::Rng;
+use crate::tensor::{add_bias, col_sum, matmul, matmul_nt, matmul_tn, Mat};
+
+/// Dense linear layer, weights stored (out, in) row-major.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub w: Mat,
+    pub b: Vec<f32>,
+}
+
+/// Gradients mirroring [`Dense`].
+#[derive(Clone, Debug)]
+pub struct DenseGrads {
+    pub w: Mat,
+    pub b: Vec<f32>,
+}
+
+impl Dense {
+    /// Gaussian fan-in init (matches python/compile/model.py).
+    pub fn init(rng: &mut Rng, out_dim: usize, in_dim: usize) -> Self {
+        let scale = 1.0 / (in_dim as f32).sqrt();
+        Dense {
+            w: Mat::from_vec(out_dim, in_dim, rng.normal_vec(out_dim * in_dim, scale)),
+            b: vec![0.0; out_dim],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w.data.len() + self.b.len()
+    }
+
+    /// y = x W^T + b;  x: (B, in) -> (B, out).
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut y = matmul_nt(x, &self.w);
+        add_bias(&mut y, &self.b);
+        y
+    }
+
+    /// Exact backward: returns (g_x, grads).
+    pub fn backward(&self, x: &Mat, gy: &Mat) -> (Mat, DenseGrads) {
+        let gx = matmul(gy, &self.w); // (B,out) x (out,in)
+        let gw = matmul_tn(gy, x); // (out,B)^T-free x (B,in) -> (out,in)
+        let gb = col_sum(gy);
+        (gx, DenseGrads { w: gw, b: gb })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::numerical_grad;
+
+    #[test]
+    fn forward_shape_and_bias() {
+        let mut rng = Rng::new(1);
+        let mut l = Dense::init(&mut rng, 3, 5);
+        l.b = vec![1.0, 2.0, 3.0];
+        let x = Mat::zeros(2, 5);
+        let y = l.forward(&x);
+        assert_eq!((y.rows, y.cols), (2, 3));
+        assert_eq!(y.row(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn backward_finite_difference() {
+        let mut rng = Rng::new(2);
+        let l = Dense::init(&mut rng, 4, 6);
+        let mut xv = rng.normal_vec(3 * 6, 1.0);
+        let x = Mat::from_vec(3, 6, xv.clone());
+        let y = l.forward(&x);
+        // loss = sum(y^2)/2 -> gy = y
+        let (gx, grads) = l.backward(&x, &y);
+
+        for idx in [0usize, 7, 17] {
+            let num = numerical_grad(&mut xv, idx, 1e-2, |v| {
+                let y = l.forward(&Mat::from_vec(3, 6, v.to_vec()));
+                y.data.iter().map(|t| t * t * 0.5).sum()
+            });
+            assert!((gx.data[idx] - num).abs() < 2e-2 * 1.0f32.max(num.abs()),
+                    "gx[{idx}] {} vs {num}", gx.data[idx]);
+        }
+        let mut wv = l.w.data.clone();
+        for idx in [0usize, 5, 23] {
+            let num = numerical_grad(&mut wv, idx, 1e-2, |v| {
+                let l2 = Dense { w: Mat::from_vec(4, 6, v.to_vec()), b: l.b.clone() };
+                let y = l2.forward(&x);
+                y.data.iter().map(|t| t * t * 0.5).sum()
+            });
+            assert!((grads.w.data[idx] - num).abs() < 2e-2 * 1.0f32.max(num.abs()),
+                    "gw[{idx}] {} vs {num}", grads.w.data[idx]);
+        }
+    }
+
+    #[test]
+    fn bias_grad_is_colsum() {
+        let mut rng = Rng::new(3);
+        let l = Dense::init(&mut rng, 2, 2);
+        let x = Mat::from_vec(3, 2, rng.normal_vec(6, 1.0));
+        let gy = Mat::from_vec(3, 2, vec![1.0; 6]);
+        let (_gx, grads) = l.backward(&x, &gy);
+        assert_eq!(grads.b, vec![3.0, 3.0]);
+    }
+}

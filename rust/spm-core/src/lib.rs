@@ -1,0 +1,27 @@
+//! # spm-core
+//!
+//! Native CPU substrate for **Stagewise Pairwise Mixers** (SPM), the
+//! structured linear operator of Farag, *"Rethinking Dense Linear
+//! Transformations"* (2025). Implements the paper's exact closed-form
+//! forward/backward for both block parameterizations, the dense comparator,
+//! pairing schedules, optimizers, losses and the model zoo (classifier,
+//! char-LM, GRU §6, attention §7), all dependency-free.
+//!
+//! The XLA/PJRT execution path lives in `spm-runtime`; this crate is the
+//! reference/native engine the benches and property tests run against.
+pub mod dense;
+pub mod loss;
+pub mod models;
+pub mod optim;
+pub mod pairing;
+pub mod parallel;
+pub mod rng;
+pub mod spm;
+pub mod tensor;
+pub mod testkit;
+
+pub use dense::Dense;
+pub use pairing::Schedule;
+pub use rng::Rng;
+pub use spm::{Spm, SpmParams, SpmSpec, Variant};
+pub use tensor::Mat;

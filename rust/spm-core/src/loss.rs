@@ -1,0 +1,137 @@
+//! Losses with exact gradients: softmax cross-entropy (classification,
+//! char-LM) and MSE (attention demo).
+
+use crate::tensor::Mat;
+
+/// Numerically-stable row softmax in place.
+pub fn softmax_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
+/// Mean softmax cross-entropy over rows with integer labels.
+/// Returns (loss, accuracy, g_logits) where g_logits = (softmax - onehot)/B.
+pub fn softmax_xent(logits: &Mat, labels: &[u32]) -> (f32, f32, Mat) {
+    assert_eq!(logits.rows, labels.len());
+    let b = logits.rows as f32;
+    let mut probs = logits.clone();
+    softmax_rows(&mut probs);
+    let mut loss = 0.0;
+    let mut correct = 0usize;
+    for i in 0..logits.rows {
+        let li = labels[i] as usize;
+        let row = probs.row(i);
+        loss -= row[li].max(1e-30).ln();
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if argmax == li {
+            correct += 1;
+        }
+    }
+    let mut g = probs;
+    for i in 0..g.rows {
+        let li = labels[i] as usize;
+        g.row_mut(i)[li] -= 1.0;
+    }
+    for v in g.data.iter_mut() {
+        *v /= b;
+    }
+    (loss / b, correct as f32 / b, g)
+}
+
+/// Mean squared error: returns (loss, g_pred).
+pub fn mse(pred: &Mat, target: &Mat) -> (f32, Mat) {
+    assert_eq!(pred.data.len(), target.data.len());
+    let n = pred.data.len() as f32;
+    let mut g = pred.clone();
+    let mut loss = 0.0;
+    for (gv, t) in g.data.iter_mut().zip(&target.data) {
+        let d = *gv - t;
+        loss += d * d;
+        *gv = 2.0 * d / n;
+    }
+    (loss / n, g)
+}
+
+/// Bits-per-character from an NLL in nats (paper §9.3 metric).
+pub fn nats_to_bpc(nll: f32) -> f32 {
+    nll / std::f32::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::numerical_grad;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -5.0, 0.0, 5.0]);
+        softmax_rows(&mut m);
+        for i in 0..2 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn xent_uniform_is_log_c() {
+        let logits = Mat::zeros(4, 8);
+        let labels = vec![0u32, 1, 2, 3];
+        let (loss, _acc, _g) = softmax_xent(&logits, &labels);
+        assert!((loss - (8.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn xent_accuracy() {
+        let logits = Mat::from_vec(3, 2, vec![2.0, 0.0, 0.0, 2.0, 2.0, 0.0]);
+        let labels = vec![0u32, 1, 1];
+        let (_l, acc, _g) = softmax_xent(&logits, &labels);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn xent_grad_finite_difference() {
+        let mut lv = vec![0.3f32, -0.2, 0.9, 0.1, 0.5, -0.7];
+        let labels = vec![2u32, 0];
+        let logits = Mat::from_vec(2, 3, lv.clone());
+        let (_loss, _acc, g) = softmax_xent(&logits, &labels);
+        for idx in 0..6 {
+            let num = numerical_grad(&mut lv, idx, 1e-3, |v| {
+                softmax_xent(&Mat::from_vec(2, 3, v.to_vec()), &labels).0
+            });
+            assert!((g.data[idx] - num).abs() < 1e-3, "g[{idx}] {} vs {num}", g.data[idx]);
+        }
+    }
+
+    #[test]
+    fn mse_grad_finite_difference() {
+        let mut pv = vec![0.5f32, -1.0, 2.0, 0.0];
+        let target = Mat::from_vec(2, 2, vec![0.0, 0.0, 1.0, 1.0]);
+        let (_l, g) = mse(&Mat::from_vec(2, 2, pv.clone()), &target);
+        for idx in 0..4 {
+            let num = numerical_grad(&mut pv, idx, 1e-3, |v| {
+                mse(&Mat::from_vec(2, 2, v.to_vec()), &target).0
+            });
+            assert!((g.data[idx] - num).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn bpc_conversion() {
+        assert!((nats_to_bpc(std::f32::consts::LN_2) - 1.0).abs() < 1e-6);
+    }
+}

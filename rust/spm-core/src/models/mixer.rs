@@ -1,0 +1,276 @@
+//! The square linear map every model is parameterized over: a dense matrix
+//! or an SPM operator — the paper's drop-in-replacement point (§2, §6.2,
+//! §7.2). Rectangular maps (heads, embeddings) stay dense in both flavours.
+
+use crate::dense::{Dense, DenseGrads};
+use crate::optim::Adam;
+use crate::pairing::Schedule;
+use crate::rng::Rng;
+use crate::spm::{Spm, SpmGrads, SpmParams, SpmSpec, Trace, Variant};
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixerKind {
+    Dense,
+    Spm,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MixerCfg {
+    pub n: usize,
+    pub kind: MixerKind,
+    pub variant: Variant,
+    pub schedule: Schedule,
+    /// None = paper default log2(n)
+    pub num_stages: Option<usize>,
+    pub seed: u64,
+}
+
+impl MixerCfg {
+    pub fn dense(n: usize) -> Self {
+        MixerCfg {
+            n,
+            kind: MixerKind::Dense,
+            variant: Variant::General,
+            schedule: Schedule::Butterfly,
+            num_stages: None,
+            seed: 0,
+        }
+    }
+
+    pub fn spm(n: usize, variant: Variant) -> Self {
+        MixerCfg { kind: MixerKind::Spm, ..Self::dense(n) }.with_variant(variant)
+    }
+
+    pub fn with_variant(mut self, v: Variant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    pub fn with_schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
+    pub fn with_stages(mut self, l: usize) -> Self {
+        self.num_stages = Some(l);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    fn spec(&self) -> SpmSpec {
+        let mut s = SpmSpec::new(self.n, self.variant)
+            .with_schedule(self.schedule)
+            .with_seed(self.seed);
+        if let Some(l) = self.num_stages {
+            s = s.with_stages(l);
+        }
+        s
+    }
+}
+
+/// Residuals of one mixer forward.
+pub enum MixTrace {
+    Dense,
+    Spm(Trace),
+}
+
+/// Gradients of one mixer.
+pub enum MixGrads {
+    Dense(DenseGrads),
+    Spm(SpmGrads),
+}
+
+impl MixGrads {
+    pub fn add_assign(&mut self, other: &MixGrads) {
+        match (self, other) {
+            (MixGrads::Dense(a), MixGrads::Dense(b)) => {
+                for (x, y) in a.w.data.iter_mut().zip(&b.w.data) {
+                    *x += y;
+                }
+                for (x, y) in a.b.iter_mut().zip(&b.b) {
+                    *x += y;
+                }
+            }
+            (MixGrads::Spm(a), MixGrads::Spm(b)) => {
+                for (x, y) in a.d_in.iter_mut().zip(&b.d_in) {
+                    *x += y;
+                }
+                for (x, y) in a.d_out.iter_mut().zip(&b.d_out) {
+                    *x += y;
+                }
+                for (x, y) in a.bias.iter_mut().zip(&b.bias) {
+                    *x += y;
+                }
+                for (ma, mb) in a.mix.iter_mut().zip(&b.mix) {
+                    for (x, y) in ma.iter_mut().zip(mb) {
+                        *x += y;
+                    }
+                }
+                for (x, y) in a.lone.iter_mut().zip(&b.lone) {
+                    *x += y;
+                }
+            }
+            _ => panic!("mixing dense/spm gradients"),
+        }
+    }
+}
+
+/// A square linear map: dense or SPM, with registered Adam slots.
+pub enum Mixer {
+    Dense { layer: Dense, slots: [usize; 2] },
+    Spm { op: Spm, params: SpmParams, slots: Vec<usize> },
+}
+
+impl Mixer {
+    pub fn new(cfg: MixerCfg, rng: &mut Rng, adam: &mut Adam) -> Self {
+        match cfg.kind {
+            MixerKind::Dense => {
+                let layer = Dense::init(rng, cfg.n, cfg.n);
+                let slots = [adam.register(layer.w.data.len()), adam.register(layer.b.len())];
+                Mixer::Dense { layer, slots }
+            }
+            MixerKind::Spm => {
+                let op = Spm::new(cfg.spec());
+                let params = op.init_params(rng);
+                let mut slots = vec![
+                    adam.register(params.d_in.len()),
+                    adam.register(params.d_out.len()),
+                    adam.register(params.bias.len()),
+                ];
+                for m in &params.mix {
+                    slots.push(adam.register(m.len()));
+                }
+                slots.push(adam.register(params.lone.len()));
+                Mixer::Spm { op, params, slots }
+            }
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            Mixer::Dense { layer, .. } => layer.w.cols,
+            Mixer::Spm { op, .. } => op.spec.n,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        match self {
+            Mixer::Dense { layer, .. } => layer.param_count(),
+            Mixer::Spm { op, params, .. } => op.param_count(params),
+        }
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        match self {
+            Mixer::Dense { layer, .. } => layer.forward(x),
+            Mixer::Spm { op, params, .. } => op.forward(params, x),
+        }
+    }
+
+    pub fn forward_trace(&self, x: &Mat) -> (Mat, MixTrace) {
+        match self {
+            Mixer::Dense { layer, .. } => (layer.forward(x), MixTrace::Dense),
+            Mixer::Spm { op, params, .. } => {
+                let (y, t) = op.forward_trace(params, x);
+                (y, MixTrace::Spm(t))
+            }
+        }
+    }
+
+    pub fn backward(&self, x: &Mat, trace: &MixTrace, gy: &Mat) -> (Mat, MixGrads) {
+        match (self, trace) {
+            (Mixer::Dense { layer, .. }, MixTrace::Dense) => {
+                let (gx, g) = layer.backward(x, gy);
+                (gx, MixGrads::Dense(g))
+            }
+            (Mixer::Spm { op, params, .. }, MixTrace::Spm(t)) => {
+                let (gx, g) = op.backward(params, x, t, gy);
+                (gx, MixGrads::Spm(g))
+            }
+            _ => panic!("trace/mixer kind mismatch"),
+        }
+    }
+
+    /// Apply an Adam update from accumulated gradients.
+    pub fn update(&mut self, adam: &mut Adam, grads: &MixGrads) {
+        match (self, grads) {
+            (Mixer::Dense { layer, slots }, MixGrads::Dense(g)) => {
+                adam.update(slots[0], &mut layer.w.data, &g.w.data);
+                adam.update(slots[1], &mut layer.b, &g.b);
+            }
+            (Mixer::Spm { params, slots, .. }, MixGrads::Spm(g)) => {
+                adam.update(slots[0], &mut params.d_in, &g.d_in);
+                adam.update(slots[1], &mut params.d_out, &g.d_out);
+                adam.update(slots[2], &mut params.bias, &g.bias);
+                for (i, m) in params.mix.iter_mut().enumerate() {
+                    adam.update(slots[3 + i], m, &g.mix[i]);
+                }
+                let last = *slots.last().unwrap();
+                adam.update(last, &mut params.lone, &g.lone);
+            }
+            _ => panic!("grads/mixer kind mismatch"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_kinds_round_trip() {
+        for kind in [MixerKind::Dense, MixerKind::Spm] {
+            let cfg = MixerCfg { kind, ..MixerCfg::spm(16, Variant::General) };
+            let mut adam = Adam::new(1e-3);
+            let mut rng = Rng::new(1);
+            let mx = Mixer::new(cfg, &mut rng, &mut adam);
+            let x = Mat::from_vec(4, 16, rng.normal_vec(64, 1.0));
+            let (y, trace) = mx.forward_trace(&x);
+            assert_eq!((y.rows, y.cols), (4, 16));
+            let (gx, _g) = mx.backward(&x, &trace, &y);
+            assert_eq!((gx.rows, gx.cols), (4, 16));
+        }
+    }
+
+    #[test]
+    fn update_changes_parameters_toward_lower_loss() {
+        let cfg = MixerCfg::spm(8, Variant::General).with_schedule(Schedule::Shift);
+        let mut adam = Adam::new(0.05);
+        let mut rng = Rng::new(2);
+        let mut mx = Mixer::new(cfg, &mut rng, &mut adam);
+        let x = Mat::from_vec(16, 8, rng.normal_vec(128, 1.0));
+        // target: zero output => loss = mean(y^2)
+        let loss_of = |mx: &Mixer| {
+            let y = mx.forward(&x);
+            y.data.iter().map(|v| v * v).sum::<f32>() / y.data.len() as f32
+        };
+        let before = loss_of(&mx);
+        for _ in 0..30 {
+            let (y, trace) = mx.forward_trace(&x);
+            let mut gy = y;
+            let n = gy.data.len() as f32;
+            for v in gy.data.iter_mut() {
+                *v = 2.0 * *v / n;
+            }
+            let (_gx, grads) = mx.backward(&x, &trace, &gy);
+            adam.next_step();
+            mx.update(&mut adam, &grads);
+        }
+        let after = loss_of(&mx);
+        assert!(after < before * 0.5, "{before} -> {after}");
+    }
+
+    #[test]
+    fn spm_param_count_below_dense() {
+        let mut adam = Adam::new(1e-3);
+        let mut rng = Rng::new(3);
+        let d = Mixer::new(MixerCfg::dense(128), &mut rng, &mut adam);
+        let s = Mixer::new(MixerCfg::spm(128, Variant::General), &mut rng, &mut adam);
+        assert!(s.param_count() < d.param_count() / 4);
+    }
+}

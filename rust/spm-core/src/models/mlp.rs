@@ -1,0 +1,140 @@
+//! The Table 1/2 student: mixer(n->n) -> ReLU -> dense head -> softmax-xent.
+//! Exact hand-derived backward; Adam owned by the model.
+
+use crate::dense::Dense;
+use crate::loss::softmax_xent;
+use crate::models::mixer::{Mixer, MixerCfg};
+use crate::optim::Adam;
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+pub struct Classifier {
+    pub mixer: Mixer,
+    pub head: Dense,
+    head_slots: [usize; 2],
+    pub adam: Adam,
+}
+
+impl Classifier {
+    pub fn new(cfg: MixerCfg, num_classes: usize, lr: f32, seed: u64) -> Self {
+        let mut adam = Adam::new(lr);
+        let mut rng = Rng::new(seed);
+        let mixer = Mixer::new(cfg, &mut rng, &mut adam);
+        let head = Dense::init(&mut rng, num_classes, cfg.n);
+        let head_slots = [adam.register(head.w.data.len()), adam.register(head.b.len())];
+        Classifier { mixer, head, head_slots, adam }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.mixer.param_count() + self.head.param_count()
+    }
+
+    pub fn logits(&self, x: &Mat) -> Mat {
+        let mut h = self.mixer.forward(x);
+        for v in h.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        self.head.forward(&h)
+    }
+
+    /// One training step; returns (loss, accuracy).
+    pub fn train_step(&mut self, x: &Mat, y: &[u32]) -> (f32, f32) {
+        // forward
+        let (h_pre, trace) = self.mixer.forward_trace(x);
+        let mut h = h_pre.clone();
+        for v in h.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let logits = self.head.forward(&h);
+        let (loss, acc, glogits) = softmax_xent(&logits, y);
+
+        // backward
+        let (mut gh, head_grads) = self.head.backward(&h, &glogits);
+        for (g, pre) in gh.data.iter_mut().zip(&h_pre.data) {
+            if *pre <= 0.0 {
+                *g = 0.0; // ReLU'
+            }
+        }
+        let (_gx, mix_grads) = self.mixer.backward(x, &trace, &gh);
+
+        // update
+        self.adam.next_step();
+        self.mixer.update(&mut self.adam, &mix_grads);
+        self.adam.update(self.head_slots[0], &mut self.head.w.data, &head_grads.w.data);
+        self.adam.update(self.head_slots[1], &mut self.head.b, &head_grads.b);
+        (loss, acc)
+    }
+
+    /// Evaluation: (loss, accuracy) without updates.
+    pub fn evaluate(&self, x: &Mat, y: &[u32]) -> (f32, f32) {
+        let logits = self.logits(x);
+        let (loss, acc, _g) = softmax_xent(&logits, y);
+        (loss, acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mixer::MixerKind;
+    use crate::pairing::Schedule;
+    use crate::spm::Variant;
+
+    fn toy_problem(n: usize, c: usize, b: usize, seed: u64) -> (Mat, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_vec(b, n, rng.normal_vec(b * n, 1.0));
+        let y = (0..b)
+            .map(|i| {
+                let row = x.row(i);
+                let mut best = 0;
+                for j in 1..c {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best as u32
+            })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn dense_student_learns_argmax_rule() {
+        let (x, y) = toy_problem(16, 4, 128, 1);
+        let mut clf = Classifier::new(MixerCfg::dense(16), 4, 5e-3, 2);
+        let first = clf.train_step(&x, &y).0;
+        let mut last = first;
+        for _ in 0..80 {
+            last = clf.train_step(&x, &y).0;
+        }
+        assert!(last < first * 0.5, "{first} -> {last}");
+        let (_l, acc) = clf.evaluate(&x, &y);
+        assert!(acc > 0.6, "acc {acc}");
+    }
+
+    #[test]
+    fn spm_student_learns_argmax_rule() {
+        let (x, y) = toy_problem(16, 4, 128, 3);
+        let cfg = MixerCfg {
+            kind: MixerKind::Spm,
+            ..MixerCfg::spm(16, Variant::General).with_schedule(Schedule::Shift)
+        };
+        let mut clf = Classifier::new(cfg, 4, 5e-3, 4);
+        let first = clf.train_step(&x, &y).0;
+        let mut last = first;
+        for _ in 0..120 {
+            last = clf.train_step(&x, &y).0;
+        }
+        assert!(last < first * 0.6, "{first} -> {last}");
+    }
+
+    #[test]
+    fn eval_does_not_mutate() {
+        let (x, y) = toy_problem(8, 3, 16, 5);
+        let clf = Classifier::new(MixerCfg::dense(8), 3, 1e-3, 6);
+        let (l1, a1) = clf.evaluate(&x, &y);
+        let (l2, a2) = clf.evaluate(&x, &y);
+        assert_eq!(l1, l2);
+        assert_eq!(a1, a2);
+    }
+}

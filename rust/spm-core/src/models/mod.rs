@@ -1,0 +1,10 @@
+//! Model zoo mirroring python/compile/model.py: every network the paper
+//! trains, in both "dense" and "spm" flavours, with exact hand-derived
+//! backward passes (no autodiff in the native engine).
+pub mod attention;
+pub mod charlm;
+pub mod gru;
+pub mod mixer;
+pub mod mlp;
+
+pub use mixer::{Mixer, MixerCfg, MixerKind};

@@ -1,0 +1,128 @@
+//! Optimizers over flat f32 slices. Models register each parameter tensor
+//! as one "slot"; the optimizer owns per-slot moment buffers. The Adam math
+//! is identical to the in-graph Adam in python/compile/train.py so native
+//! and XLA training trajectories are comparable.
+
+/// Plain SGD.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn step(&self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        for (p, g) in params.iter_mut().zip(grads) {
+            *p -= self.lr * g;
+        }
+    }
+}
+
+/// Adam with bias correction (Kingma & Ba), one instance per model.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    t: f32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam { lr, b1: 0.9, b2: 0.999, eps: 1e-8, t: 0.0, m: Vec::new(), v: Vec::new() }
+    }
+
+    /// Register a parameter tensor; returns its slot id.
+    pub fn register(&mut self, len: usize) -> usize {
+        self.m.push(vec![0.0; len]);
+        self.v.push(vec![0.0; len]);
+        self.m.len() - 1
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Advance the shared step count; call once per minibatch, before
+    /// updating the slots of that batch.
+    pub fn next_step(&mut self) {
+        self.t += 1.0;
+    }
+
+    pub fn step_count(&self) -> f32 {
+        self.t
+    }
+
+    /// Update one slot with its gradient.
+    pub fn update(&mut self, slot: usize, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        let (b1, b2) = (self.b1, self.b2);
+        let bc1 = 1.0 - b1.powf(self.t);
+        let bc2 = 1.0 - b2.powf(self.t);
+        let m = &mut self.m[slot];
+        let v = &mut self.v[slot];
+        for i in 0..params.len() {
+            let g = grads[i];
+            m[i] = b1 * m[i] + (1.0 - b1) * g;
+            v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+            params[i] -= self.lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut p = vec![1.0f32, -1.0];
+        Sgd { lr: 0.1 }.step(&mut p, &[2.0, -2.0]);
+        assert_eq!(p, vec![0.8, -0.8]);
+    }
+
+    #[test]
+    fn adam_first_step_matches_python_reference() {
+        // mirrors python/tests/test_train.py::test_adam_matches_manual_numpy
+        let mut adam = Adam::new(0.01);
+        let slot = adam.register(2);
+        let mut p = vec![1.0f32, 2.0];
+        let g = vec![0.5f32, -1.0];
+        adam.next_step();
+        adam.update(slot, &mut p, &g);
+        for (i, (&pi, &gi)) in p.iter().zip(&g).enumerate() {
+            let m_hat = 0.1 * gi / (1.0 - 0.9f32);
+            let v_hat = 0.001 * gi * gi / (1.0 - 0.999f32);
+            let want = [1.0, 2.0][i] - 0.01 * m_hat / (v_hat.sqrt() + 1e-8);
+            assert!((pi - want).abs() < 1e-5, "{pi} vs {want}");
+        }
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize (p-3)^2
+        let mut adam = Adam::new(0.1);
+        let slot = adam.register(1);
+        let mut p = vec![0.0f32];
+        for _ in 0..500 {
+            let g = vec![2.0 * (p[0] - 3.0)];
+            adam.next_step();
+            adam.update(slot, &mut p, &g);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "{}", p[0]);
+    }
+
+    #[test]
+    fn adam_constant_grad_step_size() {
+        // with constant unit gradient, each early step moves ~lr
+        let mut adam = Adam::new(0.1);
+        let slot = adam.register(1);
+        let mut p = vec![0.0f32];
+        adam.next_step();
+        adam.update(slot, &mut p, &[1.0]);
+        assert!((p[0] + 0.1).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,257 @@
+//! Pairing schedules (paper §2.1, §5) — the rust mirror of
+//! ``python/compile/pairing.py``. The butterfly and shift constructions are
+//! bit-for-bit identical across the two languages and are cross-checked via
+//! the FNV-1a-64 `fingerprint` recorded in the artifact manifest. The
+//! random schedule is seeded independently per language (numpy PCG vs
+//! SplitMix64) and is only required to be a valid partition.
+
+use crate::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    Butterfly,
+    Shift,
+    Random,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "butterfly" => Some(Schedule::Butterfly),
+            "shift" => Some(Schedule::Shift),
+            "random" => Some(Schedule::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Butterfly => "butterfly",
+            Schedule::Shift => "shift",
+            Schedule::Random => "random",
+        }
+    }
+}
+
+/// One stage's pairing: coordinate `left[k]` mixes with `right[k]`;
+/// `leftover` is the unpaired coordinate for odd n (paper §5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StagePairing {
+    pub left: Vec<u32>,
+    pub right: Vec<u32>,
+    pub leftover: Option<u32>,
+}
+
+impl StagePairing {
+    pub fn num_pairs(&self) -> usize {
+        self.left.len()
+    }
+
+    /// Check the pairing is a disjoint partition of 0..n-1.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        let mut seen = vec![false; n];
+        let mut mark = |v: u32| -> Result<(), String> {
+            let i = v as usize;
+            if i >= n {
+                return Err(format!("index {i} out of range {n}"));
+            }
+            if seen[i] {
+                return Err(format!("index {i} appears twice"));
+            }
+            seen[i] = true;
+            Ok(())
+        };
+        for (&l, &r) in self.left.iter().zip(&self.right) {
+            mark(l)?;
+            mark(r)?;
+        }
+        if let Some(lv) = self.leftover {
+            mark(lv)?;
+        }
+        if seen.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err("pairing does not cover 0..n-1".into())
+        }
+    }
+}
+
+/// FFT-style stride pairing: stage `l` mixes `i` with `i + 2^(l mod log2 n)`
+/// within aligned blocks; non-power-of-two tails pair adjacently.
+pub fn butterfly_stage(n: usize, stage: usize) -> StagePairing {
+    assert!(n >= 2, "n must be >= 2");
+    let levels = (usize::BITS - 1 - n.leading_zeros()).max(1) as usize; // floor(log2 n)
+    let s = 1usize << (stage % levels);
+    let mut left = Vec::with_capacity(n / 2);
+    let mut right = Vec::with_capacity(n / 2);
+    let nb = n / (2 * s);
+    for b in 0..nb {
+        let base = b * 2 * s;
+        for i in 0..s {
+            left.push((base + i) as u32);
+            right.push((base + s + i) as u32);
+        }
+    }
+    let tail: Vec<u32> = ((nb * 2 * s) as u32..n as u32).collect();
+    let mut k = 0;
+    while k + 1 < tail.len() {
+        left.push(tail[k]);
+        right.push(tail[k + 1]);
+        k += 2;
+    }
+    let leftover = if tail.len() % 2 == 1 { tail.last().copied() } else { None };
+    StagePairing { left, right, leftover }
+}
+
+/// Rotating adjacent pairing: stage `l` pairs `(2k+l, 2k+1+l) mod n`.
+pub fn shift_stage(n: usize, stage: usize) -> StagePairing {
+    assert!(n >= 2, "n must be >= 2");
+    let p = n / 2;
+    let offs = stage % n;
+    let mut left = Vec::with_capacity(p);
+    let mut right = Vec::with_capacity(p);
+    for k in 0..p {
+        left.push(((2 * k + offs) % n) as u32);
+        right.push(((2 * k + 1 + offs) % n) as u32);
+    }
+    let leftover = if n % 2 == 1 { Some(((2 * p + offs) % n) as u32) } else { None };
+    StagePairing { left, right, leftover }
+}
+
+/// Seeded random disjoint pairing, independent per stage.
+pub fn random_stage(n: usize, stage: usize, seed: u64) -> StagePairing {
+    assert!(n >= 2, "n must be >= 2");
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B9).wrapping_add(stage as u64));
+    let perm = rng.permutation(n);
+    let p = n / 2;
+    let left = (0..p).map(|k| perm[2 * k]).collect();
+    let right = (0..p).map(|k| perm[2 * k + 1]).collect();
+    let leftover = if n % 2 == 1 { Some(perm[n - 1]) } else { None };
+    StagePairing { left, right, leftover }
+}
+
+pub fn make_schedule(kind: Schedule, n: usize, num_stages: usize, seed: u64) -> Vec<StagePairing> {
+    (0..num_stages)
+        .map(|l| match kind {
+            Schedule::Butterfly => butterfly_stage(n, l),
+            Schedule::Shift => shift_stage(n, l),
+            Schedule::Random => random_stage(n, l, seed),
+        })
+        .collect()
+}
+
+/// Paper §2.2 default: L = round(log2 n).
+pub fn default_num_stages(n: usize) -> usize {
+    ((n as f64).log2().round() as usize).max(1)
+}
+
+/// FNV-1a-64 fingerprint, bit-identical to python's `schedule_fingerprint`.
+pub fn fingerprint(stages: &[StagePairing]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    const PRIME: u64 = 0x100000001B3;
+    let mut mix = |v: u32| {
+        for shift in [0u32, 8, 16, 24] {
+            h = (h ^ ((v >> shift) & 0xFF) as u64).wrapping_mul(PRIME);
+        }
+    };
+    for st in stages {
+        for &v in &st.left {
+            mix(v);
+        }
+        for &v in &st.right {
+            mix(v);
+        }
+        mix(st.leftover.unwrap_or(0xFFFF_FFFF));
+    }
+    h
+}
+
+pub fn fingerprint_hex(stages: &[StagePairing]) -> String {
+    format!("{:016x}", fingerprint(stages))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn butterfly_power_of_two_layout() {
+        let s0 = butterfly_stage(8, 0);
+        assert_eq!(s0.left, vec![0, 2, 4, 6]);
+        assert_eq!(s0.right, vec![1, 3, 5, 7]);
+        let s1 = butterfly_stage(8, 1);
+        assert_eq!(s1.left, vec![0, 1, 4, 5]);
+        assert_eq!(s1.right, vec![2, 3, 6, 7]);
+        let s2 = butterfly_stage(8, 2);
+        assert_eq!(s2.left, vec![0, 1, 2, 3]);
+        assert_eq!(s2.right, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn all_schedules_partition() {
+        for kind in [Schedule::Butterfly, Schedule::Shift, Schedule::Random] {
+            for n in [2usize, 3, 5, 7, 8, 16, 33, 100, 257] {
+                for st in make_schedule(kind, n, 6, 3) {
+                    st.validate(n).unwrap();
+                    assert_eq!(st.num_pairs(), n / 2);
+                    assert_eq!(st.leftover.is_some(), n % 2 == 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_property_random_sizes() {
+        forall(200, 42, |rng| {
+            let n = 2 + rng.below(300);
+            let l = 1 + rng.below(8);
+            let kind = [Schedule::Butterfly, Schedule::Shift, Schedule::Random][rng.below(3)];
+            for st in make_schedule(kind, n, l, rng.next_u64()) {
+                st.validate(n).map_err(|e| format!("{kind:?} n={n}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn butterfly_strides_wrap() {
+        assert_eq!(butterfly_stage(16, 0), butterfly_stage(16, 4));
+    }
+
+    #[test]
+    fn fingerprints_distinguish() {
+        let a = make_schedule(Schedule::Butterfly, 64, 4, 0);
+        let b = make_schedule(Schedule::Shift, 64, 4, 0);
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(fingerprint(&a), fingerprint(&a.clone()));
+    }
+
+    #[test]
+    fn default_stages() {
+        assert_eq!(default_num_stages(256), 8);
+        assert_eq!(default_num_stages(4096), 12);
+        assert_eq!(default_num_stages(2), 1);
+    }
+
+    // Golden fingerprints exported by python; regenerate with:
+    //   python -c "from compile import pairing as p; \
+    //     print(p.schedule_fingerprint(p.make_schedule('butterfly', 64, 6)))"
+    #[test]
+    fn fingerprint_matches_python() {
+        for (kind, n, l, want) in [
+            (Schedule::Butterfly, 64, 6, "1e90eb00afc2eb6d"),
+            (Schedule::Butterfly, 33, 5, "e5b7355c64770515"),
+            (Schedule::Butterfly, 256, 8, "2c9531d5172e0785"),
+            (Schedule::Shift, 64, 6, "6c56c44d502b406d"),
+            (Schedule::Shift, 33, 5, "ff3988a7bb9d49e5"),
+            (Schedule::Shift, 256, 8, "5d730e51fba4c985"),
+        ] {
+            assert_eq!(
+                fingerprint_hex(&make_schedule(kind, n, l, 0)),
+                want,
+                "{kind:?} n={n} L={l}"
+            );
+        }
+    }
+}

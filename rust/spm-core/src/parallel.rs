@@ -1,0 +1,117 @@
+//! Tiny scoped-thread data-parallel helper (rayon is not in the offline
+//! vendor set, and we want explicit control over thread count anyway: the
+//! paper's timings are quoted at a fixed CPU thread budget).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker count (0 = auto). Mirrors the paper's "OpenMP with
+/// two threads" setting when the coordinator pins `--threads 2`.
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+pub fn num_threads() -> usize {
+    let n = THREADS.load(Ordering::Relaxed);
+    if n > 0 {
+        return n;
+    }
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+/// Split `data` (logically `data.len()/row_len` rows) into per-thread row
+/// chunks and run `f(first_row_index, chunk)` on each in parallel.
+pub fn for_each_chunk<F>(data: &mut [f32], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 || rows < 2 {
+        f(0, data);
+        return;
+    }
+    let rows_per = rows.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut start_row = 0;
+        while !rest.is_empty() {
+            let take = (rows_per * row_len).min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            let fr = &f;
+            let sr = start_row;
+            scope.spawn(move || fr(sr, chunk));
+            start_row += take / row_len;
+            rest = tail;
+        }
+    });
+}
+
+/// Run `f(thread_idx, row_range)` over `rows` rows in parallel and collect
+/// one partial result per thread (for gradient-accumulator reduction).
+pub fn map_row_ranges<T, F>(rows: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+{
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 {
+        return vec![f(0, 0..rows)];
+    }
+    let rows_per = rows.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nt {
+            let lo = t * rows_per;
+            if lo >= rows {
+                break;
+            }
+            let hi = (lo + rows_per).min(rows);
+            let fr = &f;
+            handles.push(scope.spawn(move || fr(t, lo..hi)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_all_rows() {
+        let mut data = vec![0.0f32; 103 * 4];
+        for_each_chunk(&mut data, 4, |first, chunk| {
+            for (i, row) in chunk.chunks_mut(4).enumerate() {
+                row[0] = (first + i) as f32;
+            }
+        });
+        for r in 0..103 {
+            assert_eq!(data[r * 4], r as f32);
+        }
+    }
+
+    #[test]
+    fn map_ranges_disjoint_and_total() {
+        let parts = map_row_ranges(57, |_, r| r);
+        let mut seen = vec![false; 57];
+        for r in parts {
+            for i in r {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn single_row_fallback() {
+        let mut data = vec![0.0f32; 8];
+        for_each_chunk(&mut data, 8, |first, chunk| {
+            assert_eq!(first, 0);
+            chunk[0] = 1.0;
+        });
+        assert_eq!(data[0], 1.0);
+    }
+}

@@ -1,0 +1,805 @@
+//! The SPM operator (paper §2-§5), native CPU implementation.
+//!
+//! ``SPM(x) = D_out (B_L … B_1) D_in x + bias`` where each stage B_l applies
+//! independent 2x2 blocks to disjoint coordinate pairs. Exact closed-form
+//! forward AND backward (the paper's eqs. 2-19); no autodiff anywhere.
+//!
+//! Implementation notes
+//! * Stages are applied **in place** on a per-row scratch copy: the pairs of
+//!   a stage are disjoint, so `(z[i], z[j]) <- M_k (z[i], z[j])` never
+//!   conflicts. One pass per stage => O(nL) work, O(Bn) live memory.
+//! * Rotation backward is O(Bn) memory total: stage inputs are *recomputed*
+//!   from outputs via the orthogonal transpose (z_{l-1} = B_l^T z_l) while
+//!   the adjoint propagates, and eq. (9) is evaluated in its output form
+//!   `dL/dtheta = d2*y1 - d1*y2` (see DESIGN.md §8).
+//! * General backward stores the stage-input trace (O(BnL)), like the paper.
+//! * Batch rows are processed in parallel; per-thread parameter-gradient
+//!   accumulators are reduced at the end (paper §4 "batch setting").
+
+use crate::pairing::{self, Schedule, StagePairing};
+use crate::parallel;
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// §3.1: one angle per pair, orthogonal by construction.
+    Rotation,
+    /// §3.2: four free scalars per pair.
+    General,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "rotation" => Some(Variant::Rotation),
+            "general" => Some(Variant::General),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Rotation => "rotation",
+            Variant::General => "general",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpmSpec {
+    pub n: usize,
+    pub num_stages: usize,
+    pub variant: Variant,
+    pub schedule: Schedule,
+    pub seed: u64,
+}
+
+impl SpmSpec {
+    pub fn new(n: usize, variant: Variant) -> Self {
+        SpmSpec {
+            n,
+            num_stages: pairing::default_num_stages(n),
+            variant,
+            schedule: Schedule::Butterfly,
+            seed: 0,
+        }
+    }
+
+    pub fn with_stages(mut self, l: usize) -> Self {
+        self.num_stages = l;
+        self
+    }
+
+    pub fn with_schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Trainable parameters. `mix[l]` holds `P` thetas (rotation) or `4P`
+/// interleaved `[a,b,c,d]` scalars (general); `lone[l]` is the learned 1x1
+/// scale for the odd-n leftover coordinate (general variant, paper §5 (ii);
+/// the rotation variant passes the leftover through to stay orthogonal).
+#[derive(Clone, Debug)]
+pub struct SpmParams {
+    pub d_in: Vec<f32>,
+    pub d_out: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub mix: Vec<Vec<f32>>,
+    pub lone: Vec<f32>,
+}
+
+impl SpmParams {
+    pub fn num_scalars(&self) -> usize {
+        3 * self.d_in.len() + self.mix.iter().map(|m| m.len()).sum::<usize>() + self.lone.len()
+    }
+}
+
+/// Gradients, same shapes as the parameters.
+#[derive(Clone, Debug)]
+pub struct SpmGrads {
+    pub d_in: Vec<f32>,
+    pub d_out: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub mix: Vec<Vec<f32>>,
+    pub lone: Vec<f32>,
+}
+
+impl SpmGrads {
+    fn zeros_like(p: &SpmParams) -> Self {
+        SpmGrads {
+            d_in: vec![0.0; p.d_in.len()],
+            d_out: vec![0.0; p.d_out.len()],
+            bias: vec![0.0; p.bias.len()],
+            mix: p.mix.iter().map(|m| vec![0.0; m.len()]).collect(),
+            lone: vec![0.0; p.lone.len()],
+        }
+    }
+
+    fn add_assign(&mut self, other: &SpmGrads) {
+        fn add(a: &mut [f32], b: &[f32]) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        add(&mut self.d_in, &other.d_in);
+        add(&mut self.d_out, &other.d_out);
+        add(&mut self.bias, &other.bias);
+        for (m, o) in self.mix.iter_mut().zip(&other.mix) {
+            add(m, o);
+        }
+        add(&mut self.lone, &other.lone);
+    }
+}
+
+/// Residuals saved by `forward_trace` for the backward pass.
+pub enum Trace {
+    /// rotation: only the final pre-D_out activation z_L (O(Bn))
+    Rotation { z_last: Mat },
+    /// general: every stage input z_0..z_L (O(BnL))
+    General { zs: Vec<Mat> },
+}
+
+/// The operator: spec + precomputed pairing schedule (+ cached cos/sin view
+/// of rotation parameters is computed per call — params may change between
+/// calls during training).
+pub struct Spm {
+    pub spec: SpmSpec,
+    pub stages: Vec<StagePairing>,
+}
+
+impl Spm {
+    pub fn new(spec: SpmSpec) -> Self {
+        assert!(spec.n >= 2, "n must be >= 2");
+        assert!(spec.num_stages >= 1, "need at least one stage");
+        let stages = pairing::make_schedule(spec.schedule, spec.n, spec.num_stages, spec.seed);
+        Spm { spec, stages }
+    }
+
+    /// Orthogonal-at-init parameters (matches python/compile/spm.py):
+    /// every stage starts as a product of random planar rotations, identity
+    /// diagonals, zero bias — exactly norm-preserving at init (§8.4).
+    pub fn init_params(&self, rng: &mut Rng) -> SpmParams {
+        let n = self.spec.n;
+        let p = n / 2;
+        let mut mix = Vec::with_capacity(self.spec.num_stages);
+        for _ in 0..self.spec.num_stages {
+            match self.spec.variant {
+                Variant::Rotation => {
+                    mix.push(rng.uniform_vec(p, -std::f32::consts::PI, std::f32::consts::PI));
+                }
+                Variant::General => {
+                    let mut m = vec![0.0; 4 * p];
+                    for k in 0..p {
+                        let th = rng.uniform_in(-std::f32::consts::PI, std::f32::consts::PI);
+                        let (s, c) = th.sin_cos();
+                        m[4 * k] = c;
+                        m[4 * k + 1] = -s;
+                        m[4 * k + 2] = s;
+                        m[4 * k + 3] = c;
+                    }
+                    mix.push(m);
+                }
+            }
+        }
+        SpmParams {
+            d_in: vec![1.0; n],
+            d_out: vec![1.0; n],
+            bias: vec![0.0; n],
+            mix,
+            lone: vec![1.0; self.spec.num_stages],
+        }
+    }
+
+    pub fn param_count(&self, params: &SpmParams) -> usize {
+        params.num_scalars()
+    }
+
+    /// Per-stage cos/sin tables for the rotation variant.
+    fn trig(&self, params: &SpmParams) -> Vec<Vec<(f32, f32)>> {
+        params
+            .mix
+            .iter()
+            .map(|thetas| thetas.iter().map(|t| { let (s, c) = t.sin_cos(); (c, s) }).collect())
+            .collect()
+    }
+
+    /// Apply stage `l` in place on one row.
+    #[inline]
+    fn stage_row_fwd(
+        &self,
+        l: usize,
+        params: &SpmParams,
+        trig: &[Vec<(f32, f32)>],
+        row: &mut [f32],
+    ) {
+        let st = &self.stages[l];
+        match self.spec.variant {
+            Variant::Rotation => {
+                let cs = &trig[l];
+                for k in 0..st.left.len() {
+                    let (i, j) = (st.left[k] as usize, st.right[k] as usize);
+                    let (c, s) = cs[k];
+                    let x1 = row[i];
+                    let x2 = row[j];
+                    row[i] = c * x1 - s * x2; // eq. (5)
+                    row[j] = s * x1 + c * x2; // eq. (6)
+                }
+                // leftover passes through (keeps the stage orthogonal)
+            }
+            Variant::General => {
+                let m = &params.mix[l];
+                for k in 0..st.left.len() {
+                    let (i, j) = (st.left[k] as usize, st.right[k] as usize);
+                    let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
+                    let x1 = row[i];
+                    let x2 = row[j];
+                    row[i] = a * x1 + b * x2; // eq. (10)
+                    row[j] = c * x1 + d * x2; // eq. (11)
+                }
+                if let Some(lv) = st.leftover {
+                    row[lv as usize] *= params.lone[l];
+                }
+            }
+        }
+    }
+
+    /// y = SPM(x); x is (B, n).
+    pub fn forward(&self, params: &SpmParams, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.spec.n, "input width");
+        let trig = match self.spec.variant {
+            Variant::Rotation => self.trig(params),
+            Variant::General => Vec::new(),
+        };
+        let mut z = x.clone();
+        let n = self.spec.n;
+        let this = &self;
+        let p = params;
+        let tg = &trig;
+        parallel::for_each_chunk(&mut z.data, n, |_first, chunk| {
+            for row in chunk.chunks_mut(n) {
+                for (v, di) in row.iter_mut().zip(&p.d_in) {
+                    *v *= di; // eq. (2)
+                }
+                for l in 0..this.spec.num_stages {
+                    this.stage_row_fwd(l, p, tg, row); // eq. (3)
+                }
+                for ((v, do_), b) in row.iter_mut().zip(&p.d_out).zip(&p.bias) {
+                    *v = *v * do_ + b; // eq. (4)
+                }
+            }
+        });
+        z
+    }
+
+    /// Forward keeping the residuals needed by `backward`.
+    pub fn forward_trace(&self, params: &SpmParams, x: &Mat) -> (Mat, Trace) {
+        assert_eq!(x.cols, self.spec.n, "input width");
+        let n = self.spec.n;
+        match self.spec.variant {
+            Variant::Rotation => {
+                let trig = self.trig(params);
+                let mut z = x.clone();
+                let this = &self;
+                let p = params;
+                let tg = &trig;
+                parallel::for_each_chunk(&mut z.data, n, |_f, chunk| {
+                    for row in chunk.chunks_mut(n) {
+                        for (v, di) in row.iter_mut().zip(&p.d_in) {
+                            *v *= di;
+                        }
+                        for l in 0..this.spec.num_stages {
+                            this.stage_row_fwd(l, p, tg, row);
+                        }
+                    }
+                });
+                let z_last = z.clone();
+                // finish: y = d_out * z + bias
+                parallel::for_each_chunk(&mut z.data, n, |_f, chunk| {
+                    for row in chunk.chunks_mut(n) {
+                        for ((v, do_), b) in row.iter_mut().zip(&p.d_out).zip(&p.bias) {
+                            *v = *v * do_ + b;
+                        }
+                    }
+                });
+                (z, Trace::Rotation { z_last })
+            }
+            Variant::General => {
+                let mut zs = Vec::with_capacity(self.spec.num_stages + 1);
+                let mut z = x.clone();
+                for i in 0..z.rows {
+                    let row = z.row_mut(i);
+                    for (v, di) in row.iter_mut().zip(&params.d_in) {
+                        *v *= di;
+                    }
+                }
+                zs.push(z.clone());
+                for l in 0..self.spec.num_stages {
+                    let p = params;
+                    let this = &self;
+                    parallel::for_each_chunk(&mut z.data, n, |_f, chunk| {
+                        for row in chunk.chunks_mut(n) {
+                            this.stage_row_fwd(l, p, &[], row);
+                        }
+                    });
+                    zs.push(z.clone());
+                }
+                let mut y = z;
+                for i in 0..y.rows {
+                    let row = y.row_mut(i);
+                    for ((v, do_), b) in row.iter_mut().zip(&params.d_out).zip(&params.bias) {
+                        *v = *v * do_ + b;
+                    }
+                }
+                (y, Trace::General { zs })
+            }
+        }
+    }
+
+    /// Exact backward (paper §4). Returns (g_x, grads).
+    /// `x` is the layer input that produced `trace`.
+    pub fn backward(&self, params: &SpmParams, x: &Mat, trace: &Trace, gy: &Mat) -> (Mat, SpmGrads) {
+        assert_eq!(gy.cols, self.spec.n);
+        assert_eq!(gy.rows, x.rows);
+        match trace {
+            Trace::Rotation { z_last } => self.backward_rotation(params, x, z_last, gy),
+            Trace::General { zs } => self.backward_general(params, x, zs, gy),
+        }
+    }
+
+    fn backward_rotation(
+        &self,
+        params: &SpmParams,
+        x: &Mat,
+        z_last: &Mat,
+        gy: &Mat,
+    ) -> (Mat, SpmGrads) {
+        let n = self.spec.n;
+        let ls = self.spec.num_stages;
+        let trig = self.trig(params);
+        let rows = gy.rows;
+
+        // per-thread partial grads, reduced below
+        let mut gx = Mat::zeros(rows, n);
+        let partials = parallel::map_row_ranges(rows, |_t, range| {
+            let mut grads = SpmGrads::zeros_like(params);
+            let mut gx_rows: Vec<(usize, Vec<f32>)> = Vec::with_capacity(range.len());
+            let mut g = vec![0.0f32; n];
+            let mut z = vec![0.0f32; n];
+            for r in range {
+                // eqs. (15)-(17)
+                let gyr = gy.row(r);
+                z.copy_from_slice(z_last.row(r));
+                for i in 0..n {
+                    grads.bias[i] += gyr[i];
+                    grads.d_out[i] += gyr[i] * z[i];
+                    g[i] = gyr[i] * params.d_out[i];
+                }
+                // stages in reverse: theta grad from outputs, then transpose-
+                // apply to BOTH adjoint g and activation z
+                for l in (0..ls).rev() {
+                    let st = &self.stages[l];
+                    let cs = &trig[l];
+                    let gm = &mut grads.mix[l];
+                    for k in 0..st.left.len() {
+                        let (i, j) = (st.left[k] as usize, st.right[k] as usize);
+                        let (c, s) = cs[k];
+                        let (y1, y2) = (z[i], z[j]);
+                        let (d1, d2) = (g[i], g[j]);
+                        gm[k] += d2 * y1 - d1 * y2; // eq. (9) via outputs
+                        g[i] = c * d1 + s * d2; // eq. (7)
+                        g[j] = -s * d1 + c * d2; // eq. (8)
+                        z[i] = c * y1 + s * y2; // z_{l-1} = B^T z_l
+                        z[j] = -s * y1 + c * y2;
+                    }
+                }
+                // eqs. (18)-(19)
+                let xr = x.row(r);
+                let mut gxr = vec![0.0f32; n];
+                for i in 0..n {
+                    grads.d_in[i] += g[i] * xr[i];
+                    gxr[i] = g[i] * params.d_in[i];
+                }
+                gx_rows.push((r, gxr));
+            }
+            (grads, gx_rows)
+        });
+
+        let mut grads = SpmGrads::zeros_like(params);
+        for (pg, gx_rows) in partials {
+            grads.add_assign(&pg);
+            for (r, rowv) in gx_rows {
+                gx.row_mut(r).copy_from_slice(&rowv);
+            }
+        }
+        (gx, grads)
+    }
+
+    fn backward_general(
+        &self,
+        params: &SpmParams,
+        x: &Mat,
+        zs: &[Mat],
+        gy: &Mat,
+    ) -> (Mat, SpmGrads) {
+        let n = self.spec.n;
+        let ls = self.spec.num_stages;
+        let rows = gy.rows;
+        let mut gx = Mat::zeros(rows, n);
+
+        let partials = parallel::map_row_ranges(rows, |_t, range| {
+            let mut grads = SpmGrads::zeros_like(params);
+            let mut gx_rows: Vec<(usize, Vec<f32>)> = Vec::with_capacity(range.len());
+            let mut g = vec![0.0f32; n];
+            for r in range {
+                let gyr = gy.row(r);
+                let zl = zs[ls].row(r);
+                for i in 0..n {
+                    grads.bias[i] += gyr[i];
+                    grads.d_out[i] += gyr[i] * zl[i];
+                    g[i] = gyr[i] * params.d_out[i];
+                }
+                for l in (0..ls).rev() {
+                    let st = &self.stages[l];
+                    let m = &params.mix[l];
+                    let gm = &mut grads.mix[l];
+                    let zin = zs[l].row(r); // stage INPUT
+                    for k in 0..st.left.len() {
+                        let (i, j) = (st.left[k] as usize, st.right[k] as usize);
+                        let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
+                        let (x1, x2) = (zin[i], zin[j]);
+                        let (d1, d2) = (g[i], g[j]);
+                        // eq. (14)
+                        gm[4 * k] += d1 * x1;
+                        gm[4 * k + 1] += d1 * x2;
+                        gm[4 * k + 2] += d2 * x1;
+                        gm[4 * k + 3] += d2 * x2;
+                        // eqs. (12)-(13)
+                        g[i] = a * d1 + c * d2;
+                        g[j] = b * d1 + d * d2;
+                    }
+                    if let Some(lv) = st.leftover {
+                        let lvi = lv as usize;
+                        grads.lone[l] += g[lvi] * zin[lvi];
+                        g[lvi] *= params.lone[l];
+                    }
+                }
+                let xr = x.row(r);
+                let mut gxr = vec![0.0f32; n];
+                for i in 0..n {
+                    grads.d_in[i] += g[i] * xr[i];
+                    gxr[i] = g[i] * params.d_in[i];
+                }
+                gx_rows.push((r, gxr));
+            }
+            (grads, gx_rows)
+        });
+
+        let mut grads = SpmGrads::zeros_like(params);
+        for (pg, gx_rows) in partials {
+            grads.add_assign(&pg);
+            for (r, rowv) in gx_rows {
+                gx.row_mut(r).copy_from_slice(&rowv);
+            }
+        }
+        (gx, grads)
+    }
+
+    /// Materialize the full n x n matrix (test/analysis only, O(n^2 L)).
+    pub fn materialize(&self, params: &SpmParams) -> Mat {
+        let n = self.spec.n;
+        let eye = Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 });
+        let mut cols = self.forward(params, &eye);
+        for i in 0..n {
+            let row = cols.row_mut(i);
+            for (v, b) in row.iter_mut().zip(&params.bias) {
+                *v -= b;
+            }
+        }
+        cols.transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{assert_close, check_close, forall, numerical_grad};
+
+    fn mk(n: usize, variant: Variant, schedule: Schedule, l: usize, seed: u64) -> (Spm, SpmParams) {
+        let spec = SpmSpec::new(n, variant).with_schedule(schedule).with_stages(l).with_seed(seed);
+        let op = Spm::new(spec);
+        let mut rng = Rng::new(seed + 100);
+        let p = op.init_params(&mut rng);
+        (op, p)
+    }
+
+    fn randomize(p: &mut SpmParams, rng: &mut Rng) {
+        for v in p.d_in.iter_mut().chain(p.d_out.iter_mut()).chain(p.bias.iter_mut()) {
+            *v = 1.0 + 0.3 * rng.normal();
+        }
+        for m in &mut p.mix {
+            for v in m.iter_mut() {
+                *v += 0.3 * rng.normal();
+            }
+        }
+        for v in &mut p.lone {
+            *v = 1.0 + 0.3 * rng.normal();
+        }
+    }
+
+    #[test]
+    fn rotation_norm_preserving() {
+        let (op, p) = mk(64, Variant::Rotation, Schedule::Butterfly, 6, 1);
+        let mut rng = Rng::new(2);
+        let x = Mat::from_vec(8, 64, rng.normal_vec(8 * 64, 1.0));
+        let y = op.forward(&p, &x);
+        for r in 0..8 {
+            let nx: f32 = x.row(r).iter().map(|v| v * v).sum::<f32>().sqrt();
+            let ny: f32 = y.row(r).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((nx - ny).abs() < 1e-3 * nx.max(1.0), "row {r}: {nx} vs {ny}");
+        }
+    }
+
+    #[test]
+    fn rotation_materialized_orthogonal() {
+        let (op, p) = mk(16, Variant::Rotation, Schedule::Shift, 5, 3);
+        let w = op.materialize(&p);
+        let wt = w.transpose();
+        let prod = crate::tensor::matmul(&w, &wt);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let (op, mut p) = mk(33, Variant::General, Schedule::Shift, 4, 4);
+        let mut rng = Rng::new(5);
+        randomize(&mut p, &mut rng);
+        let x = Mat::from_vec(3, 33, rng.normal_vec(3 * 33, 1.0));
+        let y = Mat::from_vec(3, 33, rng.normal_vec(3 * 33, 1.0));
+        let mix = Mat::from_vec(
+            3,
+            33,
+            x.data.iter().zip(&y.data).map(|(a, b)| 2.0 * a - 0.5 * b).collect(),
+        );
+        let f = |m: &Mat| {
+            let mut out = op.forward(&p, m);
+            for i in 0..out.rows {
+                let row = out.row_mut(i);
+                for (v, b) in row.iter_mut().zip(&p.bias) {
+                    *v -= b;
+                }
+            }
+            out
+        };
+        let (fx, fy, fm) = (f(&x), f(&y), f(&mix));
+        for i in 0..fm.data.len() {
+            let want = 2.0 * fx.data[i] - 0.5 * fy.data[i];
+            assert!((fm.data[i] - want).abs() < 1e-3, "{i}");
+        }
+    }
+
+    #[test]
+    fn dense_equivalence_via_materialize() {
+        let (op, mut p) = mk(24, Variant::General, Schedule::Random, 5, 6);
+        let mut rng = Rng::new(7);
+        randomize(&mut p, &mut rng);
+        let x = Mat::from_vec(5, 24, rng.normal_vec(5 * 24, 1.0));
+        let w = op.materialize(&p);
+        let mut want = crate::tensor::matmul_nt(&x, &w);
+        crate::tensor::add_bias(&mut want, &p.bias);
+        let got = op.forward(&p, &x);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn forward_trace_matches_forward() {
+        for variant in [Variant::Rotation, Variant::General] {
+            let (op, mut p) = mk(17, variant, Schedule::Shift, 4, 8);
+            let mut rng = Rng::new(9);
+            randomize(&mut p, &mut rng);
+            let x = Mat::from_vec(6, 17, rng.normal_vec(6 * 17, 1.0));
+            let y1 = op.forward(&p, &x);
+            let (y2, _) = op.forward_trace(&p, &x);
+            assert!(y1.max_abs_diff(&y2) < 1e-5, "{variant:?}");
+        }
+    }
+
+    /// scalar loss L = sum(tanh(y)) for gradient checks
+    fn loss_and_gy(y: &Mat) -> (f32, Mat) {
+        let mut gy = y.clone();
+        let mut loss = 0.0;
+        for v in gy.data.iter_mut() {
+            loss += v.tanh();
+            let t = v.tanh();
+            *v = 1.0 - t * t;
+        }
+        (loss, gy)
+    }
+
+    #[test]
+    fn backward_input_grad_finite_difference() {
+        for variant in [Variant::Rotation, Variant::General] {
+            let (op, mut p) = mk(12, variant, Schedule::Butterfly, 3, 10);
+            let mut rng = Rng::new(11);
+            randomize(&mut p, &mut rng);
+            let mut xv = rng.normal_vec(2 * 12, 1.0);
+            let x = Mat::from_vec(2, 12, xv.clone());
+            let (y, trace) = op.forward_trace(&p, &x);
+            let (_l, gy) = loss_and_gy(&y);
+            let (gx, _g) = op.backward(&p, &x, &trace, &gy);
+            for idx in [0usize, 5, 13, 23] {
+                let got = gx.data[idx];
+                let num = numerical_grad(&mut xv, idx, 1e-2, |v| {
+                    let xm = Mat::from_vec(2, 12, v.to_vec());
+                    let y = op.forward(&p, &xm);
+                    y.data.iter().map(|t| t.tanh()).sum()
+                });
+                assert!(
+                    (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                    "{variant:?} gx[{idx}]: {got} vs {num}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_param_grads_finite_difference() {
+        for variant in [Variant::Rotation, Variant::General] {
+            let (op, mut p) = mk(9, variant, Schedule::Shift, 3, 12);
+            let mut rng = Rng::new(13);
+            randomize(&mut p, &mut rng);
+            let x = Mat::from_vec(3, 9, rng.normal_vec(27, 1.0));
+            let (y, trace) = op.forward_trace(&p, &x);
+            let (_l, gy) = loss_and_gy(&y);
+            let (_gx, grads) = op.backward(&p, &x, &trace, &gy);
+
+            let eval = |p: &SpmParams| -> f32 {
+                op.forward(p, &x).data.iter().map(|t| t.tanh()).sum()
+            };
+
+            // d_in / d_out / bias / mix[1] / lone spot checks
+            let mut q = p.clone();
+            for (field, gvec) in [("d_in", &grads.d_in), ("d_out", &grads.d_out), ("bias", &grads.bias)] {
+                for idx in [0usize, 4, 8] {
+                    let vecref: &mut Vec<f32> = match field {
+                        "d_in" => &mut q.d_in,
+                        "d_out" => &mut q.d_out,
+                        _ => &mut q.bias,
+                    };
+                    let orig = vecref[idx];
+                    vecref[idx] = orig + 1e-2;
+                    let up = eval(&q);
+                    {
+                        let vecref: &mut Vec<f32> = match field {
+                            "d_in" => &mut q.d_in,
+                            "d_out" => &mut q.d_out,
+                            _ => &mut q.bias,
+                        };
+                        vecref[idx] = orig - 1e-2;
+                    }
+                    let down = eval(&q);
+                    {
+                        let vecref: &mut Vec<f32> = match field {
+                            "d_in" => &mut q.d_in,
+                            "d_out" => &mut q.d_out,
+                            _ => &mut q.bias,
+                        };
+                        vecref[idx] = orig;
+                    }
+                    let num = (up - down) / 2e-2;
+                    let got = gvec[idx];
+                    assert!(
+                        (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                        "{variant:?} {field}[{idx}]: {got} vs {num}"
+                    );
+                }
+            }
+            for idx in 0..p.mix[1].len().min(6) {
+                let orig = q.mix[1][idx];
+                q.mix[1][idx] = orig + 1e-2;
+                let up = eval(&q);
+                q.mix[1][idx] = orig - 1e-2;
+                let down = eval(&q);
+                q.mix[1][idx] = orig;
+                let num = (up - down) / 2e-2;
+                let got = grads.mix[1][idx];
+                assert!(
+                    (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                    "{variant:?} mix[1][{idx}]: {got} vs {num}"
+                );
+            }
+            if variant == Variant::General {
+                let orig = q.lone[0];
+                q.lone[0] = orig + 1e-2;
+                let up = eval(&q);
+                q.lone[0] = orig - 1e-2;
+                let down = eval(&q);
+                q.lone[0] = orig;
+                let num = (up - down) / 2e-2;
+                assert!(
+                    (grads.lone[0] - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                    "lone[0]: {} vs {num}", grads.lone[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adjoint_consistency_property() {
+        // <SPM_lin(x), d> == <x, SPM_lin^T(d)> where SPM_lin = SPM - bias
+        forall(30, 77, |rng| {
+            let n = 2 + rng.below(40);
+            let l = 1 + rng.below(5);
+            let variant = if rng.below(2) == 0 { Variant::Rotation } else { Variant::General };
+            let sched = [Schedule::Butterfly, Schedule::Shift, Schedule::Random][rng.below(3)];
+            let (op, mut p) = mk(n, variant, sched, l, rng.next_u64());
+            randomize(&mut p, rng);
+            let x = Mat::from_vec(2, n, rng.normal_vec(2 * n, 1.0));
+            let d = Mat::from_vec(2, n, rng.normal_vec(2 * n, 1.0));
+            let (y, trace) = op.forward_trace(&p, &x);
+            let (gx, _) = op.backward(&p, &x, &trace, &d);
+            let mut lhs = 0.0f32;
+            for i in 0..y.data.len() {
+                let ylin = y.data[i] - p.bias[i % n];
+                lhs += ylin * d.data[i];
+            }
+            let rhs: f32 = x.data.iter().zip(&gx.data).map(|(a, b)| a * b).sum();
+            let scale = lhs.abs().max(rhs.abs()).max(1.0);
+            if (lhs - rhs).abs() > 2e-3 * scale {
+                return Err(format!("adjoint mismatch: {lhs} vs {rhs} (n={n} l={l} {variant:?})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotation_general_agree_when_blocks_are_rotations() {
+        let (op_r, p_r) = mk(20, Variant::Rotation, Schedule::Butterfly, 4, 21);
+        let spec_g = SpmSpec::new(20, Variant::General).with_stages(4).with_seed(21);
+        let op_g = Spm::new(spec_g);
+        // build general params from the rotation angles
+        let mut mix = Vec::new();
+        for thetas in &p_r.mix {
+            let mut m = vec![0.0; 4 * thetas.len()];
+            for (k, t) in thetas.iter().enumerate() {
+                let (s, c) = t.sin_cos();
+                m[4 * k] = c;
+                m[4 * k + 1] = -s;
+                m[4 * k + 2] = s;
+                m[4 * k + 3] = c;
+            }
+            mix.push(m);
+        }
+        let p_g = SpmParams { mix, ..p_r.clone() };
+        let mut rng = Rng::new(22);
+        let x = Mat::from_vec(4, 20, rng.normal_vec(80, 1.0));
+        let (ya, yb) = (op_r.forward(&p_r, &x), op_g.forward(&p_g, &x));
+        assert!(ya.max_abs_diff(&yb) < 1e-4);
+    }
+
+    #[test]
+    fn param_count_near_linear() {
+        for n in [64usize, 256, 1024] {
+            let (op, p) = mk(n, Variant::General, Schedule::Butterfly,
+                             pairing::default_num_stages(n), 1);
+            assert!(op.param_count(&p) < n * n / 4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn check_close_helper() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, "exact");
+        assert!(check_close(&[1.0], &[2.0], 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Minimal row-major f32 matrix plus the blocked matmul the dense baseline
+//! needs. No external BLAS: the paper's dense comparator on the *native*
+//! path is this hand-blocked kernel (the XLA path uses Eigen; both engines
+//! are reported separately in EXPERIMENTS.md).
+
+use crate::parallel;
+
+/// Row-major (rows x cols) f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// C = A (m,k) * B (k,n).  Blocked over k with a vectorizable j-inner loop,
+/// parallelized over row chunks of A.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner dims");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    const KB: usize = 64;
+    parallel::for_each_chunk(&mut c.data, n, |i0, crows| {
+        for (di, crow) in crows.chunks_mut(n).enumerate() {
+            let i = i0 + di;
+            let arow = a.row(i);
+            for k0 in (0..k).step_by(KB) {
+                let kend = (k0 + KB).min(k);
+                for kk in k0..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..kk * n + n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = A (m,k) * B^T where B is (n,k): the "x @ W^T" shape of a linear layer.
+/// Dot-product kernel over contiguous rows of both operands.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dims");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    parallel::for_each_chunk(&mut c.data, n, |i0, crows| {
+        for (di, crow) in crows.chunks_mut(n).enumerate() {
+            let arow = a.row(i0 + di);
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc0 = 0.0f32;
+                let mut acc1 = 0.0f32;
+                let mut acc2 = 0.0f32;
+                let mut acc3 = 0.0f32;
+                let mut t = 0;
+                while t + 4 <= k {
+                    acc0 += arow[t] * brow[t];
+                    acc1 += arow[t + 1] * brow[t + 1];
+                    acc2 += arow[t + 2] * brow[t + 2];
+                    acc3 += arow[t + 3] * brow[t + 3];
+                    t += 4;
+                }
+                let mut acc = acc0 + acc1 + acc2 + acc3;
+                while t < k {
+                    acc += arow[t] * brow[t];
+                    t += 1;
+                }
+                crow[j] = acc;
+            }
+        }
+    });
+    c
+}
+
+/// C = A^T (k,m)^T=(m,k)... precisely: A is (k,m), B is (k,n), returns (m,n)
+/// — the "gW = gy^T @ x" shape of a linear-layer backward.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn inner dims");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    // accumulate rank-1 updates; parallel over output row chunks
+    parallel::for_each_chunk(&mut c.data, n, |i0, crows| {
+        let rows_here = crows.len() / n;
+        for kk in 0..k {
+            let arow = a.row(kk);
+            let brow = b.row(kk);
+            for di in 0..rows_here {
+                let aik = arow[i0 + di];
+                if aik == 0.0 {
+                    continue;
+                }
+                let crow = &mut crows[di * n..(di + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    });
+    c
+}
+
+/// y += bias broadcast over rows.
+pub fn add_bias(y: &mut Mat, bias: &[f32]) {
+    assert_eq!(y.cols, bias.len());
+    for i in 0..y.rows {
+        let row = y.row_mut(i);
+        for j in 0..row.len() {
+            row[j] += bias[j];
+        }
+    }
+}
+
+/// Column-wise sum (the bias gradient).
+pub fn col_sum(m: &Mat) -> Vec<f32> {
+    let mut s = vec![0.0; m.cols];
+    for i in 0..m.rows {
+        let row = m.row(i);
+        for j in 0..row.len() {
+            s[j] += row[j];
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for t in 0..a.cols {
+                    s += a.at(i, t) * b.at(t, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Mat::from_fn(7, 13, |i, j| (i * 13 + j) as f32 * 0.01 - 0.3);
+        let b = Mat::from_fn(13, 5, |i, j| (i + j) as f32 * 0.1 - 0.7);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_nt_matches_naive() {
+        let a = Mat::from_fn(6, 9, |i, j| (i as f32 - j as f32) * 0.05);
+        let w = Mat::from_fn(4, 9, |i, j| (i * j) as f32 * 0.02 - 0.1);
+        let got = matmul_nt(&a, &w);
+        let want = naive(&a, &w.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_tn_matches_naive() {
+        let g = Mat::from_fn(8, 3, |i, j| (i + 2 * j) as f32 * 0.03);
+        let x = Mat::from_fn(8, 5, |i, j| (i * j) as f32 * 0.01 - 0.2);
+        let got = matmul_tn(&g, &x);
+        let want = naive(&g.transpose(), &x);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let mut y = Mat::from_fn(3, 2, |i, j| (i + j) as f32);
+        add_bias(&mut y, &[1.0, -1.0]);
+        assert_eq!(y.at(0, 0), 1.0);
+        assert_eq!(y.at(0, 1), 0.0);
+        let s = col_sum(&y);
+        assert_eq!(s, vec![6.0, 3.0]);
+    }
+
+    #[test]
+    fn large_parallel_path() {
+        let a = Mat::from_fn(130, 64, |i, j| ((i * 7 + j * 3) % 11) as f32 * 0.1);
+        let b = Mat::from_fn(64, 70, |i, j| ((i + j) % 5) as f32 * 0.2 - 0.3);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = matmul(&a, &b);
+    }
+}

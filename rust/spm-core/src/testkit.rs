@@ -1,0 +1,101 @@
+//! Minimal property-testing harness (proptest is not in the offline vendor
+//! set). `forall` runs a predicate over `cases` seeded random inputs and
+//! reports the first failing seed so a failure is reproducible:
+//!
+//! ```text
+//! forall(100, 7, |rng| { ... ; Ok(()) })
+//! ```
+
+use crate::rng::Rng;
+
+/// Run `prop` for `cases` independent RNG streams derived from `seed`.
+/// Panics with the failing case index + message on the first failure.
+pub fn forall(cases: usize, seed: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0f32.max(w.abs()).max(g.abs());
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "{what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+/// Relative-error helper for property bodies (returns Err instead of
+/// panicking so `forall` can attach the case index).
+pub fn check_close(got: &[f32], want: &[f32], tol: f32, what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0f32.max(w.abs()).max(g.abs());
+        if (g - w).abs() > tol * scale || !g.is_finite() {
+            return Err(format!("{what}[{i}]: got {g}, want {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Central-difference numerical gradient of a scalar function w.r.t. one
+/// coordinate of `params` — used by the finite-difference gradient checks.
+pub fn numerical_grad(
+    params: &mut [f32],
+    idx: usize,
+    eps: f32,
+    mut f: impl FnMut(&[f32]) -> f32,
+) -> f32 {
+    let orig = params[idx];
+    params[idx] = orig + eps;
+    let up = f(params);
+    params[idx] = orig - eps;
+    let down = f(params);
+    params[idx] = orig;
+    (up - down) / (2.0 * eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes() {
+        forall(10, 1, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(10, 1, |rng| {
+            if rng.uniform() < 2.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn numerical_grad_of_square() {
+        let mut p = vec![3.0f32];
+        let g = numerical_grad(&mut p, 0, 1e-3, |v| v[0] * v[0]);
+        assert!((g - 6.0).abs() < 1e-2);
+        assert_eq!(p[0], 3.0); // restored
+    }
+}

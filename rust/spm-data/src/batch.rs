@@ -1,0 +1,83 @@
+//! Prefetching batch pipeline: a producer thread generates batches ahead of
+//! the training loop through a bounded channel (backpressure = channel
+//! capacity). This keeps data generation off the hot path — the coordinator
+//! overlaps batch synthesis/hashing with device execution.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A generic prefetcher: `make(i)` produces the i-th batch on a worker
+/// thread; `next()` pops in order. Dropping the prefetcher stops the worker.
+pub struct Prefetcher<T: Send + 'static> {
+    rx: mpsc::Receiver<T>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    /// `total` batches, `depth` in flight at most.
+    pub fn new(total: usize, depth: usize, make: impl Fn(usize) -> T + Send + 'static) -> Self {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            for i in 0..total {
+                let item = make(i);
+                if tx.send(item).is_err() {
+                    break; // consumer dropped
+                }
+            }
+        });
+        Prefetcher { rx, handle: Some(handle) }
+    }
+
+    /// Next batch (blocks if the producer is behind). None when exhausted.
+    pub fn next(&mut self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+}
+
+impl<T: Send + 'static> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        // drain so the producer unblocks, then join
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, mpsc::sync_channel(1).1));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn yields_all_batches_in_order() {
+        let mut p = Prefetcher::new(20, 4, |i| i * i);
+        for i in 0..20 {
+            assert_eq!(p.next(), Some(i * i));
+        }
+        assert_eq!(p.next(), None);
+    }
+
+    #[test]
+    fn backpressure_limits_inflight() {
+        let made = Arc::new(AtomicUsize::new(0));
+        let made2 = made.clone();
+        let mut p = Prefetcher::new(100, 2, move |i| {
+            made2.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // producer can be at most depth + 1 ahead (one blocked in send)
+        let ahead = made.load(Ordering::SeqCst);
+        assert!(ahead <= 4, "produced {ahead} without consumption");
+        let _ = p.next();
+    }
+
+    #[test]
+    fn early_drop_stops_producer() {
+        let p = Prefetcher::new(1_000_000, 2, |i| vec![i; 10]);
+        drop(p); // must not hang
+    }
+}

@@ -1,0 +1,226 @@
+//! Character-level corpus (substitution, DESIGN.md §6): the paper's §9.3
+//! Shakespeare dataset (~1.0 MB train / 111 KB valid) is not shipped with
+//! the image, so this module deterministically synthesizes a byte corpus
+//! with the same statistics pipeline: a bundled public-domain Shakespeare
+//! excerpt seeds an order-3 character Markov chain that is sampled out to
+//! the paper's exact corpus sizes. The alphabet, line structure and
+//! approximate entropy of the seed text are preserved, and the train/valid
+//! split protocol matches the paper (contiguous split).
+
+use spm_core::rng::Rng;
+
+/// Public-domain seed text (Shakespeare excerpts).
+pub const SEED_TEXT: &str = r#"To be, or not to be, that is the question:
+Whether 'tis nobler in the mind to suffer
+The slings and arrows of outrageous fortune,
+Or to take arms against a sea of troubles
+And by opposing end them. To die: to sleep;
+No more; and by a sleep to say we end
+The heart-ache and the thousand natural shocks
+That flesh is heir to, 'tis a consummation
+Devoutly to be wish'd. To die, to sleep;
+To sleep: perchance to dream: ay, there's the rub;
+For in that sleep of death what dreams may come
+When we have shuffled off this mortal coil,
+Must give us pause: there's the respect
+That makes calamity of so long life;
+
+All the world's a stage,
+And all the men and women merely players:
+They have their exits and their entrances;
+And one man in his time plays many parts,
+His acts being seven ages. At first the infant,
+Mewling and puking in the nurse's arms.
+And then the whining school-boy, with his satchel
+And shining morning face, creeping like snail
+Unwillingly to school. And then the lover,
+Sighing like furnace, with a woeful ballad
+Made to his mistress' eyebrow. Then a soldier,
+Full of strange oaths and bearded like the pard,
+Jealous in honour, sudden and quick in quarrel,
+Seeking the bubble reputation
+Even in the cannon's mouth.
+
+Friends, Romans, countrymen, lend me your ears;
+I come to bury Caesar, not to praise him.
+The evil that men do lives after them;
+The good is oft interred with their bones;
+So let it be with Caesar. The noble Brutus
+Hath told you Caesar was ambitious:
+If it were so, it was a grievous fault,
+And grievously hath Caesar answer'd it.
+Here, under leave of Brutus and the rest--
+For Brutus is an honourable man;
+So are they all, all honourable men--
+Come I to speak in Caesar's funeral.
+He was my friend, faithful and just to me:
+But Brutus says he was ambitious;
+And Brutus is an honourable man.
+
+Now is the winter of our discontent
+Made glorious summer by this sun of York;
+And all the clouds that lour'd upon our house
+In the deep bosom of the ocean buried.
+Now are our brows bound with victorious wreaths;
+Our bruised arms hung up for monuments;
+Our stern alarums changed to merry meetings,
+Our dreadful marches to delightful measures.
+
+Shall I compare thee to a summer's day?
+Thou art more lovely and more temperate:
+Rough winds do shake the darling buds of May,
+And summer's lease hath all too short a date:
+Sometime too hot the eye of heaven shines,
+And often is his gold complexion dimm'd;
+And every fair from fair sometime declines,
+By chance or nature's changing course untrimm'd;
+But thy eternal summer shall not fade
+Nor lose possession of that fair thou owest;
+Nor shall Death brag thou wander'st in his shade,
+When in eternal lines to time thou growest:
+So long as men can breathe or eyes can see,
+So long lives this and this gives life to thee.
+"#;
+
+/// Paper §9.3 sizes: ~1.0 MB train, ~111 KB valid.
+pub const TRAIN_BYTES: usize = 1_000_000;
+pub const VALID_BYTES: usize = 111_000;
+
+/// Order-3 character Markov chain over the seed text.
+struct Markov {
+    /// map 3-byte context -> candidate next bytes (with multiplicity)
+    table: std::collections::HashMap<[u8; 3], Vec<u8>>,
+}
+
+impl Markov {
+    fn train(text: &[u8]) -> Self {
+        let mut table: std::collections::HashMap<[u8; 3], Vec<u8>> =
+            std::collections::HashMap::new();
+        for w in text.windows(4) {
+            let ctx = [w[0], w[1], w[2]];
+            table.entry(ctx).or_default().push(w[3]);
+        }
+        Markov { table }
+    }
+
+    fn sample(&self, len: usize, seed_ctx: [u8; 3], rng: &mut Rng, fallback: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(len + 3);
+        out.extend_from_slice(&seed_ctx);
+        while out.len() < len {
+            let ctx = [out[out.len() - 3], out[out.len() - 2], out[out.len() - 1]];
+            match self.table.get(&ctx) {
+                Some(cands) => out.push(cands[rng.below(cands.len())]),
+                None => {
+                    // restart from a random position in the seed text
+                    let p = rng.below(fallback.len() - 3);
+                    out.extend_from_slice(&fallback[p..p + 3]);
+                }
+            }
+        }
+        out.truncate(len);
+        out
+    }
+}
+
+/// The full corpus: `train` then `valid`, generated once, deterministic.
+pub struct Corpus {
+    pub train: Vec<u8>,
+    pub valid: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn generate(seed: u64) -> Self {
+        Self::generate_sized(seed, TRAIN_BYTES, VALID_BYTES)
+    }
+
+    /// Smaller corpora for tests/CI profiles.
+    pub fn generate_sized(seed: u64, train_bytes: usize, valid_bytes: usize) -> Self {
+        let seed_bytes = SEED_TEXT.as_bytes();
+        let chain = Markov::train(seed_bytes);
+        let mut rng = Rng::new(seed);
+        let total = chain.sample(
+            train_bytes + valid_bytes,
+            [b'T', b'o', b' '],
+            &mut rng,
+            seed_bytes,
+        );
+        let (train, valid) = total.split_at(train_bytes);
+        Corpus { train: train.to_vec(), valid: valid.to_vec() }
+    }
+
+    /// Sample a (B, T+1) batch of contiguous windows from a split; returns
+    /// (inputs, targets) each B*T flat, where targets are inputs shifted by
+    /// one byte (next-char prediction).
+    pub fn sample_batch(
+        split: &[u8],
+        batch: usize,
+        seq_len: usize,
+        rng: &mut Rng,
+    ) -> (Vec<u8>, Vec<u8>) {
+        assert!(split.len() > seq_len + 1, "split too small");
+        let mut inputs = Vec::with_capacity(batch * seq_len);
+        let mut targets = Vec::with_capacity(batch * seq_len);
+        for _ in 0..batch {
+            let start = rng.below(split.len() - seq_len - 1);
+            inputs.extend_from_slice(&split[start..start + seq_len]);
+            targets.extend_from_slice(&split[start + 1..start + seq_len + 1]);
+        }
+        (inputs, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate_sized(1, 5000, 500);
+        let b = Corpus::generate_sized(1, 5000, 500);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.valid, b.valid);
+    }
+
+    #[test]
+    fn sizes_match_request() {
+        let c = Corpus::generate_sized(2, 10_000, 1_000);
+        assert_eq!(c.train.len(), 10_000);
+        assert_eq!(c.valid.len(), 1_000);
+    }
+
+    #[test]
+    fn alphabet_is_shakespearean() {
+        // generated text should stay within the seed alphabet
+        let c = Corpus::generate_sized(3, 20_000, 100);
+        let seed_alpha: std::collections::HashSet<u8> =
+            SEED_TEXT.bytes().collect();
+        for &b in &c.train {
+            assert!(seed_alpha.contains(&b), "byte {b} not in seed alphabet");
+        }
+    }
+
+    #[test]
+    fn text_is_not_trivially_periodic() {
+        let c = Corpus::generate_sized(4, 10_000, 100);
+        // entropy sanity: at least 20 distinct bytes and no 4-byte period
+        let distinct: std::collections::HashSet<u8> = c.train.iter().copied().collect();
+        assert!(distinct.len() >= 20);
+        let periodic = c.train.windows(8).all(|w| w[0] == w[4]);
+        assert!(!periodic);
+    }
+
+    #[test]
+    fn batch_shapes_and_shift() {
+        let c = Corpus::generate_sized(5, 5_000, 500);
+        let mut rng = Rng::new(6);
+        let (inp, tgt) = Corpus::sample_batch(&c.train, 4, 16, &mut rng);
+        assert_eq!(inp.len(), 64);
+        assert_eq!(tgt.len(), 64);
+        // within each window, target[i] must equal input[i+1]
+        for w in 0..4 {
+            for i in 0..15 {
+                assert_eq!(tgt[w * 16 + i], inp[w * 16 + i + 1]);
+            }
+        }
+    }
+}

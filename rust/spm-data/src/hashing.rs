@@ -1,0 +1,94 @@
+//! Feature hashing (paper §9.2 "hashed sparse features"): uni- and bi-gram
+//! tokens are hashed into a fixed-width vector with a sign hash, then
+//! l2-normalized. This is the standard hashing-trick text pipeline; the
+//! dense/SPM first layer then consumes the resulting (B, n) rows.
+
+/// FNV-1a 64-bit over bytes (stable across runs and platforms).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// Hash a token stream (already lowercased/split) into an `n`-dim vector:
+/// unigrams + bigrams, sign hashing, l2 normalization.
+pub fn hash_features(tokens: &[&str], n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    let mut add = |key: &[u8]| {
+        let h = fnv1a(key);
+        let idx = (h % n as u64) as usize;
+        let sign = if (h >> 63) & 1 == 0 { 1.0 } else { -1.0 };
+        v[idx] += sign;
+    };
+    for t in tokens {
+        add(t.as_bytes());
+    }
+    for w in tokens.windows(2) {
+        let mut key = Vec::with_capacity(w[0].len() + w[1].len() + 1);
+        key.extend_from_slice(w[0].as_bytes());
+        key.push(b'_');
+        key.extend_from_slice(w[1].as_bytes());
+        add(&key);
+    }
+    let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    v
+}
+
+/// Hash a whitespace-separated document.
+pub fn hash_document(doc: &str, n: usize) -> Vec<f32> {
+    let tokens: Vec<&str> = doc.split_whitespace().collect();
+    hash_features(&tokens, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = hash_document("the quick brown fox", 64);
+        let b = hash_document("the quick brown fox", 64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_docs_differ() {
+        let a = hash_document("stocks rally on earnings", 128);
+        let b = hash_document("striker scores late winner", 128);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn l2_normalized() {
+        let v = hash_document("a b c d e f g", 256);
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_doc_is_zero() {
+        let v = hash_document("", 32);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bigrams_matter() {
+        let a = hash_document("new york", 512);
+        let b = hash_document("york new", 512);
+        assert_ne!(a, b); // same unigrams, different bigram
+    }
+
+    #[test]
+    fn fnv_known_value() {
+        // FNV-1a("") is the offset basis
+        assert_eq!(fnv1a(b""), 0xCBF29CE484222325);
+    }
+}

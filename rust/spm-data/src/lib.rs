@@ -1,0 +1,21 @@
+//! # spm-data
+//!
+//! Workload substrates for the SPM reproduction (DESIGN.md §6):
+//!
+//! * [`teacher`] — the §9.1 compositional teacher (SPM → ReLU → dense →
+//!   argmax) generating hard-label classification data.
+//! * [`hashing`] — feature hashing of token streams into fixed-width dense
+//!   rows (the §9.2 "hashed sparse features" pipeline).
+//! * [`agnews`] — a deterministic 4-class topical-text corpus standing in
+//!   for AG News (same scale: 120k train / 7.6k test), see DESIGN.md for
+//!   the substitution rationale.
+//! * [`charcorpus`] — a ~1 MB Shakespeare-like byte corpus (seed excerpt +
+//!   order-3 Markov extension) with the paper's train/valid split protocol.
+//! * [`batch`] — a prefetching, backpressured batch pipeline (bounded
+//!   channel + producer thread) used by the coordinator's training loops.
+
+pub mod agnews;
+pub mod batch;
+pub mod charcorpus;
+pub mod hashing;
+pub mod teacher;

@@ -1,0 +1,119 @@
+//! Compositional teacher (paper §9.1): hard labels from
+//! ``x -> argmax(W2 ReLU(SPM(x)))`` with a structured SPM mixing stage.
+//!
+//! The student never sees the teacher's parameters — only (x, label) pairs —
+//! so the experiment tests whether the student's hypothesis class can
+//! *recover* the compositional structure (paper §8.3).
+
+use spm_core::dense::Dense;
+use spm_core::models::mixer::MixerCfg;
+use spm_core::pairing::Schedule;
+use spm_core::rng::Rng;
+use spm_core::spm::{Spm, SpmParams, SpmSpec, Variant};
+use spm_core::tensor::Mat;
+
+pub struct Teacher {
+    pub n: usize,
+    pub num_classes: usize,
+    op: Spm,
+    params: SpmParams,
+    w2: Dense,
+}
+
+impl Teacher {
+    /// Deterministic teacher for width `n` (matches the python teacher's
+    /// structure; seeds are independent per width).
+    pub fn new(n: usize, num_classes: usize, seed: u64) -> Self {
+        let spec = SpmSpec::new(n, Variant::General)
+            .with_schedule(Schedule::Butterfly)
+            .with_seed(seed);
+        let op = Spm::new(spec);
+        let mut rng = Rng::new(seed ^ TEACHER_TAG);
+        let mut params = op.init_params(&mut rng);
+        // non-trivial diagonal emphasis, same shape as python's init_teacher
+        for v in params.d_in.iter_mut() {
+            *v = 1.0 + 0.5 * rng.normal();
+        }
+        let w2 = Dense::init(&mut rng, num_classes, n);
+        Teacher { n, num_classes, op, params, w2 }
+    }
+
+    /// Teacher logits for a batch.
+    pub fn logits(&self, x: &Mat) -> Mat {
+        let mut h = self.op.forward(&self.params, x);
+        for v in h.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        self.w2.forward(&h)
+    }
+
+    /// Hard labels (argmax, §9.1).
+    pub fn labels(&self, x: &Mat) -> Vec<u32> {
+        let logits = self.logits(x);
+        (0..logits.rows)
+            .map(|i| {
+                let row = logits.row(i);
+                let mut best = 0;
+                for j in 1..row.len() {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best as u32
+            })
+            .collect()
+    }
+
+    /// Sample a labelled batch: x ~ N(0, I), y = teacher(x).
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> (Mat, Vec<u32>) {
+        let x = Mat::from_vec(batch, self.n, rng.normal_vec(batch * self.n, 1.0));
+        let y = self.labels(&x);
+        (x, y)
+    }
+
+    /// The MixerCfg a *matched* SPM student would use (same schedule family,
+    /// its own parameters).
+    pub fn student_cfg(&self) -> MixerCfg {
+        MixerCfg::spm(self.n, Variant::General).with_schedule(Schedule::Butterfly)
+    }
+}
+
+const TEACHER_TAG: u64 = 0x7EAC_4E85_0000_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_labels() {
+        let t1 = Teacher::new(32, 10, 7);
+        let t2 = Teacher::new(32, 10, 7);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let (x1, y1) = t1.sample(64, &mut r1);
+        let (x2, y2) = t2.sample(64, &mut r2);
+        assert_eq!(x1.data, x2.data);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn labels_use_many_classes() {
+        let t = Teacher::new(64, 10, 3);
+        let mut rng = Rng::new(2);
+        let (_x, y) = t.sample(512, &mut rng);
+        let mut seen = vec![false; 10];
+        for &l in &y {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&b| b).count() >= 5, "{seen:?}");
+    }
+
+    #[test]
+    fn different_seeds_different_teachers() {
+        let ta = Teacher::new(32, 10, 1);
+        let tb = Teacher::new(32, 10, 2);
+        let mut rng = Rng::new(3);
+        let x = Mat::from_vec(128, 32, rng.normal_vec(128 * 32, 1.0));
+        assert_ne!(ta.labels(&x), tb.labels(&x));
+    }
+}

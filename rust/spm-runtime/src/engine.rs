@@ -1,0 +1,142 @@
+//! PJRT engine: wraps the `xla` crate's CPU client, loads HLO-text
+//! artifacts (the AOT interchange format — see python/compile/aot.py for
+//! why text, not serialized protos) and provides typed literal/buffer
+//! helpers.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::manifest::{DType, TensorSpec};
+
+pub struct Engine {
+    pub client: PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        // The bundled TfrtCpuClient (xla_extension 0.5.1) segfaults when a
+        // process destroys a client and later creates another (shared
+        // thread-pool teardown). Engines are created a handful of times per
+        // process (tests, benches), so we deliberately leak each client:
+        // clone the Rc and forget it, keeping the refcount >= 1 forever.
+        std::mem::forget(client.clone());
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Parse + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling {}", path.display()))
+    }
+
+    /// Host f32 data -> device buffer with the spec's shape.
+    pub fn upload_f32(&self, spec: &TensorSpec, data: &[f32]) -> Result<PjRtBuffer> {
+        if spec.dtype != DType::F32 {
+            bail!("{}: expected f32 tensor", spec.name);
+        }
+        if data.len() != spec.elements() {
+            bail!("{}: got {} values, want {}", spec.name, data.len(), spec.elements());
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = Literal::vec1(data).reshape(&dims)?;
+        Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    }
+
+    /// Host i32 data -> device buffer with the spec's shape.
+    pub fn upload_i32(&self, spec: &TensorSpec, data: &[i32]) -> Result<PjRtBuffer> {
+        if spec.dtype != DType::I32 {
+            bail!("{}: expected i32 tensor", spec.name);
+        }
+        if data.len() != spec.elements() {
+            bail!("{}: got {} values, want {}", spec.name, data.len(), spec.elements());
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = Literal::vec1(data).reshape(&dims)?;
+        Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    }
+
+    pub fn upload_scalar_f32(&self, v: f32) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, &Literal::scalar(v))?)
+    }
+
+    pub fn upload_scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, &Literal::scalar(v))?)
+    }
+
+    /// Zero-filled buffer of the given shape (optimizer-state init).
+    pub fn upload_zeros(&self, spec: &TensorSpec) -> Result<PjRtBuffer> {
+        match spec.dtype {
+            DType::F32 => self.upload_f32(spec, &vec![0.0; spec.elements()]),
+            DType::I32 => self.upload_i32(spec, &vec![0; spec.elements()]),
+        }
+    }
+
+    /// Download a buffer to host f32 (works for rank-0 scalars too).
+    pub fn read_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        if lit.element_count() == 1 {
+            return Ok(vec![lit.get_first_element::<f32>()?]);
+        }
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    pub fn read_i32(&self, buf: &PjRtBuffer) -> Result<Vec<i32>> {
+        let lit = buf.to_literal_sync()?;
+        if lit.element_count() == 1 {
+            return Ok(vec![lit.get_first_element::<i32>()?]);
+        }
+        Ok(lit.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../artifacts")
+    }
+
+    #[test]
+    fn engine_loads_and_runs_init() {
+        let engine = Engine::cpu().unwrap();
+        assert!(!engine.platform().is_empty());
+        let man = Manifest::load(artifacts_dir()).unwrap();
+        let e = man.entry("clf_spm_small").unwrap();
+        let init = engine.load(&e.artifact("init").unwrap().file).unwrap();
+        let seed = engine.upload_scalar_i32(0).unwrap();
+        let outs = init.execute_b::<&PjRtBuffer>(&[&seed]).unwrap();
+        // untupled: one buffer per parameter leaf
+        assert_eq!(outs[0].len(), e.nleaves);
+    }
+
+    #[test]
+    fn upload_shape_mismatch_is_error() {
+        let engine = Engine::cpu().unwrap();
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
+        assert!(engine.upload_f32(&spec, &[0.0; 5]).is_err());
+        assert!(engine.upload_f32(&spec, &[0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let engine = Engine::cpu().unwrap();
+        let b = engine.upload_scalar_f32(3.5).unwrap();
+        assert_eq!(engine.read_f32(&b).unwrap(), vec![3.5]);
+    }
+}

@@ -1,0 +1,20 @@
+//! # spm-runtime
+//!
+//! The PJRT execution layer of the three-layer architecture: loads the
+//! HLO-text artifacts that `python/compile/aot.py` produced at build time,
+//! compiles them once on the CPU PJRT client, and drives buffer-resident
+//! training/eval/serving from rust. Python is never on this path.
+//!
+//! Modules:
+//! * [`json`]     — dependency-free JSON parser for the manifest.
+//! * [`manifest`] — typed artifact manifest (the python<->rust contract).
+//! * [`engine`]   — PJRT client wrapper + literal/buffer helpers.
+//! * [`session`]  — buffer-resident train/eval/forward sessions.
+pub mod engine;
+pub mod json;
+pub mod manifest;
+pub mod session;
+
+pub use engine::Engine;
+pub use manifest::{Artifact, DType, Entry, Manifest, TensorSpec};
+pub use session::{HostTensor, TrainSession};

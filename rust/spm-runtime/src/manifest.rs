@@ -1,0 +1,228 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python AOT compiler (python/compile/aot.py) and this runtime. Every
+//! artifact's input/output signature and the parameter-leaf layout is
+//! checked here, never assumed.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{parse, Json};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub nleaves: usize,
+    pub leaves: Vec<TensorSpec>,
+    pub artifacts: BTreeMap<String, Artifact>,
+    /// free-form metadata from aot.py (model kind, n, batch, schedule, ...)
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Entry {
+    pub fn artifact(&self, kind: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(kind)
+            .ok_or_else(|| anyhow!("entry {} has no '{kind}' artifact", self.name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.parse::<f64>().ok())
+            .map(|v| v as usize)
+            .ok_or_else(|| anyhow!("entry {} missing meta '{key}'", self.name))
+    }
+
+    pub fn meta_str(&self, key: &str) -> &str {
+        self.meta.get(key).map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+fn tensor_spec(j: &Json, default_name: &str) -> Result<TensorSpec> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .unwrap_or(default_name)
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("tensor missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(
+        j.get("dtype")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("tensor missing dtype"))?,
+    )?;
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let version = root
+            .get("format_version")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+        let mut entries = BTreeMap::new();
+        for (name, e) in root
+            .get("entries")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let nleaves = e
+                .get("nleaves")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("{name}: missing nleaves"))?;
+            let leaves = e
+                .get("leaves")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing leaves"))?
+                .iter()
+                .map(|l| tensor_spec(l, "leaf"))
+                .collect::<Result<Vec<_>>>()?;
+            if leaves.len() != nleaves {
+                bail!("{name}: nleaves {} != leaves {}", nleaves, leaves.len());
+            }
+            let mut artifacts = BTreeMap::new();
+            for (kind, a) in e
+                .get("artifacts")
+                .and_then(|v| v.as_obj())
+                .ok_or_else(|| anyhow!("{name}: missing artifacts"))?
+            {
+                let file = dir.join(
+                    a.get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("{name}.{kind}: missing file"))?,
+                );
+                let inputs = a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|t| tensor_spec(t, "arg"))
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = a
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|t| tensor_spec(t, "out"))
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(kind.clone(), Artifact { file, inputs, outputs });
+            }
+            let mut meta = BTreeMap::new();
+            if let Some(m) = e.get("meta").and_then(|v| v.as_obj()) {
+                for (k, v) in m {
+                    let s = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(n) => format!("{n}"),
+                        Json::Bool(b) => format!("{b}"),
+                        Json::Null => String::new(),
+                        other => format!("{other:?}"),
+                    };
+                    meta.insert(k.clone(), s);
+                }
+            }
+            entries.insert(
+                name.clone(),
+                Entry { name: name.clone(), nleaves, leaves, artifacts, meta },
+            );
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no manifest entry '{name}' (have: {:?})",
+                                   self.entries.keys().take(8).collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(artifacts_dir()).expect("manifest (run make artifacts)");
+        assert!(m.entries.len() >= 9);
+        let e = m.entry("clf_spm_small").unwrap();
+        assert_eq!(e.nleaves, e.leaves.len());
+        let train = e.artifact("train").unwrap();
+        assert_eq!(train.inputs.len(), 3 * e.nleaves + 3);
+        assert!(train.file.exists());
+        assert_eq!(e.meta_str("model"), "classifier");
+        assert_eq!(e.meta_usize("n").unwrap(), 64);
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert!(DType::parse("float64").is_err());
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.entry("nonexistent").is_err());
+    }
+}

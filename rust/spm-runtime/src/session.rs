@@ -1,0 +1,326 @@
+//! Buffer-resident training session: the L3 hot loop.
+//!
+//! `TrainSession` holds parameters, Adam moments and the step counter as
+//! **device buffers** for the whole run; each `train_step` uploads only the
+//! batch, executes the AOT-compiled train artifact via `execute_b`, swaps
+//! the returned state buffers in, and downloads two scalars (loss, metric).
+//! Python never runs; the only per-step host work is batch upload.
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{PjRtBuffer, PjRtLoadedExecutable};
+
+use crate::engine::Engine;
+use crate::manifest::{DType, Entry, Manifest, TensorSpec};
+
+/// A typed host batch matching one artifact input.
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn from_labels(labels: &[u32]) -> HostTensor {
+        HostTensor::I32(labels.iter().map(|&v| v as i32).collect())
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> HostTensor {
+        HostTensor::I32(bytes.iter().map(|&v| v as i32).collect())
+    }
+}
+
+pub struct TrainSession<'e> {
+    pub engine: &'e Engine,
+    pub entry: Entry,
+    init_exe: Option<PjRtLoadedExecutable>,
+    train_exe: Option<PjRtLoadedExecutable>,
+    eval_exe: Option<PjRtLoadedExecutable>,
+    forward_exe: Option<PjRtLoadedExecutable>,
+    params: Vec<PjRtBuffer>,
+    m: Vec<PjRtBuffer>,
+    v: Vec<PjRtBuffer>,
+    step: Option<PjRtBuffer>,
+    pub steps_done: u64,
+}
+
+impl<'e> TrainSession<'e> {
+    /// Compile the requested artifact kinds ("init", "train", "eval",
+    /// "forward") for `name`. Compilation cost is paid once, up front.
+    pub fn new(engine: &'e Engine, manifest: &Manifest, name: &str, kinds: &[&str]) -> Result<Self> {
+        let entry = manifest.entry(name)?.clone();
+        let load = |kind: &str| -> Result<Option<PjRtLoadedExecutable>> {
+            if kinds.contains(&kind) {
+                Ok(Some(engine.load(&entry.artifact(kind)?.file)?))
+            } else {
+                Ok(None)
+            }
+        };
+        Ok(TrainSession {
+            engine,
+            init_exe: load("init")?,
+            train_exe: load("train")?,
+            eval_exe: load("eval")?,
+            forward_exe: load("forward")?,
+            entry,
+            params: Vec::new(),
+            m: Vec::new(),
+            v: Vec::new(),
+            step: None,
+            steps_done: 0,
+        })
+    }
+
+    /// Run the init artifact: parameters land on device; Adam moments are
+    /// zero-initialized to matching shapes; step counter = 0.
+    pub fn init(&mut self, seed: i32) -> Result<()> {
+        let exe = self.init_exe.as_ref().ok_or_else(|| anyhow!("init not compiled"))?;
+        let seed_buf = self.engine.upload_scalar_i32(seed)?;
+        let mut outs = exe
+            .execute_b::<&PjRtBuffer>(&[&seed_buf])
+            .context("running init")?;
+        let leaves = std::mem::take(&mut outs[0]);
+        if leaves.len() != self.entry.nleaves {
+            bail!("init returned {} buffers, want {}", leaves.len(), self.entry.nleaves);
+        }
+        self.m = self
+            .entry
+            .leaves
+            .iter()
+            .map(|l| self.engine.upload_zeros(l))
+            .collect::<Result<_>>()?;
+        self.v = self
+            .entry
+            .leaves
+            .iter()
+            .map(|l| self.engine.upload_zeros(l))
+            .collect::<Result<_>>()?;
+        self.params = leaves;
+        self.step = Some(self.engine.upload_scalar_f32(0.0)?);
+        self.steps_done = 0;
+        Ok(())
+    }
+
+    fn upload_batch(&self, spec: &TensorSpec, t: &HostTensor) -> Result<PjRtBuffer> {
+        match (t, &spec.dtype) {
+            (HostTensor::F32(d), DType::F32) => self.engine.upload_f32(spec, d),
+            (HostTensor::I32(d), DType::I32) => self.engine.upload_i32(spec, d),
+            _ => bail!("batch dtype mismatch for {}", spec.name),
+        }
+    }
+
+    /// One buffer-resident training step; returns (loss, metric).
+    pub fn train_step(&mut self, x: &HostTensor, y: &HostTensor) -> Result<(f32, f32)> {
+        let exe = self.train_exe.as_ref().ok_or_else(|| anyhow!("train not compiled"))?;
+        if self.params.is_empty() {
+            bail!("session not initialized (call init)");
+        }
+        let nl = self.entry.nleaves;
+        let art = self.entry.artifact("train")?;
+        let x_buf = self.upload_batch(&art.inputs[3 * nl + 1], x)?;
+        let y_buf = self.upload_batch(&art.inputs[3 * nl + 2], y)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(3 * nl + 3);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(self.step.as_ref().unwrap());
+        args.push(&x_buf);
+        args.push(&y_buf);
+        let mut outs = exe.execute_b::<&PjRtBuffer>(&args).context("train step")?;
+        let mut bufs = std::mem::take(&mut outs[0]);
+        if bufs.len() != 3 * nl + 3 {
+            bail!("train returned {} outputs, want {}", bufs.len(), 3 * nl + 3);
+        }
+        // outputs in order: params', m', v', step', loss, metric
+        let metric_buf = bufs.pop().unwrap();
+        let loss_buf = bufs.pop().unwrap();
+        let step_buf = bufs.pop().unwrap();
+        let v_new = bufs.split_off(2 * nl);
+        let m_new = bufs.split_off(nl);
+        self.params = bufs;
+        self.m = m_new;
+        self.v = v_new;
+        self.step = Some(step_buf);
+        self.steps_done += 1;
+        let loss = self.engine.read_f32(&loss_buf)?[0];
+        let metric = self.engine.read_f32(&metric_buf)?[0];
+        Ok((loss, metric))
+    }
+
+    /// Evaluation pass at current parameters; returns (loss, metric).
+    pub fn eval(&self, x: &HostTensor, y: &HostTensor) -> Result<(f32, f32)> {
+        let exe = self.eval_exe.as_ref().ok_or_else(|| anyhow!("eval not compiled"))?;
+        let nl = self.entry.nleaves;
+        let art = self.entry.artifact("eval")?;
+        let x_buf = self.upload_batch(&art.inputs[nl], x)?;
+        let y_buf = self.upload_batch(&art.inputs[nl + 1], y)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(nl + 2);
+        args.extend(self.params.iter());
+        args.push(&x_buf);
+        args.push(&y_buf);
+        let outs = exe.execute_b::<&PjRtBuffer>(&args).context("eval")?;
+        let loss = self.engine.read_f32(&outs[0][0])?[0];
+        let metric = self.engine.read_f32(&outs[0][1])?[0];
+        Ok((loss, metric))
+    }
+
+    /// Forward pass (serving); returns the raw f32 output of the first
+    /// output tensor.
+    pub fn forward(&self, x: &HostTensor) -> Result<Vec<f32>> {
+        let exe = self
+            .forward_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("forward not compiled"))?;
+        let nl = self.entry.nleaves;
+        let art = self.entry.artifact("forward")?;
+        let x_buf = self.upload_batch(&art.inputs[nl], x)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(nl + 1);
+        args.extend(self.params.iter());
+        args.push(&x_buf);
+        let outs = exe.execute_b::<&PjRtBuffer>(&args).context("forward")?;
+        self.engine.read_f32(&outs[0][0])
+    }
+
+    /// Forward for models whose output is integer (e.g. teacher labels).
+    pub fn forward_i32(&self, x: &HostTensor) -> Result<Vec<i32>> {
+        let exe = self
+            .forward_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("forward not compiled"))?;
+        let nl = self.entry.nleaves;
+        let art = self.entry.artifact("forward")?;
+        let x_buf = self.upload_batch(&art.inputs[nl], x)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(nl + 1);
+        args.extend(self.params.iter());
+        args.push(&x_buf);
+        let outs = exe.execute_b::<&PjRtBuffer>(&args).context("forward")?;
+        self.engine.read_i32(&outs[0][0])
+    }
+
+    /// Download all parameter leaves (checkpointing).
+    pub fn params_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.params.iter().map(|b| self.engine.read_f32(b)).collect()
+    }
+
+    /// Restore parameters from host leaves (checkpoint resume). Optimizer
+    /// moments and the step counter are reset — matching common
+    /// fine-tune-from-checkpoint semantics.
+    pub fn load_params(&mut self, leaves: &[Vec<f32>]) -> Result<()> {
+        if leaves.len() != self.entry.nleaves {
+            bail!("checkpoint has {} leaves, model wants {}", leaves.len(), self.entry.nleaves);
+        }
+        let mut bufs = Vec::with_capacity(leaves.len());
+        for (spec, data) in self.entry.leaves.iter().zip(leaves) {
+            bufs.push(self.engine.upload_f32(spec, data)?);
+        }
+        self.m = self
+            .entry
+            .leaves
+            .iter()
+            .map(|l| self.engine.upload_zeros(l))
+            .collect::<Result<_>>()?;
+        self.v = self
+            .entry
+            .leaves
+            .iter()
+            .map(|l| self.engine.upload_zeros(l))
+            .collect::<Result<_>>()?;
+        self.params = bufs;
+        self.step = Some(self.engine.upload_scalar_f32(0.0)?);
+        self.steps_done = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../artifacts")
+    }
+
+    fn rand_batch(n: usize, seed: u64) -> Vec<f32> {
+        // cheap deterministic pseudo-noise
+        let mut state = seed.wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((state >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_train_loop_reduces_loss() {
+        let engine = Engine::cpu().unwrap();
+        let man = Manifest::load(artifacts_dir()).unwrap();
+        let mut sess =
+            TrainSession::new(&engine, &man, "clf_spm_small", &["init", "train", "eval"]).unwrap();
+        sess.init(0).unwrap();
+        // learnable rule: label = sign structure of first coords
+        let xv = rand_batch(32 * 64, 7);
+        let labels: Vec<u32> = (0..32)
+            .map(|i| {
+                let row = &xv[i * 64..i * 64 + 10];
+                let mut best = 0;
+                for j in 1..10 {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best as u32
+            })
+            .collect();
+        let x = HostTensor::F32(xv);
+        let y = HostTensor::from_labels(&labels);
+        let (first, _) = sess.train_step(&x, &y).unwrap();
+        let mut last = first;
+        for _ in 0..199 {
+            last = sess.train_step(&x, &y).unwrap().0;
+        }
+        assert!(last < first - 0.1, "loss {first} -> {last}");
+        assert_eq!(sess.steps_done, 200);
+        let (eloss, eacc) = sess.eval(&x, &y).unwrap();
+        assert!(eloss.is_finite() && (0.0..=1.0).contains(&eacc));
+    }
+
+    #[test]
+    fn teacher_forward_labels() {
+        let engine = Engine::cpu().unwrap();
+        let man = Manifest::load(artifacts_dir()).unwrap();
+        let mut sess =
+            TrainSession::new(&engine, &man, "teacher_small", &["init", "forward"]).unwrap();
+        sess.init(7).unwrap();
+        let x = HostTensor::F32(rand_batch(32 * 64, 3));
+        let labels = sess.forward_i32(&x).unwrap();
+        assert_eq!(labels.len(), 32);
+        assert!(labels.iter().all(|&l| (0..10).contains(&l)));
+        // deterministic given params
+        let labels2 = sess.forward_i32(&x).unwrap();
+        assert_eq!(labels, labels2);
+    }
+
+    #[test]
+    fn uninitialized_session_errors() {
+        let engine = Engine::cpu().unwrap();
+        let man = Manifest::load(artifacts_dir()).unwrap();
+        let mut sess =
+            TrainSession::new(&engine, &man, "clf_dense_small", &["train"]).unwrap();
+        let x = HostTensor::F32(vec![0.0; 32 * 64]);
+        let y = HostTensor::I32(vec![0; 32]);
+        assert!(sess.train_step(&x, &y).is_err());
+    }
+
+    #[test]
+    fn params_host_roundtrip_shapes() {
+        let engine = Engine::cpu().unwrap();
+        let man = Manifest::load(artifacts_dir()).unwrap();
+        let mut sess = TrainSession::new(&engine, &man, "clf_spm_small", &["init"]).unwrap();
+        sess.init(1).unwrap();
+        let leaves = sess.params_host().unwrap();
+        assert_eq!(leaves.len(), sess.entry.nleaves);
+        for (leaf, spec) in leaves.iter().zip(&sess.entry.leaves) {
+            assert_eq!(leaf.len(), spec.elements(), "{}", spec.name);
+        }
+    }
+}
