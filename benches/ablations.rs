@@ -2,8 +2,8 @@
 //! block variant at n=1024 on the teacher task.
 //! Results -> results/abl_{depth,pairing,variant}.csv.
 
-use spm_coordinator::{experiments, RunConfig};
-use spm_runtime::{Engine, Manifest};
+use spm_coordinator::RunConfig;
+use spm_runtime::{drivers, Engine, Manifest};
 
 fn repo_path(rel: &str) -> String {
     format!("{}/../../{}", env!("CARGO_MANIFEST_DIR"), rel)
@@ -14,7 +14,7 @@ fn env_steps(default: usize) -> usize {
     std::env::var("SPM_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let engine = Engine::cpu()?;
     let man = Manifest::load(repo_path("artifacts"))?;
     for which in ["depth", "pairing", "variant"] {
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
             out_csv: repo_path(&format!("results/abl_{which}.csv")),
             ..Default::default()
         };
-        let report = experiments::run_ablation(&engine, &man, which, &cfg)?;
+        let report = drivers::run_ablation(&engine, &man, which, &cfg)?;
         println!("{report}\n");
     }
     Ok(())

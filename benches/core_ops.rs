@@ -1,21 +1,81 @@
 //! Bench: raw operator complexity (paper §5) — native single-thread SPM
-//! stage cost O(nL) vs dense matmul O(n^2), plus per-stage fwd/bwd micro
-//! timings for both variants.
+//! stage cost O(nL) vs dense matmul O(n^2), the planned-vs-reference SPM
+//! comparison (flat-buffer `LinearOp`/`SpmPlan` against the `spm.rs`
+//! closed-form path), plus per-stage fwd/bwd micro timings.
 
+use spm_core::ops::{LinearCfg, LinearOp};
+use spm_core::optim::Adam;
 use spm_core::rng::Rng;
 use spm_core::spm::{Spm, SpmSpec, Variant};
 use spm_core::tensor::Mat;
 use spm_coordinator::experiments;
 use std::time::Instant;
 
+fn ms_per(t0: Instant, reps: usize) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
 fn main() {
     // headline scaling table (§5: O(nL) vs O(n^2))
     println!("{}", experiments::run_core_scaling(&[256, 512, 1024, 2048, 4096], 64));
 
-    // per-variant stage micro-bench at n=4096
     spm_core::parallel::set_threads(1);
-    let n = 4096;
     let batch = 64;
+
+    // planned (LinearOp/SpmPlan flat buffers) vs reference (spm.rs) paths
+    println!("\nplanned vs reference SPM (batch={batch}, single thread, general variant)");
+    println!(
+        "{:<8} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+        "n", "ref fwd ms", "plan fwd ms", "fwd x", "ref bwd ms", "plan bwd ms", "bwd x"
+    );
+    for n in [256usize, 1024, 4096] {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+        let spec = SpmSpec::new(n, Variant::General);
+        let reference = Spm::new(spec);
+        let ref_params = reference.init_params(&mut rng);
+        let mut adam = Adam::new(1e-3);
+        let mut planned = LinearOp::new(LinearCfg::spm(n, Variant::General), &mut rng, &mut adam);
+        let reps = (60_000_000 / (batch * n * spec.num_stages).max(1)).clamp(3, 40);
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = reference.forward(&ref_params, &x);
+        }
+        let ref_fwd = ms_per(t0, reps);
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            let _ = planned.forward(&x);
+        }
+        let plan_fwd = ms_per(t1, reps);
+
+        let (y, ref_trace) = reference.forward_trace(&ref_params, &x);
+        let t2 = Instant::now();
+        for _ in 0..reps {
+            let _ = reference.backward(&ref_params, &x, &ref_trace, &y);
+        }
+        let ref_bwd = ms_per(t2, reps);
+        let (yp, plan_trace) = planned.forward_train(&x);
+        let t3 = Instant::now();
+        for _ in 0..reps {
+            let _ = planned.backward(&x, &plan_trace, &yp);
+        }
+        let plan_bwd = ms_per(t3, reps);
+
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>7.2}x {:>12.3} {:>12.3} {:>7.2}x",
+            n,
+            ref_fwd,
+            plan_fwd,
+            ref_fwd / plan_fwd,
+            ref_bwd,
+            plan_bwd,
+            ref_bwd / plan_bwd
+        );
+    }
+
+    // per-variant stage micro-bench at n=4096 (reference path)
+    let n = 4096;
     let mut rng = Rng::new(1);
     let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
     println!("\nper-op micro (n={n}, batch={batch}, single thread)");
@@ -28,13 +88,13 @@ fn main() {
         for _ in 0..reps {
             let _ = op.forward(&params, &x);
         }
-        let fwd = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let fwd = ms_per(t0, reps);
         let (y, trace) = op.forward_trace(&params, &x);
         let t1 = Instant::now();
         for _ in 0..reps {
             let _ = op.backward(&params, &x, &trace, &y);
         }
-        let bwd = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let bwd = ms_per(t1, reps);
         println!("{:<28} {:>10.3}", format!("spm {} fwd (L=12)", variant.name()), fwd);
         println!("{:<28} {:>10.3}", format!("spm {} bwd (L=12)", variant.name()), bwd);
     }

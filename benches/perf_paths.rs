@@ -15,7 +15,7 @@ fn repo_path(rel: &str) -> String {
 }
 
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let engine = Engine::cpu()?;
     let man = Manifest::load(repo_path("artifacts"))?;
     let entry_name = std::env::var("SPM_PERF_ENTRY").unwrap_or("table2_spm_n2048".into());

@@ -2,8 +2,8 @@
 //! Steps default to a CI-friendly count; set SPM_BENCH_STEPS=1200 for the
 //! paper's full schedule. Results land in results/table1.csv.
 
-use spm_coordinator::{experiments, RunConfig};
-use spm_runtime::{Engine, Manifest};
+use spm_coordinator::RunConfig;
+use spm_runtime::{drivers, Engine, Manifest};
 
 fn repo_path(rel: &str) -> String {
     format!("{}/../../{}", env!("CARGO_MANIFEST_DIR"), rel)
@@ -14,7 +14,7 @@ fn env_steps(default: usize) -> usize {
     std::env::var("SPM_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let cfg = RunConfig {
         steps: env_steps(120),
         eval_batches: 20,
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let widths = [256usize, 512, 1024, 2048];
     let engine = Engine::cpu()?;
     let man = Manifest::load(repo_path("artifacts"))?;
-    let report = experiments::run_table1(Some(&engine), Some(&man), &widths, &cfg, false)?;
+    let report = drivers::run_table1(&engine, &man, &widths, &cfg)?;
     println!("{report}");
     println!("paper Table 1 reference: Δacc +0.22/+0.16/+0.05/+0.24; speedup 0.51x/1.07x/1.81x/3.42x");
     Ok(())

@@ -1,8 +1,8 @@
 //! Bench: regenerates paper Table 2 (AG-News proxy, hashed features, L=12).
 //! SPM_BENCH_STEPS overrides the step count. Results -> results/table2.csv.
 
-use spm_coordinator::{experiments, RunConfig};
-use spm_runtime::{Engine, Manifest};
+use spm_coordinator::RunConfig;
+use spm_runtime::{drivers, Engine, Manifest};
 
 fn repo_path(rel: &str) -> String {
     format!("{}/../../{}", env!("CARGO_MANIFEST_DIR"), rel)
@@ -13,7 +13,7 @@ fn env_steps(default: usize) -> usize {
     std::env::var("SPM_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let cfg = RunConfig {
         steps: env_steps(60),
         eval_batches: 20,
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let widths = [2048usize, 4096];
     let engine = Engine::cpu()?;
     let man = Manifest::load(repo_path("artifacts"))?;
-    let report = experiments::run_table2(Some(&engine), Some(&man), &widths, &cfg, false)?;
+    let report = drivers::run_table2(&engine, &man, &widths, &cfg)?;
     println!("{report}");
     println!("paper Table 2 reference: Δacc +0.059/+0.065; speedup 3.63x/7.03x");
     Ok(())

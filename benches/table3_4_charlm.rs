@@ -3,7 +3,7 @@
 //! steps, eval every 200). Results -> results/table3.csv, results/table4.csv.
 
 use spm_coordinator::{experiments, RunConfig};
-use spm_runtime::{Engine, Manifest};
+use spm_runtime::{drivers, Engine, Manifest};
 
 fn repo_path(rel: &str) -> String {
     format!("{}/../../{}", env!("CARGO_MANIFEST_DIR"), rel)
@@ -14,7 +14,7 @@ fn env_steps(default: usize) -> usize {
     std::env::var("SPM_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let steps = env_steps(30);
     let engine = Engine::cpu()?;
     let man = Manifest::load(repo_path("artifacts"))?;
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
             out_csv: csv.clone(),
             ..Default::default()
         };
-        let rows = experiments::run_charlm(&engine, &man, entry, &cfg)?;
+        let rows = drivers::run_charlm(&engine, &man, entry, &cfg)?;
         println!("{}", experiments::render_charlm_table(table, &rows));
     }
     println!("paper reference: dense ~22000 ms/step, BPC 3.08@800; SPM ~5700 ms/step, BPC 2.98@1000");

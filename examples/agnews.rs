@@ -4,9 +4,9 @@
 //! Run: cargo run --release --example agnews -- [--widths 2048] [--steps 300] [--native]
 
 use spm_coordinator::{experiments, RunConfig};
-use spm_runtime::{Engine, Manifest};
+use spm_runtime::{drivers, Engine, Manifest};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let get = |key: &str| args.iter().position(|a| a == key).and_then(|i| args.get(i + 1));
     let widths: Vec<usize> = get("--widths")
@@ -18,11 +18,11 @@ fn main() -> anyhow::Result<()> {
         cfg.steps = s.parse()?;
     }
     let report = if native {
-        experiments::run_table2(None, None, &widths, &cfg, true)?
+        experiments::run_table2_native(&widths, &cfg)?
     } else {
         let engine = Engine::cpu()?;
         let man = Manifest::load(&cfg.artifacts)?;
-        experiments::run_table2(Some(&engine), Some(&man), &widths, &cfg, false)?
+        drivers::run_table2(&engine, &man, &widths, &cfg)?
     };
     println!("{report}");
     Ok(())

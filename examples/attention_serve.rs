@@ -5,17 +5,17 @@
 //! Run: cargo run --release --example attention_serve
 
 use spm_core::models::attention::Attention;
-use spm_core::models::mixer::MixerCfg;
+use spm_core::ops::LinearCfg;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_core::tensor::Mat;
-use spm_coordinator::serve::serve_demo;
+use spm_runtime::drivers::serve_demo;
 use spm_runtime::{Engine, Manifest};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     // --- native attention with SPM projections (§7) -------------------------
     let (d, heads, b, t) = (64usize, 4usize, 8usize, 16usize);
-    let mut attn = Attention::new(MixerCfg::spm(d, Variant::Rotation), heads, 3e-3, 5);
+    let mut attn = Attention::new(LinearCfg::spm(d, Variant::Rotation), heads, 3e-3, 5);
     println!("[attention] SPM projections, params: {}", attn.param_count());
     let mut rng = Rng::new(6);
     let x = Mat::from_vec(b * t, d, rng.normal_vec(b * t * d, 1.0));

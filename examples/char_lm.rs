@@ -9,9 +9,9 @@
 //!   cargo run --release --example char_lm -- --small
 
 use spm_coordinator::{experiments, RunConfig};
-use spm_runtime::{Engine, Manifest};
+use spm_runtime::{drivers, Engine, Manifest};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let get = |key: &str| args.iter().position(|a| a == key).and_then(|i| args.get(i + 1));
     let small = args.iter().any(|a| a == "--small");
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     }
     let engine = Engine::cpu()?;
     let man = Manifest::load(&cfg.artifacts)?;
-    let rows = experiments::run_charlm(&engine, &man, &entry, &cfg)?;
+    let rows = drivers::run_charlm(&engine, &man, &entry, &cfg)?;
     println!("{}", experiments::render_charlm_table(&format!("char-LM ({entry})"), &rows));
     Ok(())
 }

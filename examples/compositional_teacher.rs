@@ -5,9 +5,9 @@
 //! Defaults keep runtime modest; pass the paper's 1200 steps for the full row.
 
 use spm_coordinator::{experiments, RunConfig};
-use spm_runtime::{Engine, Manifest};
+use spm_runtime::{drivers, Engine, Manifest};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let get = |key: &str| args.iter().position(|a| a == key).and_then(|i| args.get(i + 1));
     let widths: Vec<usize> = get("--widths")
@@ -19,11 +19,11 @@ fn main() -> anyhow::Result<()> {
         cfg.steps = s.parse()?;
     }
     let report = if native {
-        experiments::run_table1(None, None, &widths, &cfg, true)?
+        experiments::run_table1_native(&widths, &cfg)?
     } else {
         let engine = Engine::cpu()?;
         let man = Manifest::load(&cfg.artifacts)?;
-        experiments::run_table1(Some(&engine), Some(&man), &widths, &cfg, false)?
+        drivers::run_table1(&engine, &man, &widths, &cfg)?
     };
     println!("{report}");
     Ok(())

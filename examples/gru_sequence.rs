@@ -5,7 +5,7 @@
 //! Run: cargo run --release --example gru_sequence
 
 use spm_core::models::gru::Gru;
-use spm_core::models::mixer::MixerCfg;
+use spm_core::ops::LinearCfg;
 use spm_core::pairing::Schedule;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
@@ -29,14 +29,14 @@ fn seq_batch(n: usize, c: usize, b: usize, t: usize, rng: &mut Rng) -> (Vec<Mat>
     (xs, labels)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     let (n, c, b, t) = (64usize, 4usize, 32usize, 8usize);
     let mut rng = Rng::new(3);
 
     // --- native: dense vs SPM GRU ------------------------------------------
     for (name, cfg) in [
-        ("dense", MixerCfg::dense(n)),
-        ("spm-rotation", MixerCfg::spm(n, Variant::Rotation).with_schedule(Schedule::Shift)),
+        ("dense", LinearCfg::dense(n)),
+        ("spm-rotation", LinearCfg::spm(n, Variant::Rotation).with_schedule(Schedule::Shift)),
     ] {
         let mut gru = Gru::new(cfg, c, 3e-3, 11);
         println!("[native {name}] params: {}", gru.param_count());

@@ -6,14 +6,14 @@
 //!
 //! Run: cargo run --release --example quickstart
 
-use spm_core::models::mixer::MixerCfg;
+use spm_core::ops::LinearCfg;
 use spm_core::models::mlp::Classifier;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_core::tensor::Mat;
 use spm_runtime::{Engine, HostTensor, Manifest, TrainSession};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spm_coordinator::error::Result<()> {
     // --- data: a learnable rule (label = argmax of first 10 coords) -------
     let (n, batch, classes) = (64usize, 32usize, 10usize);
     let mut rng = Rng::new(1);
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     println!("[xla] held-out: loss {loss:.3} acc {acc:.2}");
 
     // --- native path: same model family, pure rust ------------------------
-    let mut clf = Classifier::new(MixerCfg::spm(n, Variant::General), classes, 1e-3, 7);
+    let mut clf = Classifier::new(LinearCfg::spm(n, Variant::General), classes, 1e-3, 7);
     for step in 0..200 {
         let (x, y) = make_batch(&mut rng);
         let (loss, acc) = clf.train_step(&x, &y);

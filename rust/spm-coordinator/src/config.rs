@@ -4,10 +4,19 @@
 //! Supported TOML subset — exactly what experiment configs need:
 //! `[section]` headers, `key = value` with string/int/float/bool values,
 //! `#` comments, blank lines.
+//!
+//! The `[op]` section configures the student's planned `LinearOp` (kind,
+//! variant, pairing schedule, stage depth); [`OpConfig::to_linear_cfg`]
+//! lowers it to a `spm_core::ops::LinearCfg` at any width.
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use spm_core::ops::{LinearCfg, LinearKind};
+use spm_core::pairing::Schedule;
+use spm_core::spm::Variant;
+
+use crate::bail;
+use crate::error::{Context, Result};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
@@ -93,9 +102,75 @@ pub fn parse_toml(text: &str) -> Result<Toml> {
     Ok(out)
 }
 
+/// The student operator an experiment trains, lowered to `LinearCfg` at
+/// the experiment's width. Defaults match the paper: SPM, general blocks,
+/// butterfly pairing, L = log2(n).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpConfig {
+    pub kind: LinearKind,
+    pub variant: Variant,
+    pub schedule: Schedule,
+    /// None = paper default log2(n)
+    pub num_stages: Option<usize>,
+}
+
+impl Default for OpConfig {
+    fn default() -> Self {
+        OpConfig {
+            kind: LinearKind::Spm,
+            variant: Variant::General,
+            schedule: Schedule::Butterfly,
+            num_stages: None,
+        }
+    }
+}
+
+impl OpConfig {
+    /// Apply `[op]` keys; unknown values are rejected.
+    pub fn apply_toml(&mut self, doc: &Toml) -> Result<()> {
+        let Some(map) = doc.get("op") else {
+            return Ok(());
+        };
+        if let Some(v) = map.get("kind") {
+            let s = v.as_str().context("[op] kind must be a string")?;
+            self.kind = LinearKind::parse(s).with_context(|| format!("[op] kind '{s}'"))?;
+        }
+        if let Some(v) = map.get("variant") {
+            let s = v.as_str().context("[op] variant must be a string")?;
+            self.variant = Variant::parse(s).with_context(|| format!("[op] variant '{s}'"))?;
+        }
+        if let Some(v) = map.get("schedule") {
+            let s = v.as_str().context("[op] schedule must be a string")?;
+            self.schedule = Schedule::parse(s).with_context(|| format!("[op] schedule '{s}'"))?;
+        }
+        if let Some(v) = map.get("stages") {
+            let l = v.as_usize().context("[op] stages must be a non-negative int")?;
+            if l == 0 {
+                bail!("[op] stages must be >= 1");
+            }
+            self.num_stages = Some(l);
+        }
+        Ok(())
+    }
+
+    /// Lower to a width-`n` `LinearCfg`.
+    pub fn to_linear_cfg(&self, n: usize, seed: u64) -> LinearCfg {
+        let mut cfg = match self.kind {
+            LinearKind::Dense => LinearCfg::dense(n),
+            LinearKind::Spm => LinearCfg::spm(n, self.variant).with_schedule(self.schedule),
+        };
+        if let Some(l) = self.num_stages {
+            cfg = cfg.with_stages(l);
+        }
+        cfg.with_seed(seed)
+    }
+}
+
 /// Run-level knobs every experiment honours. Training hyper-parameters
-/// (lr, batch, L, schedule) are baked into the AOT artifacts; the run config
-/// controls duration, cadence, seeds and reporting.
+/// (lr, batch) are baked into the drivers/artifacts; the run config
+/// controls duration, cadence, seeds, reporting, and — for the *native*
+/// drivers only — the student op via `[op]` (the XLA drivers replay
+/// AOT-baked students and ignore `[op]`).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// training steps per model
@@ -114,6 +189,8 @@ pub struct RunConfig {
     pub threads: usize,
     /// artifacts directory
     pub artifacts: String,
+    /// the student LinearOp ([op] section)
+    pub op: OpConfig,
 }
 
 impl Default for RunConfig {
@@ -127,13 +204,14 @@ impl Default for RunConfig {
             out_csv: String::new(),
             threads: 0,
             artifacts: "artifacts".into(),
+            op: OpConfig::default(),
         }
     }
 }
 
 impl RunConfig {
-    /// Apply `[run]` (or top-level) keys from a TOML file.
-    pub fn apply_toml(&mut self, doc: &Toml) {
+    /// Apply `[run]` (or top-level) and `[op]` keys from a TOML file.
+    pub fn apply_toml(&mut self, doc: &Toml) -> Result<()> {
         for section in ["", "run"] {
             if let Some(map) = doc.get(section) {
                 if let Some(v) = map.get("steps").and_then(Value::as_usize) {
@@ -162,14 +240,14 @@ impl RunConfig {
                 }
             }
         }
+        self.op.apply_toml(doc)
     }
 
     pub fn load_file(&mut self, path: &str) -> Result<()> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path}"))?;
         let doc = parse_toml(&text)?;
-        self.apply_toml(&doc);
-        Ok(())
+        self.apply_toml(&doc)
     }
 }
 
@@ -202,10 +280,55 @@ fast = true
     fn run_config_applies() {
         let doc = parse_toml("[run]\nsteps = 42\nseed = 7\nout_csv = \"x.csv\"\n").unwrap();
         let mut rc = RunConfig::default();
-        rc.apply_toml(&doc);
+        rc.apply_toml(&doc).unwrap();
         assert_eq!(rc.steps, 42);
         assert_eq!(rc.seed, 7);
         assert_eq!(rc.out_csv, "x.csv");
+    }
+
+    #[test]
+    fn op_config_applies_and_lowers() {
+        let doc = parse_toml(
+            "[op]\nkind = \"spm\"\nvariant = \"rotation\"\nschedule = \"shift\"\nstages = 4\n",
+        )
+        .unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.op.kind, LinearKind::Spm);
+        assert_eq!(rc.op.variant, Variant::Rotation);
+        assert_eq!(rc.op.schedule, Schedule::Shift);
+        assert_eq!(rc.op.num_stages, Some(4));
+        let cfg = rc.op.to_linear_cfg(32, 9);
+        assert_eq!(cfg.n(), 32);
+        assert_eq!(cfg.kind, LinearKind::Spm);
+        assert_eq!(cfg.variant, Variant::Rotation);
+        assert_eq!(cfg.schedule, Schedule::Shift);
+        assert_eq!(cfg.num_stages, Some(4));
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn op_config_rejects_unknown_values() {
+        let doc = parse_toml("[op]\nvariant = \"diagonal\"\n").unwrap();
+        let mut rc = RunConfig::default();
+        assert!(rc.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn op_config_rejects_zero_stages() {
+        // stages = 0 would panic at SpmPlan construction; reject it here
+        let doc = parse_toml("[op]\nstages = 0\n").unwrap();
+        let mut rc = RunConfig::default();
+        assert!(rc.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn op_config_dense_lowering() {
+        let mut op = OpConfig::default();
+        op.kind = LinearKind::Dense;
+        let cfg = op.to_linear_cfg(16, 1);
+        assert_eq!(cfg.kind, LinearKind::Dense);
+        assert_eq!((cfg.d_in, cfg.d_out), (16, 16));
     }
 
     #[test]

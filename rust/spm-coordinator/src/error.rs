@@ -1,0 +1,76 @@
+//! Dependency-free error plumbing (anyhow is not in the offline vendor
+//! set for the default workspace): a boxed error alias plus the `bail!` /
+//! `.context(..)` helpers the coordinator uses. `anyhow::Error` converts
+//! into [`Error`] via `From`, so the XLA-side callers in `spm-runtime`
+//! can `?` their results straight into these signatures.
+
+/// Boxed dynamic error; everything `Display`-able converts in.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Early-return with a formatted boxed error (the shape of anyhow::bail).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err(format!($($arg)*).into())
+    };
+}
+
+/// `.context(..)` / `.with_context(..)` on Results and Options.
+pub trait Context<T> {
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| format!("{c}: {e}").into())
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| format!("{}: {e}", f()).into())
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| format!("{c}").into())
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| format!("{}", f()).into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("code {} failed", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "code 7 failed");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+        let some: Option<u32> = Some(3);
+        assert_eq!(some.context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/spm")?)
+        }
+        assert!(read().is_err());
+    }
+}

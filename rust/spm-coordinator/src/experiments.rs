@@ -1,31 +1,25 @@
-//! Experiment drivers regenerating every table in the paper's §9 (plus the
-//! ablations DESIGN.md adds). Each driver:
-//!
-//!   1. builds its workload through spm-data (prefetched, backpressured),
-//!   2. trains via the PJRT path (`TrainSession`, buffer-resident) and/or
-//!      the native spm-core engine,
-//!   3. reports paper-style rows through metrics::Table and optional CSV.
-//!
-//! The same functions back the CLI (`spm run ...`), the examples and the
-//! benches, so every number in EXPERIMENTS.md has exactly one source.
+//! Engine-agnostic experiment core + native drivers for the paper's §9
+//! tables (plus the DESIGN.md §9 ablation names). This module owns the
+//! data sources, outcome rows, and table renderers; everything trains
+//! through the planned `spm_core::ops::LinearOp` layer. The XLA/PJRT
+//! drivers that replay the same tables against AOT artifacts live in
+//! `spm-runtime::drivers` (the crate that owns the PJRT dependency) and
+//! reuse these types, so every reported number keeps one source of truth.
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
-use spm_core::models::mixer::{Mixer, MixerCfg, MixerKind};
 use spm_core::models::mlp::Classifier;
-use spm_core::pairing::Schedule;
+use spm_core::ops::{LinearCfg, LinearOp};
+use spm_core::optim::Adam;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_core::tensor::Mat;
-use spm_data::batch::Prefetcher;
-use spm_data::charcorpus::Corpus;
-use spm_data::teacher::Teacher;
 use spm_data::agnews;
-use spm_runtime::{Engine, HostTensor, Manifest, TrainSession};
+use spm_data::batch::Prefetcher;
+use spm_data::teacher::Teacher;
 
 use crate::config::RunConfig;
+use crate::error::Result;
 use crate::metrics::{fmt_f, Csv, StepTimer, Table};
 
 /// Where classification batches come from.
@@ -82,69 +76,17 @@ pub struct ClfOutcome {
     pub steps: usize,
 }
 
-/// Train + evaluate one AOT-compiled classifier entry on a data source.
-pub fn run_clf_xla(
-    engine: &Engine,
-    manifest: &Manifest,
-    entry_name: &str,
-    data: &DataSource,
-    cfg: &RunConfig,
-) -> Result<ClfOutcome> {
-    let mut sess = TrainSession::new(engine, manifest, entry_name, &["init", "train", "eval"])?;
-    let entry_batch = sess.entry.meta_usize("batch")?;
-    let n = sess.entry.meta_usize("n")?;
-    sess.init(cfg.seed as i32)?;
-
-    // prefetch training batches on a worker thread (backpressure depth 4)
-    let data_cl = data.clone();
-    let steps = cfg.steps;
-    let mut feed = Prefetcher::new(steps, 4, move |i| {
-        let (x, y) = data_cl.batch(i, entry_batch, true);
-        (x.data, y)
-    });
-
-    let mut timer = StepTimer::new(cfg.warmup.min(steps.saturating_sub(1)));
-    let mut last_loss = f32::NAN;
-    while let Some((xv, yv)) = feed.next() {
-        let x = HostTensor::F32(xv);
-        let y = HostTensor::from_labels(&yv);
-        timer.start();
-        let (loss, _acc) = sess.train_step(&x, &y)?;
-        timer.stop();
-        last_loss = loss;
-    }
-
-    // held-out evaluation
-    let mut acc_sum = 0.0f64;
-    let mut loss_sum = 0.0f64;
-    for i in 0..cfg.eval_batches {
-        let (x, y) = data.batch(i, entry_batch, false);
-        let (l, a) = sess.eval(&HostTensor::F32(x.data), &HostTensor::from_labels(&y))?;
-        acc_sum += a as f64;
-        loss_sum += l as f64;
-    }
-    let k = cfg.eval_batches.max(1) as f64;
-    let _ = last_loss;
-    Ok(ClfOutcome {
-        label: entry_name.to_string(),
-        n,
-        acc: (acc_sum / k) as f32,
-        loss: (loss_sum / k) as f32,
-        ms_per_step: timer.ms_per_step(),
-        steps,
-    })
-}
-
-/// Train + evaluate a native spm-core classifier on a data source.
+/// Train + evaluate a native `LinearOp` classifier on a data source.
 pub fn run_clf_native(
     label: &str,
-    mixer_cfg: MixerCfg,
+    op_cfg: LinearCfg,
     classes: usize,
     batch: usize,
     data: &DataSource,
     cfg: &RunConfig,
 ) -> Result<ClfOutcome> {
-    let mut clf = Classifier::new(mixer_cfg, classes, 1e-3, cfg.seed ^ 0xC1A55);
+    let n = op_cfg.n();
+    let mut clf = Classifier::new(op_cfg, classes, 1e-3, cfg.seed ^ 0xC1A55);
     let data_cl = data.clone();
     let steps = cfg.steps;
     let mut feed = Prefetcher::new(steps, 4, move |i| data_cl.batch(i, batch, true));
@@ -168,7 +110,7 @@ pub fn run_clf_native(
     let _ = last_loss;
     Ok(ClfOutcome {
         label: label.to_string(),
-        n: mixer_cfg.n,
+        n,
         acc: (acc_sum / k) as f32,
         loss: (loss_sum / k) as f32,
         ms_per_step: timer.ms_per_step(),
@@ -177,8 +119,20 @@ pub fn run_clf_native(
 }
 
 /// Render a dense-vs-SPM pair sweep as the paper's Table 1/2 layout.
-pub fn render_pair_table(title: &str, pairs: &[(ClfOutcome, ClfOutcome)], csv_path: &str) -> Result<String> {
-    let mut t = Table::new(&["n", "Dense acc", "SPM acc", "Δacc", "Dense ms/step", "SPM ms/step", "Speedup"]);
+pub fn render_pair_table(
+    title: &str,
+    pairs: &[(ClfOutcome, ClfOutcome)],
+    csv_path: &str,
+) -> Result<String> {
+    let mut t = Table::new(&[
+        "n",
+        "Dense acc",
+        "SPM acc",
+        "Δacc",
+        "Dense ms/step",
+        "SPM ms/step",
+        "Speedup",
+    ]);
     let mut csv = Csv::create(
         csv_path,
         "n,dense_acc,spm_acc,delta_acc,dense_ms,spm_ms,speedup",
@@ -207,111 +161,80 @@ pub fn render_pair_table(title: &str, pairs: &[(ClfOutcome, ClfOutcome)], csv_pa
     Ok(format!("{title}\n{}", t.render()))
 }
 
-/// Table 1 (paper §9.1): teacher-student width sweep.
-pub fn run_table1(
-    engine: Option<&Engine>,
-    manifest: Option<&Manifest>,
-    widths: &[usize],
-    cfg: &RunConfig,
-    native: bool,
-) -> Result<String> {
+/// Table 1 (paper §9.1), native engine: teacher-student width sweep. The
+/// SPM student comes from the run config's `[op]` section (paper defaults
+/// when unset).
+pub fn run_table1_native(widths: &[usize], cfg: &RunConfig) -> Result<String> {
     let mut pairs = Vec::new();
     for &n in widths {
         let data = DataSource::Teacher { n, classes: 10, seed: 7 + n as u64 };
-        let (d, s) = if native {
-            let dense = run_clf_native(
-                &format!("native_dense_n{n}"),
-                MixerCfg::dense(n),
-                10,
-                256,
-                &data,
-                cfg,
-            )?;
-            let spm = run_clf_native(
-                &format!("native_spm_n{n}"),
-                MixerCfg::spm(n, Variant::General).with_schedule(Schedule::Butterfly),
-                10,
-                256,
-                &data,
-                cfg,
-            )?;
-            (dense, spm)
-        } else {
-            let engine = engine.expect("engine required for XLA path");
-            let manifest = manifest.expect("manifest required for XLA path");
-            (
-                run_clf_xla(engine, manifest, &format!("table1_dense_n{n}"), &data, cfg)?,
-                run_clf_xla(engine, manifest, &format!("table1_spm_n{n}"), &data, cfg)?,
-            )
-        };
+        let dense = run_clf_native(
+            &format!("native_dense_n{n}"),
+            LinearCfg::dense(n),
+            10,
+            256,
+            &data,
+            cfg,
+        )?;
+        let spm = run_clf_native(
+            &format!("native_spm_n{n}"),
+            cfg.op.to_linear_cfg(n, cfg.seed),
+            10,
+            256,
+            &data,
+            cfg,
+        )?;
         eprintln!(
             "[table1 n={n}] dense acc {:.4} ({:.1} ms/step) | spm acc {:.4} ({:.1} ms/step)",
-            d.acc, d.ms_per_step, s.acc, s.ms_per_step
+            dense.acc, dense.ms_per_step, spm.acc, spm.ms_per_step
         );
-        pairs.push((d, s));
+        pairs.push((dense, spm));
     }
-    let engine_tag = if native { "native" } else { "xla" };
     render_pair_table(
-        &format!("Table 1 — compositional teacher ({engine_tag} engine, {} steps)", cfg.steps),
+        &format!("Table 1 — compositional teacher (native engine, {} steps)", cfg.steps),
         &pairs,
         &cfg.out_csv,
     )
 }
 
-/// Table 2 (paper §9.2): AG-News-proxy at L=12.
-pub fn run_table2(
-    engine: Option<&Engine>,
-    manifest: Option<&Manifest>,
-    widths: &[usize],
-    cfg: &RunConfig,
-    native: bool,
-) -> Result<String> {
+/// Table 2 (paper §9.2), native engine: AG-News-proxy. Defaults to the
+/// paper's L=12 unless `[op] stages` overrides it.
+pub fn run_table2_native(widths: &[usize], cfg: &RunConfig) -> Result<String> {
+    let stage_label = cfg.op.num_stages.unwrap_or(12);
     let mut pairs = Vec::new();
     for &n in widths {
         let data = DataSource::AgNews { n };
-        let (d, s) = if native {
-            let dense = run_clf_native(
-                &format!("native_dense_n{n}"),
-                MixerCfg::dense(n),
-                4,
-                256,
-                &data,
-                cfg,
-            )?;
-            let spm = run_clf_native(
-                &format!("native_spm_n{n}"),
-                MixerCfg::spm(n, Variant::General)
-                    .with_schedule(Schedule::Butterfly)
-                    .with_stages(12),
-                4,
-                256,
-                &data,
-                cfg,
-            )?;
-            (dense, spm)
-        } else {
-            let engine = engine.expect("engine required");
-            let manifest = manifest.expect("manifest required");
-            (
-                run_clf_xla(engine, manifest, &format!("table2_dense_n{n}"), &data, cfg)?,
-                run_clf_xla(engine, manifest, &format!("table2_spm_n{n}"), &data, cfg)?,
-            )
-        };
+        let dense = run_clf_native(
+            &format!("native_dense_n{n}"),
+            LinearCfg::dense(n),
+            4,
+            256,
+            &data,
+            cfg,
+        )?;
+        let mut student = cfg.op.to_linear_cfg(n, cfg.seed);
+        if cfg.op.num_stages.is_none() {
+            student = student.with_stages(12);
+        }
+        let spm = run_clf_native(&format!("native_spm_n{n}"), student, 4, 256, &data, cfg)?;
         eprintln!(
             "[table2 n={n}] dense acc {:.4} ({:.1} ms/step) | spm acc {:.4} ({:.1} ms/step)",
-            d.acc, d.ms_per_step, s.acc, s.ms_per_step
+            dense.acc, dense.ms_per_step, spm.acc, spm.ms_per_step
         );
-        pairs.push((d, s));
+        pairs.push((dense, spm));
     }
-    let engine_tag = if native { "native" } else { "xla" };
     render_pair_table(
-        &format!("Table 2 — AG-News proxy, L=12 ({engine_tag} engine, {} steps)", cfg.steps),
+        &format!(
+            "Table 2 — AG-News proxy, L={stage_label} (native engine, {} steps)",
+            cfg.steps
+        ),
         &pairs,
         &cfg.out_csv,
     )
 }
 
-/// One char-LM eval checkpoint row (Tables 3 & 4 layout).
+/// One char-LM eval checkpoint row (Tables 3 & 4 layout). Produced by the
+/// XLA driver in spm-runtime; rendered here.
 #[derive(Clone, Debug)]
 pub struct CharLmRow {
     pub step: usize,
@@ -319,91 +242,6 @@ pub struct CharLmRow {
     pub valid_nll: f32,
     pub valid_bpc: f32,
     pub ms_per_step: f64,
-}
-
-/// Tables 3/4 (paper §9.3): char-level LM on the Shakespeare-like corpus.
-/// `entry_name` selects dense (Table 3) or SPM (Table 4).
-pub fn run_charlm(
-    engine: &Engine,
-    manifest: &Manifest,
-    entry_name: &str,
-    cfg: &RunConfig,
-) -> Result<Vec<CharLmRow>> {
-    let mut sess = TrainSession::new(engine, manifest, entry_name, &["init", "train", "eval"])?;
-    let batch = sess.entry.meta_usize("batch")?;
-    let seq_len = sess.entry.meta_usize("seq_len")?;
-    sess.init(cfg.seed as i32)?;
-
-    let corpus = Arc::new(if cfg.steps <= 100 {
-        // CI-profile corpus keeps tests fast
-        Corpus::generate_sized(cfg.seed, 200_000, 30_000)
-    } else {
-        Corpus::generate(cfg.seed)
-    });
-
-    let c2 = corpus.clone();
-    let seed = cfg.seed;
-    let mut feed = Prefetcher::new(cfg.steps, 4, move |i| {
-        let mut rng = Rng::new(seed ^ 0xBA7C4 ^ (i as u64).wrapping_mul(0x9E37));
-        Corpus::sample_batch(&c2.train, batch, seq_len, &mut rng)
-    });
-
-    let eval_every = if cfg.eval_every == 0 { cfg.steps } else { cfg.eval_every };
-    let mut rows = Vec::new();
-    let mut timer = StepTimer::new(cfg.warmup.min(cfg.steps.saturating_sub(1)));
-    let mut csv = Csv::create(&cfg.out_csv, "step,train_nll,valid_nll,valid_bpc,ms_per_step")?;
-
-    let mut evaluate = |sess: &TrainSession, step: usize, train_nll: f32, ms: f64,
-                        rows: &mut Vec<CharLmRow>, csv: &mut Csv|
-     -> Result<()> {
-        let mut vsum = 0.0f64;
-        for i in 0..cfg.eval_batches {
-            let mut rng = Rng::new(0xEA1 ^ (i as u64 + 1).wrapping_mul(0x1234_5678));
-            let (inp, tgt) = Corpus::sample_batch(&corpus.valid, batch, seq_len, &mut rng);
-            let (l, _m) = sess.eval(&HostTensor::from_bytes(&inp), &HostTensor::from_bytes(&tgt))?;
-            vsum += l as f64;
-        }
-        let valid_nll = (vsum / cfg.eval_batches.max(1) as f64) as f32;
-        let row = CharLmRow {
-            step,
-            train_nll,
-            valid_nll,
-            valid_bpc: valid_nll / std::f32::consts::LN_2,
-            ms_per_step: ms,
-        };
-        eprintln!(
-            "[{entry_name}] step {step}: train NLL {:.3} valid NLL {:.3} BPC {:.3} ({:.0} ms/step)",
-            row.train_nll, row.valid_nll, row.valid_bpc, row.ms_per_step
-        );
-        csv.row(&[
-            step.to_string(),
-            train_nll.to_string(),
-            valid_nll.to_string(),
-            row.valid_bpc.to_string(),
-            ms.to_string(),
-        ])?;
-        rows.push(row);
-        Ok(())
-    };
-
-    let mut step = 0usize;
-    let mut train_nll = f32::NAN;
-    while let Some((inp, tgt)) = feed.next() {
-        step += 1;
-        let x = HostTensor::from_bytes(&inp);
-        let y = HostTensor::from_bytes(&tgt);
-        timer.start();
-        let (loss, _m) = sess.train_step(&x, &y)?;
-        timer.stop();
-        train_nll = loss;
-        if step == 1 || step % eval_every == 0 {
-            evaluate(&sess, step, train_nll, timer.ms_per_step(), &mut rows, &mut csv)?;
-        }
-    }
-    if rows.last().map(|r| r.step) != Some(step) {
-        evaluate(&sess, step, train_nll, timer.ms_per_step(), &mut rows, &mut csv)?;
-    }
-    Ok(rows)
 }
 
 pub fn render_charlm_table(title: &str, rows: &[CharLmRow]) -> String {
@@ -420,70 +258,19 @@ pub fn render_charlm_table(title: &str, rows: &[CharLmRow]) -> String {
     format!("{title}\n{}", t.render())
 }
 
-/// Ablations (DESIGN.md Abl-L / Abl-P / Abl-V): depth, pairing, variant at
-/// n=1024 on the teacher task. Entries must exist in the manifest.
-pub fn run_ablation(
-    engine: &Engine,
-    manifest: &Manifest,
-    which: &str,
-    cfg: &RunConfig,
-) -> Result<String> {
-    let n = 1024;
-    let data = DataSource::Teacher { n, classes: 10, seed: 7 + n as u64 };
-    let entries: Vec<String> = match which {
-        "depth" => [1usize, 2, 5, 10, 20].iter().map(|l| format!("abl_depth_L{l}")).collect(),
-        "pairing" => ["butterfly", "shift", "random"]
-            .iter()
-            .map(|s| format!("abl_sched_{s}"))
-            .collect(),
-        "variant" => ["rotation", "general"]
-            .iter()
-            .map(|v| format!("abl_variant_{v}"))
-            .collect(),
-        other => anyhow::bail!("unknown ablation '{other}' (depth|pairing|variant)"),
-    };
-    let mut t = Table::new(&["config", "L", "params", "acc", "ms/step"]);
-    let mut csv = Csv::create(&cfg.out_csv, "config,num_stages,param_count,acc,ms_per_step")?;
-    for name in &entries {
-        let out = run_clf_xla(engine, manifest, name, &data, cfg)?;
-        let entry = manifest.entry(name)?;
-        let stages = entry.meta_usize("num_stages").unwrap_or(0);
-        let params = entry.meta_usize("param_count").unwrap_or(0);
-        eprintln!("[abl {which}] {name}: acc {:.4} ({:.1} ms/step)", out.acc, out.ms_per_step);
-        t.row(vec![
-            name.clone(),
-            stages.to_string(),
-            params.to_string(),
-            fmt_f(out.acc as f64, 4),
-            fmt_f(out.ms_per_step, 3),
-        ]);
-        csv.row(&[
-            name.clone(),
-            stages.to_string(),
-            params.to_string(),
-            out.acc.to_string(),
-            out.ms_per_step.to_string(),
-        ])?;
-    }
-    Ok(format!("Ablation: {which} (n=1024, {} steps)\n{}", cfg.steps, t.render()))
-}
-
 /// Native micro-benchmark of the raw operator complexity claim (§5):
-/// SPM stage cost O(nL) vs dense O(n^2) forward, single thread.
+/// SPM stage cost O(nL) vs dense O(n^2) forward, single thread, both
+/// through the planned `LinearOp` layer.
 pub fn run_core_scaling(widths: &[usize], batch: usize) -> String {
     spm_core::parallel::set_threads(1);
     let mut t = Table::new(&["n", "dense fwd ms", "spm fwd ms (L=log2 n)", "ratio"]);
     for &n in widths {
         let mut rng = Rng::new(1);
         let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
-        let mut adam = spm_core::optim::Adam::new(1e-3);
-        let dense = Mixer::new(MixerCfg::dense(n), &mut rng, &mut adam);
-        let spm = Mixer::new(
-            MixerCfg { kind: MixerKind::Spm, ..MixerCfg::spm(n, Variant::General) },
-            &mut rng,
-            &mut adam,
-        );
-        let time_it = |m: &Mixer| {
+        let mut adam = Adam::new(1e-3);
+        let dense = LinearOp::new(LinearCfg::dense(n), &mut rng, &mut adam);
+        let spm = LinearOp::new(LinearCfg::spm(n, Variant::General), &mut rng, &mut adam);
+        let time_it = |m: &LinearOp| {
             let reps = (200_000_000 / (batch * n * n).max(1)).clamp(3, 50);
             let t0 = std::time::Instant::now();
             for _ in 0..reps {
@@ -493,12 +280,7 @@ pub fn run_core_scaling(widths: &[usize], batch: usize) -> String {
         };
         let dm = time_it(&dense);
         let sm = time_it(&spm);
-        t.row(vec![
-            n.to_string(),
-            fmt_f(dm, 3),
-            fmt_f(sm, 3),
-            fmt_f(dm / sm, 2),
-        ]);
+        t.row(vec![n.to_string(), fmt_f(dm, 3), fmt_f(sm, 3), fmt_f(dm / sm, 2)]);
     }
     spm_core::parallel::set_threads(0);
     format!("Core op scaling (batch={batch}, single thread)\n{}", t.render())

@@ -1,15 +1,19 @@
 //! # spm-coordinator
 //!
 //! L3 of the three-layer stack: the experiment coordinator. Owns the
-//! config system, CLI launcher (`spm`), metrics, the prefetching data
-//! pipeline, every table/ablation driver, and the batched-serving demo.
-//! Examples and benches call into this library so every reported number has
-//! a single source of truth.
+//! config system (including the `[op]` LinearOp student config), metrics,
+//! the native experiment drivers, and the engine-agnostic batched-serving
+//! router. Fully dependency-free so the default workspace builds and
+//! tests offline; the PJRT/XLA drivers, checkpointing and the `spm` CLI
+//! live in `spm-runtime` (excluded from the default members) and call
+//! back into this crate so every reported number has a single source of
+//! truth.
 
-pub mod checkpoint;
 pub mod config;
+pub mod error;
 pub mod experiments;
 pub mod metrics;
 pub mod serve;
 
-pub use config::RunConfig;
+pub use config::{OpConfig, RunConfig};
+pub use error::Result;

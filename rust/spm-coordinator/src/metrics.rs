@@ -6,7 +6,7 @@ use std::fmt::Write as _;
 use std::io::Write as _;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// Mean ms/step excluding the first `warmup` steps (compile/cache effects).
 pub struct StepTimer {

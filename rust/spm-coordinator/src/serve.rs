@@ -1,19 +1,29 @@
-//! Serving demo: a batched request router in front of a PJRT forward
-//! executable (the §7 "projection layers dominate serving cost" story).
+//! Serving: a batched request router in front of ANY forward executor
+//! (the §7 "projection layers dominate serving cost" story).
 //!
 //! Client threads submit single-row requests through an mpsc channel; the
-//! router (on the engine thread — PJRT clients are not Send) drains up to
-//! the artifact's batch size, pads the tail, runs one forward, and fans the
-//! rows back out through per-request reply channels. Latency percentiles
-//! and throughput are reported.
+//! router (on the calling thread — PJRT clients are not Send) drains up
+//! to the executor's batch size, pads the tail, runs one forward, and
+//! fans the rows back out through per-request reply channels. Latency
+//! percentiles and throughput are reported.
+//!
+//! The router core ([`serve_with`]) is engine-agnostic: [`serve_native`]
+//! drives a `LinearOp` classifier with no PJRT anywhere, and
+//! `spm-runtime::drivers::serve_demo` plugs in an AOT-compiled forward.
+//!
+//! Requests are split across clients by [`client_shares`], which spreads
+//! the remainder of `num_requests / num_clients` over the first clients —
+//! the old integer division silently dropped up to `num_clients - 1`
+//! requests, under-reporting the requested load.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
+use spm_core::models::mlp::Classifier;
 use spm_core::rng::Rng;
-use spm_runtime::{Engine, HostTensor, Manifest, TrainSession};
+use spm_core::tensor::Mat;
+
+use crate::error::Result;
 
 pub struct Request {
     pub features: Vec<f32>,
@@ -43,31 +53,40 @@ impl std::fmt::Display for ServeReport {
     }
 }
 
-/// Run the serving demo against one manifest entry's `forward` artifact.
-/// `entry_name` must be a classifier/teacher-style model taking (B, n) f32.
-pub fn serve_demo(
-    engine: &Engine,
-    manifest: &Manifest,
-    entry_name: &str,
-    num_requests: usize,
-    num_clients: usize,
-    seed: u64,
-) -> Result<ServeReport> {
-    let mut sess = TrainSession::new(engine, manifest, entry_name, &["init", "forward"])?;
-    sess.init(seed as i32)?;
-    let batch = sess.entry.meta_usize("batch")?;
-    let n = sess.entry.meta_usize("n")?;
-    let out_width = {
-        let art = sess.entry.artifact("forward")?;
-        let shape = &art.outputs[0].shape;
-        if shape.len() >= 2 { shape[1..].iter().product() } else { 1 }
-    };
+/// Shape of one serving run: executor batch/width + client workload.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSpec {
+    /// executor batch size (tail batches are zero-padded up to this)
+    pub batch: usize,
+    /// feature width per request
+    pub n: usize,
+    pub num_requests: usize,
+    pub num_clients: usize,
+    pub seed: u64,
+}
 
+/// Split `num_requests` across `num_clients`, spreading the remainder over
+/// the first clients so every request is issued (no silent drop).
+pub fn client_shares(num_requests: usize, num_clients: usize) -> Vec<usize> {
+    assert!(num_clients > 0, "need at least one client");
+    let base = num_requests / num_clients;
+    let rem = num_requests % num_clients;
+    (0..num_clients).map(|c| base + usize::from(c < rem)).collect()
+}
+
+/// Run the batched serving loop against `forward`, which maps one padded
+/// (batch * n) row-major feature buffer to (batch * out_width) outputs.
+pub fn serve_with<F>(spec: &ServeSpec, mut forward: F) -> Result<ServeReport>
+where
+    F: FnMut(Vec<f32>) -> Result<Vec<f32>>,
+{
+    let ServeSpec { batch, n, num_requests, num_clients, seed } = *spec;
     let (tx, rx) = mpsc::channel::<Request>();
     // client threads: generate feature rows and wait for replies
-    let per_client = num_requests / num_clients;
-    let handles: Vec<_> = (0..num_clients)
-        .map(|c| {
+    let handles: Vec<_> = client_shares(num_requests, num_clients)
+        .into_iter()
+        .enumerate()
+        .map(|(c, per_client)| {
             let tx = tx.clone();
             std::thread::spawn(move || {
                 let mut rng = Rng::new(seed ^ (c as u64 + 1) * 0xABCD);
@@ -91,7 +110,7 @@ pub fn serve_demo(
         .collect();
     drop(tx);
 
-    // router loop (engine thread)
+    // router loop (executor thread)
     let t0 = Instant::now();
     let mut batches = 0usize;
     let mut served = 0usize;
@@ -114,17 +133,8 @@ pub fn serve_demo(
         for (i, r) in pending.iter().enumerate() {
             flat[i * n..(i + 1) * n].copy_from_slice(&r.features);
         }
-        let out = if sess.entry.meta_str("model") == "teacher" {
-            // teacher forward returns i32 labels
-            sess.forward_i32(&HostTensor::F32(flat))?
-                .into_iter()
-                .map(|v| v as f32)
-                .collect::<Vec<f32>>()
-        } else {
-            sess.forward(&HostTensor::F32(flat))?
-        };
+        let out = forward(flat)?;
         let per_row = out.len() / batch.max(1);
-        debug_assert!(per_row == out_width || per_row == 1);
         for (i, r) in pending.into_iter().enumerate() {
             let row = out[i * per_row..(i + 1) * per_row].to_vec();
             let _ = r.reply.send(row);
@@ -156,4 +166,53 @@ pub fn serve_demo(
         p99_ms: pct(0.99),
         throughput_rps: served as f64 / wall.max(1e-9),
     })
+}
+
+/// Serve a native `LinearOp` classifier — the same router with zero PJRT:
+/// executor = `Classifier::logits` over the padded batch.
+pub fn serve_native(
+    clf: &Classifier,
+    batch: usize,
+    num_requests: usize,
+    num_clients: usize,
+    seed: u64,
+) -> Result<ServeReport> {
+    let n = clf.mixer.d_in();
+    let spec = ServeSpec { batch, n, num_requests, num_clients, seed };
+    serve_with(&spec, |flat| {
+        let x = Mat::from_vec(batch, n, flat);
+        Ok(clf.logits(&x).data)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_cover_every_request() {
+        for (reqs, clients) in [(96, 3), (97, 4), (100, 7), (5, 8), (0, 3), (1, 1)] {
+            let shares = client_shares(reqs, clients);
+            assert_eq!(shares.len(), clients);
+            assert_eq!(shares.iter().sum::<usize>(), reqs, "{reqs}/{clients}");
+            let (mn, mx) = (shares.iter().min().unwrap(), shares.iter().max().unwrap());
+            assert!(mx - mn <= 1, "{reqs}/{clients}: uneven {shares:?}");
+        }
+    }
+
+    #[test]
+    fn remainder_goes_to_leading_clients() {
+        assert_eq!(client_shares(97, 4), vec![25, 24, 24, 24]);
+        assert_eq!(client_shares(10, 3), vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn serve_with_echo_executor_serves_all() {
+        let spec = ServeSpec { batch: 4, n: 2, num_requests: 11, num_clients: 3, seed: 1 };
+        let report = serve_with(&spec, |flat| Ok(flat)).unwrap();
+        assert_eq!(report.requests, 11);
+        assert!(report.batches >= 3); // 11 requests can't fit two 4-batches
+        assert!(report.p99_ms >= report.p50_ms);
+        assert!((report.mean_batch_fill - 11.0 / report.batches as f64).abs() < 1e-9);
+    }
 }

@@ -1,0 +1,120 @@
+//! Native integration tests: config -> LinearOp experiments -> serving
+//! router, with no PJRT/XLA anywhere (the default offline workspace).
+
+use spm_coordinator::config::{parse_toml, RunConfig};
+use spm_coordinator::experiments::{self, DataSource};
+use spm_coordinator::serve::{client_shares, serve_native, serve_with, ServeSpec};
+use spm_core::models::mlp::Classifier;
+use spm_core::ops::{LinearCfg, LinearKind};
+use spm_core::pairing::Schedule;
+use spm_core::spm::Variant;
+
+fn quick_cfg() -> RunConfig {
+    RunConfig { steps: 4, eval_batches: 2, warmup: 1, ..Default::default() }
+}
+
+#[test]
+fn native_table1_driver_end_to_end() {
+    let report = experiments::run_table1_native(&[16], &quick_cfg()).unwrap();
+    assert!(report.contains("Table 1"), "{report}");
+    assert!(report.contains("16"), "{report}");
+}
+
+#[test]
+fn native_clf_driver_reports_sane_outcome() {
+    let data = DataSource::Teacher { n: 32, classes: 10, seed: 5 };
+    let cfg = RunConfig { steps: 6, ..quick_cfg() };
+    let out = experiments::run_clf_native(
+        "native_spm",
+        LinearCfg::spm(32, Variant::General),
+        10,
+        32,
+        &data,
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(out.n, 32);
+    assert!(out.loss.is_finite());
+    assert!(out.ms_per_step > 0.0);
+    assert!((0.0..=1.0).contains(&out.acc));
+}
+
+#[test]
+fn op_config_drives_native_student() {
+    let doc = parse_toml("[op]\nvariant = \"rotation\"\nschedule = \"shift\"\nstages = 3\n").unwrap();
+    let mut cfg = quick_cfg();
+    cfg.apply_toml(&doc).unwrap();
+    let student = cfg.op.to_linear_cfg(16, cfg.seed);
+    assert_eq!(student.kind, LinearKind::Spm);
+    assert_eq!(student.variant, Variant::Rotation);
+    assert_eq!(student.schedule, Schedule::Shift);
+    // and it trains through the native driver
+    let data = DataSource::Teacher { n: 16, classes: 4, seed: 1 };
+    let out = experiments::run_clf_native("cfg_student", student, 4, 16, &data, &cfg).unwrap();
+    assert!(out.loss.is_finite());
+}
+
+#[test]
+fn serving_router_native_end_to_end_serves_remainder() {
+    // 97 requests over 4 clients: the old num_requests / num_clients split
+    // dropped 1 request; the router must see all 97.
+    let clf = Classifier::new(LinearCfg::dense(8), 3, 1e-3, 1);
+    let report = serve_native(&clf, 16, 97, 4, 2).unwrap();
+    assert_eq!(report.requests, 97);
+    assert!(report.batches >= 7); // 97 requests can't fit six 16-batches
+    assert!(report.p99_ms >= report.p50_ms);
+    assert!(report.throughput_rps > 0.0);
+}
+
+#[test]
+fn serve_with_custom_executor_pads_tail_batches() {
+    let spec = ServeSpec { batch: 8, n: 3, num_requests: 10, num_clients: 2, seed: 7 };
+    let mut calls = 0usize;
+    let report = serve_with(&spec, |flat| {
+        calls += 1;
+        assert_eq!(flat.len(), 8 * 3); // always padded to full batch
+        Ok(vec![0.0; 8])
+    })
+    .unwrap();
+    assert_eq!(report.requests, 10);
+    assert_eq!(report.batches, calls);
+}
+
+#[test]
+fn shares_match_router_accounting() {
+    for clients in 1..6 {
+        let shares = client_shares(23, clients);
+        assert_eq!(shares.iter().sum::<usize>(), 23);
+    }
+}
+
+#[test]
+fn datasource_batches_are_deterministic_and_split() {
+    let d = DataSource::AgNews { n: 128 };
+    let (x1, y1) = d.batch(3, 16, true);
+    let (x2, y2) = d.batch(3, 16, true);
+    assert_eq!(x1.data, x2.data);
+    assert_eq!(y1, y2);
+    let (xt, _yt) = d.batch(3, 16, false);
+    assert_ne!(x1.data, xt.data, "train/test streams must differ");
+
+    let t = DataSource::Teacher { n: 32, classes: 10, seed: 1 };
+    let (a1, b1) = t.batch(0, 8, true);
+    let (a2, b2) = t.batch(0, 8, true);
+    assert_eq!(a1.data, a2.data);
+    assert_eq!(b1, b2);
+}
+
+#[test]
+fn toml_config_drives_runconfig() {
+    let doc = parse_toml("[run]\nsteps = 9\neval_batches = 3\nseed = 4\n").unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.apply_toml(&doc).unwrap();
+    assert_eq!((cfg.steps, cfg.eval_batches, cfg.seed), (9, 3, 4));
+}
+
+#[test]
+fn core_scaling_renders() {
+    let report = experiments::run_core_scaling(&[32], 4);
+    assert!(report.contains("Core op scaling"), "{report}");
+}

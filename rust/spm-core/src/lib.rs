@@ -7,11 +7,17 @@
 //! pairing schedules, optimizers, losses and the model zoo (classifier,
 //! char-LM, GRU §6, attention §7), all dependency-free.
 //!
+//! Models consume linear maps exclusively through the planned [`ops`]
+//! layer (`LinearOp` + `SpmPlan` + flat parameter buffers, DESIGN.md §3);
+//! [`spm`] keeps the closed-form reference implementation the planned
+//! path is tested against.
+//!
 //! The XLA/PJRT execution path lives in `spm-runtime`; this crate is the
 //! reference/native engine the benches and property tests run against.
 pub mod dense;
 pub mod loss;
 pub mod models;
+pub mod ops;
 pub mod optim;
 pub mod pairing;
 pub mod parallel;
@@ -21,6 +27,7 @@ pub mod tensor;
 pub mod testkit;
 
 pub use dense::Dense;
+pub use ops::{LinearCfg, LinearKind, LinearOp, LinearTrace, SpmPlan};
 pub use pairing::Schedule;
 pub use rng::Rng;
 pub use spm::{Spm, SpmParams, SpmSpec, Variant};

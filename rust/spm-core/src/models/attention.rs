@@ -1,9 +1,10 @@
 //! Scaled dot-product attention with SPM-replaceable Q/K/V/O projections
 //! (paper §7) and the paper's exact backward: the closed-form softmax
-//! Jacobian of §7.4 and the Q/K gradients of §7.5.
+//! Jacobian of §7.4 and the Q/K gradients of §7.5. All four projections
+//! are [`LinearOp`]s updated through the flat apply_grads kernel.
 
 use crate::loss::mse;
-use crate::models::mixer::{MixGrads, MixTrace, Mixer, MixerCfg};
+use crate::ops::{LinearCfg, LinearOp, LinearTrace};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::Mat;
@@ -11,7 +12,7 @@ use crate::tensor::Mat;
 pub struct Attention {
     pub d: usize,
     pub heads: usize,
-    pub maps: [Mixer; 4], // q, k, v, o
+    pub maps: [LinearOp; 4], // q, k, v, o
     pub adam: Adam,
 }
 
@@ -21,21 +22,21 @@ struct FwdTrace {
     v: Mat,
     ctx: Mat,
     attn: Vec<Mat>, // per (batch*head): (T, T) post-softmax
-    traces: [MixTrace; 4],
+    traces: [LinearTrace; 4],
     x_flat: Mat,
     b: usize,
     t: usize,
 }
 
 impl Attention {
-    pub fn new(cfg: MixerCfg, heads: usize, lr: f32, seed: u64) -> Self {
-        assert_eq!(cfg.n % heads, 0, "d must divide heads");
+    pub fn new(cfg: LinearCfg, heads: usize, lr: f32, seed: u64) -> Self {
+        assert_eq!(cfg.n() % heads, 0, "d must divide heads");
         let mut adam = Adam::new(lr);
         let mut rng = Rng::new(seed);
         let maps = std::array::from_fn(|i| {
-            Mixer::new(cfg.with_seed(cfg.seed + i as u64), &mut rng, &mut adam)
+            LinearOp::new(cfg.with_seed(cfg.seed + i as u64), &mut rng, &mut adam)
         });
-        Attention { d: cfg.n, heads, maps, adam }
+        Attention { d: cfg.n(), heads, maps, adam }
     }
 
     pub fn param_count(&self) -> usize {
@@ -47,9 +48,9 @@ impl Attention {
         let h = self.heads;
         let dh = d / h;
         let scale = 1.0 / (dh as f32).sqrt();
-        let (q, t_q) = self.maps[0].forward_trace(x_flat); // eq. (29)
-        let (k, t_k) = self.maps[1].forward_trace(x_flat); // eq. (30)
-        let (v, t_v) = self.maps[2].forward_trace(x_flat); // eq. (31)
+        let (q, t_q) = self.maps[0].forward_train(x_flat); // eq. (29)
+        let (k, t_k) = self.maps[1].forward_train(x_flat); // eq. (30)
+        let (v, t_v) = self.maps[2].forward_train(x_flat); // eq. (31)
         let mut ctx = Mat::zeros(b * t, d);
         let mut attn = Vec::with_capacity(b * h);
         for bi in 0..b {
@@ -84,7 +85,7 @@ impl Attention {
                 attn.push(a);
             }
         }
-        let (y, t_o) = self.maps[3].forward_trace(&ctx); // eq. (35)
+        let (y, t_o) = self.maps[3].forward_train(&ctx); // eq. (35)
         let trace = FwdTrace {
             q,
             k,
@@ -113,7 +114,7 @@ impl Attention {
         loss
     }
 
-    /// Exact backward; applies Adam updates internally and returns g_x.
+    /// Exact backward; applies flat Adam updates internally, returns g_x.
     fn backward(&mut self, tr: &FwdTrace, gy: &Mat) -> Mat {
         let d = self.d;
         let h = self.heads;
@@ -122,7 +123,7 @@ impl Attention {
         let scale = 1.0 / (dh as f32).sqrt();
 
         // Y = O(ctx):  G_H = O^T(G_Y)    (§7.3)
-        let (g_ctx, g_o) = self.maps[3].backward(&tr.ctx, &tr.traces[3], gy);
+        let g_ctx = self.maps[3].backward(&tr.ctx, &tr.traces[3], gy);
 
         let mut g_q = Mat::zeros(b * t, d);
         let mut g_k = Mat::zeros(b * t, d);
@@ -192,18 +193,17 @@ impl Attention {
         }
 
         // back through the three input projections; accumulate at x (§7.5)
-        let (gx_q, g_qm) = self.maps[0].backward(&tr.x_flat, &tr.traces[0], &g_q);
-        let (gx_k, g_km) = self.maps[1].backward(&tr.x_flat, &tr.traces[1], &g_k);
-        let (gx_v, g_vm) = self.maps[2].backward(&tr.x_flat, &tr.traces[2], &g_v);
+        let gx_q = self.maps[0].backward(&tr.x_flat, &tr.traces[0], &g_q);
+        let gx_k = self.maps[1].backward(&tr.x_flat, &tr.traces[1], &g_k);
+        let gx_v = self.maps[2].backward(&tr.x_flat, &tr.traces[2], &g_v);
         let mut gx = gx_q;
         for i in 0..gx.data.len() {
             gx.data[i] += gx_k.data[i] + gx_v.data[i];
         }
 
         self.adam.next_step();
-        let grads: [&MixGrads; 4] = [&g_qm, &g_km, &g_vm, &g_o];
-        for (i, g) in grads.iter().enumerate() {
-            self.maps[i].update(&mut self.adam, g);
+        for m in self.maps.iter_mut() {
+            m.apply_grads(&mut self.adam);
         }
         gx
     }
@@ -216,7 +216,7 @@ mod tests {
 
     #[test]
     fn forward_shapes_and_rows_mix() {
-        let cfg = MixerCfg::dense(16);
+        let cfg = LinearCfg::dense(16);
         let attn = Attention::new(cfg, 4, 1e-3, 1);
         let mut rng = Rng::new(2);
         let x = Mat::from_vec(2 * 5, 16, rng.normal_vec(2 * 5 * 16, 1.0));
@@ -228,7 +228,7 @@ mod tests {
     #[test]
     fn attention_rows_are_convex_combinations() {
         // with identity V projection impossible here, check softmax rows sum 1
-        let cfg = MixerCfg::dense(8);
+        let cfg = LinearCfg::dense(8);
         let attn = Attention::new(cfg, 2, 1e-3, 3);
         let mut rng = Rng::new(4);
         let x = Mat::from_vec(3, 8, rng.normal_vec(24, 1.0));
@@ -243,7 +243,7 @@ mod tests {
 
     #[test]
     fn learns_identity_mapping_dense() {
-        let cfg = MixerCfg::dense(8);
+        let cfg = LinearCfg::dense(8);
         let mut attn = Attention::new(cfg, 2, 3e-3, 5);
         let mut rng = Rng::new(6);
         let x = Mat::from_vec(4 * 4, 8, rng.normal_vec(4 * 4 * 8, 1.0));
@@ -258,7 +258,7 @@ mod tests {
 
     #[test]
     fn learns_identity_mapping_spm() {
-        let cfg = MixerCfg::spm(8, Variant::Rotation);
+        let cfg = LinearCfg::spm(8, Variant::Rotation);
         let mut attn = Attention::new(cfg, 2, 3e-3, 7);
         let mut rng = Rng::new(8);
         let x = Mat::from_vec(4 * 4, 8, rng.normal_vec(4 * 4 * 8, 1.0));
@@ -274,7 +274,7 @@ mod tests {
     #[test]
     fn grad_check_via_descent() {
         // tiny-lr steps must monotonically-ish reduce a fresh MSE objective
-        let cfg = MixerCfg::spm(8, Variant::General);
+        let cfg = LinearCfg::spm(8, Variant::General);
         let mut attn = Attention::new(cfg, 2, 1e-3, 9);
         let mut rng = Rng::new(10);
         let x = Mat::from_vec(6, 8, rng.normal_vec(48, 1.0));

@@ -1,10 +1,11 @@
-//! Char-level LM (paper §9.3): embed -> mixer(d->d) -> ReLU -> vocab head.
-//! Next-byte prediction with softmax-xent; NLL reported in nats, BPC =
-//! NLL/ln2. Exact backward including the embedding scatter-add.
+//! Char-level LM (paper §9.3): embed -> LinearOp(d->d) -> ReLU -> LinearOp
+//! vocab head. Next-byte prediction with softmax-xent; NLL reported in
+//! nats, BPC = NLL/ln2. Exact backward including the embedding
+//! scatter-add. The embedding is a lookup table, not a linear map, so it
+//! keeps its own flat Adam slot next to the two LinearOps.
 
-use crate::dense::Dense;
 use crate::loss::softmax_xent;
-use crate::models::mixer::{Mixer, MixerCfg};
+use crate::ops::{LinearCfg, LinearOp};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::Mat;
@@ -14,26 +15,22 @@ pub const VOCAB: usize = 256;
 pub struct CharLM {
     pub d: usize,
     pub embed: Mat, // (VOCAB, d)
-    pub mixer: Mixer,
-    pub head: Dense, // (VOCAB, d)
-    slots: [usize; 3], // embed, head_w, head_b
+    pub mixer: LinearOp,
+    pub head: LinearOp, // d -> VOCAB
+    embed_slot: usize,
     pub adam: Adam,
 }
 
 impl CharLM {
-    pub fn new(cfg: MixerCfg, lr: f32, seed: u64) -> Self {
+    pub fn new(cfg: LinearCfg, lr: f32, seed: u64) -> Self {
         let mut adam = Adam::new(lr);
         let mut rng = Rng::new(seed);
-        let d = cfg.n;
-        let mixer = Mixer::new(cfg, &mut rng, &mut adam);
+        let d = cfg.n();
+        let mixer = LinearOp::new(cfg, &mut rng, &mut adam);
         let embed = Mat::from_vec(VOCAB, d, rng.normal_vec(VOCAB * d, 0.02));
-        let head = Dense::init(&mut rng, VOCAB, d);
-        let slots = [
-            adam.register(embed.data.len()),
-            adam.register(head.w.data.len()),
-            adam.register(head.b.len()),
-        ];
-        CharLM { d, embed, mixer, head, slots, adam }
+        let head = LinearOp::new(LinearCfg::dense_rect(VOCAB, d), &mut rng, &mut adam);
+        let embed_slot = adam.register(embed.data.len());
+        CharLM { d, embed, mixer, head, embed_slot, adam }
     }
 
     pub fn param_count(&self) -> usize {
@@ -65,22 +62,22 @@ impl CharLM {
     pub fn train_step(&mut self, inputs: &[u8], targets: &[u8]) -> f32 {
         assert_eq!(inputs.len(), targets.len());
         let h0 = self.embed_tokens(inputs);
-        let (h_pre, trace) = self.mixer.forward_trace(&h0);
+        let (h_pre, mix_tr) = self.mixer.forward_train(&h0);
         let mut h = h_pre.clone();
         for v in h.data.iter_mut() {
             *v = v.max(0.0);
         }
-        let logits = self.head.forward(&h);
+        let (logits, head_tr) = self.head.forward_train(&h);
         let labels: Vec<u32> = targets.iter().map(|&t| t as u32).collect();
         let (loss, _acc, glogits) = softmax_xent(&logits, &labels);
 
-        let (mut gh, head_grads) = self.head.backward(&h, &glogits);
+        let mut gh = self.head.backward(&h, &head_tr, &glogits);
         for (g, pre) in gh.data.iter_mut().zip(&h_pre.data) {
             if *pre <= 0.0 {
                 *g = 0.0;
             }
         }
-        let (gx, mix_grads) = self.mixer.backward(&h0, &trace, &gh);
+        let gx = self.mixer.backward(&h0, &mix_tr, &gh);
 
         // embedding scatter-add
         let mut gembed = vec![0.0f32; self.embed.data.len()];
@@ -92,10 +89,9 @@ impl CharLM {
         }
 
         self.adam.next_step();
-        self.mixer.update(&mut self.adam, &mix_grads);
-        self.adam.update(self.slots[0], &mut self.embed.data, &gembed);
-        self.adam.update(self.slots[1], &mut self.head.w.data, &head_grads.w.data);
-        self.adam.update(self.slots[2], &mut self.head.b, &head_grads.b);
+        self.mixer.apply_grads(&mut self.adam);
+        self.head.apply_grads(&mut self.adam);
+        self.adam.update(self.embed_slot, &mut self.embed.data, &gembed);
         loss
     }
 }
@@ -115,7 +111,7 @@ mod tests {
         let stream = periodic_stream(257);
         let inputs = &stream[..256];
         let targets = &stream[1..257];
-        let mut lm = CharLM::new(MixerCfg::dense(16), 3e-3, 1);
+        let mut lm = CharLM::new(LinearCfg::dense(16), 3e-3, 1);
         let first = lm.train_step(inputs, targets);
         let mut last = first;
         for _ in 0..60 {
@@ -129,7 +125,7 @@ mod tests {
         let stream = periodic_stream(257);
         let inputs = &stream[..256];
         let targets = &stream[1..257];
-        let mut lm = CharLM::new(MixerCfg::spm(16, Variant::Rotation), 3e-3, 2);
+        let mut lm = CharLM::new(LinearCfg::spm(16, Variant::Rotation), 3e-3, 2);
         let first = lm.train_step(inputs, targets);
         let mut last = first;
         for _ in 0..60 {
@@ -140,7 +136,7 @@ mod tests {
 
     #[test]
     fn eval_uniform_initial_loss_near_log_vocab() {
-        let lm = CharLM::new(MixerCfg::dense(8), 1e-3, 3);
+        let lm = CharLM::new(LinearCfg::dense(8), 1e-3, 3);
         let stream = periodic_stream(65);
         let nll = lm.evaluate(&stream[..64], &stream[1..65]);
         // small-init network ~ uniform distribution over 256 bytes

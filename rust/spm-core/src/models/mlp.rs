@@ -1,28 +1,26 @@
-//! The Table 1/2 student: mixer(n->n) -> ReLU -> dense head -> softmax-xent.
-//! Exact hand-derived backward; Adam owned by the model.
+//! The Table 1/2 student: LinearOp(n->n) -> ReLU -> LinearOp head ->
+//! softmax-xent. Exact hand-derived backward; Adam owned by the model;
+//! both linear maps update through the flat apply_grads kernel.
 
-use crate::dense::Dense;
 use crate::loss::softmax_xent;
-use crate::models::mixer::{Mixer, MixerCfg};
+use crate::ops::{LinearCfg, LinearOp};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::Mat;
 
 pub struct Classifier {
-    pub mixer: Mixer,
-    pub head: Dense,
-    head_slots: [usize; 2],
+    pub mixer: LinearOp,
+    pub head: LinearOp,
     pub adam: Adam,
 }
 
 impl Classifier {
-    pub fn new(cfg: MixerCfg, num_classes: usize, lr: f32, seed: u64) -> Self {
+    pub fn new(cfg: LinearCfg, num_classes: usize, lr: f32, seed: u64) -> Self {
         let mut adam = Adam::new(lr);
         let mut rng = Rng::new(seed);
-        let mixer = Mixer::new(cfg, &mut rng, &mut adam);
-        let head = Dense::init(&mut rng, num_classes, cfg.n);
-        let head_slots = [adam.register(head.w.data.len()), adam.register(head.b.len())];
-        Classifier { mixer, head, head_slots, adam }
+        let mixer = LinearOp::new(cfg, &mut rng, &mut adam);
+        let head = LinearOp::new(LinearCfg::dense_rect(num_classes, cfg.n()), &mut rng, &mut adam);
+        Classifier { mixer, head, adam }
     }
 
     pub fn param_count(&self) -> usize {
@@ -40,28 +38,27 @@ impl Classifier {
     /// One training step; returns (loss, accuracy).
     pub fn train_step(&mut self, x: &Mat, y: &[u32]) -> (f32, f32) {
         // forward
-        let (h_pre, trace) = self.mixer.forward_trace(x);
+        let (h_pre, mix_tr) = self.mixer.forward_train(x);
         let mut h = h_pre.clone();
         for v in h.data.iter_mut() {
             *v = v.max(0.0);
         }
-        let logits = self.head.forward(&h);
+        let (logits, head_tr) = self.head.forward_train(&h);
         let (loss, acc, glogits) = softmax_xent(&logits, y);
 
-        // backward
-        let (mut gh, head_grads) = self.head.backward(&h, &glogits);
+        // backward (gradients accumulate inside each op)
+        let mut gh = self.head.backward(&h, &head_tr, &glogits);
         for (g, pre) in gh.data.iter_mut().zip(&h_pre.data) {
             if *pre <= 0.0 {
                 *g = 0.0; // ReLU'
             }
         }
-        let (_gx, mix_grads) = self.mixer.backward(x, &trace, &gh);
+        let _gx = self.mixer.backward(x, &mix_tr, &gh);
 
-        // update
+        // update: one flat kernel per op
         self.adam.next_step();
-        self.mixer.update(&mut self.adam, &mix_grads);
-        self.adam.update(self.head_slots[0], &mut self.head.w.data, &head_grads.w.data);
-        self.adam.update(self.head_slots[1], &mut self.head.b, &head_grads.b);
+        self.mixer.apply_grads(&mut self.adam);
+        self.head.apply_grads(&mut self.adam);
         (loss, acc)
     }
 
@@ -76,7 +73,6 @@ impl Classifier {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::mixer::MixerKind;
     use crate::pairing::Schedule;
     use crate::spm::Variant;
 
@@ -101,7 +97,7 @@ mod tests {
     #[test]
     fn dense_student_learns_argmax_rule() {
         let (x, y) = toy_problem(16, 4, 128, 1);
-        let mut clf = Classifier::new(MixerCfg::dense(16), 4, 5e-3, 2);
+        let mut clf = Classifier::new(LinearCfg::dense(16), 4, 5e-3, 2);
         let first = clf.train_step(&x, &y).0;
         let mut last = first;
         for _ in 0..80 {
@@ -115,10 +111,7 @@ mod tests {
     #[test]
     fn spm_student_learns_argmax_rule() {
         let (x, y) = toy_problem(16, 4, 128, 3);
-        let cfg = MixerCfg {
-            kind: MixerKind::Spm,
-            ..MixerCfg::spm(16, Variant::General).with_schedule(Schedule::Shift)
-        };
+        let cfg = LinearCfg::spm(16, Variant::General).with_schedule(Schedule::Shift);
         let mut clf = Classifier::new(cfg, 4, 5e-3, 4);
         let first = clf.train_step(&x, &y).0;
         let mut last = first;
@@ -131,10 +124,19 @@ mod tests {
     #[test]
     fn eval_does_not_mutate() {
         let (x, y) = toy_problem(8, 3, 16, 5);
-        let clf = Classifier::new(MixerCfg::dense(8), 3, 1e-3, 6);
+        let clf = Classifier::new(LinearCfg::dense(8), 3, 1e-3, 6);
         let (l1, a1) = clf.evaluate(&x, &y);
         let (l2, a2) = clf.evaluate(&x, &y);
         assert_eq!(l1, l2);
         assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn no_direct_dense_wiring_head_is_linear_op() {
+        // the head is a LinearOp (rectangular dense), not a bespoke layer
+        let clf = Classifier::new(LinearCfg::dense(8), 3, 1e-3, 7);
+        assert_eq!(clf.head.d_in(), 8);
+        assert_eq!(clf.head.d_out(), 3);
+        assert_eq!(clf.param_count(), (8 * 8 + 8) + (3 * 8 + 3));
     }
 }

@@ -1,10 +1,12 @@
 //! Model zoo mirroring python/compile/model.py: every network the paper
 //! trains, in both "dense" and "spm" flavours, with exact hand-derived
-//! backward passes (no autodiff in the native engine).
+//! backward passes (no autodiff in the native engine). Every linear map —
+//! square mixers AND rectangular heads — is constructed through the
+//! planned [`crate::ops::LinearOp`] layer; no model wires `Dense` or
+//! `SpmParams` directly.
 pub mod attention;
 pub mod charlm;
 pub mod gru;
-pub mod mixer;
 pub mod mlp;
 
-pub use mixer::{Mixer, MixerCfg, MixerKind};
+pub use crate::ops::{LinearCfg, LinearKind, LinearOp, LinearTrace};

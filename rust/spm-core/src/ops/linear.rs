@@ -1,0 +1,913 @@
+//! The planned linear-operator layer (DESIGN.md §3): every model-facing
+//! linear map — dense comparator or SPM — behind ONE uniform contract:
+//!
+//! ```text
+//! forward / forward_train / backward / apply_grads / param_count
+//! ```
+//!
+//! Parameters live in a single contiguous `Vec<f32>` per op (offsets from
+//! [`ParamLayout`]); gradients accumulate into a same-shape flat buffer,
+//! so BPTT-style multi-call accumulation is free and a whole op updates
+//! with one flat optimizer kernel ([`crate::optim::Optimizer`]). The SPM
+//! path executes against a precomputed [`SpmPlan`]; `spm.rs` keeps the
+//! closed-form reference implementation this file is tested against.
+
+use crate::optim::Optimizer;
+use crate::pairing::Schedule;
+use crate::parallel;
+use crate::rng::Rng;
+use crate::spm::{SpmSpec, Variant};
+use crate::tensor::{self, Mat};
+
+use super::plan::SpmPlan;
+
+/// Which operator family a [`LinearOp`] executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinearKind {
+    Dense,
+    Spm,
+}
+
+impl LinearKind {
+    pub fn parse(s: &str) -> Option<LinearKind> {
+        match s {
+            "dense" => Some(LinearKind::Dense),
+            "spm" => Some(LinearKind::Spm),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinearKind::Dense => "dense",
+            LinearKind::Spm => "spm",
+        }
+    }
+}
+
+/// Construction-time description of a linear map. Square maps may be dense
+/// or SPM; rectangular maps (heads, read-outs) are always dense — the
+/// paper's drop-in-replacement boundary (§2, §6.2, §7.2).
+#[derive(Clone, Copy, Debug)]
+pub struct LinearCfg {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub kind: LinearKind,
+    pub variant: Variant,
+    pub schedule: Schedule,
+    /// None = paper default log2(n)
+    pub num_stages: Option<usize>,
+    pub seed: u64,
+}
+
+impl LinearCfg {
+    pub fn dense(n: usize) -> Self {
+        Self::dense_rect(n, n)
+    }
+
+    pub fn dense_rect(d_out: usize, d_in: usize) -> Self {
+        LinearCfg {
+            d_out,
+            d_in,
+            kind: LinearKind::Dense,
+            variant: Variant::General,
+            schedule: Schedule::Butterfly,
+            num_stages: None,
+            seed: 0,
+        }
+    }
+
+    pub fn spm(n: usize, variant: Variant) -> Self {
+        LinearCfg { kind: LinearKind::Spm, ..Self::dense(n) }.with_variant(variant)
+    }
+
+    pub fn with_variant(mut self, v: Variant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    pub fn with_schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
+    pub fn with_stages(mut self, l: usize) -> Self {
+        self.num_stages = Some(l);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Width of a square map (models' mixing dimension).
+    pub fn n(&self) -> usize {
+        debug_assert_eq!(self.d_in, self.d_out, "n() is for square maps");
+        self.d_in
+    }
+
+    pub fn spec(&self) -> SpmSpec {
+        let mut s = SpmSpec::new(self.n(), self.variant)
+            .with_schedule(self.schedule)
+            .with_seed(self.seed);
+        if let Some(l) = self.num_stages {
+            s = s.with_stages(l);
+        }
+        s
+    }
+}
+
+/// Residuals of one `forward_train`, consumed by `backward`.
+pub enum LinearTrace {
+    /// dense: backward only needs the layer input
+    Dense,
+    /// SPM rotation: final pre-`d_out` activation z_L (O(Bn));
+    /// stage inputs are recomputed via the orthogonal transpose
+    Rotation { z_last: Mat },
+    /// SPM general: every stage input z_0..z_L (O(BnL))
+    General { zs: Vec<Mat> },
+}
+
+enum OpImpl {
+    Dense,
+    Spm(SpmPlan),
+}
+
+/// One planned linear operator with flat parameter/gradient storage.
+pub struct LinearOp {
+    imp: OpImpl,
+    d_in: usize,
+    d_out: usize,
+    params: Vec<f32>,
+    grads: Vec<f32>,
+    slot: usize,
+}
+
+impl LinearOp {
+    /// Build + initialize; registers ONE flat optimizer slot covering the
+    /// whole parameter buffer. Dense uses Gaussian fan-in init; SPM starts
+    /// orthogonal (identical rng draws to the reference `Spm::init_params`).
+    pub fn new<O: Optimizer>(cfg: LinearCfg, rng: &mut Rng, opt: &mut O) -> LinearOp {
+        let (imp, params) = match cfg.kind {
+            LinearKind::Dense => {
+                let scale = 1.0 / (cfg.d_in as f32).sqrt();
+                let mut params = rng.normal_vec(cfg.d_out * cfg.d_in, scale);
+                params.resize(cfg.d_out * cfg.d_in + cfg.d_out, 0.0);
+                (OpImpl::Dense, params)
+            }
+            LinearKind::Spm => {
+                assert_eq!(cfg.d_in, cfg.d_out, "SPM ops are square");
+                let plan = SpmPlan::new(cfg.spec());
+                let params = plan.init_flat(rng);
+                (OpImpl::Spm(plan), params)
+            }
+        };
+        let grads = vec![0.0; params.len()];
+        let slot = opt.register(params.len());
+        LinearOp { imp, d_in: cfg.d_in, d_out: cfg.d_out, params, grads, slot }
+    }
+
+    pub fn kind(&self) -> LinearKind {
+        match self.imp {
+            OpImpl::Dense => LinearKind::Dense,
+            OpImpl::Spm(_) => LinearKind::Spm,
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// Width of a square map.
+    pub fn n(&self) -> usize {
+        debug_assert_eq!(self.d_in, self.d_out, "n() is for square maps");
+        self.d_in
+    }
+
+    pub fn plan(&self) -> Option<&SpmPlan> {
+        match &self.imp {
+            OpImpl::Spm(plan) => Some(plan),
+            OpImpl::Dense => None,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn params_mut(&mut self) -> &mut [f32] {
+        &mut self.params
+    }
+
+    /// Accumulated (un-applied) gradients, same layout as `params`.
+    pub fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+
+    pub fn zero_grads(&mut self) {
+        self.grads.fill(0.0);
+    }
+
+    /// The optimizer slot this op registered at construction.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// y = op(x); x is (B, d_in) -> (B, d_out).
+    pub fn forward(&self, x: &Mat) -> Mat {
+        self.forward_with(&self.params, x)
+    }
+
+    /// Forward with an explicit (flat) parameter buffer — used by the
+    /// finite-difference tests; layout must match this op's.
+    pub fn forward_with(&self, params: &[f32], x: &Mat) -> Mat {
+        assert_eq!(params.len(), self.params.len(), "param buffer length");
+        match &self.imp {
+            OpImpl::Dense => {
+                assert_eq!(x.cols, self.d_in, "input width");
+                let wlen = self.d_out * self.d_in;
+                let mut y = tensor::matmul_nt_slice(x, &params[..wlen], self.d_out);
+                tensor::add_bias(&mut y, &params[wlen..]);
+                y
+            }
+            OpImpl::Spm(plan) => spm_forward(plan, params, x),
+        }
+    }
+
+    /// Forward keeping the residuals `backward` needs.
+    pub fn forward_train(&self, x: &Mat) -> (Mat, LinearTrace) {
+        match &self.imp {
+            OpImpl::Dense => (self.forward(x), LinearTrace::Dense),
+            OpImpl::Spm(plan) => spm_forward_trace(plan, &self.params, x),
+        }
+    }
+
+    /// Exact backward. ACCUMULATES parameter gradients into the op's flat
+    /// gradient buffer (so repeated calls sum, e.g. across BPTT steps) and
+    /// returns g_x. `x` is the input that produced `trace`.
+    pub fn backward(&mut self, x: &Mat, trace: &LinearTrace, gy: &Mat) -> Mat {
+        assert_eq!(gy.rows, x.rows, "batch size");
+        match (&self.imp, trace) {
+            (OpImpl::Dense, LinearTrace::Dense) => {
+                assert_eq!(x.cols, self.d_in, "input width");
+                assert_eq!(gy.cols, self.d_out, "adjoint width");
+                let wlen = self.d_out * self.d_in;
+                let gx = tensor::matmul_slice(gy, &self.params[..wlen], self.d_in);
+                let (gw, gb) = self.grads.split_at_mut(wlen);
+                tensor::matmul_tn_accum(gy, x, gw);
+                for r in 0..gy.rows {
+                    for (b, v) in gb.iter_mut().zip(gy.row(r)) {
+                        *b += v;
+                    }
+                }
+                gx
+            }
+            (OpImpl::Spm(plan), LinearTrace::Rotation { z_last }) => {
+                let (gx, partial) = spm_backward_rotation(plan, &self.params, x, z_last, gy);
+                for (g, p) in self.grads.iter_mut().zip(&partial) {
+                    *g += p;
+                }
+                gx
+            }
+            (OpImpl::Spm(plan), LinearTrace::General { zs }) => {
+                let (gx, partial) = spm_backward_general(plan, &self.params, x, zs, gy);
+                for (g, p) in self.grads.iter_mut().zip(&partial) {
+                    *g += p;
+                }
+                gx
+            }
+            _ => panic!("trace/op kind mismatch"),
+        }
+    }
+
+    /// Apply the accumulated gradients with ONE flat optimizer call, then
+    /// clear the gradient buffer.
+    pub fn apply_grads<O: Optimizer>(&mut self, opt: &mut O) {
+        opt.update(self.slot, &mut self.params, &self.grads);
+        self.grads.fill(0.0);
+    }
+}
+
+/// Per-stage interleaved (cos, sin) tables for the rotation variant;
+/// recomputed per call because the thetas change every training step.
+fn rotation_trig(plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+    let lay = plan.layout;
+    let mut cs = Vec::with_capacity(2 * lay.num_stages * lay.mix_stride);
+    for l in 0..lay.num_stages {
+        for &t in &params[lay.mix(l)] {
+            let (s, c) = t.sin_cos();
+            cs.push(c);
+            cs.push(s);
+        }
+    }
+    cs
+}
+
+/// Apply stage `l` in place on one row (planned path, flat params).
+#[inline]
+fn stage_fwd(plan: &SpmPlan, params: &[f32], trig: &[f32], lone: &[f32], l: usize, row: &mut [f32]) {
+    let pairs = plan.stage_pairs(l);
+    let p = pairs.len() / 2;
+    match plan.variant {
+        Variant::Rotation => {
+            let cs = &trig[2 * p * l..2 * p * (l + 1)];
+            for k in 0..p {
+                let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+                let (c, s) = (cs[2 * k], cs[2 * k + 1]);
+                let x1 = row[i];
+                let x2 = row[j];
+                row[i] = c * x1 - s * x2; // eq. (5)
+                row[j] = s * x1 + c * x2; // eq. (6)
+            }
+            // leftover passes through (keeps the stage orthogonal)
+        }
+        Variant::General => {
+            let m = &params[plan.layout.mix(l)];
+            for k in 0..p {
+                let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+                let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
+                let x1 = row[i];
+                let x2 = row[j];
+                row[i] = a * x1 + b * x2; // eq. (10)
+                row[j] = c * x1 + d * x2; // eq. (11)
+            }
+            if let Some(lv) = plan.stage_leftover(l) {
+                row[lv] *= lone[l];
+            }
+        }
+    }
+}
+
+fn spm_forward(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
+    assert_eq!(x.cols, plan.n, "input width");
+    let n = plan.n;
+    let lay = plan.layout;
+    let d_in = &params[lay.d_in()];
+    let d_out = &params[lay.d_out()];
+    let bias = &params[lay.bias()];
+    let lone = &params[lay.lone()];
+    let trig = match plan.variant {
+        Variant::Rotation => rotation_trig(plan, params),
+        Variant::General => Vec::new(),
+    };
+    let mut z = x.clone();
+    parallel::for_each_chunk(&mut z.data, n, |_first, chunk| {
+        for row in chunk.chunks_mut(n) {
+            for (v, di) in row.iter_mut().zip(d_in) {
+                *v *= di; // eq. (2)
+            }
+            for l in 0..plan.num_stages {
+                stage_fwd(plan, params, &trig, lone, l, row); // eq. (3)
+            }
+            for ((v, do_), b) in row.iter_mut().zip(d_out).zip(bias) {
+                *v = *v * do_ + b; // eq. (4)
+            }
+        }
+    });
+    z
+}
+
+fn spm_forward_trace(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, LinearTrace) {
+    assert_eq!(x.cols, plan.n, "input width");
+    let n = plan.n;
+    let lay = plan.layout;
+    let d_in = &params[lay.d_in()];
+    let d_out = &params[lay.d_out()];
+    let bias = &params[lay.bias()];
+    let lone = &params[lay.lone()];
+    match plan.variant {
+        Variant::Rotation => {
+            let trig = rotation_trig(plan, params);
+            let mut z = x.clone();
+            parallel::for_each_chunk(&mut z.data, n, |_f, chunk| {
+                for row in chunk.chunks_mut(n) {
+                    for (v, di) in row.iter_mut().zip(d_in) {
+                        *v *= di;
+                    }
+                    for l in 0..plan.num_stages {
+                        stage_fwd(plan, params, &trig, lone, l, row);
+                    }
+                }
+            });
+            let z_last = z.clone();
+            parallel::for_each_chunk(&mut z.data, n, |_f, chunk| {
+                for row in chunk.chunks_mut(n) {
+                    for ((v, do_), b) in row.iter_mut().zip(d_out).zip(bias) {
+                        *v = *v * do_ + b;
+                    }
+                }
+            });
+            (z, LinearTrace::Rotation { z_last })
+        }
+        Variant::General => {
+            let mut zs = Vec::with_capacity(plan.num_stages + 1);
+            let mut z = x.clone();
+            for i in 0..z.rows {
+                for (v, di) in z.row_mut(i).iter_mut().zip(d_in) {
+                    *v *= di;
+                }
+            }
+            zs.push(z.clone());
+            for l in 0..plan.num_stages {
+                parallel::for_each_chunk(&mut z.data, n, |_f, chunk| {
+                    for row in chunk.chunks_mut(n) {
+                        stage_fwd(plan, params, &[], lone, l, row);
+                    }
+                });
+                zs.push(z.clone());
+            }
+            let mut y = z;
+            for i in 0..y.rows {
+                for ((v, do_), b) in y.row_mut(i).iter_mut().zip(d_out).zip(bias) {
+                    *v = *v * do_ + b;
+                }
+            }
+            (y, LinearTrace::General { zs })
+        }
+    }
+}
+
+/// Rotation backward (paper §4, DESIGN.md §8) on flat buffers. Returns
+/// (g_x, flat parameter-gradient contribution).
+fn spm_backward_rotation(
+    plan: &SpmPlan,
+    params: &[f32],
+    x: &Mat,
+    z_last: &Mat,
+    gy: &Mat,
+) -> (Mat, Vec<f32>) {
+    let n = plan.n;
+    let ls = plan.num_stages;
+    let p = plan.num_pairs();
+    let lay = plan.layout;
+    let d_in = &params[lay.d_in()];
+    let d_out = &params[lay.d_out()];
+    let trig = rotation_trig(plan, params);
+    let rows = gy.rows;
+    // group offsets from the one layout definition
+    let (o_din, o_dout, o_bias, o_mix) =
+        (lay.d_in().start, lay.d_out().start, lay.bias().start, lay.mix(0).start);
+    let stride = lay.mix_stride;
+
+    let gx = Mat::zeros(rows, n);
+    let partials = parallel::map_row_ranges(rows, |_t, range| {
+        let lo = range.start;
+        let mut grads = vec![0.0f32; lay.total];
+        // one contiguous g_x block per thread, not one Vec per row
+        let mut gx_chunk = vec![0.0f32; range.len() * n];
+        let mut g = vec![0.0f32; n];
+        let mut z = vec![0.0f32; n];
+        for r in range {
+            // eqs. (15)-(17)
+            let gyr = gy.row(r);
+            z.copy_from_slice(z_last.row(r));
+            for i in 0..n {
+                grads[o_bias + i] += gyr[i];
+                grads[o_dout + i] += gyr[i] * z[i];
+                g[i] = gyr[i] * d_out[i];
+            }
+            // stages in reverse: theta grad from outputs, then transpose-
+            // apply to BOTH adjoint g and activation z
+            for l in (0..ls).rev() {
+                let pairs = plan.stage_pairs(l);
+                let cs = &trig[2 * p * l..2 * p * (l + 1)];
+                let gm = o_mix + l * stride;
+                for k in 0..p {
+                    let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+                    let (c, s) = (cs[2 * k], cs[2 * k + 1]);
+                    let (y1, y2) = (z[i], z[j]);
+                    let (d1, d2) = (g[i], g[j]);
+                    grads[gm + k] += d2 * y1 - d1 * y2; // eq. (9) via outputs
+                    g[i] = c * d1 + s * d2; // eq. (7)
+                    g[j] = -s * d1 + c * d2; // eq. (8)
+                    z[i] = c * y1 + s * y2; // z_{l-1} = B^T z_l
+                    z[j] = -s * y1 + c * y2;
+                }
+            }
+            // eqs. (18)-(19)
+            let xr = x.row(r);
+            let gxr = &mut gx_chunk[(r - lo) * n..(r - lo + 1) * n];
+            for i in 0..n {
+                grads[o_din + i] += g[i] * xr[i];
+                gxr[i] = g[i] * d_in[i];
+            }
+        }
+        (grads, lo, gx_chunk)
+    });
+
+    reduce_partials(lay.total, partials, gx)
+}
+
+/// General backward (paper §4) on flat buffers.
+fn spm_backward_general(
+    plan: &SpmPlan,
+    params: &[f32],
+    x: &Mat,
+    zs: &[Mat],
+    gy: &Mat,
+) -> (Mat, Vec<f32>) {
+    let n = plan.n;
+    let ls = plan.num_stages;
+    let p = plan.num_pairs();
+    let lay = plan.layout;
+    let d_in = &params[lay.d_in()];
+    let d_out = &params[lay.d_out()];
+    let lone = &params[lay.lone()];
+    let rows = gy.rows;
+    // group offsets from the one layout definition
+    let (o_din, o_dout, o_bias, o_mix) =
+        (lay.d_in().start, lay.d_out().start, lay.bias().start, lay.mix(0).start);
+    let stride = lay.mix_stride;
+    let o_lone = lay.lone().start;
+
+    let gx = Mat::zeros(rows, n);
+    let partials = parallel::map_row_ranges(rows, |_t, range| {
+        let lo = range.start;
+        let mut grads = vec![0.0f32; lay.total];
+        let mut gx_chunk = vec![0.0f32; range.len() * n];
+        let mut g = vec![0.0f32; n];
+        for r in range {
+            let gyr = gy.row(r);
+            let zl = zs[ls].row(r);
+            for i in 0..n {
+                grads[o_bias + i] += gyr[i];
+                grads[o_dout + i] += gyr[i] * zl[i];
+                g[i] = gyr[i] * d_out[i];
+            }
+            for l in (0..ls).rev() {
+                let pairs = plan.stage_pairs(l);
+                let m = &params[lay.mix(l)];
+                let gm = o_mix + l * stride;
+                let zin = zs[l].row(r); // stage INPUT
+                for k in 0..p {
+                    let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+                    let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
+                    let (x1, x2) = (zin[i], zin[j]);
+                    let (d1, d2) = (g[i], g[j]);
+                    // eq. (14)
+                    grads[gm + 4 * k] += d1 * x1;
+                    grads[gm + 4 * k + 1] += d1 * x2;
+                    grads[gm + 4 * k + 2] += d2 * x1;
+                    grads[gm + 4 * k + 3] += d2 * x2;
+                    // eqs. (12)-(13)
+                    g[i] = a * d1 + c * d2;
+                    g[j] = b * d1 + d * d2;
+                }
+                if let Some(lv) = plan.stage_leftover(l) {
+                    grads[o_lone + l] += g[lv] * zin[lv];
+                    g[lv] *= lone[l];
+                }
+            }
+            let xr = x.row(r);
+            let gxr = &mut gx_chunk[(r - lo) * n..(r - lo + 1) * n];
+            for i in 0..n {
+                grads[o_din + i] += g[i] * xr[i];
+                gxr[i] = g[i] * d_in[i];
+            }
+        }
+        (grads, lo, gx_chunk)
+    });
+
+    reduce_partials(lay.total, partials, gx)
+}
+
+/// (flat param-grad partial, first row index, contiguous g_x block)
+type Partial = (Vec<f32>, usize, Vec<f32>);
+
+fn reduce_partials(total: usize, partials: Vec<Partial>, mut gx: Mat) -> (Mat, Vec<f32>) {
+    let n = gx.cols;
+    let mut acc = vec![0.0f32; total];
+    for (pg, lo, chunk) in partials {
+        for (a, b) in acc.iter_mut().zip(&pg) {
+            *a += b;
+        }
+        gx.data[lo * n..lo * n + chunk.len()].copy_from_slice(&chunk);
+    }
+    (gx, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::Dense;
+    use crate::optim::{Adam, SgdMomentum};
+    use crate::spm::{Spm, SpmParams};
+    use crate::testkit::{forall, numerical_grad};
+
+    fn mk_reference(
+        n: usize,
+        variant: Variant,
+        schedule: Schedule,
+        l: usize,
+        seed: u64,
+    ) -> (Spm, SpmParams) {
+        let spec = SpmSpec::new(n, variant).with_schedule(schedule).with_stages(l).with_seed(seed);
+        let op = Spm::new(spec);
+        let mut rng = Rng::new(seed + 100);
+        let p = op.init_params(&mut rng);
+        (op, p)
+    }
+
+    fn randomize(p: &mut SpmParams, rng: &mut Rng) {
+        for v in p.d_in.iter_mut().chain(p.d_out.iter_mut()).chain(p.bias.iter_mut()) {
+            *v = 1.0 + 0.3 * rng.normal();
+        }
+        for m in &mut p.mix {
+            for v in m.iter_mut() {
+                *v += 0.3 * rng.normal();
+            }
+        }
+        for v in &mut p.lone {
+            *v = 1.0 + 0.3 * rng.normal();
+        }
+    }
+
+    fn mk_planned(n: usize, variant: Variant, schedule: Schedule, l: usize, seed: u64) -> LinearOp {
+        let cfg = LinearCfg::spm(n, variant).with_schedule(schedule).with_stages(l).with_seed(seed);
+        let mut rng = Rng::new(seed + 100);
+        let mut adam = Adam::new(1e-3);
+        LinearOp::new(cfg, &mut rng, &mut adam)
+    }
+
+    /// scalar loss L = sum(tanh(y)) for gradient checks
+    fn loss_and_gy(y: &Mat) -> (f32, Mat) {
+        let mut gy = y.clone();
+        let mut loss = 0.0;
+        for v in gy.data.iter_mut() {
+            loss += v.tanh();
+            let t = v.tanh();
+            *v = 1.0 - t * t;
+        }
+        (loss, gy)
+    }
+
+    #[test]
+    fn planned_forward_matches_reference() {
+        forall(40, 11, |rng| {
+            let n = 2 + rng.below(48);
+            let l = 1 + rng.below(6);
+            let variant = if rng.below(2) == 0 { Variant::Rotation } else { Variant::General };
+            let sched = [Schedule::Butterfly, Schedule::Shift, Schedule::Random][rng.below(3)];
+            let seed = rng.next_u64();
+            let (op, mut p) = mk_reference(n, variant, sched, l, seed);
+            randomize(&mut p, rng);
+            let mut planned = mk_planned(n, variant, sched, l, seed);
+            let packed = planned.plan().unwrap().pack_params(&p);
+            planned.params_mut().copy_from_slice(&packed);
+            let x = Mat::from_vec(3, n, rng.normal_vec(3 * n, 1.0));
+            let want = op.forward(&p, &x);
+            let got = planned.forward(&x);
+            if got.max_abs_diff(&want) > 1e-5 {
+                return Err(format!(
+                    "forward mismatch {} (n={n} l={l} {variant:?} {sched:?})",
+                    got.max_abs_diff(&want)
+                ));
+            }
+            let (got_t, _) = planned.forward_train(&x);
+            if got_t.max_abs_diff(&want) > 1e-5 {
+                return Err("forward_train mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn planned_backward_matches_reference() {
+        forall(30, 13, |rng| {
+            let n = 2 + rng.below(40);
+            let l = 1 + rng.below(5);
+            let variant = if rng.below(2) == 0 { Variant::Rotation } else { Variant::General };
+            let sched = [Schedule::Butterfly, Schedule::Shift, Schedule::Random][rng.below(3)];
+            let seed = rng.next_u64();
+            let (op, mut p) = mk_reference(n, variant, sched, l, seed);
+            randomize(&mut p, rng);
+            let mut planned = mk_planned(n, variant, sched, l, seed);
+            let plan_packed = planned.plan().unwrap().pack_params(&p);
+            planned.params_mut().copy_from_slice(&plan_packed);
+
+            let x = Mat::from_vec(4, n, rng.normal_vec(4 * n, 1.0));
+            let gy = Mat::from_vec(4, n, rng.normal_vec(4 * n, 1.0));
+
+            let (_y, trace) = op.forward_trace(&p, &x);
+            let (gx_ref, g_ref) = op.backward(&p, &x, &trace, &gy);
+            let g_ref_flat = planned
+                .plan()
+                .unwrap()
+                .pack(&g_ref.d_in, &g_ref.d_out, &g_ref.bias, &g_ref.mix, &g_ref.lone);
+
+            planned.zero_grads();
+            let (_yp, ptrace) = planned.forward_train(&x);
+            let gx_plan = planned.backward(&x, &ptrace, &gy);
+
+            if gx_plan.max_abs_diff(&gx_ref) > 1e-5 {
+                return Err(format!("gx mismatch (n={n} l={l} {variant:?} {sched:?})"));
+            }
+            for (i, (a, b)) in planned.grads().iter().zip(&g_ref_flat).enumerate() {
+                let scale = 1.0f32.max(a.abs()).max(b.abs());
+                if (a - b).abs() > 1e-5 * scale {
+                    return Err(format!(
+                        "grad[{i}]: {a} vs {b} (n={n} l={l} {variant:?} {sched:?})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn planned_param_grads_finite_difference() {
+        // central FD over every parameter group, both variants x all
+        // schedules (satellite: rotation/general x butterfly/shift/random)
+        for variant in [Variant::Rotation, Variant::General] {
+            for sched in [Schedule::Butterfly, Schedule::Shift, Schedule::Random] {
+                let n = 9;
+                let mut op = mk_planned(n, variant, sched, 3, 17);
+                let mut rng = Rng::new(19);
+                // nudge params off the orthogonal init
+                for v in op.params_mut().iter_mut() {
+                    *v += 0.1 * rng.normal();
+                }
+                let x = Mat::from_vec(3, n, rng.normal_vec(3 * n, 1.0));
+                let (y, trace) = op.forward_train(&x);
+                let (_l, gy) = loss_and_gy(&y);
+                op.zero_grads();
+                let _gx = op.backward(&x, &trace, &gy);
+
+                let mut pv = op.params().to_vec();
+                let total = pv.len();
+                // sample indices across all five layout groups
+                let idxs = [0, n / 2, n, 2 * n, 2 * n + 1, 3 * n, 3 * n + 2, total - 1];
+                for &idx in &idxs {
+                    let got = op.grads()[idx];
+                    let num = numerical_grad(&mut pv, idx, 1e-2, |v| {
+                        op.forward_with(v, &x).data.iter().map(|t| t.tanh()).sum()
+                    });
+                    assert!(
+                        (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                        "{variant:?} {sched:?} grad[{idx}]: {got} vs {num}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planned_input_grad_finite_difference() {
+        for variant in [Variant::Rotation, Variant::General] {
+            let mut op = mk_planned(12, variant, Schedule::Butterfly, 3, 23);
+            let mut rng = Rng::new(29);
+            for v in op.params_mut().iter_mut() {
+                *v += 0.1 * rng.normal();
+            }
+            let mut xv = rng.normal_vec(2 * 12, 1.0);
+            let x = Mat::from_vec(2, 12, xv.clone());
+            let (y, trace) = op.forward_train(&x);
+            let (_l, gy) = loss_and_gy(&y);
+            let gx = op.backward(&x, &trace, &gy);
+            for idx in [0usize, 5, 13, 23] {
+                let got = gx.data[idx];
+                let num = numerical_grad(&mut xv, idx, 1e-2, |v| {
+                    let xm = Mat::from_vec(2, 12, v.to_vec());
+                    op.forward(&xm).data.iter().map(|t| t.tanh()).sum()
+                });
+                assert!(
+                    (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                    "{variant:?} gx[{idx}]: {got} vs {num}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_matches_reference_dense_layer() {
+        let mut rng = Rng::new(31);
+        let reference = Dense::init(&mut rng, 4, 6);
+        let mut adam = Adam::new(1e-3);
+        let mut op =
+            LinearOp::new(LinearCfg::dense_rect(4, 6), &mut Rng::new(99), &mut adam);
+        // copy the reference weights into the flat [w | b] layout
+        op.params_mut()[..24].copy_from_slice(&reference.w.data);
+        let bvals: Vec<f32> = rng.normal_vec(4, 0.5);
+        op.params_mut()[24..].copy_from_slice(&bvals);
+        let mut reference = reference;
+        reference.b = bvals;
+
+        let x = Mat::from_vec(3, 6, rng.normal_vec(18, 1.0));
+        let want = reference.forward(&x);
+        let got = op.forward(&x);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+
+        let gy = Mat::from_vec(3, 4, rng.normal_vec(12, 1.0));
+        let (gx_ref, gref) = reference.backward(&x, &gy);
+        let (_, trace) = op.forward_train(&x);
+        let gx = op.backward(&x, &trace, &gy);
+        assert!(gx.max_abs_diff(&gx_ref) < 1e-5);
+        for (a, b) in op.grads()[..24].iter().zip(&gref.w.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        for (a, b) in op.grads()[24..].iter().zip(&gref.b) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn backward_accumulates_across_calls() {
+        let mut op = mk_planned(8, Variant::General, Schedule::Shift, 2, 41);
+        let mut rng = Rng::new(43);
+        let x = Mat::from_vec(2, 8, rng.normal_vec(16, 1.0));
+        let gy = Mat::from_vec(2, 8, rng.normal_vec(16, 1.0));
+        let (_y, tr) = op.forward_train(&x);
+        op.zero_grads();
+        let _ = op.backward(&x, &tr, &gy);
+        let once = op.grads().to_vec();
+        let _ = op.backward(&x, &tr, &gy);
+        for (twice, one) in op.grads().iter().zip(&once) {
+            assert!((twice - 2.0 * one).abs() < 1e-5 * (1.0 + one.abs()));
+        }
+    }
+
+    #[test]
+    fn apply_grads_descends_with_adam_and_momentum() {
+        for use_momentum in [false, true] {
+            let cfg = LinearCfg::spm(8, Variant::General).with_schedule(Schedule::Shift);
+            let mut rng = Rng::new(2);
+            let mut adam = Adam::new(0.05);
+            let mut sgd = SgdMomentum::new(0.02, 0.9);
+            let mut op = if use_momentum {
+                LinearOp::new(cfg, &mut rng, &mut sgd)
+            } else {
+                LinearOp::new(cfg, &mut rng, &mut adam)
+            };
+            let x = Mat::from_vec(16, 8, rng.normal_vec(128, 1.0));
+            let loss_of = |op: &LinearOp| {
+                let y = op.forward(&x);
+                y.data.iter().map(|v| v * v).sum::<f32>() / y.data.len() as f32
+            };
+            let before = loss_of(&op);
+            for _ in 0..30 {
+                let (y, trace) = op.forward_train(&x);
+                let mut gy = y;
+                let m = gy.data.len() as f32;
+                for v in gy.data.iter_mut() {
+                    *v = 2.0 * *v / m;
+                }
+                let _gx = op.backward(&x, &trace, &gy);
+                if use_momentum {
+                    op.apply_grads(&mut sgd);
+                } else {
+                    adam.next_step();
+                    op.apply_grads(&mut adam);
+                }
+            }
+            let after = loss_of(&op);
+            assert!(after < before * 0.5, "momentum={use_momentum}: {before} -> {after}");
+        }
+    }
+
+    #[test]
+    fn spm_param_count_below_dense() {
+        let mut adam = Adam::new(1e-3);
+        let mut rng = Rng::new(3);
+        let d = LinearOp::new(LinearCfg::dense(128), &mut rng, &mut adam);
+        let s = LinearOp::new(LinearCfg::spm(128, Variant::General), &mut rng, &mut adam);
+        assert!(s.param_count() < d.param_count() / 4);
+        assert_eq!(d.param_count(), 128 * 128 + 128);
+    }
+
+    #[test]
+    fn both_kinds_round_trip_shapes() {
+        for kind in [LinearKind::Dense, LinearKind::Spm] {
+            let cfg = LinearCfg { kind, ..LinearCfg::spm(16, Variant::General) };
+            let mut adam = Adam::new(1e-3);
+            let mut rng = Rng::new(1);
+            let mut op = LinearOp::new(cfg, &mut rng, &mut adam);
+            let x = Mat::from_vec(4, 16, rng.normal_vec(64, 1.0));
+            let (y, trace) = op.forward_train(&x);
+            assert_eq!((y.rows, y.cols), (4, 16));
+            let gx = op.backward(&x, &trace, &y);
+            assert_eq!((gx.rows, gx.cols), (4, 16));
+        }
+    }
+
+    #[test]
+    fn rectangular_dense_head_shapes() {
+        let mut adam = Adam::new(1e-3);
+        let mut rng = Rng::new(5);
+        let mut head = LinearOp::new(LinearCfg::dense_rect(3, 10), &mut rng, &mut adam);
+        let x = Mat::from_vec(7, 10, rng.normal_vec(70, 1.0));
+        let (y, tr) = head.forward_train(&x);
+        assert_eq!((y.rows, y.cols), (7, 3));
+        let gy = Mat::from_vec(7, 3, rng.normal_vec(21, 1.0));
+        let gx = head.backward(&x, &tr, &gy);
+        assert_eq!((gx.rows, gx.cols), (7, 10));
+    }
+}

@@ -1,0 +1,8 @@
+//! The planned operator subsystem (DESIGN.md §3): one uniform `LinearOp`
+//! layer every model, the optimizer and the coordinator consume, backed by
+//! precomputed `SpmPlan`s and flat parameter/gradient buffers.
+pub mod linear;
+pub mod plan;
+
+pub use linear::{LinearCfg, LinearKind, LinearOp, LinearTrace};
+pub use plan::{ParamLayout, SpmPlan};

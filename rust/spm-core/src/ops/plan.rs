@@ -1,0 +1,295 @@
+//! The SPM execution plan (DESIGN.md §3): everything about an SPM operator
+//! that does NOT change during training, computed once at construction.
+//!
+//! * a **stage-major pairing table** — one flat interleaved `[i, j]` index
+//!   array covering all stages, so the hot loops walk contiguous memory
+//!   instead of chasing per-stage `Vec<u32>` pairs;
+//! * a [`ParamLayout`] mapping the operator's five logical parameter
+//!   groups (`d_in`, `d_out`, `bias`, `mix[l]`, `lone`) into offsets of a
+//!   single flat `Vec<f32>`, replacing the ragged `SpmParams` vectors of
+//!   the reference path with one contiguous, SIMD-friendly buffer that an
+//!   optimizer updates with a single flat kernel.
+//!
+//! `spm.rs` remains the closed-form reference implementation; the planned
+//! path in `ops::linear` is tested against it (see the parity tests).
+
+use std::ops::Range;
+
+use crate::pairing;
+use crate::rng::Rng;
+use crate::spm::{SpmParams, SpmSpec, Variant};
+
+/// Sentinel in the per-stage leftover table: "this stage has no leftover".
+const NO_LEFTOVER: u32 = u32::MAX;
+
+/// Offsets of the five parameter groups inside one flat buffer:
+///
+/// ```text
+/// [ d_in (n) | d_out (n) | bias (n) | mix[0] .. mix[L-1] (stride each) | lone (L) ]
+/// ```
+///
+/// `stride` is `n/2` scalars per stage (rotation: one theta per pair) or
+/// `4 * (n/2)` (general: interleaved `[a, b, c, d]` per pair). The `lone`
+/// group is always allocated (length L) to keep the scalar count identical
+/// to the reference `SpmParams::num_scalars`; the rotation variant simply
+/// never reads or writes it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParamLayout {
+    pub n: usize,
+    pub num_stages: usize,
+    /// scalars per stage in the mix block
+    pub mix_stride: usize,
+    /// total flat length
+    pub total: usize,
+}
+
+impl ParamLayout {
+    pub fn new(n: usize, num_stages: usize, variant: Variant) -> ParamLayout {
+        let p = n / 2;
+        let mix_stride = match variant {
+            Variant::Rotation => p,
+            Variant::General => 4 * p,
+        };
+        ParamLayout { n, num_stages, mix_stride, total: 3 * n + num_stages * mix_stride + num_stages }
+    }
+
+    #[inline]
+    pub fn d_in(&self) -> Range<usize> {
+        0..self.n
+    }
+
+    #[inline]
+    pub fn d_out(&self) -> Range<usize> {
+        self.n..2 * self.n
+    }
+
+    #[inline]
+    pub fn bias(&self) -> Range<usize> {
+        2 * self.n..3 * self.n
+    }
+
+    #[inline]
+    pub fn mix(&self, l: usize) -> Range<usize> {
+        debug_assert!(l < self.num_stages);
+        let start = 3 * self.n + l * self.mix_stride;
+        start..start + self.mix_stride
+    }
+
+    #[inline]
+    pub fn lone(&self) -> Range<usize> {
+        let start = 3 * self.n + self.num_stages * self.mix_stride;
+        start..start + self.num_stages
+    }
+}
+
+/// Precomputed SPM plan: spec + flattened stage-major pairing tables +
+/// flat parameter layout. Built once; shared by every forward/backward.
+#[derive(Clone, Debug)]
+pub struct SpmPlan {
+    pub n: usize,
+    pub num_stages: usize,
+    pub variant: Variant,
+    pub spec: SpmSpec,
+    pub layout: ParamLayout,
+    /// stage-major interleaved pairs: stage `l`, pair `k` mixes coordinates
+    /// `pairs[(l*p + k)*2]` and `pairs[(l*p + k)*2 + 1]` where `p = n/2`
+    pairs: Vec<u32>,
+    /// per-stage leftover coordinate for odd n (NO_LEFTOVER if none)
+    leftover: Vec<u32>,
+}
+
+impl SpmPlan {
+    pub fn new(spec: SpmSpec) -> SpmPlan {
+        assert!(spec.n >= 2, "n must be >= 2");
+        assert!(spec.num_stages >= 1, "need at least one stage");
+        let stages = pairing::make_schedule(spec.schedule, spec.n, spec.num_stages, spec.seed);
+        let p = spec.n / 2;
+        let mut pairs = Vec::with_capacity(spec.num_stages * 2 * p);
+        let mut leftover = Vec::with_capacity(spec.num_stages);
+        for st in &stages {
+            assert_eq!(st.left.len(), p, "pairing must cover n/2 pairs");
+            for k in 0..p {
+                pairs.push(st.left[k]);
+                pairs.push(st.right[k]);
+            }
+            leftover.push(st.leftover.unwrap_or(NO_LEFTOVER));
+        }
+        SpmPlan {
+            n: spec.n,
+            num_stages: spec.num_stages,
+            variant: spec.variant,
+            spec,
+            layout: ParamLayout::new(spec.n, spec.num_stages, spec.variant),
+            pairs,
+            leftover,
+        }
+    }
+
+    #[inline]
+    pub fn num_pairs(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Interleaved `[i, j]` pairs of stage `l` (length `2 * n/2`).
+    #[inline]
+    pub fn stage_pairs(&self, l: usize) -> &[u32] {
+        let w = 2 * self.num_pairs();
+        &self.pairs[l * w..(l + 1) * w]
+    }
+
+    /// Leftover (unpaired) coordinate of stage `l` for odd n.
+    #[inline]
+    pub fn stage_leftover(&self, l: usize) -> Option<usize> {
+        let v = self.leftover[l];
+        if v == NO_LEFTOVER {
+            None
+        } else {
+            Some(v as usize)
+        }
+    }
+
+    /// Orthogonal-at-init flat parameters; draws the SAME rng sequence as
+    /// the reference `Spm::init_params`, so equal seeds give bit-equal
+    /// initializations on both paths.
+    pub fn init_flat(&self, rng: &mut Rng) -> Vec<f32> {
+        let lay = self.layout;
+        let mut params = vec![0.0f32; lay.total];
+        params[lay.d_in()].fill(1.0);
+        params[lay.d_out()].fill(1.0);
+        // bias stays zero
+        let p = self.num_pairs();
+        for l in 0..self.num_stages {
+            let m = &mut params[lay.mix(l)];
+            match self.variant {
+                Variant::Rotation => {
+                    for v in m.iter_mut() {
+                        *v = rng.uniform_in(-std::f32::consts::PI, std::f32::consts::PI);
+                    }
+                }
+                Variant::General => {
+                    for k in 0..p {
+                        let th = rng.uniform_in(-std::f32::consts::PI, std::f32::consts::PI);
+                        let (s, c) = th.sin_cos();
+                        m[4 * k] = c;
+                        m[4 * k + 1] = -s;
+                        m[4 * k + 2] = s;
+                        m[4 * k + 3] = c;
+                    }
+                }
+            }
+        }
+        params[lay.lone()].fill(1.0);
+        params
+    }
+
+    /// Pack five ragged parameter groups into the flat layout. Works for
+    /// both `SpmParams` and `SpmGrads` shapes (see [`SpmPlan::pack_params`]).
+    pub fn pack(
+        &self,
+        d_in: &[f32],
+        d_out: &[f32],
+        bias: &[f32],
+        mix: &[Vec<f32>],
+        lone: &[f32],
+    ) -> Vec<f32> {
+        let lay = self.layout;
+        assert_eq!(d_in.len(), lay.n);
+        assert_eq!(d_out.len(), lay.n);
+        assert_eq!(bias.len(), lay.n);
+        assert_eq!(mix.len(), lay.num_stages);
+        assert_eq!(lone.len(), lay.num_stages);
+        let mut flat = vec![0.0f32; lay.total];
+        flat[lay.d_in()].copy_from_slice(d_in);
+        flat[lay.d_out()].copy_from_slice(d_out);
+        flat[lay.bias()].copy_from_slice(bias);
+        for (l, m) in mix.iter().enumerate() {
+            assert_eq!(m.len(), lay.mix_stride, "mix[{l}] width");
+            flat[lay.mix(l)].copy_from_slice(m);
+        }
+        flat[lay.lone()].copy_from_slice(lone);
+        flat
+    }
+
+    /// Pack reference-path parameters into the flat layout.
+    pub fn pack_params(&self, p: &SpmParams) -> Vec<f32> {
+        self.pack(&p.d_in, &p.d_out, &p.bias, &p.mix, &p.lone)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pairing::{make_schedule, Schedule};
+    use crate::spm::Spm;
+
+    #[test]
+    fn layout_groups_are_disjoint_and_total() {
+        for (n, l, variant) in
+            [(8usize, 3usize, Variant::Rotation), (9, 4, Variant::General), (64, 6, Variant::General)]
+        {
+            let lay = ParamLayout::new(n, l, variant);
+            let mut seen = vec![0u8; lay.total];
+            let mut mark = |r: Range<usize>| {
+                for i in r {
+                    seen[i] += 1;
+                }
+            };
+            mark(lay.d_in());
+            mark(lay.d_out());
+            mark(lay.bias());
+            for s in 0..l {
+                mark(lay.mix(s));
+            }
+            mark(lay.lone());
+            assert!(seen.iter().all(|&c| c == 1), "n={n} L={l} {variant:?}");
+        }
+    }
+
+    #[test]
+    fn layout_total_matches_reference_num_scalars() {
+        for (n, l, variant) in [(16usize, 4usize, Variant::Rotation), (33, 5, Variant::General)] {
+            let spec = SpmSpec::new(n, variant).with_stages(l);
+            let op = Spm::new(spec);
+            let mut rng = Rng::new(3);
+            let params = op.init_params(&mut rng);
+            let lay = ParamLayout::new(n, l, variant);
+            assert_eq!(lay.total, params.num_scalars(), "n={n} L={l} {variant:?}");
+        }
+    }
+
+    #[test]
+    fn plan_pairs_match_schedule() {
+        for schedule in [Schedule::Butterfly, Schedule::Shift, Schedule::Random] {
+            for n in [8usize, 17, 64] {
+                let spec =
+                    SpmSpec::new(n, Variant::General).with_schedule(schedule).with_stages(5).with_seed(9);
+                let plan = SpmPlan::new(spec);
+                let stages = make_schedule(schedule, n, 5, 9);
+                for (l, st) in stages.iter().enumerate() {
+                    let pairs = plan.stage_pairs(l);
+                    for k in 0..st.left.len() {
+                        assert_eq!(pairs[2 * k], st.left[k]);
+                        assert_eq!(pairs[2 * k + 1], st.right[k]);
+                    }
+                    assert_eq!(
+                        plan.stage_leftover(l),
+                        st.leftover.map(|v| v as usize),
+                        "{schedule:?} n={n} l={l}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn init_flat_matches_packed_reference_init() {
+        for variant in [Variant::Rotation, Variant::General] {
+            let spec = SpmSpec::new(21, variant).with_schedule(Schedule::Shift).with_stages(4);
+            let op = Spm::new(spec);
+            let plan = SpmPlan::new(spec);
+            let reference = op.init_params(&mut Rng::new(42));
+            let flat = plan.init_flat(&mut Rng::new(42));
+            assert_eq!(flat, plan.pack_params(&reference), "{variant:?}");
+        }
+    }
+}

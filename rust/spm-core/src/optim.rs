@@ -1,9 +1,20 @@
-//! Optimizers over flat f32 slices. Models register each parameter tensor
-//! as one "slot"; the optimizer owns per-slot moment buffers. The Adam math
-//! is identical to the in-graph Adam in python/compile/train.py so native
-//! and XLA training trajectories are comparable.
+//! Optimizers over flat f32 slices. Every `ops::LinearOp` registers its
+//! single contiguous parameter buffer as one "slot"; the optimizer owns
+//! per-slot moment buffers and updates a whole op with ONE flat kernel
+//! call (DESIGN.md §4). The Adam math is identical to the in-graph Adam in
+//! python/compile/train.py so native and XLA training trajectories are
+//! comparable.
 
-/// Plain SGD.
+/// The flat-slot optimizer contract `ops::LinearOp` builds against:
+/// register a contiguous parameter buffer once, update it in one call.
+pub trait Optimizer {
+    /// Register a flat parameter buffer; returns its slot id.
+    fn register(&mut self, len: usize) -> usize;
+    /// Update one slot from its same-length flat gradient buffer.
+    fn update(&mut self, slot: usize, params: &mut [f32], grads: &[f32]);
+}
+
+/// Plain SGD (stateless; the slot id is ignored).
 #[derive(Clone, Debug)]
 pub struct Sgd {
     pub lr: f32,
@@ -14,6 +25,52 @@ impl Sgd {
         debug_assert_eq!(params.len(), grads.len());
         for (p, g) in params.iter_mut().zip(grads) {
             *p -= self.lr * g;
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn register(&mut self, _len: usize) -> usize {
+        0
+    }
+
+    fn update(&mut self, _slot: usize, params: &mut [f32], grads: &[f32]) {
+        self.step(params, grads);
+    }
+}
+
+/// Heavy-ball momentum SGD: v = mu*v + g; p -= lr*v. One moment buffer per
+/// slot — with flat `LinearOp` storage this is a single pass over the
+/// whole op regardless of how many logical tensors it contains.
+#[derive(Clone, Debug)]
+pub struct SgdMomentum {
+    pub lr: f32,
+    pub momentum: f32,
+    v: Vec<Vec<f32>>,
+}
+
+impl SgdMomentum {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        SgdMomentum { lr, momentum, v: Vec::new() }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.v.len()
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn register(&mut self, len: usize) -> usize {
+        self.v.push(vec![0.0; len]);
+        self.v.len() - 1
+    }
+
+    fn update(&mut self, slot: usize, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        let v = &mut self.v[slot];
+        for i in 0..params.len() {
+            v[i] = self.momentum * v[i] + grads[i];
+            params[i] -= self.lr * v[i];
         }
     }
 }
@@ -73,6 +130,16 @@ impl Adam {
     }
 }
 
+impl Optimizer for Adam {
+    fn register(&mut self, len: usize) -> usize {
+        Adam::register(self, len)
+    }
+
+    fn update(&mut self, slot: usize, params: &mut [f32], grads: &[f32]) {
+        Adam::update(self, slot, params, grads)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,6 +149,45 @@ mod tests {
         let mut p = vec![1.0f32, -1.0];
         Sgd { lr: 0.1 }.step(&mut p, &[2.0, -2.0]);
         assert_eq!(p, vec![0.8, -0.8]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = SgdMomentum::new(0.1, 0.5);
+        let slot = opt.register(1);
+        let mut p = vec![0.0f32];
+        opt.update(slot, &mut p, &[1.0]); // v=1.0, p=-0.1
+        assert!((p[0] + 0.1).abs() < 1e-6);
+        opt.update(slot, &mut p, &[1.0]); // v=1.5, p=-0.25
+        assert!((p[0] + 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_converges_on_quadratic() {
+        let mut opt = SgdMomentum::new(0.05, 0.9);
+        let slot = opt.register(1);
+        let mut p = vec![0.0f32];
+        for _ in 0..300 {
+            let g = vec![2.0 * (p[0] - 3.0)];
+            opt.update(slot, &mut p, &g);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "{}", p[0]);
+    }
+
+    #[test]
+    fn trait_object_dispatch_works() {
+        // the LinearOp-facing surface: any optimizer through the trait
+        fn run(opt: &mut dyn Optimizer) -> f32 {
+            let slot = opt.register(2);
+            let mut p = vec![1.0f32, 1.0];
+            opt.update(slot, &mut p, &[1.0, -1.0]);
+            p[0]
+        }
+        assert!(run(&mut Sgd { lr: 0.1 }) < 1.0);
+        assert!(run(&mut SgdMomentum::new(0.1, 0.9)) < 1.0);
+        let mut adam = Adam::new(0.1);
+        adam.next_step();
+        assert!(run(&mut adam) < 1.0);
     }
 
     #[test]

@@ -81,7 +81,14 @@ impl Mat {
 /// parallelized over row chunks of A.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul inner dims");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+    matmul_slice(a, &b.data, b.cols)
+}
+
+/// [`matmul`] against a flat row-major (a.cols, n) right operand — the
+/// shape the flat-buffer `ops::LinearOp` stores its dense weights in.
+pub fn matmul_slice(a: &Mat, b: &[f32], n: usize) -> Mat {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!(b.len(), k * n, "matmul_slice inner dims");
     let mut c = Mat::zeros(m, n);
     const KB: usize = 64;
     parallel::for_each_chunk(&mut c.data, n, |i0, crows| {
@@ -95,7 +102,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
                     if aik == 0.0 {
                         continue;
                     }
-                    let brow = &b.data[kk * n..kk * n + n];
+                    let brow = &b[kk * n..kk * n + n];
                     for j in 0..n {
                         crow[j] += aik * brow[j];
                     }
@@ -110,13 +117,19 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 /// Dot-product kernel over contiguous rows of both operands.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt inner dims");
-    let (m, k, n) = (a.rows, a.cols, b.rows);
+    matmul_nt_slice(a, &b.data, b.rows)
+}
+
+/// [`matmul_nt`] against a flat row-major (n, a.cols) weight slice.
+pub fn matmul_nt_slice(a: &Mat, w: &[f32], n: usize) -> Mat {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!(w.len(), n * k, "matmul_nt_slice inner dims");
     let mut c = Mat::zeros(m, n);
     parallel::for_each_chunk(&mut c.data, n, |i0, crows| {
         for (di, crow) in crows.chunks_mut(n).enumerate() {
             let arow = a.row(i0 + di);
             for j in 0..n {
-                let brow = b.row(j);
+                let brow = &w[j * k..j * k + k];
                 let mut acc0 = 0.0f32;
                 let mut acc1 = 0.0f32;
                 let mut acc2 = 0.0f32;
@@ -144,11 +157,20 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 /// C = A^T (k,m)^T=(m,k)... precisely: A is (k,m), B is (k,n), returns (m,n)
 /// — the "gW = gy^T @ x" shape of a linear-layer backward.
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.cols, b.cols);
+    matmul_tn_accum(a, b, &mut c.data);
+    c
+}
+
+/// out += A^T B into a flat row-major (a.cols, b.cols) slice — lets the
+/// flat-buffer dense backward accumulate straight into its gradient
+/// buffer with no intermediate allocation.
+pub fn matmul_tn_accum(a: &Mat, b: &Mat, out: &mut [f32]) {
     assert_eq!(a.rows, b.rows, "matmul_tn inner dims");
     let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
+    assert_eq!(out.len(), m * n, "matmul_tn_accum output size");
     // accumulate rank-1 updates; parallel over output row chunks
-    parallel::for_each_chunk(&mut c.data, n, |i0, crows| {
+    parallel::for_each_chunk(out, n, |i0, crows| {
         let rows_here = crows.len() / n;
         for kk in 0..k {
             let arow = a.row(kk);
@@ -165,7 +187,6 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
             }
         }
     });
-    c
 }
 
 /// y += bias broadcast over rows.

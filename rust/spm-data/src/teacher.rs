@@ -6,7 +6,7 @@
 //! *recover* the compositional structure (paper §8.3).
 
 use spm_core::dense::Dense;
-use spm_core::models::mixer::MixerCfg;
+use spm_core::ops::LinearCfg;
 use spm_core::pairing::Schedule;
 use spm_core::rng::Rng;
 use spm_core::spm::{Spm, SpmParams, SpmSpec, Variant};
@@ -71,10 +71,10 @@ impl Teacher {
         (x, y)
     }
 
-    /// The MixerCfg a *matched* SPM student would use (same schedule family,
-    /// its own parameters).
-    pub fn student_cfg(&self) -> MixerCfg {
-        MixerCfg::spm(self.n, Variant::General).with_schedule(Schedule::Butterfly)
+    /// The LinearCfg a *matched* SPM student would use (same schedule
+    /// family, its own parameters).
+    pub fn student_cfg(&self) -> LinearCfg {
+        LinearCfg::spm(self.n, Variant::General).with_schedule(Schedule::Butterfly)
     }
 }
 

@@ -15,7 +15,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use spm_runtime::{Entry, TensorSpec};
+use crate::manifest::{Entry, TensorSpec};
 
 const MAGIC: &[u8; 8] = b"SPMCKPT1";
 
@@ -111,7 +111,7 @@ pub fn validate(ckpt: &Checkpoint, entry: &Entry) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use spm_runtime::DType;
+    use crate::manifest::DType;
     use std::collections::BTreeMap;
 
     fn toy_entry() -> Entry {

@@ -1,0 +1,292 @@
+//! XLA/PJRT experiment drivers regenerating the paper's §9 tables (plus
+//! the DESIGN.md §9 ablations Abl-L / Abl-P / Abl-V) from AOT artifacts.
+//! Each driver:
+//!
+//!   1. builds its workload through spm-data (prefetched, backpressured),
+//!   2. trains via the PJRT path (`TrainSession`, buffer-resident),
+//!   3. reports paper-style rows through spm-coordinator's metrics and
+//!      renderers, so native and XLA numbers share one source of truth.
+//!
+//! The native counterparts (`run_table1_native`, ...) live in
+//! `spm_coordinator::experiments`; this module only adds the PJRT glue.
+
+use std::sync::Arc;
+
+use spm_coordinator::config::RunConfig;
+use spm_coordinator::error::Result;
+use spm_coordinator::experiments::{CharLmRow, ClfOutcome, DataSource, render_pair_table};
+use spm_coordinator::metrics::{fmt_f, Csv, StepTimer, Table};
+use spm_coordinator::serve::{serve_with, ServeReport, ServeSpec};
+use spm_core::rng::Rng;
+use spm_data::batch::Prefetcher;
+use spm_data::charcorpus::Corpus;
+
+use crate::{Engine, HostTensor, Manifest, TrainSession};
+
+/// Train + evaluate one AOT-compiled classifier entry on a data source.
+pub fn run_clf_xla(
+    engine: &Engine,
+    manifest: &Manifest,
+    entry_name: &str,
+    data: &DataSource,
+    cfg: &RunConfig,
+) -> Result<ClfOutcome> {
+    let mut sess = TrainSession::new(engine, manifest, entry_name, &["init", "train", "eval"])?;
+    let entry_batch = sess.entry.meta_usize("batch")?;
+    let n = sess.entry.meta_usize("n")?;
+    sess.init(cfg.seed as i32)?;
+
+    // prefetch training batches on a worker thread (backpressure depth 4)
+    let data_cl = data.clone();
+    let steps = cfg.steps;
+    let mut feed = Prefetcher::new(steps, 4, move |i| {
+        let (x, y) = data_cl.batch(i, entry_batch, true);
+        (x.data, y)
+    });
+
+    let mut timer = StepTimer::new(cfg.warmup.min(steps.saturating_sub(1)));
+    let mut last_loss = f32::NAN;
+    while let Some((xv, yv)) = feed.next() {
+        let x = HostTensor::F32(xv);
+        let y = HostTensor::from_labels(&yv);
+        timer.start();
+        let (loss, _acc) = sess.train_step(&x, &y)?;
+        timer.stop();
+        last_loss = loss;
+    }
+
+    // held-out evaluation
+    let mut acc_sum = 0.0f64;
+    let mut loss_sum = 0.0f64;
+    for i in 0..cfg.eval_batches {
+        let (x, y) = data.batch(i, entry_batch, false);
+        let (l, a) = sess.eval(&HostTensor::F32(x.data), &HostTensor::from_labels(&y))?;
+        acc_sum += a as f64;
+        loss_sum += l as f64;
+    }
+    let k = cfg.eval_batches.max(1) as f64;
+    let _ = last_loss;
+    Ok(ClfOutcome {
+        label: entry_name.to_string(),
+        n,
+        acc: (acc_sum / k) as f32,
+        loss: (loss_sum / k) as f32,
+        ms_per_step: timer.ms_per_step(),
+        steps,
+    })
+}
+
+/// Table 1 (paper §9.1), XLA engine: teacher-student width sweep.
+pub fn run_table1(
+    engine: &Engine,
+    manifest: &Manifest,
+    widths: &[usize],
+    cfg: &RunConfig,
+) -> Result<String> {
+    let mut pairs = Vec::new();
+    for &n in widths {
+        let data = DataSource::Teacher { n, classes: 10, seed: 7 + n as u64 };
+        let d = run_clf_xla(engine, manifest, &format!("table1_dense_n{n}"), &data, cfg)?;
+        let s = run_clf_xla(engine, manifest, &format!("table1_spm_n{n}"), &data, cfg)?;
+        eprintln!(
+            "[table1 n={n}] dense acc {:.4} ({:.1} ms/step) | spm acc {:.4} ({:.1} ms/step)",
+            d.acc, d.ms_per_step, s.acc, s.ms_per_step
+        );
+        pairs.push((d, s));
+    }
+    render_pair_table(
+        &format!("Table 1 — compositional teacher (xla engine, {} steps)", cfg.steps),
+        &pairs,
+        &cfg.out_csv,
+    )
+}
+
+/// Table 2 (paper §9.2), XLA engine: AG-News-proxy at L=12.
+pub fn run_table2(
+    engine: &Engine,
+    manifest: &Manifest,
+    widths: &[usize],
+    cfg: &RunConfig,
+) -> Result<String> {
+    let mut pairs = Vec::new();
+    for &n in widths {
+        let data = DataSource::AgNews { n };
+        let d = run_clf_xla(engine, manifest, &format!("table2_dense_n{n}"), &data, cfg)?;
+        let s = run_clf_xla(engine, manifest, &format!("table2_spm_n{n}"), &data, cfg)?;
+        eprintln!(
+            "[table2 n={n}] dense acc {:.4} ({:.1} ms/step) | spm acc {:.4} ({:.1} ms/step)",
+            d.acc, d.ms_per_step, s.acc, s.ms_per_step
+        );
+        pairs.push((d, s));
+    }
+    render_pair_table(
+        &format!("Table 2 — AG-News proxy, L=12 (xla engine, {} steps)", cfg.steps),
+        &pairs,
+        &cfg.out_csv,
+    )
+}
+
+/// Tables 3/4 (paper §9.3): char-level LM on the Shakespeare-like corpus.
+/// `entry_name` selects dense (Table 3) or SPM (Table 4).
+pub fn run_charlm(
+    engine: &Engine,
+    manifest: &Manifest,
+    entry_name: &str,
+    cfg: &RunConfig,
+) -> Result<Vec<CharLmRow>> {
+    let mut sess = TrainSession::new(engine, manifest, entry_name, &["init", "train", "eval"])?;
+    let batch = sess.entry.meta_usize("batch")?;
+    let seq_len = sess.entry.meta_usize("seq_len")?;
+    sess.init(cfg.seed as i32)?;
+
+    let corpus = Arc::new(if cfg.steps <= 100 {
+        // CI-profile corpus keeps tests fast
+        Corpus::generate_sized(cfg.seed, 200_000, 30_000)
+    } else {
+        Corpus::generate(cfg.seed)
+    });
+
+    let c2 = corpus.clone();
+    let seed = cfg.seed;
+    let mut feed = Prefetcher::new(cfg.steps, 4, move |i| {
+        let mut rng = Rng::new(seed ^ 0xBA7C4 ^ (i as u64).wrapping_mul(0x9E37));
+        Corpus::sample_batch(&c2.train, batch, seq_len, &mut rng)
+    });
+
+    let eval_every = if cfg.eval_every == 0 { cfg.steps } else { cfg.eval_every };
+    let mut rows = Vec::new();
+    let mut timer = StepTimer::new(cfg.warmup.min(cfg.steps.saturating_sub(1)));
+    let mut csv = Csv::create(&cfg.out_csv, "step,train_nll,valid_nll,valid_bpc,ms_per_step")?;
+
+    let mut evaluate = |sess: &TrainSession, step: usize, train_nll: f32, ms: f64,
+                        rows: &mut Vec<CharLmRow>, csv: &mut Csv|
+     -> Result<()> {
+        let mut vsum = 0.0f64;
+        for i in 0..cfg.eval_batches {
+            let mut rng = Rng::new(0xEA1 ^ (i as u64 + 1).wrapping_mul(0x1234_5678));
+            let (inp, tgt) = Corpus::sample_batch(&corpus.valid, batch, seq_len, &mut rng);
+            let (l, _m) = sess.eval(&HostTensor::from_bytes(&inp), &HostTensor::from_bytes(&tgt))?;
+            vsum += l as f64;
+        }
+        let valid_nll = (vsum / cfg.eval_batches.max(1) as f64) as f32;
+        let row = CharLmRow {
+            step,
+            train_nll,
+            valid_nll,
+            valid_bpc: valid_nll / std::f32::consts::LN_2,
+            ms_per_step: ms,
+        };
+        eprintln!(
+            "[{entry_name}] step {step}: train NLL {:.3} valid NLL {:.3} BPC {:.3} ({:.0} ms/step)",
+            row.train_nll, row.valid_nll, row.valid_bpc, row.ms_per_step
+        );
+        csv.row(&[
+            step.to_string(),
+            train_nll.to_string(),
+            valid_nll.to_string(),
+            row.valid_bpc.to_string(),
+            ms.to_string(),
+        ])?;
+        rows.push(row);
+        Ok(())
+    };
+
+    let mut step = 0usize;
+    let mut train_nll = f32::NAN;
+    while let Some((inp, tgt)) = feed.next() {
+        step += 1;
+        let x = HostTensor::from_bytes(&inp);
+        let y = HostTensor::from_bytes(&tgt);
+        timer.start();
+        let (loss, _m) = sess.train_step(&x, &y)?;
+        timer.stop();
+        train_nll = loss;
+        if step == 1 || step % eval_every == 0 {
+            evaluate(&sess, step, train_nll, timer.ms_per_step(), &mut rows, &mut csv)?;
+        }
+    }
+    if rows.last().map(|r| r.step) != Some(step) {
+        evaluate(&sess, step, train_nll, timer.ms_per_step(), &mut rows, &mut csv)?;
+    }
+    Ok(rows)
+}
+
+/// Ablations (DESIGN.md §9: Abl-L / Abl-P / Abl-V): depth, pairing,
+/// variant at n=1024 on the teacher task. Entries must exist in the
+/// manifest.
+pub fn run_ablation(
+    engine: &Engine,
+    manifest: &Manifest,
+    which: &str,
+    cfg: &RunConfig,
+) -> Result<String> {
+    let n = 1024;
+    let data = DataSource::Teacher { n, classes: 10, seed: 7 + n as u64 };
+    let entries: Vec<String> = match which {
+        "depth" => [1usize, 2, 5, 10, 20].iter().map(|l| format!("abl_depth_L{l}")).collect(),
+        "pairing" => ["butterfly", "shift", "random"]
+            .iter()
+            .map(|s| format!("abl_sched_{s}"))
+            .collect(),
+        "variant" => ["rotation", "general"]
+            .iter()
+            .map(|v| format!("abl_variant_{v}"))
+            .collect(),
+        other => spm_coordinator::bail!("unknown ablation '{other}' (depth|pairing|variant)"),
+    };
+    let mut t = Table::new(&["config", "L", "params", "acc", "ms/step"]);
+    let mut csv = Csv::create(&cfg.out_csv, "config,num_stages,param_count,acc,ms_per_step")?;
+    for name in &entries {
+        let out = run_clf_xla(engine, manifest, name, &data, cfg)?;
+        let entry = manifest.entry(name)?;
+        let stages = entry.meta_usize("num_stages").unwrap_or(0);
+        let params = entry.meta_usize("param_count").unwrap_or(0);
+        eprintln!("[abl {which}] {name}: acc {:.4} ({:.1} ms/step)", out.acc, out.ms_per_step);
+        t.row(vec![
+            name.clone(),
+            stages.to_string(),
+            params.to_string(),
+            fmt_f(out.acc as f64, 4),
+            fmt_f(out.ms_per_step, 3),
+        ]);
+        csv.row(&[
+            name.clone(),
+            stages.to_string(),
+            params.to_string(),
+            out.acc.to_string(),
+            out.ms_per_step.to_string(),
+        ])?;
+    }
+    Ok(format!("Ablation: {which} (n=1024, {} steps)\n{}", cfg.steps, t.render()))
+}
+
+/// Run the serving demo against one manifest entry's `forward` artifact,
+/// through the coordinator's engine-agnostic batched router.
+/// `entry_name` must be a classifier/teacher-style model taking (B, n) f32.
+pub fn serve_demo(
+    engine: &Engine,
+    manifest: &Manifest,
+    entry_name: &str,
+    num_requests: usize,
+    num_clients: usize,
+    seed: u64,
+) -> Result<ServeReport> {
+    let mut sess = TrainSession::new(engine, manifest, entry_name, &["init", "forward"])?;
+    sess.init(seed as i32)?;
+    let batch = sess.entry.meta_usize("batch")?;
+    let n = sess.entry.meta_usize("n")?;
+    let is_teacher = sess.entry.meta_str("model") == "teacher";
+    let spec = ServeSpec { batch, n, num_requests, num_clients, seed };
+    serve_with(&spec, |flat| {
+        if is_teacher {
+            // teacher forward returns i32 labels
+            Ok(sess
+                .forward_i32(&HostTensor::F32(flat))?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect())
+        } else {
+            Ok(sess.forward(&HostTensor::F32(flat))?)
+        }
+    })
+}

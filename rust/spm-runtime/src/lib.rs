@@ -6,10 +6,14 @@
 //! training/eval/serving from rust. Python is never on this path.
 //!
 //! Modules:
-//! * [`json`]     — dependency-free JSON parser for the manifest.
-//! * [`manifest`] — typed artifact manifest (the python<->rust contract).
-//! * [`engine`]   — PJRT client wrapper + literal/buffer helpers.
-//! * [`session`]  — buffer-resident train/eval/forward sessions.
+//! * [`json`]       — dependency-free JSON parser for the manifest.
+//! * [`manifest`]   — typed artifact manifest (the python<->rust contract).
+//! * [`engine`]     — PJRT client wrapper + literal/buffer helpers.
+//! * [`session`]    — buffer-resident train/eval/forward sessions.
+//! * [`drivers`]    — XLA experiment drivers (tables, ablations, serving).
+//! * [`checkpoint`] — save/restore of device-resident training state.
+pub mod checkpoint;
+pub mod drivers;
 pub mod engine;
 pub mod json;
 pub mod manifest;

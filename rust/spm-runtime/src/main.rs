@@ -9,17 +9,19 @@
 //!
 //! Experiments: table1, table2, table3, table4, table1-native,
 //! table2-native, abl-depth, abl-pairing, abl-variant, core-scaling.
+//! The *-native experiments run the pure-rust LinearOp engine; the rest
+//! replay the AOT artifacts on the PJRT path.
 //!
 //! Common options:
 //!   --steps N --eval-every N --eval-batches N --seed N --warmup N
 //!   --csv PATH --config FILE.toml --artifacts DIR --threads N
 //!   --widths 256,512 (table1/2)
 
-use anyhow::{bail, Context, Result};
-
+use spm_coordinator::bail;
 use spm_coordinator::config::RunConfig;
-use spm_coordinator::{experiments, serve};
-use spm_runtime::{Engine, Manifest};
+use spm_coordinator::error::{Context, Result};
+use spm_coordinator::experiments;
+use spm_runtime::{drivers, Engine, Manifest};
 
 fn usage() -> ! {
     eprintln!(
@@ -147,26 +149,26 @@ fn main() -> Result<()> {
                     let man = Manifest::load(&cfg.artifacts)?;
                     if exp == "table1" {
                         let widths = parse_widths(&args, &[256, 512, 1024, 2048])?;
-                        experiments::run_table1(Some(&engine), Some(&man), &widths, &cfg, false)?
+                        drivers::run_table1(&engine, &man, &widths, &cfg)?
                     } else {
                         let widths = parse_widths(&args, &[2048, 4096])?;
-                        experiments::run_table2(Some(&engine), Some(&man), &widths, &cfg, false)?
+                        drivers::run_table2(&engine, &man, &widths, &cfg)?
                     }
                 }
                 "table1-native" => {
                     let widths = parse_widths(&args, &[256, 512, 1024, 2048])?;
-                    experiments::run_table1(None, None, &widths, &cfg, true)?
+                    experiments::run_table1_native(&widths, &cfg)?
                 }
                 "table2-native" => {
                     let widths = parse_widths(&args, &[2048, 4096])?;
-                    experiments::run_table2(None, None, &widths, &cfg, true)?
+                    experiments::run_table2_native(&widths, &cfg)?
                 }
                 "table3" | "table4" => {
                     let engine = Engine::cpu()?;
                     let man = Manifest::load(&cfg.artifacts)?;
                     let entry =
                         if exp == "table3" { "charlm_dense_d4096" } else { "charlm_spm_d4096" };
-                    let rows = experiments::run_charlm(&engine, &man, entry, &cfg)?;
+                    let rows = drivers::run_charlm(&engine, &man, entry, &cfg)?;
                     experiments::render_charlm_table(
                         &format!(
                             "{} — char-LM {} (d=4096)",
@@ -179,7 +181,7 @@ fn main() -> Result<()> {
                 "abl-depth" | "abl-pairing" | "abl-variant" => {
                     let engine = Engine::cpu()?;
                     let man = Manifest::load(&cfg.artifacts)?;
-                    experiments::run_ablation(&engine, &man, &exp[4..], &cfg)?
+                    drivers::run_ablation(&engine, &man, &exp[4..], &cfg)?
                 }
                 "core-scaling" => {
                     let widths = parse_widths(&args, &[256, 512, 1024, 2048, 4096])?;
@@ -201,8 +203,8 @@ fn main() -> Result<()> {
             let mut sess = spm_runtime::TrainSession::new(
                 &engine, &man, entry_name, &["init", "train", "eval"])?;
             if let Some(path) = args.options.get("load") {
-                let ck = spm_coordinator::checkpoint::load(std::path::Path::new(path))?;
-                spm_coordinator::checkpoint::validate(&ck, &sess.entry)?;
+                let ck = spm_runtime::checkpoint::load(std::path::Path::new(path))?;
+                spm_runtime::checkpoint::validate(&ck, &sess.entry)?;
                 let leaves: Vec<Vec<f32>> = ck.leaves.into_iter().map(|(_, d)| d).collect();
                 sess.load_params(&leaves)?;
                 println!("resumed from {path}");
@@ -224,7 +226,7 @@ fn main() -> Result<()> {
             }
             if let Some(path) = args.options.get("save") {
                 let leaves = sess.params_host()?;
-                spm_coordinator::checkpoint::save(
+                spm_runtime::checkpoint::save(
                     std::path::Path::new(path), &sess.entry, &leaves)?;
                 println!("saved checkpoint to {path}");
             }
@@ -238,17 +240,19 @@ fn main() -> Result<()> {
                 .options
                 .get("requests")
                 .map(|v| v.parse())
-                .transpose()?
+                .transpose()
+                .context("--requests")?
                 .unwrap_or(512);
             let clients: usize = args
                 .options
                 .get("clients")
                 .map(|v| v.parse())
-                .transpose()?
+                .transpose()
+                .context("--clients")?
                 .unwrap_or(4);
             let engine = Engine::cpu()?;
             let man = Manifest::load(&cfg.artifacts)?;
-            let report = serve::serve_demo(&engine, &man, entry, requests, clients, cfg.seed)?;
+            let report = drivers::serve_demo(&engine, &man, entry, requests, clients, cfg.seed)?;
             println!("{report}");
         }
         _ => usage(),
