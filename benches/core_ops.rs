@@ -1,102 +1,322 @@
 //! Bench: raw operator complexity (paper §5) — native single-thread SPM
-//! stage cost O(nL) vs dense matmul O(n^2), the planned-vs-reference SPM
-//! comparison (flat-buffer `LinearOp`/`SpmPlan` against the `spm.rs`
-//! closed-form path), plus per-stage fwd/bwd micro timings.
+//! stage cost O(nL) vs dense matmul O(n^2), the three-way SPM comparison
+//! (reference `spm.rs` closed form vs the planned row-wise path vs the
+//! batch-fused stage kernels, DESIGN.md §11), plus per-stage fwd/bwd
+//! micro timings.
+//!
+//! Also buildable as an example (same file, see spm-coordinator's
+//! Cargo.toml) so CI can drive a reduced pass with plain `cargo run`:
+//!
+//! ```text
+//! cargo run --release -p spm-coordinator --example core_ops -- \
+//!     --sizes 256,1024 --json BENCH_core_ops.json --check
+//! ```
+//!
+//! Flags: `--sizes a,b,c` widths for both tables (defaults when absent:
+//! 256,512,1024,2048,4096 for the scaling table — the full PR-1 sweep —
+//! and 256,1024,4096 for the three-way SPM table);
+//! `--batch B` (default 64); `--json <path>` writes the scaling and
+//! three-way tables as machine-readable JSON (the perf trajectory CI
+//! records); `--check` exits non-zero if the batch-fused planned path is
+//! slower than the reference path — or loses forward parity — at n=1024
+//! (falling back to the largest benched width when 1024 is not in
+//! `--sizes`).
 
-use spm_core::ops::{LinearCfg, LinearOp};
+use spm_core::ops::{LinearCfg, LinearOp, SpmExec};
 use spm_core::optim::Adam;
 use spm_core::rng::Rng;
 use spm_core::spm::{Spm, SpmSpec, Variant};
 use spm_core::tensor::Mat;
-use spm_coordinator::experiments;
+use spm_coordinator::experiments::{self, ScalingRow};
 use std::time::Instant;
 
 fn ms_per(t0: Instant, reps: usize) -> f64 {
     t0.elapsed().as_secs_f64() * 1e3 / reps as f64
 }
 
-fn main() {
-    // headline scaling table (§5: O(nL) vs O(n^2))
-    println!("{}", experiments::run_core_scaling(&[256, 512, 1024, 2048, 4096], 64));
-
-    spm_core::parallel::set_threads(1);
-    let batch = 64;
-
-    // planned (LinearOp/SpmPlan flat buffers) vs reference (spm.rs) paths
-    println!("\nplanned vs reference SPM (batch={batch}, single thread, general variant)");
-    println!(
-        "{:<8} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
-        "n", "ref fwd ms", "plan fwd ms", "fwd x", "ref bwd ms", "plan bwd ms", "bwd x"
-    );
-    for n in [256usize, 1024, 4096] {
-        let mut rng = Rng::new(1);
-        let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
-        let spec = SpmSpec::new(n, Variant::General);
-        let reference = Spm::new(spec);
-        let ref_params = reference.init_params(&mut rng);
-        let mut adam = Adam::new(1e-3);
-        let mut planned = LinearOp::new(LinearCfg::spm(n, Variant::General), &mut rng, &mut adam);
-        let reps = (60_000_000 / (batch * n * spec.num_stages).max(1)).clamp(3, 40);
-
-        let t0 = Instant::now();
-        for _ in 0..reps {
-            let _ = reference.forward(&ref_params, &x);
-        }
-        let ref_fwd = ms_per(t0, reps);
-        let t1 = Instant::now();
-        for _ in 0..reps {
-            let _ = planned.forward(&x);
-        }
-        let plan_fwd = ms_per(t1, reps);
-
-        let (y, ref_trace) = reference.forward_trace(&ref_params, &x);
-        let t2 = Instant::now();
-        for _ in 0..reps {
-            let _ = reference.backward(&ref_params, &x, &ref_trace, &y);
-        }
-        let ref_bwd = ms_per(t2, reps);
-        let (yp, plan_trace) = planned.forward_train(&x);
-        let t3 = Instant::now();
-        for _ in 0..reps {
-            let _ = planned.backward(&x, &plan_trace, &yp);
-        }
-        let plan_bwd = ms_per(t3, reps);
-
-        println!(
-            "{:<8} {:>12.3} {:>12.3} {:>7.2}x {:>12.3} {:>12.3} {:>7.2}x",
-            n,
-            ref_fwd,
-            plan_fwd,
-            ref_fwd / plan_fwd,
-            ref_bwd,
-            plan_bwd,
-            ref_bwd / plan_bwd
-        );
+fn time_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
     }
+    ms_per(t0, reps)
+}
 
-    // per-variant stage micro-bench at n=4096 (reference path)
-    let n = 4096;
+/// One three-way comparison row at a given width (general variant).
+struct SpmRow {
+    n: usize,
+    variant: &'static str,
+    ref_fwd: f64,
+    ref_bwd: f64,
+    row_fwd: f64,
+    row_bwd: f64,
+    fused_fwd: f64,
+    fused_bwd: f64,
+    /// forward max-abs-diff vs the reference path, per planned path
+    row_fwd_diff: f32,
+    fused_fwd_diff: f32,
+}
+
+struct Args {
+    /// `--sizes` when given; otherwise each table keeps its own default
+    /// (scaling: the full PR-1 sweep at {256,512,1024,2048,4096}; the
+    /// three-way SPM table: {256,1024,4096}).
+    sizes: Option<Vec<usize>>,
+    batch: usize,
+    json: Option<String>,
+    check: bool,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().collect();
+    let get = |key: &str| argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1));
+    Args {
+        sizes: get("--sizes")
+            .map(|s| s.split(',').map(|w| w.parse().expect("--sizes: bad width")).collect()),
+        batch: get("--batch").map(|s| s.parse().expect("--batch: bad count")).unwrap_or(64),
+        json: get("--json").cloned(),
+        check: argv.iter().any(|a| a == "--check"),
+    }
+}
+
+fn bench_spm_row(n: usize, batch: usize) -> SpmRow {
+    let variant = Variant::General;
     let mut rng = Rng::new(1);
     let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
-    println!("\nper-op micro (n={n}, batch={batch}, single thread)");
-    println!("{:<28} {:>10}", "op", "ms/call");
-    for variant in [Variant::Rotation, Variant::General] {
-        let op = Spm::new(SpmSpec::new(n, variant));
-        let params = op.init_params(&mut rng);
-        let reps = 10;
-        let t0 = Instant::now();
-        for _ in 0..reps {
-            let _ = op.forward(&params, &x);
+    let spec = SpmSpec::new(n, variant);
+    let reps = (60_000_000 / (batch * n * spec.num_stages).max(1)).clamp(3, 40);
+
+    // identical seeds -> bit-equal parameters on all three paths
+    let reference = Spm::new(spec);
+    let ref_params = reference.init_params(&mut Rng::new(7));
+    let mut adam = Adam::new(1e-3);
+    let cfg = LinearCfg::spm(n, variant);
+    let mut rowwise = LinearOp::new(cfg, &mut Rng::new(7), &mut adam);
+    rowwise.set_exec(SpmExec::RowWise);
+    let mut fused = LinearOp::new(cfg, &mut Rng::new(7), &mut adam);
+    fused.set_exec(SpmExec::BatchFused);
+
+    let ref_fwd = time_ms(reps, || {
+        let _ = reference.forward(&ref_params, &x);
+    });
+    let row_fwd = time_ms(reps, || {
+        let _ = rowwise.forward(&x);
+    });
+    let fused_fwd = time_ms(reps, || {
+        let _ = fused.forward(&x);
+    });
+    let ref_y = reference.forward(&ref_params, &x);
+    let row_fwd_diff = rowwise.forward(&x).max_abs_diff(&ref_y);
+    let fused_fwd_diff = fused.forward(&x).max_abs_diff(&ref_y);
+
+    let (y, ref_trace) = reference.forward_trace(&ref_params, &x);
+    let ref_bwd = time_ms(reps, || {
+        let _ = reference.backward(&ref_params, &x, &ref_trace, &y);
+    });
+    let (yr, row_trace) = rowwise.forward_train(&x);
+    let row_bwd = time_ms(reps, || {
+        let _ = rowwise.backward(&x, &row_trace, &yr);
+    });
+    let (yf, fused_trace) = fused.forward_train(&x);
+    let fused_bwd = time_ms(reps, || {
+        let _ = fused.backward(&x, &fused_trace, &yf);
+    });
+
+    SpmRow {
+        n,
+        variant: variant.name(),
+        ref_fwd,
+        ref_bwd,
+        row_fwd,
+        row_bwd,
+        fused_fwd,
+        fused_bwd,
+        row_fwd_diff,
+        fused_fwd_diff,
+    }
+}
+
+fn print_spm_table(rows: &[SpmRow], batch: usize) {
+    println!("\nreference vs planned row-wise vs batch-fused SPM (batch={batch}, single thread, general variant)");
+    println!(
+        "{:<7} {:>11} {:>11} {:>11} {:>8} {:>8} {:>11} {:>11} {:>11} {:>8} {:>8}",
+        "n",
+        "ref fwd",
+        "row fwd",
+        "fused fwd",
+        "f/ref x",
+        "f/row x",
+        "ref bwd",
+        "row bwd",
+        "fused bwd",
+        "f/ref x",
+        "f/row x"
+    );
+    for r in rows {
+        println!(
+            "{:<7} {:>11.3} {:>11.3} {:>11.3} {:>7.2}x {:>7.2}x {:>11.3} {:>11.3} {:>11.3} {:>7.2}x {:>7.2}x",
+            r.n,
+            r.ref_fwd,
+            r.row_fwd,
+            r.fused_fwd,
+            r.ref_fwd / r.fused_fwd,
+            r.row_fwd / r.fused_fwd,
+            r.ref_bwd,
+            r.row_bwd,
+            r.fused_bwd,
+            r.ref_bwd / r.fused_bwd,
+            r.row_bwd / r.fused_bwd,
+        );
+    }
+}
+
+/// JSON number or `null` — non-finite floats (a NaN parity diff from a
+/// broken kernel, an inf ratio) must not corrupt the artifact that is
+/// supposed to explain the failure.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Hand-rolled JSON (the default workspace is dependency-free): one object
+/// with the run setup, the §5 scaling rows, and the three-way SPM rows.
+fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"core_ops\",\n");
+    let _ = writeln!(s, "  \"batch\": {batch},");
+    s.push_str("  \"core_scaling\": [\n");
+    for (i, r) in scaling.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"n\": {}, \"dense_fwd_ms\": {:.6}, \"spm_fwd_ms\": {:.6}, \"ratio\": {}}}",
+            r.n,
+            r.dense_ms,
+            r.spm_ms,
+            json_num(r.dense_ms / r.spm_ms)
+        );
+        s.push_str(if i + 1 < scaling.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ],\n  \"planned_vs_reference\": [\n");
+    let mut first = true;
+    for r in rows {
+        let paths: [(&str, f64, f64, f32); 3] = [
+            ("reference", r.ref_fwd, r.ref_bwd, 0.0),
+            ("rowwise", r.row_fwd, r.row_bwd, r.row_fwd_diff),
+            ("fused", r.fused_fwd, r.fused_bwd, r.fused_fwd_diff),
+        ];
+        for (path, fwd, bwd, diff) in paths {
+            if !first {
+                s.push_str(",\n");
+            }
+            first = false;
+            let _ = write!(
+                s,
+                "    {{\"n\": {}, \"variant\": \"{}\", \"path\": \"{}\", \"fwd_ms\": {:.6}, \"bwd_ms\": {:.6}, \"fwd_speedup_vs_ref\": {}, \"bwd_speedup_vs_ref\": {}, \"fwd_max_abs_diff_vs_ref\": {}}}",
+                r.n,
+                r.variant,
+                path,
+                fwd,
+                bwd,
+                json_num(r.ref_fwd / fwd),
+                json_num(r.ref_bwd / bwd),
+                json_num(diff as f64)
+            );
         }
-        let fwd = ms_per(t0, reps);
-        let (y, trace) = op.forward_trace(&params, &x);
-        let t1 = Instant::now();
-        for _ in 0..reps {
-            let _ = op.backward(&params, &x, &trace, &y);
+    }
+    s.push_str("\n  ]\n}\n");
+    s
+}
+
+/// The CI gate: the batch-fused planned path must not be slower than the
+/// reference path (and must keep forward parity) at n=1024, or at the
+/// largest benched width when 1024 was not requested. A 10% timing
+/// margin absorbs shared-runner noise: the fused path wins by >1.5x when
+/// healthy, so anything inside the margin is a real regression signal,
+/// not jitter.
+const CHECK_NOISE_MARGIN: f64 = 1.10;
+
+fn check_trajectory(rows: &[SpmRow]) -> Result<(), String> {
+    let r = rows
+        .iter()
+        .find(|r| r.n == 1024)
+        .or_else(|| rows.iter().max_by_key(|r| r.n))
+        .ok_or("no SPM rows benched")?;
+    if r.fused_fwd > r.ref_fwd * CHECK_NOISE_MARGIN {
+        return Err(format!(
+            "planned (fused) forward slower than reference at n={}: {:.3} ms vs {:.3} ms",
+            r.n, r.fused_fwd, r.ref_fwd
+        ));
+    }
+    if !(r.fused_fwd_diff.is_finite() && r.fused_fwd_diff < 1e-3) {
+        return Err(format!(
+            "fused forward parity broke at n={}: max|diff| = {:.3e}",
+            r.n, r.fused_fwd_diff
+        ));
+    }
+    println!(
+        "\ncheck: fused fwd {:.3} ms <= ref fwd {:.3} ms at n={}, max|diff| {:.3e} — OK",
+        r.fused_fwd, r.ref_fwd, r.n, r.fused_fwd_diff
+    );
+    Ok(())
+}
+
+fn main() {
+    let args = parse_args();
+    let scaling_sizes = args.sizes.clone().unwrap_or_else(|| vec![256, 512, 1024, 2048, 4096]);
+    let spm_sizes = args.sizes.clone().unwrap_or_else(|| vec![256, 1024, 4096]);
+
+    // headline scaling table (§5: O(nL) vs O(n^2))
+    let scaling = experiments::core_scaling_rows(&scaling_sizes, args.batch);
+    println!("{}", experiments::render_scaling_table(&scaling, args.batch));
+
+    spm_core::parallel::set_threads(1);
+
+    // reference (spm.rs) vs planned row-wise vs planned batch-fused
+    let spm_rows: Vec<SpmRow> = spm_sizes.iter().map(|&n| bench_spm_row(n, args.batch)).collect();
+    print_spm_table(&spm_rows, args.batch);
+
+    // per-variant stage micro-bench at the largest width (reference path)
+    if let Some(&n) = spm_sizes.iter().max() {
+        let batch = args.batch;
+        let mut rng = Rng::new(1);
+        let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+        println!("\nper-op micro (n={n}, batch={batch}, single thread)");
+        println!("{:<28} {:>10}", "op", "ms/call");
+        for variant in [Variant::Rotation, Variant::General] {
+            let op = Spm::new(SpmSpec::new(n, variant));
+            let params = op.init_params(&mut rng);
+            let stages = op.spec.num_stages;
+            let fwd = time_ms(10, || {
+                let _ = op.forward(&params, &x);
+            });
+            let (y, trace) = op.forward_trace(&params, &x);
+            let bwd = time_ms(10, || {
+                let _ = op.backward(&params, &x, &trace, &y);
+            });
+            println!("{:<28} {:>10.3}", format!("spm {} fwd (L={stages})", variant.name()), fwd);
+            println!("{:<28} {:>10.3}", format!("spm {} bwd (L={stages})", variant.name()), bwd);
         }
-        let bwd = ms_per(t1, reps);
-        println!("{:<28} {:>10.3}", format!("spm {} fwd (L=12)", variant.name()), fwd);
-        println!("{:<28} {:>10.3}", format!("spm {} bwd (L=12)", variant.name()), bwd);
     }
     spm_core::parallel::set_threads(0);
+
+    if let Some(path) = &args.json {
+        std::fs::write(path, to_json(&scaling, &spm_rows, args.batch))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("\nwrote {path}");
+    }
+
+    if args.check {
+        enforce_trajectory(&spm_rows);
+    }
+}
+
+fn enforce_trajectory(rows: &[SpmRow]) {
+    if let Err(msg) = check_trajectory(rows) {
+        eprintln!("check FAILED: {msg}");
+        std::process::exit(1);
+    }
 }

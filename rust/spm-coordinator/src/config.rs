@@ -11,7 +11,7 @@
 
 use std::collections::BTreeMap;
 
-use spm_core::ops::{LinearCfg, LinearKind};
+use spm_core::ops::{LinearCfg, LinearKind, SpmExec};
 use spm_core::pairing::Schedule;
 use spm_core::spm::Variant;
 
@@ -112,6 +112,10 @@ pub struct OpConfig {
     pub schedule: Schedule,
     /// None = paper default log2(n)
     pub num_stages: Option<usize>,
+    /// SPM stage-loop execution path (`"fused"` default, `"rowwise"` for
+    /// the PR-1 comparison path); applied by the native drivers via
+    /// `LinearOp::set_exec` after construction.
+    pub exec: SpmExec,
 }
 
 impl Default for OpConfig {
@@ -121,6 +125,7 @@ impl Default for OpConfig {
             variant: Variant::General,
             schedule: Schedule::Butterfly,
             num_stages: None,
+            exec: SpmExec::BatchFused,
         }
     }
 }
@@ -149,6 +154,10 @@ impl OpConfig {
                 bail!("[op] stages must be >= 1");
             }
             self.num_stages = Some(l);
+        }
+        if let Some(v) = map.get("exec") {
+            let s = v.as_str().context("[op] exec must be a string")?;
+            self.exec = SpmExec::parse(s).with_context(|| format!("[op] exec '{s}'"))?;
         }
         Ok(())
     }
@@ -312,6 +321,17 @@ fast = true
         let doc = parse_toml("[op]\nvariant = \"diagonal\"\n").unwrap();
         let mut rc = RunConfig::default();
         assert!(rc.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn op_config_exec_path() {
+        let doc = parse_toml("[op]\nexec = \"rowwise\"\n").unwrap();
+        let mut rc = RunConfig::default();
+        assert_eq!(rc.op.exec, SpmExec::BatchFused);
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.op.exec, SpmExec::RowWise);
+        let bad = parse_toml("[op]\nexec = \"gpu\"\n").unwrap();
+        assert!(rc.apply_toml(&bad).is_err());
     }
 
     #[test]

@@ -87,6 +87,9 @@ pub fn run_clf_native(
 ) -> Result<ClfOutcome> {
     let n = op_cfg.n();
     let mut clf = Classifier::new(op_cfg, classes, 1e-3, cfg.seed ^ 0xC1A55);
+    // `[op] exec` selects the SPM stage-loop path (fused default); the
+    // head is rectangular dense and ignores it.
+    clf.mixer.set_exec(cfg.op.exec);
     let data_cl = data.clone();
     let steps = cfg.steps;
     let mut feed = Prefetcher::new(steps, 4, move |i| data_cl.batch(i, batch, true));
@@ -258,12 +261,22 @@ pub fn render_charlm_table(title: &str, rows: &[CharLmRow]) -> String {
     format!("{title}\n{}", t.render())
 }
 
+/// One row of the §5 operator-scaling micro-benchmark — structured so the
+/// bench's `--json` mode can serialize the perf trajectory instead of only
+/// printing it.
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub n: usize,
+    pub dense_ms: f64,
+    pub spm_ms: f64,
+}
+
 /// Native micro-benchmark of the raw operator complexity claim (§5):
 /// SPM stage cost O(nL) vs dense O(n^2) forward, single thread, both
 /// through the planned `LinearOp` layer.
-pub fn run_core_scaling(widths: &[usize], batch: usize) -> String {
+pub fn core_scaling_rows(widths: &[usize], batch: usize) -> Vec<ScalingRow> {
     spm_core::parallel::set_threads(1);
-    let mut t = Table::new(&["n", "dense fwd ms", "spm fwd ms (L=log2 n)", "ratio"]);
+    let mut rows = Vec::with_capacity(widths.len());
     for &n in widths {
         let mut rng = Rng::new(1);
         let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
@@ -278,10 +291,30 @@ pub fn run_core_scaling(widths: &[usize], batch: usize) -> String {
             }
             t0.elapsed().as_secs_f64() * 1e3 / reps as f64
         };
-        let dm = time_it(&dense);
-        let sm = time_it(&spm);
-        t.row(vec![n.to_string(), fmt_f(dm, 3), fmt_f(sm, 3), fmt_f(dm / sm, 2)]);
+        let dense_ms = time_it(&dense);
+        let spm_ms = time_it(&spm);
+        rows.push(ScalingRow { n, dense_ms, spm_ms });
     }
     spm_core::parallel::set_threads(0);
+    rows
+}
+
+/// Render [`core_scaling_rows`] as the paper's scaling table.
+pub fn render_scaling_table(rows: &[ScalingRow], batch: usize) -> String {
+    let mut t = Table::new(&["n", "dense fwd ms", "spm fwd ms (L=log2 n)", "ratio"]);
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            fmt_f(r.dense_ms, 3),
+            fmt_f(r.spm_ms, 3),
+            fmt_f(r.dense_ms / r.spm_ms, 2),
+        ]);
+    }
     format!("Core op scaling (batch={batch}, single thread)\n{}", t.render())
+}
+
+/// [`core_scaling_rows`] + [`render_scaling_table`] in one call (the XLA
+/// drivers and tests that only want the printable table).
+pub fn run_core_scaling(widths: &[usize], batch: usize) -> String {
+    render_scaling_table(&core_scaling_rows(widths, batch), batch)
 }

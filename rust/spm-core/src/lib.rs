@@ -14,6 +14,15 @@
 //!
 //! The XLA/PJRT execution path lives in `spm-runtime`; this crate is the
 //! reference/native engine the benches and property tests run against.
+
+// The stage kernels and closed-form backwards index several slices in
+// lockstep through a shared pair table (`z[i]`/`z[j]`/`g[i]`/`g[j]` at
+// indices drawn from the schedule); rewriting them as iterator chains
+// obscures the paper's equation numbering, so the range-loop style lint
+// is off crate-wide. Everything else clippy flags is a hard error in CI
+// (see ci.sh and the workflow's strict clippy step).
+#![allow(clippy::needless_range_loop)]
+
 pub mod dense;
 pub mod loss;
 pub mod models;
@@ -27,7 +36,7 @@ pub mod tensor;
 pub mod testkit;
 
 pub use dense::Dense;
-pub use ops::{LinearCfg, LinearKind, LinearOp, LinearTrace, SpmPlan};
+pub use ops::{LinearCfg, LinearKind, LinearOp, LinearTrace, SpmExec, SpmPlan};
 pub use pairing::Schedule;
 pub use rng::Rng;
 pub use spm::{Spm, SpmParams, SpmSpec, Variant};

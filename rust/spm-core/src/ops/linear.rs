@@ -45,6 +45,38 @@ impl LinearKind {
     }
 }
 
+/// How an SPM op executes its stage loop (DESIGN.md §11). Dense ops
+/// ignore this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SpmExec {
+    /// One batch row at a time through all stages — the PR-1 path, kept
+    /// for the bench's row-wise/batch-fused/reference comparison. Re-reads
+    /// each stage's pair table and 2x2 coefficients once per row.
+    RowWise,
+    /// Pair-major batch-fused stage kernels over L2-sized row tiles
+    /// (`SpmPlan::fused_rows`): indices and coefficients load once per
+    /// pair and stream down the `i`/`j` columns of the whole tile.
+    #[default]
+    BatchFused,
+}
+
+impl SpmExec {
+    pub fn parse(s: &str) -> Option<SpmExec> {
+        match s {
+            "rowwise" => Some(SpmExec::RowWise),
+            "fused" => Some(SpmExec::BatchFused),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpmExec::RowWise => "rowwise",
+            SpmExec::BatchFused => "fused",
+        }
+    }
+}
+
 /// Construction-time description of a linear map. Square maps may be dense
 /// or SPM; rectangular maps (heads, read-outs) are always dense — the
 /// paper's drop-in-replacement boundary (§2, §6.2, §7.2).
@@ -142,6 +174,7 @@ pub struct LinearOp {
     params: Vec<f32>,
     grads: Vec<f32>,
     slot: usize,
+    exec: SpmExec,
 }
 
 impl LinearOp {
@@ -165,7 +198,24 @@ impl LinearOp {
         };
         let grads = vec![0.0; params.len()];
         let slot = opt.register(params.len());
-        LinearOp { imp, d_in: cfg.d_in, d_out: cfg.d_out, params, grads, slot }
+        LinearOp {
+            imp,
+            d_in: cfg.d_in,
+            d_out: cfg.d_out,
+            params,
+            grads,
+            slot,
+            exec: SpmExec::default(),
+        }
+    }
+
+    /// Select the SPM stage-loop execution path (no-op for dense ops).
+    pub fn set_exec(&mut self, exec: SpmExec) {
+        self.exec = exec;
+    }
+
+    pub fn exec(&self) -> SpmExec {
+        self.exec
     }
 
     pub fn kind(&self) -> LinearKind {
@@ -239,7 +289,7 @@ impl LinearOp {
                 tensor::add_bias(&mut y, &params[wlen..]);
                 y
             }
-            OpImpl::Spm(plan) => spm_forward(plan, params, x),
+            OpImpl::Spm(plan) => spm_forward(plan, self.exec, params, x),
         }
     }
 
@@ -247,7 +297,7 @@ impl LinearOp {
     pub fn forward_train(&self, x: &Mat) -> (Mat, LinearTrace) {
         match &self.imp {
             OpImpl::Dense => (self.forward(x), LinearTrace::Dense),
-            OpImpl::Spm(plan) => spm_forward_trace(plan, &self.params, x),
+            OpImpl::Spm(plan) => spm_forward_trace(plan, self.exec, &self.params, x),
         }
     }
 
@@ -272,14 +322,15 @@ impl LinearOp {
                 gx
             }
             (OpImpl::Spm(plan), LinearTrace::Rotation { z_last }) => {
-                let (gx, partial) = spm_backward_rotation(plan, &self.params, x, z_last, gy);
+                let (gx, partial) =
+                    spm_backward_rotation(plan, self.exec, &self.params, x, z_last, gy);
                 for (g, p) in self.grads.iter_mut().zip(&partial) {
                     *g += p;
                 }
                 gx
             }
             (OpImpl::Spm(plan), LinearTrace::General { zs }) => {
-                let (gx, partial) = spm_backward_general(plan, &self.params, x, zs, gy);
+                let (gx, partial) = spm_backward_general(plan, self.exec, &self.params, x, zs, gy);
                 for (g, p) in self.grads.iter_mut().zip(&partial) {
                     *g += p;
                 }
@@ -347,7 +398,211 @@ fn stage_fwd(plan: &SpmPlan, params: &[f32], trig: &[f32], lone: &[f32], l: usiz
     }
 }
 
-fn spm_forward(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
+/// Apply stage `l` to a row-major `(rows x n)` activation block, walking
+/// the stage's pair table PAIR-MAJOR (DESIGN.md §11): the `(i, j)` indices
+/// and the 2x2 coefficients are loaded once per pair and streamed down
+/// columns `i` and `j` of every row in the block, so the table reads
+/// amortize over the batch instead of being re-read per row. The general
+/// variant's lone lane is a single strided column scale at the end.
+#[inline]
+fn stage_fwd_batch(plan: &SpmPlan, params: &[f32], trig: &[f32], l: usize, block: &mut [f32]) {
+    let n = plan.n;
+    let pairs = plan.stage_pairs(l);
+    let p = pairs.len() / 2;
+    match plan.variant {
+        Variant::Rotation => {
+            let cs = &trig[2 * p * l..2 * p * (l + 1)];
+            for k in 0..p {
+                let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+                let (c, s) = (cs[2 * k], cs[2 * k + 1]);
+                let mut off = 0;
+                while off < block.len() {
+                    let x1 = block[off + i];
+                    let x2 = block[off + j];
+                    block[off + i] = c * x1 - s * x2; // eq. (5)
+                    block[off + j] = s * x1 + c * x2; // eq. (6)
+                    off += n;
+                }
+            }
+            // leftover passes through (keeps the stage orthogonal)
+        }
+        Variant::General => {
+            let m = &params[plan.layout.mix(l)];
+            for k in 0..p {
+                let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+                let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
+                let mut off = 0;
+                while off < block.len() {
+                    let x1 = block[off + i];
+                    let x2 = block[off + j];
+                    block[off + i] = a * x1 + b * x2; // eq. (10)
+                    block[off + j] = c * x1 + d * x2; // eq. (11)
+                    off += n;
+                }
+            }
+            if let Some(lv) = plan.stage_leftover(l) {
+                let s = params[plan.layout.lone()][l];
+                let mut off = 0;
+                while off < block.len() {
+                    block[off + lv] *= s;
+                    off += n;
+                }
+            }
+        }
+    }
+}
+
+/// Reverse one GENERAL stage over a `(rows x n)` adjoint block `g`, with
+/// `zin` the matching rows of the stage INPUT from the trace. Pair-major
+/// like [`stage_fwd_batch`]; the four coefficient gradients (eq. 14)
+/// accumulate across the block's rows into scalars before one write each
+/// into `grads`, and the adjoint is propagated by eqs. (12)-(13).
+#[inline]
+fn stage_bwd_batch(
+    plan: &SpmPlan,
+    params: &[f32],
+    l: usize,
+    g: &mut [f32],
+    zin: &[f32],
+    grads: &mut [f32],
+) {
+    let n = plan.n;
+    let lay = plan.layout;
+    let pairs = plan.stage_pairs(l);
+    let p = pairs.len() / 2;
+    let m = &params[lay.mix(l)];
+    let o_mix = lay.mix(l).start;
+    for k in 0..p {
+        let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+        let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
+        let (mut ga, mut gb, mut gc, mut gd) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut off = 0;
+        while off < g.len() {
+            let (x1, x2) = (zin[off + i], zin[off + j]);
+            let (d1, d2) = (g[off + i], g[off + j]);
+            // eq. (14)
+            ga += d1 * x1;
+            gb += d1 * x2;
+            gc += d2 * x1;
+            gd += d2 * x2;
+            // eqs. (12)-(13)
+            g[off + i] = a * d1 + c * d2;
+            g[off + j] = b * d1 + d * d2;
+            off += n;
+        }
+        grads[o_mix + 4 * k] += ga;
+        grads[o_mix + 4 * k + 1] += gb;
+        grads[o_mix + 4 * k + 2] += gc;
+        grads[o_mix + 4 * k + 3] += gd;
+    }
+    if let Some(lv) = plan.stage_leftover(l) {
+        let s = params[lay.lone()][l];
+        let mut gl = 0.0f32;
+        let mut off = 0;
+        while off < g.len() {
+            gl += g[off + lv] * zin[off + lv];
+            g[off + lv] *= s;
+            off += n;
+        }
+        grads[lay.lone().start + l] += gl;
+    }
+}
+
+/// Reverse one ROTATION stage over a `(rows x n)` block: transpose-applies
+/// the stage to BOTH the adjoint block `g` (eqs. 7-8) and the activation
+/// block `z` (`z_{l-1} = B_l^T z_l`, so stage inputs are recomputed, not
+/// stored), while the theta gradient (eq. 9 in output form, DESIGN.md §8)
+/// accumulates across rows into a scalar before one write into `grads`.
+#[inline]
+fn stage_bwd_batch_rotation(
+    plan: &SpmPlan,
+    trig: &[f32],
+    l: usize,
+    g: &mut [f32],
+    z: &mut [f32],
+    grads: &mut [f32],
+) {
+    let n = plan.n;
+    let pairs = plan.stage_pairs(l);
+    let p = pairs.len() / 2;
+    let cs = &trig[2 * p * l..2 * p * (l + 1)];
+    let o_mix = plan.layout.mix(l).start;
+    for k in 0..p {
+        let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+        let (c, s) = (cs[2 * k], cs[2 * k + 1]);
+        let mut gth = 0.0f32;
+        let mut off = 0;
+        while off < g.len() {
+            let (y1, y2) = (z[off + i], z[off + j]);
+            let (d1, d2) = (g[off + i], g[off + j]);
+            gth += d2 * y1 - d1 * y2; // eq. (9) via outputs
+            g[off + i] = c * d1 + s * d2; // eq. (7)
+            g[off + j] = -s * d1 + c * d2; // eq. (8)
+            z[off + i] = c * y1 + s * y2; // z_{l-1} = B^T z_l
+            z[off + j] = -s * y1 + c * y2;
+            off += n;
+        }
+        grads[o_mix + k] += gth;
+    }
+}
+
+/// `row[i] *= d[i]` over every row of a block — eq. (2) D_in.
+#[inline]
+fn scale_rows(block: &mut [f32], n: usize, d: &[f32]) {
+    for row in block.chunks_mut(n) {
+        for (v, di) in row.iter_mut().zip(d) {
+            *v *= di;
+        }
+    }
+}
+
+/// `row[i] = row[i] * d_out[i] + bias[i]` over every row — eq. (4).
+#[inline]
+fn finish_rows(block: &mut [f32], n: usize, d_out: &[f32], bias: &[f32]) {
+    for row in block.chunks_mut(n) {
+        for ((v, do_), b) in row.iter_mut().zip(d_out).zip(bias) {
+            *v = *v * do_ + b;
+        }
+    }
+}
+
+fn spm_forward(plan: &SpmPlan, exec: SpmExec, params: &[f32], x: &Mat) -> Mat {
+    match exec {
+        SpmExec::RowWise => spm_forward_rowwise(plan, params, x),
+        SpmExec::BatchFused => spm_forward_fused(plan, params, x),
+    }
+}
+
+/// Batch-fused forward: each thread owns a row block; inside it the block
+/// is cut into `plan.fused_rows` tiles and every stage is applied to a
+/// tile before moving on, so activations stay L2-resident across the
+/// whole D_in -> stages -> D_out sweep.
+fn spm_forward_fused(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
+    assert_eq!(x.cols, plan.n, "input width");
+    let n = plan.n;
+    let lay = plan.layout;
+    let d_in = &params[lay.d_in()];
+    let d_out = &params[lay.d_out()];
+    let bias = &params[lay.bias()];
+    let trig = match plan.variant {
+        Variant::Rotation => rotation_trig(plan, params),
+        Variant::General => Vec::new(),
+    };
+    let tile = plan.fused_rows * n;
+    let mut z = x.clone();
+    parallel::for_each_chunk(&mut z.data, n, |_first, chunk| {
+        for block in chunk.chunks_mut(tile) {
+            scale_rows(block, n, d_in);
+            for l in 0..plan.num_stages {
+                stage_fwd_batch(plan, params, &trig, l, block); // eq. (3)
+            }
+            finish_rows(block, n, d_out, bias);
+        }
+    });
+    z
+}
+
+fn spm_forward_rowwise(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
     assert_eq!(x.cols, plan.n, "input width");
     let n = plan.n;
     let lay = plan.layout;
@@ -376,7 +631,80 @@ fn spm_forward(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
     z
 }
 
-fn spm_forward_trace(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, LinearTrace) {
+fn spm_forward_trace(plan: &SpmPlan, exec: SpmExec, params: &[f32], x: &Mat) -> (Mat, LinearTrace) {
+    match exec {
+        SpmExec::RowWise => spm_forward_trace_rowwise(plan, params, x),
+        SpmExec::BatchFused => spm_forward_trace_fused(plan, params, x),
+    }
+}
+
+/// Batch-fused training forward. One parallel region for the whole sweep:
+/// each thread walks its row block tile by tile, applies all stages to the
+/// hot tile, and writes the residuals `backward` needs (rotation: z_L;
+/// general: every stage input) into per-stage buffers at the same row
+/// offsets via `parallel::for_each_chunk_with`.
+fn spm_forward_trace_fused(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, LinearTrace) {
+    assert_eq!(x.cols, plan.n, "input width");
+    let n = plan.n;
+    let rows = x.rows;
+    let lay = plan.layout;
+    let d_in = &params[lay.d_in()];
+    let d_out = &params[lay.d_out()];
+    let bias = &params[lay.bias()];
+    let tile = plan.fused_rows * n;
+    match plan.variant {
+        Variant::Rotation => {
+            let trig = rotation_trig(plan, params);
+            let mut z = x.clone();
+            let mut z_last = Mat::zeros(rows, n);
+            parallel::for_each_chunk_with(
+                &mut z.data,
+                &mut [&mut z_last.data],
+                n,
+                |_f, chunk, snaps| {
+                    let mut off = 0;
+                    for block in chunk.chunks_mut(tile) {
+                        scale_rows(block, n, d_in);
+                        for l in 0..plan.num_stages {
+                            stage_fwd_batch(plan, params, &trig, l, block);
+                        }
+                        snaps[0][off..off + block.len()].copy_from_slice(block);
+                        finish_rows(block, n, d_out, bias);
+                        off += block.len();
+                    }
+                },
+            );
+            (z, LinearTrace::Rotation { z_last })
+        }
+        Variant::General => {
+            // zs[0] = D_in x and zs[l+1] = stage-l output, all written
+            // while the tile is hot — no per-stage barrier, no separate
+            // scale/finish passes.
+            let mut z = x.clone();
+            let mut zs: Vec<Mat> = (0..=plan.num_stages).map(|_| Mat::zeros(rows, n)).collect();
+            {
+                let mut extras: Vec<&mut [f32]> =
+                    zs.iter_mut().map(|m| m.data.as_mut_slice()).collect();
+                parallel::for_each_chunk_with(&mut z.data, &mut extras, n, |_f, chunk, snaps| {
+                    let mut off = 0;
+                    for block in chunk.chunks_mut(tile) {
+                        scale_rows(block, n, d_in);
+                        snaps[0][off..off + block.len()].copy_from_slice(block);
+                        for l in 0..plan.num_stages {
+                            stage_fwd_batch(plan, params, &[], l, block);
+                            snaps[l + 1][off..off + block.len()].copy_from_slice(block);
+                        }
+                        finish_rows(block, n, d_out, bias);
+                        off += block.len();
+                    }
+                });
+            }
+            (z, LinearTrace::General { zs })
+        }
+    }
+}
+
+fn spm_forward_trace_rowwise(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, LinearTrace) {
     assert_eq!(x.cols, plan.n, "input width");
     let n = plan.n;
     let lay = plan.layout;
@@ -439,6 +767,88 @@ fn spm_forward_trace(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, LinearTra
 /// Rotation backward (paper §4, DESIGN.md §8) on flat buffers. Returns
 /// (g_x, flat parameter-gradient contribution).
 fn spm_backward_rotation(
+    plan: &SpmPlan,
+    exec: SpmExec,
+    params: &[f32],
+    x: &Mat,
+    z_last: &Mat,
+    gy: &Mat,
+) -> (Mat, Vec<f32>) {
+    match exec {
+        SpmExec::RowWise => spm_backward_rotation_rowwise(plan, params, x, z_last, gy),
+        SpmExec::BatchFused => spm_backward_rotation_fused(plan, params, x, z_last, gy),
+    }
+}
+
+/// Batch-fused rotation backward: per-thread row ranges, swept in
+/// `fused_rows` tiles; each reverse stage runs pair-major over the whole
+/// tile's adjoint AND recomputed-activation blocks.
+fn spm_backward_rotation_fused(
+    plan: &SpmPlan,
+    params: &[f32],
+    x: &Mat,
+    z_last: &Mat,
+    gy: &Mat,
+) -> (Mat, Vec<f32>) {
+    let n = plan.n;
+    let ls = plan.num_stages;
+    let lay = plan.layout;
+    let d_in = &params[lay.d_in()];
+    let d_out = &params[lay.d_out()];
+    let trig = rotation_trig(plan, params);
+    let rows = gy.rows;
+    let (o_din, o_dout, o_bias) = (lay.d_in().start, lay.d_out().start, lay.bias().start);
+
+    let gx = Mat::zeros(rows, n);
+    let partials = parallel::map_row_ranges(rows, |_t, range| {
+        let lo = range.start;
+        let mut grads = vec![0.0f32; lay.total];
+        let mut gx_chunk = vec![0.0f32; range.len() * n];
+        let tile_rows = plan.fused_rows.min(range.len().max(1));
+        let mut g = vec![0.0f32; tile_rows * n];
+        let mut z = vec![0.0f32; tile_rows * n];
+        let mut r0 = range.start;
+        while r0 < range.end {
+            let rt = tile_rows.min(range.end - r0);
+            let g_blk = &mut g[..rt * n];
+            let z_blk = &mut z[..rt * n];
+            // eqs. (15)-(17) row by row, filling the tile's blocks
+            for ri in 0..rt {
+                let r = r0 + ri;
+                let gyr = gy.row(r);
+                let zl = z_last.row(r);
+                z_blk[ri * n..(ri + 1) * n].copy_from_slice(zl);
+                let grow = &mut g_blk[ri * n..(ri + 1) * n];
+                for i in 0..n {
+                    grads[o_bias + i] += gyr[i];
+                    grads[o_dout + i] += gyr[i] * zl[i];
+                    grow[i] = gyr[i] * d_out[i];
+                }
+            }
+            // stages in reverse, batched over the tile
+            for l in (0..ls).rev() {
+                stage_bwd_batch_rotation(plan, &trig, l, g_blk, z_blk, &mut grads);
+            }
+            // eqs. (18)-(19)
+            for ri in 0..rt {
+                let r = r0 + ri;
+                let xr = x.row(r);
+                let grow = &g_blk[ri * n..(ri + 1) * n];
+                let gxr = &mut gx_chunk[(r - lo) * n..(r - lo + 1) * n];
+                for i in 0..n {
+                    grads[o_din + i] += grow[i] * xr[i];
+                    gxr[i] = grow[i] * d_in[i];
+                }
+            }
+            r0 += rt;
+        }
+        (grads, lo, gx_chunk)
+    });
+
+    reduce_partials(lay.total, partials, gx)
+}
+
+fn spm_backward_rotation_rowwise(
     plan: &SpmPlan,
     params: &[f32],
     x: &Mat,
@@ -509,6 +919,83 @@ fn spm_backward_rotation(
 
 /// General backward (paper §4) on flat buffers.
 fn spm_backward_general(
+    plan: &SpmPlan,
+    exec: SpmExec,
+    params: &[f32],
+    x: &Mat,
+    zs: &[Mat],
+    gy: &Mat,
+) -> (Mat, Vec<f32>) {
+    match exec {
+        SpmExec::RowWise => spm_backward_general_rowwise(plan, params, x, zs, gy),
+        SpmExec::BatchFused => spm_backward_general_fused(plan, params, x, zs, gy),
+    }
+}
+
+/// Batch-fused general backward: per-thread row ranges in `fused_rows`
+/// tiles; each reverse stage reads the matching rows of the stage-input
+/// trace (`zs[l]`) directly — the trace rows of one tile are contiguous,
+/// so no copy is needed.
+fn spm_backward_general_fused(
+    plan: &SpmPlan,
+    params: &[f32],
+    x: &Mat,
+    zs: &[Mat],
+    gy: &Mat,
+) -> (Mat, Vec<f32>) {
+    let n = plan.n;
+    let ls = plan.num_stages;
+    let lay = plan.layout;
+    let d_in = &params[lay.d_in()];
+    let d_out = &params[lay.d_out()];
+    let rows = gy.rows;
+    let (o_din, o_dout, o_bias) = (lay.d_in().start, lay.d_out().start, lay.bias().start);
+
+    let gx = Mat::zeros(rows, n);
+    let partials = parallel::map_row_ranges(rows, |_t, range| {
+        let lo = range.start;
+        let mut grads = vec![0.0f32; lay.total];
+        let mut gx_chunk = vec![0.0f32; range.len() * n];
+        let tile_rows = plan.fused_rows.min(range.len().max(1));
+        let mut g = vec![0.0f32; tile_rows * n];
+        let mut r0 = range.start;
+        while r0 < range.end {
+            let rt = tile_rows.min(range.end - r0);
+            let g_blk = &mut g[..rt * n];
+            for ri in 0..rt {
+                let r = r0 + ri;
+                let gyr = gy.row(r);
+                let zl = zs[ls].row(r);
+                let grow = &mut g_blk[ri * n..(ri + 1) * n];
+                for i in 0..n {
+                    grads[o_bias + i] += gyr[i];
+                    grads[o_dout + i] += gyr[i] * zl[i];
+                    grow[i] = gyr[i] * d_out[i];
+                }
+            }
+            for l in (0..ls).rev() {
+                let zin = &zs[l].data[r0 * n..(r0 + rt) * n];
+                stage_bwd_batch(plan, params, l, g_blk, zin, &mut grads);
+            }
+            for ri in 0..rt {
+                let r = r0 + ri;
+                let xr = x.row(r);
+                let grow = &g_blk[ri * n..(ri + 1) * n];
+                let gxr = &mut gx_chunk[(r - lo) * n..(r - lo + 1) * n];
+                for i in 0..n {
+                    grads[o_din + i] += grow[i] * xr[i];
+                    gxr[i] = grow[i] * d_in[i];
+                }
+            }
+            r0 += rt;
+        }
+        (grads, lo, gx_chunk)
+    });
+
+    reduce_partials(lay.total, partials, gx)
+}
+
+fn spm_backward_general_rowwise(
     plan: &SpmPlan,
     params: &[f32],
     x: &Mat,
@@ -601,7 +1088,7 @@ mod tests {
     use crate::dense::Dense;
     use crate::optim::{Adam, SgdMomentum};
     use crate::spm::{Spm, SpmParams};
-    use crate::testkit::{forall, numerical_grad};
+    use crate::testkit::{check_close, forall, numerical_grad, ALL_SCHEDULES, ALL_VARIANTS};
 
     fn mk_reference(
         n: usize,
@@ -723,38 +1210,97 @@ mod tests {
         });
     }
 
+    /// Batch-fused vs row-wise vs reference, both variants x all three
+    /// schedules x ragged batch sizes B in {1, 3, 97} — the remainder
+    /// cases the row-block splitter and `fused_rows` tiling must get
+    /// right (1 row: single-tile fallback; 3: below the thread count;
+    /// 97: odd split across threads AND tiles).
+    #[test]
+    fn batch_fused_matches_rowwise_and_reference() {
+        for variant in ALL_VARIANTS {
+            for sched in ALL_SCHEDULES {
+                for batch in [1usize, 3, 97] {
+                    let (n, l, seed) = (11, 4, 1000 + batch as u64);
+                    let (op, mut p) = mk_reference(n, variant, sched, l, seed);
+                    let mut rng = Rng::new(seed + 1);
+                    randomize(&mut p, &mut rng);
+                    let packed = SpmPlan::new(op.spec).pack_params(&p);
+
+                    let mut fused = mk_planned(n, variant, sched, l, seed);
+                    fused.params_mut().copy_from_slice(&packed);
+                    let mut rowwise = mk_planned(n, variant, sched, l, seed);
+                    rowwise.params_mut().copy_from_slice(&packed);
+                    rowwise.set_exec(SpmExec::RowWise);
+                    assert_eq!(fused.exec(), SpmExec::BatchFused);
+
+                    let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+                    let gy = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+                    let ctx = format!("{variant:?} {sched:?} B={batch}");
+
+                    // forward parity (max-abs-diff) across all three paths
+                    let want = op.forward(&p, &x);
+                    let y_f = fused.forward(&x);
+                    let y_r = rowwise.forward(&x);
+                    assert!(y_f.max_abs_diff(&want) < 1e-5, "{ctx}: fused fwd vs ref");
+                    assert!(y_r.max_abs_diff(&y_f) < 1e-5, "{ctx}: rowwise vs fused fwd");
+
+                    // backward parity: g_x and every flat parameter grad
+                    let (_y, rtrace) = op.forward_trace(&p, &x);
+                    let (gx_ref, g_ref) = op.backward(&p, &x, &rtrace, &gy);
+                    let g_ref_flat = SpmPlan::new(op.spec)
+                        .pack(&g_ref.d_in, &g_ref.d_out, &g_ref.bias, &g_ref.mix, &g_ref.lone);
+
+                    for planned in [&mut fused, &mut rowwise] {
+                        let (yt, trace) = planned.forward_train(&x);
+                        assert!(yt.max_abs_diff(&want) < 1e-5, "{ctx}: forward_train");
+                        planned.zero_grads();
+                        let gx = planned.backward(&x, &trace, &gy);
+                        assert!(gx.max_abs_diff(&gx_ref) < 1e-4, "{ctx}: gx");
+                        check_close(planned.grads(), &g_ref_flat, 1e-3, &ctx).unwrap();
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn planned_param_grads_finite_difference() {
         // central FD over every parameter group, both variants x all
-        // schedules (satellite: rotation/general x butterfly/shift/random)
-        for variant in [Variant::Rotation, Variant::General] {
-            for sched in [Schedule::Butterfly, Schedule::Shift, Schedule::Random] {
-                let n = 9;
-                let mut op = mk_planned(n, variant, sched, 3, 17);
-                let mut rng = Rng::new(19);
-                // nudge params off the orthogonal init
-                for v in op.params_mut().iter_mut() {
-                    *v += 0.1 * rng.normal();
-                }
-                let x = Mat::from_vec(3, n, rng.normal_vec(3 * n, 1.0));
-                let (y, trace) = op.forward_train(&x);
-                let (_l, gy) = loss_and_gy(&y);
-                op.zero_grads();
-                let _gx = op.backward(&x, &trace, &gy);
+        // schedules (satellite: rotation/general x butterfly/shift/random),
+        // on BOTH execution paths — the fused backward is the default and
+        // must stand on its own against numerics, not just against the
+        // row-wise path.
+        for exec in [SpmExec::BatchFused, SpmExec::RowWise] {
+            for variant in ALL_VARIANTS {
+                for sched in ALL_SCHEDULES {
+                    let n = 9;
+                    let mut op = mk_planned(n, variant, sched, 3, 17);
+                    op.set_exec(exec);
+                    let mut rng = Rng::new(19);
+                    // nudge params off the orthogonal init
+                    for v in op.params_mut().iter_mut() {
+                        *v += 0.1 * rng.normal();
+                    }
+                    let x = Mat::from_vec(3, n, rng.normal_vec(3 * n, 1.0));
+                    let (y, trace) = op.forward_train(&x);
+                    let (_l, gy) = loss_and_gy(&y);
+                    op.zero_grads();
+                    let _gx = op.backward(&x, &trace, &gy);
 
-                let mut pv = op.params().to_vec();
-                let total = pv.len();
-                // sample indices across all five layout groups
-                let idxs = [0, n / 2, n, 2 * n, 2 * n + 1, 3 * n, 3 * n + 2, total - 1];
-                for &idx in &idxs {
-                    let got = op.grads()[idx];
-                    let num = numerical_grad(&mut pv, idx, 1e-2, |v| {
-                        op.forward_with(v, &x).data.iter().map(|t| t.tanh()).sum()
-                    });
-                    assert!(
-                        (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
-                        "{variant:?} {sched:?} grad[{idx}]: {got} vs {num}"
-                    );
+                    let mut pv = op.params().to_vec();
+                    let total = pv.len();
+                    // sample indices across all five layout groups
+                    let idxs = [0, n / 2, n, 2 * n, 2 * n + 1, 3 * n, 3 * n + 2, total - 1];
+                    for &idx in &idxs {
+                        let got = op.grads()[idx];
+                        let num = numerical_grad(&mut pv, idx, 1e-2, |v| {
+                            op.forward_with(v, &x).data.iter().map(|t| t.tanh()).sum()
+                        });
+                        assert!(
+                            (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                            "{exec:?} {variant:?} {sched:?} grad[{idx}]: {got} vs {num}"
+                        );
+                    }
                 }
             }
         }

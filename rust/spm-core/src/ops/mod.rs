@@ -4,5 +4,5 @@
 pub mod linear;
 pub mod plan;
 
-pub use linear::{LinearCfg, LinearKind, LinearOp, LinearTrace};
+pub use linear::{LinearCfg, LinearKind, LinearOp, LinearTrace, SpmExec};
 pub use plan::{ParamLayout, SpmPlan};

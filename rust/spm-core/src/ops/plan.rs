@@ -22,6 +22,16 @@ use crate::spm::{SpmParams, SpmSpec, Variant};
 /// Sentinel in the per-stage leftover table: "this stage has no leftover".
 const NO_LEFTOVER: u32 = u32::MAX;
 
+/// Cache budget for one batch-fused activation tile (DESIGN.md §11): the
+/// fused stage kernels sweep all L stages over a `fused_rows x n` row
+/// block, so the block must stay L2-resident while the pair tables and
+/// 2x2 coefficients stream over it once per stage.
+const FUSED_TILE_BYTES: usize = 256 * 1024;
+
+/// Upper bound on rows per fused tile: past this the pair-table loads are
+/// fully amortized and bigger tiles only delay the trace snapshots.
+const FUSED_MAX_ROWS: usize = 256;
+
 /// Offsets of the five parameter groups inside one flat buffer:
 ///
 /// ```text
@@ -96,6 +106,12 @@ pub struct SpmPlan {
     pairs: Vec<u32>,
     /// per-stage leftover coordinate for odd n (NO_LEFTOVER if none)
     leftover: Vec<u32>,
+    /// Rows per batch-fused tile (DESIGN.md §11): the largest row block
+    /// whose f32 activations fit [`FUSED_TILE_BYTES`], clamped to
+    /// `[1, FUSED_MAX_ROWS]`. The fused kernels walk the pair table
+    /// pair-major over such a block, so this is the amortization window
+    /// for the `(i, j)` index and coefficient loads.
+    pub fused_rows: usize,
 }
 
 impl SpmPlan {
@@ -122,6 +138,7 @@ impl SpmPlan {
             layout: ParamLayout::new(spec.n, spec.num_stages, spec.variant),
             pairs,
             leftover,
+            fused_rows: (FUSED_TILE_BYTES / (4 * spec.n)).clamp(1, FUSED_MAX_ROWS),
         }
     }
 
@@ -278,6 +295,22 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn fused_rows_within_tile_budget() {
+        for n in [2usize, 9, 256, 1024, 4096, 1 << 20] {
+            let spec = SpmSpec::new(n, Variant::General).with_stages(2);
+            let plan = SpmPlan::new(spec);
+            assert!(plan.fused_rows >= 1, "n={n}");
+            assert!(plan.fused_rows <= FUSED_MAX_ROWS, "n={n}");
+            // either the tile fits the budget or we are at the floor of 1 row
+            assert!(
+                plan.fused_rows * n * 4 <= FUSED_TILE_BYTES || plan.fused_rows == 1,
+                "n={n} tile {} bytes",
+                plan.fused_rows * n * 4
+            );
         }
     }
 

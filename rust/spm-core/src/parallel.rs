@@ -48,6 +48,50 @@ where
     });
 }
 
+/// Like [`for_each_chunk`], but hands each thread the matching row chunk
+/// of every buffer in `extras` alongside its chunk of `data` (all buffers
+/// logically `rows x row_len`, identical length). This is what the
+/// batch-fused SPM `forward_train` needs: one parallel region that sweeps
+/// all stages over a row block while writing per-stage trace snapshots
+/// into separate buffers at the same row offsets.
+pub fn for_each_chunk_with<F>(data: &mut [f32], extras: &mut [&mut [f32]], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32], &mut [&mut [f32]]) + Sync,
+{
+    for e in extras.iter() {
+        assert_eq!(e.len(), data.len(), "extra buffer shape");
+    }
+    let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 || rows < 2 {
+        f(0, data, extras);
+        return;
+    }
+    let rows_per = rows.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut rest_extras: Vec<&mut [f32]> = extras.iter_mut().map(|e| &mut **e).collect();
+        let mut start_row = 0;
+        while !rest.is_empty() {
+            let take = (rows_per * row_len).min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let mut echunks: Vec<&mut [f32]> = Vec::with_capacity(rest_extras.len());
+            let mut etails: Vec<&mut [f32]> = Vec::with_capacity(rest_extras.len());
+            for e in rest_extras {
+                let (c, t) = e.split_at_mut(take);
+                echunks.push(c);
+                etails.push(t);
+            }
+            rest_extras = etails;
+            let fr = &f;
+            let sr = start_row;
+            scope.spawn(move || fr(sr, chunk, &mut echunks));
+            start_row += take / row_len;
+        }
+    });
+}
+
 /// Run `f(thread_idx, row_range)` over `rows` rows in parallel and collect
 /// one partial result per thread (for gradient-accumulator reduction).
 pub fn map_row_ranges<T, F>(rows: usize, f: F) -> Vec<T>
@@ -103,6 +147,44 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn chunk_with_extras_stays_row_aligned() {
+        // ragged row count: every thread must see the same rows of `data`
+        // and of each extra buffer, at the same chunk-relative offsets
+        let mut data = vec![0.0f32; 103 * 4];
+        let mut e0 = vec![0.0f32; 103 * 4];
+        let mut e1 = vec![0.0f32; 103 * 4];
+        for_each_chunk_with(&mut data, &mut [&mut e0, &mut e1], 4, |first, chunk, extras| {
+            assert_eq!(chunk.len() % 4, 0, "chunk not row aligned");
+            for e in extras.iter() {
+                assert_eq!(e.len(), chunk.len(), "extra chunk shape");
+            }
+            for (i, row) in chunk.chunks_mut(4).enumerate() {
+                row[0] = (first + i) as f32;
+                extras[0][i * 4] = (first + i) as f32 + 0.5;
+                extras[1][i * 4 + 1] = (first + i) as f32 + 0.25;
+            }
+        });
+        for r in 0..103 {
+            assert_eq!(data[r * 4], r as f32);
+            assert_eq!(e0[r * 4], r as f32 + 0.5);
+            assert_eq!(e1[r * 4 + 1], r as f32 + 0.25);
+        }
+    }
+
+    #[test]
+    fn chunk_with_no_extras_matches_plain() {
+        let mut data = vec![0.0f32; 7 * 3];
+        for_each_chunk_with(&mut data, &mut [], 3, |first, chunk, _extras| {
+            for (i, row) in chunk.chunks_mut(3).enumerate() {
+                row[2] = (first + i) as f32;
+            }
+        });
+        for r in 0..7 {
+            assert_eq!(data[r * 3 + 2], r as f32);
+        }
     }
 
     #[test]

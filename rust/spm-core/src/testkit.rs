@@ -6,7 +6,15 @@
 //! forall(100, 7, |rng| { ... ; Ok(()) })
 //! ```
 
+use crate::pairing::Schedule;
 use crate::rng::Rng;
+use crate::spm::Variant;
+
+/// The variant axis every parity harness sweeps.
+pub const ALL_VARIANTS: [Variant; 2] = [Variant::Rotation, Variant::General];
+
+/// The pairing-schedule axis every parity harness sweeps.
+pub const ALL_SCHEDULES: [Schedule; 3] = [Schedule::Butterfly, Schedule::Shift, Schedule::Random];
 
 /// Run `prop` for `cases` independent RNG streams derived from `seed`.
 /// Panics with the failing case index + message on the first failure.
