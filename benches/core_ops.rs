@@ -1,8 +1,8 @@
 //! Bench: raw operator complexity (paper §5) — native single-thread SPM
-//! stage cost O(nL) vs dense matmul O(n^2), the three-way SPM comparison
+//! stage cost O(nL) vs dense matmul O(n^2), the SPM path comparison
 //! (reference `spm.rs` closed form vs the planned row-wise path vs the
-//! batch-fused stage kernels, DESIGN.md §11), plus per-stage fwd/bwd
-//! micro timings.
+//! batch-fused stage kernels vs the simd backend where available,
+//! DESIGN.md §11-§12), plus per-stage fwd/bwd micro timings.
 //!
 //! Also buildable as an example (same file, see spm-coordinator's
 //! Cargo.toml) so CI can drive a reduced pass with plain `cargo run`:
@@ -14,13 +14,15 @@
 //!
 //! Flags: `--sizes a,b,c` widths for both tables (defaults when absent:
 //! 256,512,1024,2048,4096 for the scaling table — the full PR-1 sweep —
-//! and 256,1024,4096 for the three-way SPM table);
+//! and 256,1024,4096 for the SPM path table);
 //! `--batch B` (default 64); `--json <path>` writes the scaling and
-//! three-way tables as machine-readable JSON (the perf trajectory CI
-//! records); `--check` exits non-zero if the batch-fused planned path is
+//! SPM-path tables as machine-readable JSON (the perf trajectory CI
+//! records; a `"simd"` row family appears when the vectorized backend
+//! ran); `--check` exits non-zero if the batch-fused planned path is
 //! slower than the reference path — or loses forward parity — at n=1024
 //! (falling back to the largest benched width when 1024 is not in
-//! `--sizes`).
+//! `--sizes`), and additionally, when the simd backend is active, if it
+//! is slower than the scalar fused path or loses parity.
 
 use spm_core::ops::{LinearCfg, LinearOp, SpmExec};
 use spm_core::optim::Adam;
@@ -42,7 +44,8 @@ fn time_ms(reps: usize, mut f: impl FnMut()) -> f64 {
     ms_per(t0, reps)
 }
 
-/// One three-way comparison row at a given width (general variant).
+/// One comparison row at a given width (general variant): reference vs
+/// planned row-wise vs batch-fused vs (when available) the simd backend.
 struct SpmRow {
     n: usize,
     variant: &'static str,
@@ -52,15 +55,20 @@ struct SpmRow {
     row_bwd: f64,
     fused_fwd: f64,
     fused_bwd: f64,
+    /// vectorized-backend timings; None when the `simd` feature is off or
+    /// AVX2/FMA were not detected (the exec downgraded to fused)
+    simd_fwd: Option<f64>,
+    simd_bwd: Option<f64>,
     /// forward max-abs-diff vs the reference path, per planned path
     row_fwd_diff: f32,
     fused_fwd_diff: f32,
+    simd_fwd_diff: Option<f32>,
 }
 
 struct Args {
     /// `--sizes` when given; otherwise each table keeps its own default
     /// (scaling: the full PR-1 sweep at {256,512,1024,2048,4096}; the
-    /// three-way SPM table: {256,1024,4096}).
+    /// SPM path table: {256,1024,4096}).
     sizes: Option<Vec<usize>>,
     batch: usize,
     json: Option<String>,
@@ -95,6 +103,12 @@ fn bench_spm_row(n: usize, batch: usize) -> SpmRow {
     rowwise.set_exec(SpmExec::RowWise);
     let mut fused = LinearOp::new(cfg, &mut Rng::new(7), &mut adam);
     fused.set_exec(SpmExec::BatchFused);
+    // simd downgrades to fused when unavailable; bench it only when the
+    // vectorized backend actually stuck (otherwise the column would just
+    // re-measure the fused path under another name)
+    let mut simd = LinearOp::new(cfg, &mut Rng::new(7), &mut adam);
+    simd.set_exec(SpmExec::Simd);
+    let simd_on = simd.exec() == SpmExec::Simd;
 
     let ref_fwd = time_ms(reps, || {
         let _ = reference.forward(&ref_params, &x);
@@ -105,9 +119,15 @@ fn bench_spm_row(n: usize, batch: usize) -> SpmRow {
     let fused_fwd = time_ms(reps, || {
         let _ = fused.forward(&x);
     });
+    let simd_fwd = simd_on.then(|| {
+        time_ms(reps, || {
+            let _ = simd.forward(&x);
+        })
+    });
     let ref_y = reference.forward(&ref_params, &x);
     let row_fwd_diff = rowwise.forward(&x).max_abs_diff(&ref_y);
     let fused_fwd_diff = fused.forward(&x).max_abs_diff(&ref_y);
+    let simd_fwd_diff = simd_on.then(|| simd.forward(&x).max_abs_diff(&ref_y));
 
     let (y, ref_trace) = reference.forward_trace(&ref_params, &x);
     let ref_bwd = time_ms(reps, || {
@@ -121,6 +141,12 @@ fn bench_spm_row(n: usize, batch: usize) -> SpmRow {
     let fused_bwd = time_ms(reps, || {
         let _ = fused.backward(&x, &fused_trace, &yf);
     });
+    let simd_bwd = simd_on.then(|| {
+        let (ys, simd_trace) = simd.forward_train(&x);
+        time_ms(reps, || {
+            let _ = simd.backward(&x, &simd_trace, &ys);
+        })
+    });
 
     SpmRow {
         n,
@@ -131,41 +157,55 @@ fn bench_spm_row(n: usize, batch: usize) -> SpmRow {
         row_bwd,
         fused_fwd,
         fused_bwd,
+        simd_fwd,
+        simd_bwd,
         row_fwd_diff,
         fused_fwd_diff,
+        simd_fwd_diff,
     }
 }
 
 fn print_spm_table(rows: &[SpmRow], batch: usize) {
-    println!("\nreference vs planned row-wise vs batch-fused SPM (batch={batch}, single thread, general variant)");
+    println!("\nreference vs planned row-wise vs batch-fused vs simd SPM (batch={batch}, single thread, general variant; simd '-' = backend unavailable)");
     println!(
-        "{:<7} {:>11} {:>11} {:>11} {:>8} {:>8} {:>11} {:>11} {:>11} {:>8} {:>8}",
+        "{:<7} {:>11} {:>11} {:>11} {:>11} {:>8} {:>8} {:>8} {:>11} {:>11} {:>11} {:>11} {:>8} {:>8} {:>8}",
         "n",
         "ref fwd",
         "row fwd",
         "fused fwd",
+        "simd fwd",
         "f/ref x",
         "f/row x",
+        "s/f x",
         "ref bwd",
         "row bwd",
         "fused bwd",
+        "simd bwd",
         "f/ref x",
-        "f/row x"
+        "f/row x",
+        "s/f x"
     );
     for r in rows {
+        let opt_ms = |v: Option<f64>| v.map_or("-".to_string(), |t| format!("{t:.3}"));
+        let opt_x =
+            |num: f64, v: Option<f64>| v.map_or("-".to_string(), |t| format!("{:.2}x", num / t));
         println!(
-            "{:<7} {:>11.3} {:>11.3} {:>11.3} {:>7.2}x {:>7.2}x {:>11.3} {:>11.3} {:>11.3} {:>7.2}x {:>7.2}x",
+            "{:<7} {:>11.3} {:>11.3} {:>11.3} {:>11} {:>7.2}x {:>7.2}x {:>8} {:>11.3} {:>11.3} {:>11.3} {:>11} {:>7.2}x {:>7.2}x {:>8}",
             r.n,
             r.ref_fwd,
             r.row_fwd,
             r.fused_fwd,
+            opt_ms(r.simd_fwd),
             r.ref_fwd / r.fused_fwd,
             r.row_fwd / r.fused_fwd,
+            opt_x(r.fused_fwd, r.simd_fwd),
             r.ref_bwd,
             r.row_bwd,
             r.fused_bwd,
+            opt_ms(r.simd_bwd),
             r.ref_bwd / r.fused_bwd,
             r.row_bwd / r.fused_bwd,
+            opt_x(r.fused_bwd, r.simd_bwd),
         );
     }
 }
@@ -182,7 +222,7 @@ fn json_num(v: f64) -> String {
 }
 
 /// Hand-rolled JSON (the default workspace is dependency-free): one object
-/// with the run setup, the §5 scaling rows, and the three-way SPM rows.
+/// with the run setup, the §5 scaling rows, and the SPM path rows.
 fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
     use std::fmt::Write as _;
     let mut s = String::new();
@@ -203,11 +243,16 @@ fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
     s.push_str("  ],\n  \"planned_vs_reference\": [\n");
     let mut first = true;
     for r in rows {
-        let paths: [(&str, f64, f64, f32); 3] = [
+        let mut paths: Vec<(&str, f64, f64, f32)> = vec![
             ("reference", r.ref_fwd, r.ref_bwd, 0.0),
             ("rowwise", r.row_fwd, r.row_bwd, r.row_fwd_diff),
             ("fused", r.fused_fwd, r.fused_bwd, r.fused_fwd_diff),
         ];
+        // the simd row family only exists where the backend ran — its
+        // absence in the artifact is itself the "downgraded" signal
+        if let (Some(sf), Some(sb), Some(sd)) = (r.simd_fwd, r.simd_bwd, r.simd_fwd_diff) {
+            paths.push(("simd", sf, sb, sd));
+        }
         for (path, fwd, bwd, diff) in paths {
             if !first {
                 s.push_str(",\n");
@@ -233,10 +278,11 @@ fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
 
 /// The CI gate: the batch-fused planned path must not be slower than the
 /// reference path (and must keep forward parity) at n=1024, or at the
-/// largest benched width when 1024 was not requested. A 10% timing
-/// margin absorbs shared-runner noise: the fused path wins by >1.5x when
-/// healthy, so anything inside the margin is a real regression signal,
-/// not jitter.
+/// largest benched width when 1024 was not requested; when the simd
+/// backend ran, it must additionally not be slower than the scalar fused
+/// path and must keep parity too. A 10% timing margin absorbs
+/// shared-runner noise: the fused path wins by >1.5x when healthy, so
+/// anything inside the margin is a real regression signal, not jitter.
 const CHECK_NOISE_MARGIN: f64 = 1.10;
 
 fn check_trajectory(rows: &[SpmRow]) -> Result<(), String> {
@@ -245,6 +291,15 @@ fn check_trajectory(rows: &[SpmRow]) -> Result<(), String> {
         .find(|r| r.n == 1024)
         .or_else(|| rows.iter().max_by_key(|r| r.n))
         .ok_or("no SPM rows benched")?;
+    // The CI simd matrix leg exports SPM_EXEC=simd: there the simd rows
+    // MUST exist — a detection or feature-wiring regression must fail the
+    // gate, not silently degrade it to a duplicate fused measurement.
+    if std::env::var("SPM_EXEC").as_deref() == Ok("simd") && r.simd_fwd.is_none() {
+        return Err(format!(
+            "SPM_EXEC=simd but the simd backend did not activate at n={} (feature off or AVX2/FMA undetected)",
+            r.n
+        ));
+    }
     if r.fused_fwd > r.ref_fwd * CHECK_NOISE_MARGIN {
         return Err(format!(
             "planned (fused) forward slower than reference at n={}: {:.3} ms vs {:.3} ms",
@@ -257,10 +312,32 @@ fn check_trajectory(rows: &[SpmRow]) -> Result<(), String> {
             r.n, r.fused_fwd_diff
         ));
     }
-    println!(
-        "\ncheck: fused fwd {:.3} ms <= ref fwd {:.3} ms at n={}, max|diff| {:.3e} — OK",
-        r.fused_fwd, r.ref_fwd, r.n, r.fused_fwd_diff
-    );
+    match (r.simd_fwd, r.simd_fwd_diff) {
+        (Some(simd_fwd), Some(simd_diff)) => {
+            if simd_fwd > r.fused_fwd * CHECK_NOISE_MARGIN {
+                return Err(format!(
+                    "simd forward slower than scalar fused at n={}: {:.3} ms vs {:.3} ms",
+                    r.n, simd_fwd, r.fused_fwd
+                ));
+            }
+            if !(simd_diff.is_finite() && simd_diff < 1e-3) {
+                return Err(format!(
+                    "simd forward parity broke at n={}: max|diff| = {:.3e}",
+                    r.n, simd_diff
+                ));
+            }
+            println!(
+                "\ncheck: fused fwd {:.3} ms <= ref fwd {:.3} ms and simd fwd {:.3} ms <= fused at n={}, max|diff| {:.3e}/{:.3e} — OK",
+                r.fused_fwd, r.ref_fwd, simd_fwd, r.n, r.fused_fwd_diff, simd_diff
+            );
+        }
+        _ => {
+            println!(
+                "\ncheck: fused fwd {:.3} ms <= ref fwd {:.3} ms at n={}, max|diff| {:.3e} — OK (simd backend not active)",
+                r.fused_fwd, r.ref_fwd, r.n, r.fused_fwd_diff
+            );
+        }
+    }
     Ok(())
 }
 

@@ -6,8 +6,33 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
-cargo build --release
-cargo test -q
+# Extra cargo flags for the main build+test pass. The CI matrix simd leg
+# passes "--features simd" here (with RUSTFLAGS pinning x86-64-v3) so the
+# AVX2 stage backend is what the suite exercises; unquoted on purpose so
+# the flags word-split.
+SPM_CARGO_FEATURES="${SPM_CARGO_FEATURES:-}"
+
+cargo build --release $SPM_CARGO_FEATURES
+cargo test -q $SPM_CARGO_FEATURES
+
+# Second test pass with the vectorized stage backend compiled in, so
+# developer machines exercise what the CI simd matrix leg gates. Skipped
+# (non-fatally, same split as the fmt/clippy gates) when the first pass
+# already enabled it, when running as a CI matrix leg (SPM_EXEC set: the
+# dedicated simd leg already covers this with stronger RUSTFLAGS, and
+# duplicating it on the fused leg would double that leg's build+test
+# time), or when the host is not x86_64 — the backend cfg's out there
+# and the pass would just repeat the scalar suite. Test failures in this
+# pass are real failures, never masked.
+if [[ "$SPM_CARGO_FEATURES" == *simd* ]]; then
+    echo "ci.sh: main pass already ran with the simd feature; skipping second pass"
+elif [ -n "${SPM_EXEC:-}" ]; then
+    echo "ci.sh: CI matrix leg (SPM_EXEC=$SPM_EXEC); simd pass is the simd leg's job"
+elif [ "$(uname -m)" = "x86_64" ]; then
+    cargo test -q --features simd
+else
+    echo "ci.sh: non-x86_64 host ($(uname -m)); skipping --features simd test pass"
+fi
 
 # Format check. Non-fatal unless SPM_FMT_STRICT=1: rustfmt output can
 # drift across toolchain versions and must not mask real build/test
@@ -29,7 +54,9 @@ fi
 # clippy must not mask real build/test failures). The CI workflow runs the
 # same command strictly with its pinned stable toolchain.
 if cargo clippy --version >/dev/null 2>&1; then
-    if ! cargo clippy --all-targets -- -D warnings; then
+    # Inherits the leg's feature set so the simd matrix leg lints the
+    # vectorized backend too.
+    if ! cargo clippy --all-targets $SPM_CARGO_FEATURES -- -D warnings; then
         if [ "${SPM_CLIPPY_STRICT:-0}" = "1" ]; then
             echo "ci.sh: cargo clippy failed (SPM_CLIPPY_STRICT=1)" >&2
             exit 1

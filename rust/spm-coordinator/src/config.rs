@@ -113,8 +113,11 @@ pub struct OpConfig {
     /// None = paper default log2(n)
     pub num_stages: Option<usize>,
     /// SPM stage-loop execution path (`"fused"` default, `"rowwise"` for
-    /// the PR-1 comparison path); applied by the native drivers via
-    /// `LinearOp::set_exec` after construction.
+    /// the PR-1 comparison path, `"simd"` for the vectorized backend);
+    /// applied by the native drivers via `LinearOp::set_exec` after
+    /// construction. `"simd"` auto-downgrades to the fused path on builds
+    /// or machines without the vectorized backend (DESIGN.md §12), so
+    /// configs carrying it stay portable.
     pub exec: SpmExec,
 }
 
@@ -330,6 +333,11 @@ fast = true
         assert_eq!(rc.op.exec, SpmExec::BatchFused);
         rc.apply_toml(&doc).unwrap();
         assert_eq!(rc.op.exec, SpmExec::RowWise);
+        // "simd" parses on EVERY build (portability contract): whether it
+        // actually runs vectorized is decided at LinearOp::set_exec time
+        let simd = parse_toml("[op]\nexec = \"simd\"\n").unwrap();
+        rc.apply_toml(&simd).unwrap();
+        assert_eq!(rc.op.exec, SpmExec::Simd);
         let bad = parse_toml("[op]\nexec = \"gpu\"\n").unwrap();
         assert!(rc.apply_toml(&bad).is_err());
     }

@@ -87,8 +87,9 @@ pub fn run_clf_native(
 ) -> Result<ClfOutcome> {
     let n = op_cfg.n();
     let mut clf = Classifier::new(op_cfg, classes, 1e-3, cfg.seed ^ 0xC1A55);
-    // `[op] exec` selects the SPM stage-loop path (fused default); the
-    // head is rectangular dense and ignores it.
+    // `[op] exec` selects the SPM stage-loop path (fused default; "simd"
+    // downgrades to fused where the vectorized backend is unavailable);
+    // the head is rectangular dense and ignores it.
     clf.mixer.set_exec(cfg.op.exec);
     let data_cl = data.clone();
     let steps = cfg.steps;

@@ -41,7 +41,8 @@ fn native_clf_driver_reports_sane_outcome() {
 
 #[test]
 fn op_config_drives_native_student() {
-    let doc = parse_toml("[op]\nvariant = \"rotation\"\nschedule = \"shift\"\nstages = 3\n").unwrap();
+    let doc =
+        parse_toml("[op]\nvariant = \"rotation\"\nschedule = \"shift\"\nstages = 3\n").unwrap();
     let mut cfg = quick_cfg();
     cfg.apply_toml(&doc).unwrap();
     let student = cfg.op.to_linear_cfg(16, cfg.seed);
@@ -52,6 +53,21 @@ fn op_config_drives_native_student() {
     let data = DataSource::Teacher { n: 16, classes: 4, seed: 1 };
     let out = experiments::run_clf_native("cfg_student", student, 4, 16, &data, &cfg).unwrap();
     assert!(out.loss.is_finite());
+}
+
+#[test]
+fn op_config_simd_exec_trains_on_any_build() {
+    // `exec = "simd"` must construct and train everywhere: on builds or
+    // machines without the vectorized backend the op downgrades to the
+    // fused path at set_exec time (DESIGN.md §12) instead of failing.
+    let doc = parse_toml("[op]\nexec = \"simd\"\nstages = 2\n").unwrap();
+    let mut cfg = quick_cfg();
+    cfg.apply_toml(&doc).unwrap();
+    let student = cfg.op.to_linear_cfg(16, cfg.seed);
+    let data = DataSource::Teacher { n: 16, classes: 4, seed: 2 };
+    let out = experiments::run_clf_native("simd_student", student, 4, 16, &data, &cfg).unwrap();
+    assert!(out.loss.is_finite());
+    assert!((0.0..=1.0).contains(&out.acc));
 }
 
 #[test]

@@ -212,7 +212,8 @@ mod tests {
     /// learnable sequence task: class = argmax of the mean input over time
     fn seq_problem(n: usize, c: usize, b: usize, t: usize, seed: u64) -> (Vec<Mat>, Vec<u32>) {
         let mut rng = Rng::new(seed);
-        let xs: Vec<Mat> = (0..t).map(|_| Mat::from_vec(b, n, rng.normal_vec(b * n, 1.0))).collect();
+        let xs: Vec<Mat> =
+            (0..t).map(|_| Mat::from_vec(b, n, rng.normal_vec(b * n, 1.0))).collect();
         let mut labels = Vec::with_capacity(b);
         for i in 0..b {
             let mut sums = vec![0.0f32; c];

@@ -1,0 +1,344 @@
+//! Stage-kernel backends (DESIGN.md §12): the four batch-fused kernels of
+//! DESIGN.md §11 — stage forward, the trace-snapshot stage forward, and
+//! the general/rotation stage backwards — behind ONE trait, so the fused
+//! drivers in `ops::linear` are backend-agnostic and a vectorized (or, in
+//! the future, GPU/XLA-custom-call) implementation drops in without
+//! touching the tiling, threading, or trace plumbing.
+//!
+//! Two implementations today:
+//!
+//! * [`ScalarBackend`] — the portable pair-major scalar kernels (the PR-2
+//!   fused path, moved here verbatim). Always available; the compile-time
+//!   fallback when the `simd` cargo feature is off or the target is not
+//!   x86_64, and the runtime fallback when AVX2/FMA detection fails.
+//! * `backend_simd::Avx2Backend` — pairs in lanes of
+//!   [`PAIR_LANES`](super::plan::PAIR_LANES), `(i, j)` coordinates
+//!   gathered through the plan's lane-padded stage-major index tables.
+//!   Compiled behind `feature = "simd"` + x86_64; selected at runtime via
+//!   [`simd_available`].
+//!
+//! Kernel coefficient access goes through a per-call `prepare` scratch
+//! whose layout is backend-private (scalar: interleaved `(cos, sin)` per
+//! rotation pair; AVX2: lane-padded SoA tables for both variants), because
+//! the flat parameter buffer's interleaved mix layout is what a scalar
+//! loop wants but not what vector loads want.
+
+// The kernel signatures pass the plan, parameter/scratch/gradient buffers
+// and the tile blocks individually on purpose — bundling them into a
+// context struct would hide which kernel touches what, which is the whole
+// point of the trait boundary.
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::spm::Variant;
+
+use super::linear::SpmExec;
+use super::plan::SpmPlan;
+
+/// One stage-kernel implementation. Methods mirror the DESIGN.md §11
+/// kernels exactly; `block`/`g`/`z`/`zin` are row-major `(rows x n)`
+/// activation/adjoint slices of one fused tile, `grads` is the op's flat
+/// gradient layout, and `scratch` is whatever [`StageBackend::prepare`]
+/// built for this call's parameters.
+pub trait StageBackend: Sync {
+    /// Backend-private per-call coefficient scratch, built once per
+    /// forward/backward call from the flat parameter buffer and shared
+    /// read-only by every thread.
+    fn prepare(&self, plan: &SpmPlan, params: &[f32]) -> Vec<f32>;
+
+    /// Apply stage `l` in place to `block` (eqs. 5-6 / 10-11).
+    fn stage_fwd_batch(
+        &self,
+        plan: &SpmPlan,
+        params: &[f32],
+        scratch: &[f32],
+        l: usize,
+        block: &mut [f32],
+    );
+
+    /// Trace-snapshot forward: apply stage `l` and capture the stage
+    /// OUTPUT into `snap` (same shape as `block`) — the residual the
+    /// general backward replays. Backends may fuse the copy into their
+    /// write-back; the default runs the plain forward then snapshots.
+    fn stage_fwd_batch_trace(
+        &self,
+        plan: &SpmPlan,
+        params: &[f32],
+        scratch: &[f32],
+        l: usize,
+        block: &mut [f32],
+        snap: &mut [f32],
+    ) {
+        self.stage_fwd_batch(plan, params, scratch, l, block);
+        snap.copy_from_slice(block);
+    }
+
+    /// Reverse one GENERAL stage (eqs. 12-14): propagate the adjoint
+    /// `g` in place with `zin` the stage-input rows from the trace, and
+    /// accumulate the per-pair coefficient gradients into `grads`.
+    fn stage_bwd_batch(
+        &self,
+        plan: &SpmPlan,
+        params: &[f32],
+        scratch: &[f32],
+        l: usize,
+        g: &mut [f32],
+        zin: &[f32],
+        grads: &mut [f32],
+    );
+
+    /// Reverse one ROTATION stage (eqs. 7-9): transpose-apply to BOTH the
+    /// adjoint `g` and the activation `z` (recomputing stage inputs), and
+    /// accumulate the theta gradients into `grads`.
+    fn stage_bwd_batch_rotation(
+        &self,
+        plan: &SpmPlan,
+        scratch: &[f32],
+        l: usize,
+        g: &mut [f32],
+        z: &mut [f32],
+        grads: &mut [f32],
+    );
+}
+
+/// Test hook: force [`simd_available`] to report false so the
+/// `exec = "simd"` downgrade path is testable on machines that DO support
+/// AVX2. Not for production use; see the downgrade tests in `ops::linear`.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// Whether the vectorized backend is compiled into this build at all
+/// (`simd` cargo feature on an x86_64 target).
+pub const fn simd_compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// Whether the vectorized backend can run RIGHT NOW: compiled in, AVX2 +
+/// FMA detected at runtime, and not disabled by the test hook. This is the
+/// check `LinearOp::set_exec` downgrades through, so `exec = "simd"`
+/// configs stay portable across builds and machines.
+pub fn simd_available() -> bool {
+    if FORCE_SCALAR.load(Ordering::SeqCst) {
+        return false;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+static SCALAR: ScalarBackend = ScalarBackend;
+
+/// Resolve an execution mode to a backend. `SpmExec::Simd` re-checks
+/// availability here (not just at `set_exec` time) so a kernel call can
+/// never reach the vectorized path on hardware that lacks it.
+pub fn backend_for(exec: SpmExec) -> &'static dyn StageBackend {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if exec == SpmExec::Simd && simd_available() {
+            return &super::backend_simd::AVX2;
+        }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        let _ = exec;
+    }
+    &SCALAR
+}
+
+/// Per-stage interleaved (cos, sin) tables for the rotation variant —
+/// the scalar backend's `prepare` scratch AND the row-wise path's trig
+/// table; recomputed per call because the thetas change every step.
+pub(crate) fn rotation_trig(plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+    let lay = plan.layout;
+    let mut cs = Vec::with_capacity(2 * lay.num_stages * lay.mix_stride);
+    for l in 0..lay.num_stages {
+        for &t in &params[lay.mix(l)] {
+            let (s, c) = t.sin_cos();
+            cs.push(c);
+            cs.push(s);
+        }
+    }
+    cs
+}
+
+/// Forward lone-lane scale for odd-n general stages: one strided column
+/// walk, shared by both backends (a single coordinate with no 2x2
+/// coefficients gains nothing from vector lanes).
+pub(crate) fn lone_fwd(plan: &SpmPlan, params: &[f32], l: usize, block: &mut [f32]) {
+    if let Some(lv) = plan.stage_leftover(l) {
+        let s = params[plan.layout.lone()][l];
+        let mut off = 0;
+        while off < block.len() {
+            block[off + lv] *= s;
+            off += plan.n;
+        }
+    }
+}
+
+/// Backward lone-lane scale/grad for odd-n general stages (shared).
+pub(crate) fn lone_bwd(
+    plan: &SpmPlan,
+    params: &[f32],
+    l: usize,
+    g: &mut [f32],
+    zin: &[f32],
+    grads: &mut [f32],
+) {
+    if let Some(lv) = plan.stage_leftover(l) {
+        let lay = plan.layout;
+        let s = params[lay.lone()][l];
+        let mut gl = 0.0f32;
+        let mut off = 0;
+        while off < g.len() {
+            gl += g[off + lv] * zin[off + lv];
+            g[off + lv] *= s;
+            off += plan.n;
+        }
+        grads[lay.lone().start + l] += gl;
+    }
+}
+
+/// The portable pair-major scalar kernels (DESIGN.md §11): `(i, j)` and
+/// the 2x2 coefficients load once per pair and stream down columns `i`/`j`
+/// of every row of the block.
+pub struct ScalarBackend;
+
+impl StageBackend for ScalarBackend {
+    fn prepare(&self, plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+        match plan.variant {
+            Variant::Rotation => rotation_trig(plan, params),
+            Variant::General => Vec::new(),
+        }
+    }
+
+    fn stage_fwd_batch(
+        &self,
+        plan: &SpmPlan,
+        params: &[f32],
+        scratch: &[f32],
+        l: usize,
+        block: &mut [f32],
+    ) {
+        let n = plan.n;
+        let pairs = plan.stage_pairs(l);
+        let p = pairs.len() / 2;
+        match plan.variant {
+            Variant::Rotation => {
+                let cs = &scratch[2 * p * l..2 * p * (l + 1)];
+                for k in 0..p {
+                    let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+                    let (c, s) = (cs[2 * k], cs[2 * k + 1]);
+                    let mut off = 0;
+                    while off < block.len() {
+                        let x1 = block[off + i];
+                        let x2 = block[off + j];
+                        block[off + i] = c * x1 - s * x2; // eq. (5)
+                        block[off + j] = s * x1 + c * x2; // eq. (6)
+                        off += n;
+                    }
+                }
+                // leftover passes through (keeps the stage orthogonal)
+            }
+            Variant::General => {
+                let m = &params[plan.layout.mix(l)];
+                for k in 0..p {
+                    let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+                    let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
+                    let mut off = 0;
+                    while off < block.len() {
+                        let x1 = block[off + i];
+                        let x2 = block[off + j];
+                        block[off + i] = a * x1 + b * x2; // eq. (10)
+                        block[off + j] = c * x1 + d * x2; // eq. (11)
+                        off += n;
+                    }
+                }
+                lone_fwd(plan, params, l, block);
+            }
+        }
+    }
+
+    fn stage_bwd_batch(
+        &self,
+        plan: &SpmPlan,
+        params: &[f32],
+        _scratch: &[f32],
+        l: usize,
+        g: &mut [f32],
+        zin: &[f32],
+        grads: &mut [f32],
+    ) {
+        let n = plan.n;
+        let lay = plan.layout;
+        let pairs = plan.stage_pairs(l);
+        let p = pairs.len() / 2;
+        let m = &params[lay.mix(l)];
+        let o_mix = lay.mix(l).start;
+        for k in 0..p {
+            let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+            let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
+            let (mut ga, mut gb, mut gc, mut gd) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut off = 0;
+            while off < g.len() {
+                let (x1, x2) = (zin[off + i], zin[off + j]);
+                let (d1, d2) = (g[off + i], g[off + j]);
+                // eq. (14)
+                ga += d1 * x1;
+                gb += d1 * x2;
+                gc += d2 * x1;
+                gd += d2 * x2;
+                // eqs. (12)-(13)
+                g[off + i] = a * d1 + c * d2;
+                g[off + j] = b * d1 + d * d2;
+                off += n;
+            }
+            grads[o_mix + 4 * k] += ga;
+            grads[o_mix + 4 * k + 1] += gb;
+            grads[o_mix + 4 * k + 2] += gc;
+            grads[o_mix + 4 * k + 3] += gd;
+        }
+        lone_bwd(plan, params, l, g, zin, grads);
+    }
+
+    fn stage_bwd_batch_rotation(
+        &self,
+        plan: &SpmPlan,
+        scratch: &[f32],
+        l: usize,
+        g: &mut [f32],
+        z: &mut [f32],
+        grads: &mut [f32],
+    ) {
+        let n = plan.n;
+        let pairs = plan.stage_pairs(l);
+        let p = pairs.len() / 2;
+        let cs = &scratch[2 * p * l..2 * p * (l + 1)];
+        let o_mix = plan.layout.mix(l).start;
+        for k in 0..p {
+            let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
+            let (c, s) = (cs[2 * k], cs[2 * k + 1]);
+            let mut gth = 0.0f32;
+            let mut off = 0;
+            while off < g.len() {
+                let (y1, y2) = (z[off + i], z[off + j]);
+                let (d1, d2) = (g[off + i], g[off + j]);
+                gth += d2 * y1 - d1 * y2; // eq. (9) via outputs
+                g[off + i] = c * d1 + s * d2; // eq. (7)
+                g[off + j] = -s * d1 + c * d2; // eq. (8)
+                z[off + i] = c * y1 + s * y2; // z_{l-1} = B^T z_l
+                z[off + j] = -s * y1 + c * y2;
+                off += n;
+            }
+            grads[o_mix + k] += gth;
+        }
+    }
+}

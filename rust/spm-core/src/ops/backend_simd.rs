@@ -1,0 +1,489 @@
+//! AVX2 stage-kernel backend (DESIGN.md §12): pairs processed in lanes of
+//! [`PAIR_LANES`], with the `(i, j)` coordinate loads amortized through
+//! the plan's lane-padded stage-major index tables.
+//!
+//! Loop shape per stage: lane groups outer, rows inner — one group's two
+//! index vectors and its 2x2 coefficient vectors load once and stream down
+//! every row of the fused tile (the same amortization the scalar
+//! pair-major loop gets per pair, times eight). Per row the pair
+//! coordinates are read with `vgatherdps`; AVX2 has no scatter, so the
+//! write-back extracts the result vectors through a stack array and
+//! stores only the group's `valid` lanes — padded lanes (coordinate 0,
+//! identity coefficients) are computed but never written, which is what
+//! makes the zero padding safe even when a real pair in the same group
+//! touches coordinate 0.
+//!
+//! `prepare` deinterleaves the flat mix parameters into lane-padded SoA
+//! tables (general: `[a | b | c | d]` per stage; rotation: `[cos | sin]`)
+//! so coefficient loads are plain vector loads. In the backwards the
+//! per-pair coefficient gradients live in vector accumulators across the
+//! row loop and fold into the flat gradient buffer once per group.
+//!
+//! SAFETY contract: every kernel is `#[target_feature(enable = "avx2",
+//! enable = "fma")]`; this backend is only reachable through
+//! `backend::backend_for`, which gates on `backend::simd_available()`
+//! (compile-time feature + runtime AVX2/FMA detection).
+
+// Same rationale as ops::backend: kernels take their buffers individually
+// so the data flow stays visible at the unsafe boundary.
+#![allow(clippy::too_many_arguments)]
+
+use core::arch::x86_64::*;
+
+use crate::spm::Variant;
+
+use super::backend::{lone_bwd, lone_fwd, StageBackend};
+use super::plan::{SpmPlan, PAIR_LANES};
+
+/// The one (stateless) AVX2 backend instance.
+pub static AVX2: Avx2Backend = Avx2Backend;
+
+pub struct Avx2Backend;
+
+impl StageBackend for Avx2Backend {
+    /// Lane-padded SoA coefficient tables. General: stage stride
+    /// `4 * lane_pairs`, groups `[a | b | c | d]`; rotation: stride
+    /// `2 * lane_pairs`, groups `[cos | sin]`. Padded lanes hold the
+    /// identity (a = d = 1 / cos = 1) so their computed values are
+    /// harmless even before the write-back skips them.
+    fn prepare(&self, plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+        let lp = plan.lane_pairs;
+        let p = plan.num_pairs();
+        let lay = plan.layout;
+        match plan.variant {
+            Variant::General => {
+                let mut soa = vec![0.0f32; plan.num_stages * 4 * lp];
+                for l in 0..plan.num_stages {
+                    let m = &params[lay.mix(l)];
+                    let st = &mut soa[l * 4 * lp..(l + 1) * 4 * lp];
+                    for k in 0..p {
+                        st[k] = m[4 * k];
+                        st[lp + k] = m[4 * k + 1];
+                        st[2 * lp + k] = m[4 * k + 2];
+                        st[3 * lp + k] = m[4 * k + 3];
+                    }
+                    for k in p..lp {
+                        st[k] = 1.0; // a
+                        st[3 * lp + k] = 1.0; // d
+                    }
+                }
+                soa
+            }
+            Variant::Rotation => {
+                let mut soa = vec![0.0f32; plan.num_stages * 2 * lp];
+                for l in 0..plan.num_stages {
+                    let m = &params[lay.mix(l)];
+                    let st = &mut soa[l * 2 * lp..(l + 1) * 2 * lp];
+                    for k in 0..p {
+                        let (s, c) = m[k].sin_cos();
+                        st[k] = c;
+                        st[lp + k] = s;
+                    }
+                    for k in p..lp {
+                        st[k] = 1.0; // cos
+                    }
+                }
+                soa
+            }
+        }
+    }
+
+    fn stage_fwd_batch(
+        &self,
+        plan: &SpmPlan,
+        params: &[f32],
+        scratch: &[f32],
+        l: usize,
+        block: &mut [f32],
+    ) {
+        let lp = plan.lane_pairs;
+        let p = plan.num_pairs();
+        let (li, lj) = plan.stage_lane_ij(l);
+        match plan.variant {
+            Variant::Rotation => unsafe {
+                fwd_rotation(plan.n, p, li, lj, &scratch[l * 2 * lp..], lp, block);
+            },
+            Variant::General => {
+                unsafe {
+                    fwd_general(plan.n, p, li, lj, &scratch[l * 4 * lp..], lp, block);
+                }
+                lone_fwd(plan, params, l, block);
+            }
+        }
+    }
+
+    fn stage_bwd_batch(
+        &self,
+        plan: &SpmPlan,
+        params: &[f32],
+        scratch: &[f32],
+        l: usize,
+        g: &mut [f32],
+        zin: &[f32],
+        grads: &mut [f32],
+    ) {
+        let lp = plan.lane_pairs;
+        let (li, lj) = plan.stage_lane_ij(l);
+        let o_mix = plan.layout.mix(l).start;
+        unsafe {
+            bwd_general(
+                plan.n,
+                plan.num_pairs(),
+                li,
+                lj,
+                &scratch[l * 4 * lp..],
+                lp,
+                g,
+                zin,
+                &mut grads[o_mix..],
+            );
+        }
+        lone_bwd(plan, params, l, g, zin, grads);
+    }
+
+    fn stage_bwd_batch_rotation(
+        &self,
+        plan: &SpmPlan,
+        scratch: &[f32],
+        l: usize,
+        g: &mut [f32],
+        z: &mut [f32],
+        grads: &mut [f32],
+    ) {
+        let lp = plan.lane_pairs;
+        let (li, lj) = plan.stage_lane_ij(l);
+        let o_mix = plan.layout.mix(l).start;
+        unsafe {
+            bwd_rotation(
+                plan.n,
+                plan.num_pairs(),
+                li,
+                lj,
+                &scratch[l * 2 * lp..],
+                lp,
+                g,
+                z,
+                &mut grads[o_mix..],
+            );
+        }
+    }
+}
+
+/// Lanes of the group starting at pair `k0` that are REAL pairs (the last
+/// group of a stage may be partly padding).
+#[inline(always)]
+fn valid_lanes(p: usize, k0: usize) -> usize {
+    PAIR_LANES.min(p - k0)
+}
+
+/// # Safety
+/// Caller must ensure AVX2 + FMA are available, `block` holds whole rows
+/// of width `n`, index lanes are < n (padding 0), and `soa` holds at
+/// least `4 * lp` coefficients with `lp` a multiple of [`PAIR_LANES`].
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn fwd_general(
+    n: usize,
+    p: usize,
+    li: &[i32],
+    lj: &[i32],
+    soa: &[f32],
+    lp: usize,
+    block: &mut [f32],
+) {
+    let mut y1a = [0.0f32; PAIR_LANES];
+    let mut y2a = [0.0f32; PAIR_LANES];
+    let mut k0 = 0;
+    while k0 < p {
+        let vi = _mm256_loadu_si256(li.as_ptr().add(k0) as *const __m256i);
+        let vj = _mm256_loadu_si256(lj.as_ptr().add(k0) as *const __m256i);
+        let va = _mm256_loadu_ps(soa.as_ptr().add(k0));
+        let vb = _mm256_loadu_ps(soa.as_ptr().add(lp + k0));
+        let vc = _mm256_loadu_ps(soa.as_ptr().add(2 * lp + k0));
+        let vd = _mm256_loadu_ps(soa.as_ptr().add(3 * lp + k0));
+        let valid = valid_lanes(p, k0);
+        let mut off = 0;
+        while off < block.len() {
+            let base = block.as_ptr().add(off);
+            let x1 = _mm256_i32gather_ps::<4>(base, vi);
+            let x2 = _mm256_i32gather_ps::<4>(base, vj);
+            let y1 = _mm256_fmadd_ps(va, x1, _mm256_mul_ps(vb, x2)); // eq. (10)
+            let y2 = _mm256_fmadd_ps(vc, x1, _mm256_mul_ps(vd, x2)); // eq. (11)
+            _mm256_storeu_ps(y1a.as_mut_ptr(), y1);
+            _mm256_storeu_ps(y2a.as_mut_ptr(), y2);
+            for lane in 0..valid {
+                let i = *li.get_unchecked(k0 + lane) as usize;
+                let j = *lj.get_unchecked(k0 + lane) as usize;
+                *block.get_unchecked_mut(off + i) = y1a[lane];
+                *block.get_unchecked_mut(off + j) = y2a[lane];
+            }
+            off += n;
+        }
+        k0 += PAIR_LANES;
+    }
+}
+
+/// # Safety
+/// Same contract as [`fwd_general`] with `soa` holding `2 * lp` trig
+/// coefficients.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn fwd_rotation(
+    n: usize,
+    p: usize,
+    li: &[i32],
+    lj: &[i32],
+    soa: &[f32],
+    lp: usize,
+    block: &mut [f32],
+) {
+    let mut y1a = [0.0f32; PAIR_LANES];
+    let mut y2a = [0.0f32; PAIR_LANES];
+    let mut k0 = 0;
+    while k0 < p {
+        let vi = _mm256_loadu_si256(li.as_ptr().add(k0) as *const __m256i);
+        let vj = _mm256_loadu_si256(lj.as_ptr().add(k0) as *const __m256i);
+        let vc = _mm256_loadu_ps(soa.as_ptr().add(k0));
+        let vs = _mm256_loadu_ps(soa.as_ptr().add(lp + k0));
+        let valid = valid_lanes(p, k0);
+        let mut off = 0;
+        while off < block.len() {
+            let base = block.as_ptr().add(off);
+            let x1 = _mm256_i32gather_ps::<4>(base, vi);
+            let x2 = _mm256_i32gather_ps::<4>(base, vj);
+            let y1 = _mm256_fmsub_ps(vc, x1, _mm256_mul_ps(vs, x2)); // eq. (5)
+            let y2 = _mm256_fmadd_ps(vs, x1, _mm256_mul_ps(vc, x2)); // eq. (6)
+            _mm256_storeu_ps(y1a.as_mut_ptr(), y1);
+            _mm256_storeu_ps(y2a.as_mut_ptr(), y2);
+            for lane in 0..valid {
+                let i = *li.get_unchecked(k0 + lane) as usize;
+                let j = *lj.get_unchecked(k0 + lane) as usize;
+                *block.get_unchecked_mut(off + i) = y1a[lane];
+                *block.get_unchecked_mut(off + j) = y2a[lane];
+            }
+            off += n;
+        }
+        k0 += PAIR_LANES;
+    }
+}
+
+/// # Safety
+/// Same contract as [`fwd_general`]; `g` and `zin` are same-shape blocks
+/// and `gm` is the stage's mix-gradient slice (interleaved
+/// `[a, b, c, d]` per pair, at least `4 * p` long).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn bwd_general(
+    n: usize,
+    p: usize,
+    li: &[i32],
+    lj: &[i32],
+    soa: &[f32],
+    lp: usize,
+    g: &mut [f32],
+    zin: &[f32],
+    gm: &mut [f32],
+) {
+    let mut g1a = [0.0f32; PAIR_LANES];
+    let mut g2a = [0.0f32; PAIR_LANES];
+    let mut acc = [0.0f32; PAIR_LANES];
+    let mut k0 = 0;
+    while k0 < p {
+        let vi = _mm256_loadu_si256(li.as_ptr().add(k0) as *const __m256i);
+        let vj = _mm256_loadu_si256(lj.as_ptr().add(k0) as *const __m256i);
+        let va = _mm256_loadu_ps(soa.as_ptr().add(k0));
+        let vb = _mm256_loadu_ps(soa.as_ptr().add(lp + k0));
+        let vc = _mm256_loadu_ps(soa.as_ptr().add(2 * lp + k0));
+        let vd = _mm256_loadu_ps(soa.as_ptr().add(3 * lp + k0));
+        let mut vga = _mm256_setzero_ps();
+        let mut vgb = _mm256_setzero_ps();
+        let mut vgc = _mm256_setzero_ps();
+        let mut vgd = _mm256_setzero_ps();
+        let valid = valid_lanes(p, k0);
+        let mut off = 0;
+        while off < g.len() {
+            let zbase = zin.as_ptr().add(off);
+            let gbase = g.as_ptr().add(off);
+            let x1 = _mm256_i32gather_ps::<4>(zbase, vi);
+            let x2 = _mm256_i32gather_ps::<4>(zbase, vj);
+            let d1 = _mm256_i32gather_ps::<4>(gbase, vi);
+            let d2 = _mm256_i32gather_ps::<4>(gbase, vj);
+            // eq. (14): coefficient grads accumulate across rows in lanes
+            vga = _mm256_fmadd_ps(d1, x1, vga);
+            vgb = _mm256_fmadd_ps(d1, x2, vgb);
+            vgc = _mm256_fmadd_ps(d2, x1, vgc);
+            vgd = _mm256_fmadd_ps(d2, x2, vgd);
+            // eqs. (12)-(13)
+            let g1 = _mm256_fmadd_ps(va, d1, _mm256_mul_ps(vc, d2));
+            let g2 = _mm256_fmadd_ps(vb, d1, _mm256_mul_ps(vd, d2));
+            _mm256_storeu_ps(g1a.as_mut_ptr(), g1);
+            _mm256_storeu_ps(g2a.as_mut_ptr(), g2);
+            for lane in 0..valid {
+                let i = *li.get_unchecked(k0 + lane) as usize;
+                let j = *lj.get_unchecked(k0 + lane) as usize;
+                *g.get_unchecked_mut(off + i) = g1a[lane];
+                *g.get_unchecked_mut(off + j) = g2a[lane];
+            }
+            off += n;
+        }
+        // fold the lane accumulators into the interleaved flat grads
+        for (vacc, slot) in [(vga, 0usize), (vgb, 1), (vgc, 2), (vgd, 3)] {
+            _mm256_storeu_ps(acc.as_mut_ptr(), vacc);
+            for lane in 0..valid {
+                gm[4 * (k0 + lane) + slot] += acc[lane];
+            }
+        }
+        k0 += PAIR_LANES;
+    }
+}
+
+/// # Safety
+/// Same contract as [`fwd_general`]; `g` and `z` are same-shape blocks and
+/// `gm` is the stage's theta-gradient slice (at least `p` long).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn bwd_rotation(
+    n: usize,
+    p: usize,
+    li: &[i32],
+    lj: &[i32],
+    soa: &[f32],
+    lp: usize,
+    g: &mut [f32],
+    z: &mut [f32],
+    gm: &mut [f32],
+) {
+    let mut g1a = [0.0f32; PAIR_LANES];
+    let mut g2a = [0.0f32; PAIR_LANES];
+    let mut z1a = [0.0f32; PAIR_LANES];
+    let mut z2a = [0.0f32; PAIR_LANES];
+    let mut acc = [0.0f32; PAIR_LANES];
+    let mut k0 = 0;
+    while k0 < p {
+        let vi = _mm256_loadu_si256(li.as_ptr().add(k0) as *const __m256i);
+        let vj = _mm256_loadu_si256(lj.as_ptr().add(k0) as *const __m256i);
+        let vc = _mm256_loadu_ps(soa.as_ptr().add(k0));
+        let vs = _mm256_loadu_ps(soa.as_ptr().add(lp + k0));
+        let mut vgth = _mm256_setzero_ps();
+        let valid = valid_lanes(p, k0);
+        let mut off = 0;
+        while off < g.len() {
+            let zbase = z.as_ptr().add(off);
+            let gbase = g.as_ptr().add(off);
+            let y1 = _mm256_i32gather_ps::<4>(zbase, vi);
+            let y2 = _mm256_i32gather_ps::<4>(zbase, vj);
+            let d1 = _mm256_i32gather_ps::<4>(gbase, vi);
+            let d2 = _mm256_i32gather_ps::<4>(gbase, vj);
+            // eq. (9) via outputs: gth += d2*y1 - d1*y2
+            vgth = _mm256_add_ps(vgth, _mm256_fmsub_ps(d2, y1, _mm256_mul_ps(d1, y2)));
+            // eqs. (7)-(8)
+            let g1 = _mm256_fmadd_ps(vc, d1, _mm256_mul_ps(vs, d2));
+            let g2 = _mm256_fmsub_ps(vc, d2, _mm256_mul_ps(vs, d1));
+            // z_{l-1} = B^T z_l
+            let z1 = _mm256_fmadd_ps(vc, y1, _mm256_mul_ps(vs, y2));
+            let z2 = _mm256_fmsub_ps(vc, y2, _mm256_mul_ps(vs, y1));
+            _mm256_storeu_ps(g1a.as_mut_ptr(), g1);
+            _mm256_storeu_ps(g2a.as_mut_ptr(), g2);
+            _mm256_storeu_ps(z1a.as_mut_ptr(), z1);
+            _mm256_storeu_ps(z2a.as_mut_ptr(), z2);
+            for lane in 0..valid {
+                let i = *li.get_unchecked(k0 + lane) as usize;
+                let j = *lj.get_unchecked(k0 + lane) as usize;
+                *g.get_unchecked_mut(off + i) = g1a[lane];
+                *g.get_unchecked_mut(off + j) = g2a[lane];
+                *z.get_unchecked_mut(off + i) = z1a[lane];
+                *z.get_unchecked_mut(off + j) = z2a[lane];
+            }
+            off += n;
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), vgth);
+        for lane in 0..valid {
+            gm[k0 + lane] += acc[lane];
+        }
+        k0 += PAIR_LANES;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::{ScalarBackend, StageBackend};
+    use super::*;
+    use crate::rng::Rng;
+    use crate::spm::SpmSpec;
+    use crate::testkit::{check_close, ALL_SCHEDULES};
+
+    /// Kernel-level parity: every AVX2 kernel against the scalar backend
+    /// on the same random blocks, widths chosen to hit full groups, a
+    /// ragged last group, and the odd-n leftover lane. Skipped (not
+    /// failed) on machines without AVX2/FMA — the CI simd matrix leg is
+    /// where execution is guaranteed. Gates on raw hardware detection,
+    /// NOT `simd_available()`, so a concurrently running downgrade test
+    /// holding the force-scalar hook cannot skip this coverage.
+    #[test]
+    fn avx2_kernels_match_scalar() {
+        if !std::arch::is_x86_feature_detected!("avx2")
+            || !std::arch::is_x86_feature_detected!("fma")
+        {
+            eprintln!("avx2_kernels_match_scalar: AVX2/FMA not detected, skipping");
+            return;
+        }
+        let rows = 5;
+        for variant in [Variant::Rotation, Variant::General] {
+            for sched in ALL_SCHEDULES {
+                for n in [2usize, 9, 16, 33, 40] {
+                    let spec = SpmSpec::new(n, variant)
+                        .with_schedule(sched)
+                        .with_stages(3)
+                        .with_seed(11);
+                    let plan = SpmPlan::new(spec);
+                    let mut rng = Rng::new(n as u64);
+                    let mut params = plan.init_flat(&mut rng);
+                    for v in params.iter_mut() {
+                        *v += 0.2 * rng.normal();
+                    }
+                    let scalar = ScalarBackend;
+                    let s_scratch = scalar.prepare(&plan, &params);
+                    let v_scratch = AVX2.prepare(&plan, &params);
+                    let ctx = format!("{variant:?} {sched:?} n={n}");
+
+                    for l in 0..plan.num_stages {
+                        // forward
+                        let block0: Vec<f32> = rng.normal_vec(rows * n, 1.0);
+                        let mut bs = block0.clone();
+                        let mut bv = block0.clone();
+                        scalar.stage_fwd_batch(&plan, &params, &s_scratch, l, &mut bs);
+                        AVX2.stage_fwd_batch(&plan, &params, &v_scratch, l, &mut bv);
+                        check_close(&bv, &bs, 1e-5, &format!("{ctx} l={l} fwd")).unwrap();
+
+                        // backward
+                        let g0: Vec<f32> = rng.normal_vec(rows * n, 1.0);
+                        let z0: Vec<f32> = rng.normal_vec(rows * n, 1.0);
+                        let mut gs = g0.clone();
+                        let mut gv = g0.clone();
+                        let mut grs = vec![0.0f32; plan.layout.total];
+                        let mut grv = vec![0.0f32; plan.layout.total];
+                        match variant {
+                            Variant::General => {
+                                scalar.stage_bwd_batch(
+                                    &plan, &params, &s_scratch, l, &mut gs, &z0, &mut grs,
+                                );
+                                AVX2.stage_bwd_batch(
+                                    &plan, &params, &v_scratch, l, &mut gv, &z0, &mut grv,
+                                );
+                            }
+                            Variant::Rotation => {
+                                let mut zs = z0.clone();
+                                let mut zv = z0.clone();
+                                scalar.stage_bwd_batch_rotation(
+                                    &plan, &s_scratch, l, &mut gs, &mut zs, &mut grs,
+                                );
+                                AVX2.stage_bwd_batch_rotation(
+                                    &plan, &v_scratch, l, &mut gv, &mut zv, &mut grv,
+                                );
+                                check_close(&zv, &zs, 1e-5, &format!("{ctx} l={l} bwd z")).unwrap();
+                            }
+                        }
+                        check_close(&gv, &gs, 1e-5, &format!("{ctx} l={l} bwd g")).unwrap();
+                        check_close(&grv, &grs, 1e-4, &format!("{ctx} l={l} bwd grads")).unwrap();
+                    }
+                }
+            }
+        }
+    }
+}

@@ -19,6 +19,7 @@ use crate::rng::Rng;
 use crate::spm::{SpmSpec, Variant};
 use crate::tensor::{self, Mat};
 
+use super::backend::{self, rotation_trig, StageBackend};
 use super::plan::SpmPlan;
 
 /// Which operator family a [`LinearOp`] executes.
@@ -58,6 +59,13 @@ pub enum SpmExec {
     /// pair and stream down the `i`/`j` columns of the whole tile.
     #[default]
     BatchFused,
+    /// The fused tiling driven through the vectorized stage backend
+    /// (DESIGN.md §12): pairs in lanes of eight, coordinates gathered via
+    /// the plan's lane-padded index tables. Requires the `simd` cargo
+    /// feature on x86_64 plus runtime AVX2/FMA detection;
+    /// [`LinearOp::set_exec`] downgrades to [`SpmExec::BatchFused`] when
+    /// unsupported, so `exec = "simd"` configs stay portable.
+    Simd,
 }
 
 impl SpmExec {
@@ -65,6 +73,7 @@ impl SpmExec {
         match s {
             "rowwise" => Some(SpmExec::RowWise),
             "fused" => Some(SpmExec::BatchFused),
+            "simd" => Some(SpmExec::Simd),
             _ => None,
         }
     }
@@ -73,6 +82,7 @@ impl SpmExec {
         match self {
             SpmExec::RowWise => "rowwise",
             SpmExec::BatchFused => "fused",
+            SpmExec::Simd => "simd",
         }
     }
 }
@@ -210,8 +220,15 @@ impl LinearOp {
     }
 
     /// Select the SPM stage-loop execution path (no-op for dense ops).
+    /// `SpmExec::Simd` downgrades to the scalar fused path when the
+    /// vectorized backend is not compiled in or not detected at runtime
+    /// (DESIGN.md §12), so configs carrying `exec = "simd"` construct and
+    /// run on every build; `exec()` reports what was actually selected.
     pub fn set_exec(&mut self, exec: SpmExec) {
-        self.exec = exec;
+        self.exec = match exec {
+            SpmExec::Simd if !backend::simd_available() => SpmExec::BatchFused,
+            e => e,
+        };
     }
 
     pub fn exec(&self) -> SpmExec {
@@ -348,24 +365,16 @@ impl LinearOp {
     }
 }
 
-/// Per-stage interleaved (cos, sin) tables for the rotation variant;
-/// recomputed per call because the thetas change every training step.
-fn rotation_trig(plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
-    let lay = plan.layout;
-    let mut cs = Vec::with_capacity(2 * lay.num_stages * lay.mix_stride);
-    for l in 0..lay.num_stages {
-        for &t in &params[lay.mix(l)] {
-            let (s, c) = t.sin_cos();
-            cs.push(c);
-            cs.push(s);
-        }
-    }
-    cs
-}
-
 /// Apply stage `l` in place on one row (planned path, flat params).
 #[inline]
-fn stage_fwd(plan: &SpmPlan, params: &[f32], trig: &[f32], lone: &[f32], l: usize, row: &mut [f32]) {
+fn stage_fwd(
+    plan: &SpmPlan,
+    params: &[f32],
+    trig: &[f32],
+    lone: &[f32],
+    l: usize,
+    row: &mut [f32],
+) {
     let pairs = plan.stage_pairs(l);
     let p = pairs.len() / 2;
     match plan.variant {
@@ -398,154 +407,6 @@ fn stage_fwd(plan: &SpmPlan, params: &[f32], trig: &[f32], lone: &[f32], l: usiz
     }
 }
 
-/// Apply stage `l` to a row-major `(rows x n)` activation block, walking
-/// the stage's pair table PAIR-MAJOR (DESIGN.md §11): the `(i, j)` indices
-/// and the 2x2 coefficients are loaded once per pair and streamed down
-/// columns `i` and `j` of every row in the block, so the table reads
-/// amortize over the batch instead of being re-read per row. The general
-/// variant's lone lane is a single strided column scale at the end.
-#[inline]
-fn stage_fwd_batch(plan: &SpmPlan, params: &[f32], trig: &[f32], l: usize, block: &mut [f32]) {
-    let n = plan.n;
-    let pairs = plan.stage_pairs(l);
-    let p = pairs.len() / 2;
-    match plan.variant {
-        Variant::Rotation => {
-            let cs = &trig[2 * p * l..2 * p * (l + 1)];
-            for k in 0..p {
-                let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
-                let (c, s) = (cs[2 * k], cs[2 * k + 1]);
-                let mut off = 0;
-                while off < block.len() {
-                    let x1 = block[off + i];
-                    let x2 = block[off + j];
-                    block[off + i] = c * x1 - s * x2; // eq. (5)
-                    block[off + j] = s * x1 + c * x2; // eq. (6)
-                    off += n;
-                }
-            }
-            // leftover passes through (keeps the stage orthogonal)
-        }
-        Variant::General => {
-            let m = &params[plan.layout.mix(l)];
-            for k in 0..p {
-                let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
-                let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
-                let mut off = 0;
-                while off < block.len() {
-                    let x1 = block[off + i];
-                    let x2 = block[off + j];
-                    block[off + i] = a * x1 + b * x2; // eq. (10)
-                    block[off + j] = c * x1 + d * x2; // eq. (11)
-                    off += n;
-                }
-            }
-            if let Some(lv) = plan.stage_leftover(l) {
-                let s = params[plan.layout.lone()][l];
-                let mut off = 0;
-                while off < block.len() {
-                    block[off + lv] *= s;
-                    off += n;
-                }
-            }
-        }
-    }
-}
-
-/// Reverse one GENERAL stage over a `(rows x n)` adjoint block `g`, with
-/// `zin` the matching rows of the stage INPUT from the trace. Pair-major
-/// like [`stage_fwd_batch`]; the four coefficient gradients (eq. 14)
-/// accumulate across the block's rows into scalars before one write each
-/// into `grads`, and the adjoint is propagated by eqs. (12)-(13).
-#[inline]
-fn stage_bwd_batch(
-    plan: &SpmPlan,
-    params: &[f32],
-    l: usize,
-    g: &mut [f32],
-    zin: &[f32],
-    grads: &mut [f32],
-) {
-    let n = plan.n;
-    let lay = plan.layout;
-    let pairs = plan.stage_pairs(l);
-    let p = pairs.len() / 2;
-    let m = &params[lay.mix(l)];
-    let o_mix = lay.mix(l).start;
-    for k in 0..p {
-        let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
-        let (a, b, c, d) = (m[4 * k], m[4 * k + 1], m[4 * k + 2], m[4 * k + 3]);
-        let (mut ga, mut gb, mut gc, mut gd) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        let mut off = 0;
-        while off < g.len() {
-            let (x1, x2) = (zin[off + i], zin[off + j]);
-            let (d1, d2) = (g[off + i], g[off + j]);
-            // eq. (14)
-            ga += d1 * x1;
-            gb += d1 * x2;
-            gc += d2 * x1;
-            gd += d2 * x2;
-            // eqs. (12)-(13)
-            g[off + i] = a * d1 + c * d2;
-            g[off + j] = b * d1 + d * d2;
-            off += n;
-        }
-        grads[o_mix + 4 * k] += ga;
-        grads[o_mix + 4 * k + 1] += gb;
-        grads[o_mix + 4 * k + 2] += gc;
-        grads[o_mix + 4 * k + 3] += gd;
-    }
-    if let Some(lv) = plan.stage_leftover(l) {
-        let s = params[lay.lone()][l];
-        let mut gl = 0.0f32;
-        let mut off = 0;
-        while off < g.len() {
-            gl += g[off + lv] * zin[off + lv];
-            g[off + lv] *= s;
-            off += n;
-        }
-        grads[lay.lone().start + l] += gl;
-    }
-}
-
-/// Reverse one ROTATION stage over a `(rows x n)` block: transpose-applies
-/// the stage to BOTH the adjoint block `g` (eqs. 7-8) and the activation
-/// block `z` (`z_{l-1} = B_l^T z_l`, so stage inputs are recomputed, not
-/// stored), while the theta gradient (eq. 9 in output form, DESIGN.md §8)
-/// accumulates across rows into a scalar before one write into `grads`.
-#[inline]
-fn stage_bwd_batch_rotation(
-    plan: &SpmPlan,
-    trig: &[f32],
-    l: usize,
-    g: &mut [f32],
-    z: &mut [f32],
-    grads: &mut [f32],
-) {
-    let n = plan.n;
-    let pairs = plan.stage_pairs(l);
-    let p = pairs.len() / 2;
-    let cs = &trig[2 * p * l..2 * p * (l + 1)];
-    let o_mix = plan.layout.mix(l).start;
-    for k in 0..p {
-        let (i, j) = (pairs[2 * k] as usize, pairs[2 * k + 1] as usize);
-        let (c, s) = (cs[2 * k], cs[2 * k + 1]);
-        let mut gth = 0.0f32;
-        let mut off = 0;
-        while off < g.len() {
-            let (y1, y2) = (z[off + i], z[off + j]);
-            let (d1, d2) = (g[off + i], g[off + j]);
-            gth += d2 * y1 - d1 * y2; // eq. (9) via outputs
-            g[off + i] = c * d1 + s * d2; // eq. (7)
-            g[off + j] = -s * d1 + c * d2; // eq. (8)
-            z[off + i] = c * y1 + s * y2; // z_{l-1} = B^T z_l
-            z[off + j] = -s * y1 + c * y2;
-            off += n;
-        }
-        grads[o_mix + k] += gth;
-    }
-}
-
 /// `row[i] *= d[i]` over every row of a block — eq. (2) D_in.
 #[inline]
 fn scale_rows(block: &mut [f32], n: usize, d: &[f32]) {
@@ -569,32 +430,30 @@ fn finish_rows(block: &mut [f32], n: usize, d_out: &[f32], bias: &[f32]) {
 fn spm_forward(plan: &SpmPlan, exec: SpmExec, params: &[f32], x: &Mat) -> Mat {
     match exec {
         SpmExec::RowWise => spm_forward_rowwise(plan, params, x),
-        SpmExec::BatchFused => spm_forward_fused(plan, params, x),
+        _ => spm_forward_fused(plan, backend::backend_for(exec), params, x),
     }
 }
 
 /// Batch-fused forward: each thread owns a row block; inside it the block
 /// is cut into `plan.fused_rows` tiles and every stage is applied to a
 /// tile before moving on, so activations stay L2-resident across the
-/// whole D_in -> stages -> D_out sweep.
-fn spm_forward_fused(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
+/// whole D_in -> stages -> D_out sweep. The per-stage kernel is whatever
+/// [`StageBackend`] the exec mode resolved to (DESIGN.md §12).
+fn spm_forward_fused(plan: &SpmPlan, be: &dyn StageBackend, params: &[f32], x: &Mat) -> Mat {
     assert_eq!(x.cols, plan.n, "input width");
     let n = plan.n;
     let lay = plan.layout;
     let d_in = &params[lay.d_in()];
     let d_out = &params[lay.d_out()];
     let bias = &params[lay.bias()];
-    let trig = match plan.variant {
-        Variant::Rotation => rotation_trig(plan, params),
-        Variant::General => Vec::new(),
-    };
+    let scratch = be.prepare(plan, params);
     let tile = plan.fused_rows * n;
     let mut z = x.clone();
     parallel::for_each_chunk(&mut z.data, n, |_first, chunk| {
         for block in chunk.chunks_mut(tile) {
             scale_rows(block, n, d_in);
             for l in 0..plan.num_stages {
-                stage_fwd_batch(plan, params, &trig, l, block); // eq. (3)
+                be.stage_fwd_batch(plan, params, &scratch, l, block); // eq. (3)
             }
             finish_rows(block, n, d_out, bias);
         }
@@ -634,7 +493,7 @@ fn spm_forward_rowwise(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
 fn spm_forward_trace(plan: &SpmPlan, exec: SpmExec, params: &[f32], x: &Mat) -> (Mat, LinearTrace) {
     match exec {
         SpmExec::RowWise => spm_forward_trace_rowwise(plan, params, x),
-        SpmExec::BatchFused => spm_forward_trace_fused(plan, params, x),
+        _ => spm_forward_trace_fused(plan, backend::backend_for(exec), params, x),
     }
 }
 
@@ -643,7 +502,12 @@ fn spm_forward_trace(plan: &SpmPlan, exec: SpmExec, params: &[f32], x: &Mat) -> 
 /// hot tile, and writes the residuals `backward` needs (rotation: z_L;
 /// general: every stage input) into per-stage buffers at the same row
 /// offsets via `parallel::for_each_chunk_with`.
-fn spm_forward_trace_fused(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, LinearTrace) {
+fn spm_forward_trace_fused(
+    plan: &SpmPlan,
+    be: &dyn StageBackend,
+    params: &[f32],
+    x: &Mat,
+) -> (Mat, LinearTrace) {
     assert_eq!(x.cols, plan.n, "input width");
     let n = plan.n;
     let rows = x.rows;
@@ -651,10 +515,10 @@ fn spm_forward_trace_fused(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, Lin
     let d_in = &params[lay.d_in()];
     let d_out = &params[lay.d_out()];
     let bias = &params[lay.bias()];
+    let scratch = be.prepare(plan, params);
     let tile = plan.fused_rows * n;
     match plan.variant {
         Variant::Rotation => {
-            let trig = rotation_trig(plan, params);
             let mut z = x.clone();
             let mut z_last = Mat::zeros(rows, n);
             parallel::for_each_chunk_with(
@@ -666,7 +530,7 @@ fn spm_forward_trace_fused(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, Lin
                     for block in chunk.chunks_mut(tile) {
                         scale_rows(block, n, d_in);
                         for l in 0..plan.num_stages {
-                            stage_fwd_batch(plan, params, &trig, l, block);
+                            be.stage_fwd_batch(plan, params, &scratch, l, block);
                         }
                         snaps[0][off..off + block.len()].copy_from_slice(block);
                         finish_rows(block, n, d_out, bias);
@@ -679,7 +543,8 @@ fn spm_forward_trace_fused(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, Lin
         Variant::General => {
             // zs[0] = D_in x and zs[l+1] = stage-l output, all written
             // while the tile is hot — no per-stage barrier, no separate
-            // scale/finish passes.
+            // scale/finish passes. The per-stage trace kernel captures
+            // the stage output as part of the stage sweep.
             let mut z = x.clone();
             let mut zs: Vec<Mat> = (0..=plan.num_stages).map(|_| Mat::zeros(rows, n)).collect();
             {
@@ -691,8 +556,8 @@ fn spm_forward_trace_fused(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, Lin
                         scale_rows(block, n, d_in);
                         snaps[0][off..off + block.len()].copy_from_slice(block);
                         for l in 0..plan.num_stages {
-                            stage_fwd_batch(plan, params, &[], l, block);
-                            snaps[l + 1][off..off + block.len()].copy_from_slice(block);
+                            let snap = &mut snaps[l + 1][off..off + block.len()];
+                            be.stage_fwd_batch_trace(plan, params, &scratch, l, block, snap);
                         }
                         finish_rows(block, n, d_out, bias);
                         off += block.len();
@@ -776,7 +641,7 @@ fn spm_backward_rotation(
 ) -> (Mat, Vec<f32>) {
     match exec {
         SpmExec::RowWise => spm_backward_rotation_rowwise(plan, params, x, z_last, gy),
-        SpmExec::BatchFused => spm_backward_rotation_fused(plan, params, x, z_last, gy),
+        _ => spm_backward_rotation_fused(plan, backend::backend_for(exec), params, x, z_last, gy),
     }
 }
 
@@ -785,6 +650,7 @@ fn spm_backward_rotation(
 /// tile's adjoint AND recomputed-activation blocks.
 fn spm_backward_rotation_fused(
     plan: &SpmPlan,
+    be: &dyn StageBackend,
     params: &[f32],
     x: &Mat,
     z_last: &Mat,
@@ -795,7 +661,7 @@ fn spm_backward_rotation_fused(
     let lay = plan.layout;
     let d_in = &params[lay.d_in()];
     let d_out = &params[lay.d_out()];
-    let trig = rotation_trig(plan, params);
+    let scratch = be.prepare(plan, params);
     let rows = gy.rows;
     let (o_din, o_dout, o_bias) = (lay.d_in().start, lay.d_out().start, lay.bias().start);
 
@@ -827,7 +693,7 @@ fn spm_backward_rotation_fused(
             }
             // stages in reverse, batched over the tile
             for l in (0..ls).rev() {
-                stage_bwd_batch_rotation(plan, &trig, l, g_blk, z_blk, &mut grads);
+                be.stage_bwd_batch_rotation(plan, &scratch, l, g_blk, z_blk, &mut grads);
             }
             // eqs. (18)-(19)
             for ri in 0..rt {
@@ -928,7 +794,7 @@ fn spm_backward_general(
 ) -> (Mat, Vec<f32>) {
     match exec {
         SpmExec::RowWise => spm_backward_general_rowwise(plan, params, x, zs, gy),
-        SpmExec::BatchFused => spm_backward_general_fused(plan, params, x, zs, gy),
+        _ => spm_backward_general_fused(plan, backend::backend_for(exec), params, x, zs, gy),
     }
 }
 
@@ -938,6 +804,7 @@ fn spm_backward_general(
 /// so no copy is needed.
 fn spm_backward_general_fused(
     plan: &SpmPlan,
+    be: &dyn StageBackend,
     params: &[f32],
     x: &Mat,
     zs: &[Mat],
@@ -948,6 +815,7 @@ fn spm_backward_general_fused(
     let lay = plan.layout;
     let d_in = &params[lay.d_in()];
     let d_out = &params[lay.d_out()];
+    let scratch = be.prepare(plan, params);
     let rows = gy.rows;
     let (o_din, o_dout, o_bias) = (lay.d_in().start, lay.d_out().start, lay.bias().start);
 
@@ -975,7 +843,7 @@ fn spm_backward_general_fused(
             }
             for l in (0..ls).rev() {
                 let zin = &zs[l].data[r0 * n..(r0 + rt) * n];
-                stage_bwd_batch(plan, params, l, g_blk, zin, &mut grads);
+                be.stage_bwd_batch(plan, params, &scratch, l, g_blk, zin, &mut grads);
             }
             for ri in 0..rt {
                 let r = r0 + ri;
@@ -1088,7 +956,39 @@ mod tests {
     use crate::dense::Dense;
     use crate::optim::{Adam, SgdMomentum};
     use crate::spm::{Spm, SpmParams};
-    use crate::testkit::{check_close, forall, numerical_grad, ALL_SCHEDULES, ALL_VARIANTS};
+    use crate::testkit::{
+        check_close, forall, numerical_grad, ALL_EXECS, ALL_SCHEDULES, ALL_VARIANTS,
+    };
+
+    /// Serializes the tests that toggle or assert on the global SIMD
+    /// detection state (`backend::force_scalar` and the `SPM_EXEC`
+    /// pinning assertions) so they cannot race each other.
+    static EXEC_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    /// Take [`EXEC_LOCK`] ignoring poisoning: the guarded state is
+    /// restored by `ForcedScalar`'s `Drop` even across panics, so one
+    /// failing test must not cascade into `PoisonError` failures in the
+    /// other serialized tests.
+    fn exec_lock() -> std::sync::MutexGuard<'static, ()> {
+        EXEC_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// RAII for `backend::force_scalar(true)` — restores detection even
+    /// when the test body panics.
+    struct ForcedScalar;
+
+    impl ForcedScalar {
+        fn new() -> ForcedScalar {
+            backend::force_scalar(true);
+            ForcedScalar
+        }
+    }
+
+    impl Drop for ForcedScalar {
+        fn drop(&mut self) {
+            backend::force_scalar(false);
+        }
+    }
 
     fn mk_reference(
         n: usize,
@@ -1210,13 +1110,20 @@ mod tests {
         });
     }
 
-    /// Batch-fused vs row-wise vs reference, both variants x all three
-    /// schedules x ragged batch sizes B in {1, 3, 97} — the remainder
-    /// cases the row-block splitter and `fused_rows` tiling must get
-    /// right (1 row: single-tile fallback; 3: below the thread count;
-    /// 97: odd split across threads AND tiles).
+    /// Every execution path (row-wise, batch-fused, simd) vs the
+    /// reference, both variants x all three schedules x ragged batch
+    /// sizes B in {1, 3, 97} — the remainder cases the row-block splitter
+    /// and `fused_rows` tiling must get right (1 row: single-tile
+    /// fallback; 3: below the thread count; 97: odd split across threads
+    /// AND tiles). On builds/machines without the vectorized backend the
+    /// simd column downgrades to fused (still a valid sweep member); the
+    /// CI simd matrix leg is where the AVX2 kernels are guaranteed to run.
     #[test]
-    fn batch_fused_matches_rowwise_and_reference() {
+    fn all_exec_paths_match_reference() {
+        // serialized with the force-scalar downgrade test: otherwise its
+        // hook window could silently turn this sweep's Simd iterations
+        // into scalar runs on the very CI leg that guarantees AVX2
+        let _lock = exec_lock();
         for variant in ALL_VARIANTS {
             for sched in ALL_SCHEDULES {
                 for batch in [1usize, 3, 97] {
@@ -1226,31 +1133,31 @@ mod tests {
                     randomize(&mut p, &mut rng);
                     let packed = SpmPlan::new(op.spec).pack_params(&p);
 
-                    let mut fused = mk_planned(n, variant, sched, l, seed);
-                    fused.params_mut().copy_from_slice(&packed);
-                    let mut rowwise = mk_planned(n, variant, sched, l, seed);
-                    rowwise.params_mut().copy_from_slice(&packed);
-                    rowwise.set_exec(SpmExec::RowWise);
-                    assert_eq!(fused.exec(), SpmExec::BatchFused);
-
                     let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
                     let gy = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
-                    let ctx = format!("{variant:?} {sched:?} B={batch}");
 
-                    // forward parity (max-abs-diff) across all three paths
                     let want = op.forward(&p, &x);
-                    let y_f = fused.forward(&x);
-                    let y_r = rowwise.forward(&x);
-                    assert!(y_f.max_abs_diff(&want) < 1e-5, "{ctx}: fused fwd vs ref");
-                    assert!(y_r.max_abs_diff(&y_f) < 1e-5, "{ctx}: rowwise vs fused fwd");
-
-                    // backward parity: g_x and every flat parameter grad
                     let (_y, rtrace) = op.forward_trace(&p, &x);
                     let (gx_ref, g_ref) = op.backward(&p, &x, &rtrace, &gy);
                     let g_ref_flat = SpmPlan::new(op.spec)
                         .pack(&g_ref.d_in, &g_ref.d_out, &g_ref.bias, &g_ref.mix, &g_ref.lone);
 
-                    for planned in [&mut fused, &mut rowwise] {
+                    for exec in ALL_EXECS {
+                        let mut planned = mk_planned(n, variant, sched, l, seed);
+                        planned.params_mut().copy_from_slice(&packed);
+                        planned.set_exec(exec);
+                        let ctx = format!("{variant:?} {sched:?} B={batch} {exec:?}");
+                        // on the pinned CI simd leg the vectorized backend
+                        // must actually be what this iteration exercises
+                        if exec == SpmExec::Simd
+                            && std::env::var("SPM_EXEC").as_deref() == Ok("simd")
+                            && backend::simd_compiled()
+                        {
+                            assert_eq!(planned.exec(), SpmExec::Simd, "{ctx}: backend lost");
+                        }
+
+                        let y = planned.forward(&x);
+                        assert!(y.max_abs_diff(&want) < 1e-5, "{ctx}: fwd vs ref");
                         let (yt, trace) = planned.forward_train(&x);
                         assert!(yt.max_abs_diff(&want) < 1e-5, "{ctx}: forward_train");
                         planned.zero_grads();
@@ -1263,14 +1170,107 @@ mod tests {
         }
     }
 
+    /// Satellite: `exec = "simd"` must construct and keep full parity on
+    /// builds without the vectorized backend. With detection forced off
+    /// through the test hook, `set_exec` downgrades to `BatchFused` and
+    /// forward/backward still match the reference; on non-simd builds the
+    /// same holds without the hook.
+    #[test]
+    fn simd_exec_downgrades_without_support() {
+        let _lock = exec_lock();
+        {
+            let _forced = ForcedScalar::new();
+            assert!(!backend::simd_available(), "hook must disable detection");
+            let (n, l, seed) = (9, 3, 77);
+            for variant in ALL_VARIANTS {
+                let (op, mut p) = mk_reference(n, variant, Schedule::Random, l, seed);
+                let mut rng = Rng::new(seed);
+                randomize(&mut p, &mut rng);
+                let packed = SpmPlan::new(op.spec).pack_params(&p);
+                let mut planned = mk_planned(n, variant, Schedule::Random, l, seed);
+                planned.params_mut().copy_from_slice(&packed);
+                planned.set_exec(SpmExec::Simd);
+                assert_eq!(planned.exec(), SpmExec::BatchFused, "{variant:?}: must downgrade");
+
+                let x = Mat::from_vec(5, n, rng.normal_vec(5 * n, 1.0));
+                let gy = Mat::from_vec(5, n, rng.normal_vec(5 * n, 1.0));
+                let want = op.forward(&p, &x);
+                let (yt, trace) = planned.forward_train(&x);
+                assert!(yt.max_abs_diff(&want) < 1e-5, "{variant:?}: downgraded fwd");
+                let (_yr, rtrace) = op.forward_trace(&p, &x);
+                let (gx_ref, _g_ref) = op.backward(&p, &x, &rtrace, &gy);
+                planned.zero_grads();
+                let gx = planned.backward(&x, &trace, &gy);
+                assert!(gx.max_abs_diff(&gx_ref) < 1e-4, "{variant:?}: downgraded gx");
+            }
+        }
+        // without the hook: on a non-simd build the downgrade is
+        // compile-time; on a simd build with AVX2 the exec must stick.
+        let mut op = mk_planned(8, Variant::General, Schedule::Butterfly, 2, 3);
+        op.set_exec(SpmExec::Simd);
+        if backend::simd_available() {
+            assert_eq!(op.exec(), SpmExec::Simd);
+        } else {
+            assert_eq!(op.exec(), SpmExec::BatchFused);
+        }
+    }
+
+    /// CI matrix hook (satellite): when `SPM_EXEC` is set, that exec path
+    /// must be constructible as pinned — a simd build losing AVX2
+    /// detection on a leg that exports SPM_EXEC=simd is a CI failure, not
+    /// a silent fallback — and must hold forward/backward parity vs the
+    /// reference. Builds without the feature compiled in are the portable
+    /// downgrade case and are allowed to fall back.
+    #[test]
+    fn env_pinned_exec_parity() {
+        let Ok(name) = std::env::var("SPM_EXEC") else { return };
+        let _lock = exec_lock();
+        let want = SpmExec::parse(&name)
+            .unwrap_or_else(|| panic!("SPM_EXEC '{name}' is not an exec mode"));
+        for variant in ALL_VARIANTS {
+            let (n, l, seed) = (13, 3, 5);
+            let (op, mut p) = mk_reference(n, variant, Schedule::Butterfly, l, seed);
+            let mut rng = Rng::new(seed + 2);
+            randomize(&mut p, &mut rng);
+            let packed = SpmPlan::new(op.spec).pack_params(&p);
+            let mut planned = mk_planned(n, variant, Schedule::Butterfly, l, seed);
+            planned.params_mut().copy_from_slice(&packed);
+            planned.set_exec(want);
+            if want == SpmExec::Simd && !backend::simd_compiled() {
+                assert_eq!(planned.exec(), SpmExec::BatchFused, "portable downgrade");
+            } else {
+                assert_eq!(planned.exec(), want, "SPM_EXEC={name} was downgraded");
+            }
+
+            let x = Mat::from_vec(6, n, rng.normal_vec(6 * n, 1.0));
+            let gy = Mat::from_vec(6, n, rng.normal_vec(6 * n, 1.0));
+            let want_y = op.forward(&p, &x);
+            let (yt, trace) = planned.forward_train(&x);
+            assert!(yt.max_abs_diff(&want_y) < 1e-5, "{variant:?}: pinned fwd");
+            let (_yr, rtrace) = op.forward_trace(&p, &x);
+            let (gx_ref, g_ref) = op.backward(&p, &x, &rtrace, &gy);
+            let g_ref_flat = SpmPlan::new(op.spec)
+                .pack(&g_ref.d_in, &g_ref.d_out, &g_ref.bias, &g_ref.mix, &g_ref.lone);
+            planned.zero_grads();
+            let gx = planned.backward(&x, &trace, &gy);
+            assert!(gx.max_abs_diff(&gx_ref) < 1e-4, "{variant:?}: pinned gx");
+            check_close(planned.grads(), &g_ref_flat, 1e-3, &format!("{variant:?} pinned"))
+                .unwrap();
+        }
+    }
+
     #[test]
     fn planned_param_grads_finite_difference() {
         // central FD over every parameter group, both variants x all
         // schedules (satellite: rotation/general x butterfly/shift/random),
-        // on BOTH execution paths — the fused backward is the default and
-        // must stand on its own against numerics, not just against the
-        // row-wise path.
-        for exec in [SpmExec::BatchFused, SpmExec::RowWise] {
+        // on EVERY execution path — each backward must stand on its own
+        // against numerics, not just against the other paths (simd
+        // downgrades to fused where the vectorized backend is absent).
+        // Serialized with the force-scalar downgrade test so the Simd
+        // iterations cannot silently fall back mid-sweep (see
+        // all_exec_paths_match_reference).
+        let _lock = exec_lock();
+        for exec in ALL_EXECS {
             for variant in ALL_VARIANTS {
                 for sched in ALL_SCHEDULES {
                     let n = 9;

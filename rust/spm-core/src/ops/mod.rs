@@ -1,8 +1,13 @@
 //! The planned operator subsystem (DESIGN.md §3): one uniform `LinearOp`
 //! layer every model, the optimizer and the coordinator consume, backed by
-//! precomputed `SpmPlan`s and flat parameter/gradient buffers.
+//! precomputed `SpmPlan`s, flat parameter/gradient buffers, and pluggable
+//! stage-kernel backends (DESIGN.md §12).
+pub mod backend;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod backend_simd;
 pub mod linear;
 pub mod plan;
 
+pub use backend::{ScalarBackend, StageBackend};
 pub use linear::{LinearCfg, LinearKind, LinearOp, LinearTrace, SpmExec};
-pub use plan::{ParamLayout, SpmPlan};
+pub use plan::{ParamLayout, SpmPlan, PAIR_LANES};

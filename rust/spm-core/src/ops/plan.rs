@@ -32,6 +32,13 @@ const FUSED_TILE_BYTES: usize = 256 * 1024;
 /// fully amortized and bigger tiles only delay the trace snapshots.
 const FUSED_MAX_ROWS: usize = 256;
 
+/// Pairs per SIMD lane group (DESIGN.md §12): the vectorized stage backend
+/// processes this many pairs at once, gathering their `(i, j)` coordinates
+/// from the lane-padded index tables below. Eight f32 lanes = one AVX2
+/// register; the padding keeps every stage's group count integral so the
+/// vector loop never needs a scalar tail.
+pub const PAIR_LANES: usize = 8;
+
 /// Offsets of the five parameter groups inside one flat buffer:
 ///
 /// ```text
@@ -60,7 +67,12 @@ impl ParamLayout {
             Variant::Rotation => p,
             Variant::General => 4 * p,
         };
-        ParamLayout { n, num_stages, mix_stride, total: 3 * n + num_stages * mix_stride + num_stages }
+        ParamLayout {
+            n,
+            num_stages,
+            mix_stride,
+            total: 3 * n + num_stages * mix_stride + num_stages,
+        }
     }
 
     #[inline]
@@ -106,6 +118,16 @@ pub struct SpmPlan {
     pairs: Vec<u32>,
     /// per-stage leftover coordinate for odd n (NO_LEFTOVER if none)
     leftover: Vec<u32>,
+    /// Pairs per stage rounded up to a [`PAIR_LANES`] multiple — the
+    /// per-stage stride of the lane-padded index tables below.
+    pub lane_pairs: usize,
+    /// Lane-padded stage-major `i` coordinates, SoA (one flat i32 table,
+    /// stage `l` at `[l * lane_pairs, (l + 1) * lane_pairs)`), for the
+    /// SIMD backend's gathers. Padded lanes hold coordinate 0: gathers on
+    /// them stay in bounds and their results are never written back.
+    lane_i: Vec<i32>,
+    /// Lane-padded stage-major `j` coordinates (same shape as `lane_i`).
+    lane_j: Vec<i32>,
     /// Rows per batch-fused tile (DESIGN.md §11): the largest row block
     /// whose f32 activations fit [`FUSED_TILE_BYTES`], clamped to
     /// `[1, FUSED_MAX_ROWS]`. The fused kernels walk the pair table
@@ -122,12 +144,19 @@ impl SpmPlan {
         let p = spec.n / 2;
         let mut pairs = Vec::with_capacity(spec.num_stages * 2 * p);
         let mut leftover = Vec::with_capacity(spec.num_stages);
+        let lane_pairs = p.div_ceil(PAIR_LANES) * PAIR_LANES;
+        let mut lane_i = Vec::with_capacity(spec.num_stages * lane_pairs);
+        let mut lane_j = Vec::with_capacity(spec.num_stages * lane_pairs);
         for st in &stages {
             assert_eq!(st.left.len(), p, "pairing must cover n/2 pairs");
             for k in 0..p {
                 pairs.push(st.left[k]);
                 pairs.push(st.right[k]);
+                lane_i.push(st.left[k] as i32);
+                lane_j.push(st.right[k] as i32);
             }
+            lane_i.resize(lane_i.len() + (lane_pairs - p), 0);
+            lane_j.resize(lane_j.len() + (lane_pairs - p), 0);
             leftover.push(st.leftover.unwrap_or(NO_LEFTOVER));
         }
         SpmPlan {
@@ -138,6 +167,9 @@ impl SpmPlan {
             layout: ParamLayout::new(spec.n, spec.num_stages, spec.variant),
             pairs,
             leftover,
+            lane_pairs,
+            lane_i,
+            lane_j,
             fused_rows: (FUSED_TILE_BYTES / (4 * spec.n)).clamp(1, FUSED_MAX_ROWS),
         }
     }
@@ -152,6 +184,16 @@ impl SpmPlan {
     pub fn stage_pairs(&self, l: usize) -> &[u32] {
         let w = 2 * self.num_pairs();
         &self.pairs[l * w..(l + 1) * w]
+    }
+
+    /// Lane-padded `(i, j)` index tables of stage `l` (each `lane_pairs`
+    /// long, SoA): the first `num_pairs()` lanes are the stage's pairs in
+    /// table order, the rest are the zero padding the SIMD gathers may
+    /// read but never write back.
+    #[inline]
+    pub fn stage_lane_ij(&self, l: usize) -> (&[i32], &[i32]) {
+        let r = l * self.lane_pairs..(l + 1) * self.lane_pairs;
+        (&self.lane_i[r.clone()], &self.lane_j[r])
     }
 
     /// Leftover (unpaired) coordinate of stage `l` for odd n.
@@ -241,9 +283,11 @@ mod tests {
 
     #[test]
     fn layout_groups_are_disjoint_and_total() {
-        for (n, l, variant) in
-            [(8usize, 3usize, Variant::Rotation), (9, 4, Variant::General), (64, 6, Variant::General)]
-        {
+        for (n, l, variant) in [
+            (8usize, 3usize, Variant::Rotation),
+            (9, 4, Variant::General),
+            (64, 6, Variant::General),
+        ] {
             let lay = ParamLayout::new(n, l, variant);
             let mut seen = vec![0u8; lay.total];
             let mut mark = |r: Range<usize>| {
@@ -278,8 +322,10 @@ mod tests {
     fn plan_pairs_match_schedule() {
         for schedule in [Schedule::Butterfly, Schedule::Shift, Schedule::Random] {
             for n in [8usize, 17, 64] {
-                let spec =
-                    SpmSpec::new(n, Variant::General).with_schedule(schedule).with_stages(5).with_seed(9);
+                let spec = SpmSpec::new(n, Variant::General)
+                    .with_schedule(schedule)
+                    .with_stages(5)
+                    .with_seed(9);
                 let plan = SpmPlan::new(spec);
                 let stages = make_schedule(schedule, n, 5, 9);
                 for (l, st) in stages.iter().enumerate() {
@@ -293,6 +339,37 @@ mod tests {
                         st.leftover.map(|v| v as usize),
                         "{schedule:?} n={n} l={l}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_tables_match_pairs_and_are_padded() {
+        for schedule in [Schedule::Butterfly, Schedule::Shift, Schedule::Random] {
+            // n=2 (single pair, all-padding tail), 17 (odd, leftover),
+            // 64 (pair count already a lane multiple)
+            for n in [2usize, 17, 64] {
+                let spec = SpmSpec::new(n, Variant::General)
+                    .with_schedule(schedule)
+                    .with_stages(4)
+                    .with_seed(5);
+                let plan = SpmPlan::new(spec);
+                let p = plan.num_pairs();
+                assert_eq!(plan.lane_pairs % PAIR_LANES, 0, "n={n}");
+                assert!(plan.lane_pairs >= p && plan.lane_pairs < p + PAIR_LANES, "n={n}");
+                for l in 0..plan.num_stages {
+                    let pairs = plan.stage_pairs(l);
+                    let (li, lj) = plan.stage_lane_ij(l);
+                    assert_eq!(li.len(), plan.lane_pairs);
+                    assert_eq!(lj.len(), plan.lane_pairs);
+                    for k in 0..p {
+                        assert_eq!(li[k], pairs[2 * k] as i32, "{schedule:?} n={n} l={l}");
+                        assert_eq!(lj[k], pairs[2 * k + 1] as i32, "{schedule:?} n={n} l={l}");
+                    }
+                    for k in p..plan.lane_pairs {
+                        assert_eq!((li[k], lj[k]), (0, 0), "padding lane {k}");
+                    }
                 }
             }
         }

@@ -344,7 +344,13 @@ impl Spm {
 
     /// Exact backward (paper §4). Returns (g_x, grads).
     /// `x` is the layer input that produced `trace`.
-    pub fn backward(&self, params: &SpmParams, x: &Mat, trace: &Trace, gy: &Mat) -> (Mat, SpmGrads) {
+    pub fn backward(
+        &self,
+        params: &SpmParams,
+        x: &Mat,
+        trace: &Trace,
+        gy: &Mat,
+    ) -> (Mat, SpmGrads) {
         assert_eq!(gy.cols, self.spec.n);
         assert_eq!(gy.rows, x.rows);
         match trace {

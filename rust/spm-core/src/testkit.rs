@@ -6,6 +6,7 @@
 //! forall(100, 7, |rng| { ... ; Ok(()) })
 //! ```
 
+use crate::ops::SpmExec;
 use crate::pairing::Schedule;
 use crate::rng::Rng;
 use crate::spm::Variant;
@@ -15,6 +16,12 @@ pub const ALL_VARIANTS: [Variant; 2] = [Variant::Rotation, Variant::General];
 
 /// The pairing-schedule axis every parity harness sweeps.
 pub const ALL_SCHEDULES: [Schedule; 3] = [Schedule::Butterfly, Schedule::Shift, Schedule::Random];
+
+/// The stage-loop execution axis (DESIGN.md §12). `Simd` auto-downgrades
+/// to the scalar fused path on builds/machines without the vectorized
+/// backend, so sweeping this axis is always safe — it just tests the
+/// fused path twice where AVX2 is unavailable.
+pub const ALL_EXECS: [SpmExec; 3] = [SpmExec::RowWise, SpmExec::BatchFused, SpmExec::Simd];
 
 /// Run `prop` for `cases` independent RNG streams derived from `seed`.
 /// Panics with the failing case index + message on the first failure.
