@@ -1,0 +1,271 @@
+//! Bench: the deadline-batched serving engine (DESIGN.md §13) over every
+//! `ModelKind` — all four architectures through the same
+//! `ServeEngine::native(model)` entry point, with replica sharding.
+//!
+//! Also buildable as an example (same file, see spm-coordinator's
+//! Cargo.toml) so CI can drive a reduced pass with plain `cargo run`:
+//!
+//! ```text
+//! cargo run --release -p spm-coordinator --example serve_bench -- \
+//!     --requests 97 --clients 4 --json BENCH_serve.json --check
+//! ```
+//!
+//! Flags: `--requests N` (default 256), `--clients C` (default 8),
+//! `--batch B` micro-batch cap (default 16), `--wait-us W` deadline
+//! before a partial batch flushes (default 200), `--replicas R` native
+//! replicas per model (default 2), `--json <path>` writes the per-model
+//! serving trajectory as machine-readable JSON, `--check` exits non-zero
+//! if any model failed to serve EVERY request, reported zero throughput,
+//! or an idle replica (the all-requests-served + sharding gate CI
+//! enforces).
+
+use spm_core::models::api::{build_model, ModelCfg, ModelKind};
+use spm_core::ops::{backend, LinearCfg, SpmExec};
+use spm_core::spm::Variant;
+use spm_coordinator::metrics::{fmt_f, Table};
+use spm_coordinator::serve::{ServeEngine, ServeReport, Workload};
+
+struct Args {
+    requests: usize,
+    clients: usize,
+    batch: usize,
+    wait_us: u64,
+    replicas: usize,
+    json: Option<String>,
+    check: bool,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().collect();
+    let get = |key: &str| argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1));
+    let usize_flag = |key: &str, default: usize| match get(key) {
+        Some(s) => s.parse().unwrap_or_else(|_| panic!("{key}: bad count")),
+        None => default,
+    };
+    Args {
+        requests: usize_flag("--requests", 256),
+        clients: usize_flag("--clients", 8),
+        batch: usize_flag("--batch", 16),
+        wait_us: get("--wait-us")
+            .map(|s| s.parse().expect("--wait-us: bad micros"))
+            .unwrap_or(200),
+        replicas: usize_flag("--replicas", 2).max(1),
+        json: get("--json").cloned(),
+        check: argv.iter().any(|a| a == "--check"),
+    }
+}
+
+/// The benched zoo: one small-but-real config per architecture. `exec`
+/// selects the SPM stage-loop path on every owned op — the CI matrix
+/// exports `SPM_EXEC` so the simd leg serves through the vectorized
+/// backend instead of re-measuring the fused path under another name.
+fn model_cfg(kind: ModelKind, exec: SpmExec) -> ModelCfg {
+    let (n, heads, seq_len, classes) = match kind {
+        ModelKind::Mlp => (64, 1, 1, 10),
+        ModelKind::Gru => (32, 1, 8, 10),
+        ModelKind::CharLm => (64, 1, 1, 0),
+        ModelKind::Attention => (64, 4, 8, 0),
+    };
+    ModelCfg::new(kind, LinearCfg::spm(n, Variant::General))
+        .with_classes(classes.max(2))
+        .with_heads(heads)
+        .with_seq_len(seq_len)
+        .with_seed(7)
+        .with_exec(exec)
+}
+
+/// The exec path this run serves with: `SPM_EXEC` when set (the CI
+/// matrix contract — bad names are an error, not a silent default),
+/// otherwise the fused default.
+fn serve_exec() -> SpmExec {
+    match std::env::var("SPM_EXEC") {
+        Ok(name) => SpmExec::parse(&name)
+            .unwrap_or_else(|| panic!("SPM_EXEC '{name}' is not an exec mode")),
+        Err(_) => SpmExec::default(),
+    }
+}
+
+struct BenchRow {
+    kind: ModelKind,
+    d_in: usize,
+    params: usize,
+    report: ServeReport,
+}
+
+fn bench_kind(kind: ModelKind, exec: SpmExec, args: &Args) -> BenchRow {
+    let cfg = model_cfg(kind, exec);
+    let probe = build_model(&cfg);
+    let (d_in, params) = (probe.d_in(), probe.param_count());
+    let mut engine = ServeEngine::native(probe)
+        .with_max_batch(args.batch)
+        .with_max_wait_us(args.wait_us);
+    for _ in 1..args.replicas {
+        engine = engine.with_replica(build_model(&cfg));
+    }
+    let workload = Workload { num_requests: args.requests, num_clients: args.clients, seed: 11 };
+    let report = engine
+        .run(&workload)
+        .unwrap_or_else(|e| panic!("{}: serve failed: {e}", kind.name()));
+    BenchRow { kind, d_in, params, report }
+}
+
+fn print_table(rows: &[BenchRow]) {
+    let mut t = Table::new(&[
+        "model",
+        "d_in",
+        "params",
+        "requests",
+        "batches",
+        "fill",
+        "queue ms",
+        "exec ms",
+        "p50 ms",
+        "p99 ms",
+        "req/s",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.kind.name().to_string(),
+            r.d_in.to_string(),
+            r.params.to_string(),
+            r.report.requests.to_string(),
+            r.report.batches.to_string(),
+            fmt_f(r.report.mean_batch_fill, 1),
+            fmt_f(r.report.mean_queue_wait_ms, 3),
+            fmt_f(r.report.mean_exec_ms, 3),
+            fmt_f(r.report.p50_ms, 3),
+            fmt_f(r.report.p99_ms, 3),
+            fmt_f(r.report.throughput_rps, 0),
+        ]);
+    }
+    t.print();
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Hand-rolled JSON (the default workspace is dependency-free): the run
+/// setup plus one row per served model.
+fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"serve\",\n");
+    let _ = writeln!(s, "  \"exec\": \"{}\",", exec.name());
+    let _ = writeln!(s, "  \"requests\": {},", args.requests);
+    let _ = writeln!(s, "  \"clients\": {},", args.clients);
+    let _ = writeln!(s, "  \"batch\": {},", args.batch);
+    let _ = writeln!(s, "  \"max_wait_us\": {},", args.wait_us);
+    let _ = writeln!(s, "  \"replicas\": {},", args.replicas);
+    s.push_str("  \"models\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let rb: Vec<String> =
+            r.report.replica_batches.iter().map(|b| b.to_string()).collect();
+        let _ = write!(
+            s,
+            "    {{\"kind\": \"{}\", \"d_in\": {}, \"param_count\": {}, \"requests\": {}, \"batches\": {}, \"mean_fill\": {}, \"mean_queue_wait_ms\": {}, \"mean_exec_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}, \"throughput_rps\": {}, \"replica_batches\": [{}]}}",
+            r.kind.name(),
+            r.d_in,
+            r.params,
+            r.report.requests,
+            r.report.batches,
+            json_num(r.report.mean_batch_fill),
+            json_num(r.report.mean_queue_wait_ms),
+            json_num(r.report.mean_exec_ms),
+            json_num(r.report.p50_ms),
+            json_num(r.report.p95_ms),
+            json_num(r.report.p99_ms),
+            json_num(r.report.throughput_rps),
+            rb.join(", ")
+        );
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// The CI gate: every architecture must have served EVERY request (the
+/// old router could silently drop load), produced real throughput, and —
+/// when replicas were requested and there was enough work — used every
+/// replica. On the CI simd matrix leg (`SPM_EXEC=simd`) the vectorized
+/// backend must actually be active: a detection or feature-wiring
+/// regression fails the gate instead of silently serving through the
+/// scalar fused path.
+fn check_rows(rows: &[BenchRow], args: &Args) -> Result<(), String> {
+    if std::env::var("SPM_EXEC").as_deref() == Ok("simd") && !backend::simd_available() {
+        return Err(
+            "SPM_EXEC=simd but the simd backend did not activate (feature off or AVX2/FMA \
+             undetected) — the serve smoke would only re-measure the fused path"
+                .into(),
+        );
+    }
+    for r in rows {
+        let name = r.kind.name();
+        if r.report.requests != args.requests {
+            return Err(format!(
+                "{name}: served {} of {} requests",
+                r.report.requests, args.requests
+            ));
+        }
+        if !(r.report.throughput_rps > 0.0) {
+            return Err(format!("{name}: throughput {} req/s", r.report.throughput_rps));
+        }
+        if r.report.p99_ms < r.report.p50_ms {
+            return Err(format!(
+                "{name}: p99 {} < p50 {}",
+                r.report.p99_ms, r.report.p50_ms
+            ));
+        }
+        if r.report.batches >= 2 * args.replicas
+            && r.report.replica_batches.iter().any(|&b| b == 0)
+        {
+            return Err(format!(
+                "{name}: idle replica with {} batches across {:?}",
+                r.report.batches, r.report.replica_batches
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = parse_args();
+    let exec = serve_exec();
+    println!(
+        "serving engine: {} requests, {} clients, batch cap {}, deadline {} us, {} replica(s), exec {}\n",
+        args.requests,
+        args.clients,
+        args.batch,
+        args.wait_us,
+        args.replicas,
+        exec.name()
+    );
+    let rows: Vec<BenchRow> =
+        ModelKind::ALL.iter().map(|&k| bench_kind(k, exec, &args)).collect();
+    print_table(&rows);
+
+    if let Some(path) = &args.json {
+        std::fs::write(path, to_json(&rows, &args, exec))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("\nwrote {path}");
+    }
+
+    if args.check {
+        match check_rows(&rows, &args) {
+            Ok(()) => println!(
+                "\ncheck: all {} models served {}/{} requests with live replicas — OK",
+                rows.len(),
+                args.requests,
+                args.requests
+            ),
+            Err(msg) => {
+                eprintln!("check FAILED: {msg}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -34,6 +34,13 @@ else
     echo "ci.sh: non-x86_64 host ($(uname -m)); skipping --features simd test pass"
 fi
 
+# Serving-engine smoke: all four ModelKinds through the same
+# ServeEngine::native entry point; --check fails if any model did not
+# serve every request (or reported an idle replica). The CI serve-smoke
+# job runs the bigger pass and records the BENCH_serve.json artifact.
+cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example serve_bench -- \
+    --requests 64 --clients 4 --replicas 2 --check
+
 # Format check. Non-fatal unless SPM_FMT_STRICT=1: rustfmt output can
 # drift across toolchain versions and must not mask real build/test
 # failures on machines with a different rustfmt.

@@ -1,36 +1,62 @@
 //! §7 demo + serving: attention with SPM Q/K/V/O projections (native,
-//! exact closed-form backward incl. the §7.4 softmax Jacobian), then the
-//! batched-request serving router in front of a PJRT forward executable.
+//! exact closed-form backward incl. the §7.4 softmax Jacobian), served
+//! two ways through the SAME deadline-batched engine: native replicas
+//! of the attention model, then the router in front of a PJRT forward
+//! executable.
 //!
 //! Run: cargo run --release --example attention_serve
 
-use spm_core::models::attention::Attention;
+use spm_core::models::api::{
+    build_model, load_checkpoint, save_checkpoint, ModelCfg, ModelKind, Target,
+};
 use spm_core::ops::LinearCfg;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_core::tensor::Mat;
+use spm_coordinator::serve::{ServeEngine, Workload};
 use spm_runtime::drivers::serve_demo;
 use spm_runtime::{Engine, Manifest};
 
 fn main() -> spm_coordinator::error::Result<()> {
     // --- native attention with SPM projections (§7) -------------------------
     let (d, heads, b, t) = (64usize, 4usize, 8usize, 16usize);
-    let mut attn = Attention::new(LinearCfg::spm(d, Variant::Rotation), heads, 3e-3, 5);
+    let cfg = ModelCfg::new(ModelKind::Attention, LinearCfg::spm(d, Variant::Rotation))
+        .with_heads(heads)
+        .with_seq_len(t)
+        .with_lr(3e-3)
+        .with_seed(5);
+    let mut attn = build_model(&cfg);
     println!("[attention] SPM projections, params: {}", attn.param_count());
     let mut rng = Rng::new(6);
-    let x = Mat::from_vec(b * t, d, rng.normal_vec(b * t * d, 1.0));
+    let x = Mat::from_vec(b, t * d, rng.normal_vec(b * t * d, 1.0));
     let target = x.clone(); // learn the identity map through attention
     for step in 0..40 {
-        let loss = attn.train_step(&x, &target, b, t);
+        let (loss, _m) = attn.train_step(&x, &Target::Values(&target));
         if step % 10 == 0 {
             println!("[attention] step {step:>2}: mse {loss:.4}");
         }
     }
 
+    // --- the trained attention model behind the serving engine --------------
+    // replica 2 warm-starts from a checkpoint of replica 1, so both shards
+    // serve the SAME trained weights
+    let ckpt = std::env::temp_dir().join("spm_attention_serve.ckpt");
+    save_checkpoint(attn.as_ref(), &ckpt)?;
+    let mut replica = build_model(&cfg);
+    load_checkpoint(replica.as_mut(), &ckpt)?;
+    let _ = std::fs::remove_file(&ckpt);
+    println!("\n[serve native] 64 sequence requests from 4 clients -> 2 attention replicas");
+    let mut engine = ServeEngine::native(attn)
+        .with_replica(replica)
+        .with_max_batch(8)
+        .with_max_wait_us(300);
+    let report = engine.run(&Workload { num_requests: 64, num_clients: 4, seed: 1 })?;
+    println!("{report}");
+
     // --- batched serving router over a PJRT forward -------------------------
     let engine = Engine::cpu()?;
     let man = Manifest::load("artifacts")?;
-    println!("\n[serve] routing 512 requests from 4 clients -> clf_spm_small forward");
+    println!("\n[serve xla] routing 512 requests from 4 clients -> clf_spm_small forward");
     let report = serve_demo(&engine, &man, "clf_spm_small", 512, 4, 1)?;
     println!("{report}");
     println!("attention_serve OK");

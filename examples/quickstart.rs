@@ -1,17 +1,23 @@
-//! Quickstart: the whole three-layer stack in ~60 lines.
+//! Quickstart: the native stack in ~70 lines — no XLA vendor set needed.
 //!
-//! 1. load the AOT artifact manifest (`make artifacts` built it),
-//! 2. train a small SPM classifier on the PJRT path (buffer-resident),
-//! 3. cross-check with the native spm-core engine.
+//! 1. build an SPM classifier through the unified `Model` factory,
+//! 2. train it on a learnable rule,
+//! 3. checkpoint it and warm-start a fresh copy from disk,
+//! 4. serve both copies as replicas through the deadline-batched engine.
 //!
-//! Run: cargo run --release --example quickstart
+//! Run: cargo run --release -p spm-coordinator --example quickstart
+//!
+//! (The PJRT/AOT half of the old quickstart lives in
+//! examples/quickstart_xla.rs, built from rust/spm-runtime when the XLA
+//! vendor set is available.)
 
+use spm_core::models::api::{build_model, save_checkpoint, ModelCfg, ModelKind, Target};
 use spm_core::ops::LinearCfg;
-use spm_core::models::mlp::Classifier;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_core::tensor::Mat;
-use spm_runtime::{Engine, HostTensor, Manifest, TrainSession};
+use spm_coordinator::serve::{ServeEngine, Workload};
+use spm_coordinator::ModelConfig;
 
 fn main() -> spm_coordinator::error::Result<()> {
     // --- data: a learnable rule (label = argmax of first 10 coords) -------
@@ -28,35 +34,51 @@ fn main() -> spm_coordinator::error::Result<()> {
         (x, y)
     };
 
-    // --- PJRT path: AOT-compiled SPM classifier ---------------------------
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load("artifacts")?;
-    let mut sess = TrainSession::new(&engine, &manifest, "clf_spm_small", &["init", "train", "eval"])?;
-    sess.init(0)?;
-    println!("[xla] training clf_spm_small ({} param leaves) on {}", sess.entry.nleaves, engine.platform());
+    // --- build + train through the unified Model trait --------------------
+    let cfg = ModelCfg::new(ModelKind::Mlp, LinearCfg::spm(n, Variant::General))
+        .with_classes(classes)
+        .with_seed(7);
+    let mut model = build_model(&cfg);
+    println!("[native] training {} ({} params)", model.kind().name(), model.param_count());
     for step in 0..200 {
         let (x, y) = make_batch(&mut rng);
-        let (loss, acc) = sess.train_step(&HostTensor::F32(x.data), &HostTensor::from_labels(&y))?;
-        if step % 50 == 0 {
-            println!("[xla] step {step:>3}: loss {loss:.3} acc {acc:.2}");
-        }
-    }
-    let (x, y) = make_batch(&mut rng);
-    let (loss, acc) = sess.eval(&HostTensor::F32(x.data), &HostTensor::from_labels(&y))?;
-    println!("[xla] held-out: loss {loss:.3} acc {acc:.2}");
-
-    // --- native path: same model family, pure rust ------------------------
-    let mut clf = Classifier::new(LinearCfg::spm(n, Variant::General), classes, 1e-3, 7);
-    for step in 0..200 {
-        let (x, y) = make_batch(&mut rng);
-        let (loss, acc) = clf.train_step(&x, &y);
+        let (loss, acc) = model.train_step(&x, &Target::Labels(&y));
         if step % 50 == 0 {
             println!("[native] step {step:>3}: loss {loss:.3} acc {acc:.2}");
         }
     }
     let (x, y) = make_batch(&mut rng);
-    let (loss, acc) = clf.evaluate(&x, &y);
+    let (loss, acc) = model.evaluate(&x, &Target::Labels(&y));
     println!("[native] held-out: loss {loss:.3} acc {acc:.2}");
+
+    // --- checkpoint + warm start ------------------------------------------
+    let ckpt = std::env::temp_dir().join("spm_quickstart.ckpt");
+    save_checkpoint(model.as_ref(), &ckpt)?;
+    println!("[ckpt] saved {}", ckpt.display());
+    // the [model] config section can do the same from TOML; here we reuse
+    // its builder directly
+    let mcfg = ModelConfig {
+        kind: ModelKind::Mlp,
+        n,
+        classes,
+        checkpoint: ckpt.display().to_string(),
+        ..Default::default()
+    };
+    // the checkpoint overwrites every parameter buffer; its arch
+    // fingerprint guarantees the op config/pairing matches (here the
+    // default butterfly schedule, which is seed-independent)
+    let warm = mcfg.build(&spm_coordinator::OpConfig::default(), 0)?;
+    let (wl, wa) = warm.evaluate(&x, &Target::Labels(&y));
+    println!("[ckpt] warm-started replica: loss {wl:.3} acc {wa:.2}");
+    assert_eq!((wl, wa), (loss, acc), "warm start must restore the exact model");
+
+    // --- serve both copies as deadline-batched replicas --------------------
+    println!("\n[serve] 512 requests from 4 clients -> 2 replicas");
+    let mut engine =
+        ServeEngine::native(model).with_replica(warm).with_max_batch(16).with_max_wait_us(300);
+    let report = engine.run(&Workload { num_requests: 512, num_clients: 4, seed: 3 })?;
+    println!("{report}");
+    let _ = std::fs::remove_file(&ckpt);
     println!("quickstart OK");
     Ok(())
 }

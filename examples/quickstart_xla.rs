@@ -1,0 +1,51 @@
+//! Quickstart, PJRT half: train the AOT-compiled SPM classifier through
+//! the XLA execution layer. Needs the XLA vendor set and `make
+//! artifacts`; the native half (train + checkpoint + serve, no vendor
+//! set) is examples/quickstart.rs, runnable from the default workspace.
+//!
+//! Run: cd rust/spm-runtime && cargo run --release --example quickstart_xla
+
+use spm_core::rng::Rng;
+use spm_core::tensor::Mat;
+use spm_runtime::{Engine, HostTensor, Manifest, TrainSession};
+
+fn main() -> spm_coordinator::error::Result<()> {
+    // --- data: a learnable rule (label = argmax of first 10 coords) -------
+    let (n, batch, classes) = (64usize, 32usize, 10usize);
+    let mut rng = Rng::new(1);
+    let make_batch = |rng: &mut Rng| {
+        let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+        let y: Vec<u32> = (0..batch)
+            .map(|i| {
+                let row = &x.row(i)[..classes];
+                (0..classes).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap() as u32
+            })
+            .collect();
+        (x, y)
+    };
+
+    // --- PJRT path: AOT-compiled SPM classifier ---------------------------
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let mut sess =
+        TrainSession::new(&engine, &manifest, "clf_spm_small", &["init", "train", "eval"])?;
+    sess.init(0)?;
+    println!(
+        "[xla] training clf_spm_small ({} param leaves) on {}",
+        sess.entry.nleaves,
+        engine.platform()
+    );
+    for step in 0..200 {
+        let (x, y) = make_batch(&mut rng);
+        let (loss, acc) =
+            sess.train_step(&HostTensor::F32(x.data), &HostTensor::from_labels(&y))?;
+        if step % 50 == 0 {
+            println!("[xla] step {step:>3}: loss {loss:.3} acc {acc:.2}");
+        }
+    }
+    let (x, y) = make_batch(&mut rng);
+    let (loss, acc) = sess.eval(&HostTensor::F32(x.data), &HostTensor::from_labels(&y))?;
+    println!("[xla] held-out: loss {loss:.3} acc {acc:.2}");
+    println!("quickstart_xla OK");
+    Ok(())
+}

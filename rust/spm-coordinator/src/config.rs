@@ -8,9 +8,16 @@
 //! The `[op]` section configures the student's planned `LinearOp` (kind,
 //! variant, pairing schedule, stage depth); [`OpConfig::to_linear_cfg`]
 //! lowers it to a `spm_core::ops::LinearCfg` at any width.
+//!
+//! The `[model]` section picks a network from the unified model zoo
+//! (DESIGN.md §13): [`ModelConfig::build`] lowers it (together with the
+//! `[op]` student) through `spm_core::models::api::build_model` and
+//! optionally warm-starts it from a native checkpoint, so the serving
+//! engine and any model-generic driver construct from config alone.
 
 use std::collections::BTreeMap;
 
+use spm_core::models::api::{build_model, load_checkpoint, Model, ModelCfg, ModelKind};
 use spm_core::ops::{LinearCfg, LinearKind, SpmExec};
 use spm_core::pairing::Schedule;
 use spm_core::spm::Variant;
@@ -178,6 +185,105 @@ impl OpConfig {
     }
 }
 
+/// The `[model]` section: which network to build, at which width, with
+/// which head/sequence shape. Defaults describe the Table 1 student
+/// (mlp at n=64, 10 classes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub kind: ModelKind,
+    /// Mixing width n — every SPM-replaceable square map's dimension.
+    pub n: usize,
+    /// Head width for the classifiers (mlp, gru).
+    pub classes: usize,
+    /// Attention heads (must divide `n`).
+    pub heads: usize,
+    /// Timesteps per request row (gru, attention).
+    pub seq_len: usize,
+    pub lr: f32,
+    /// Native checkpoint path to warm-start from ("" = cold init).
+    pub checkpoint: String,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            kind: ModelKind::Mlp,
+            n: 64,
+            classes: 10,
+            heads: 4,
+            seq_len: 8,
+            lr: 1e-3,
+            checkpoint: String::new(),
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Apply `[model]` keys; unknown values are rejected.
+    pub fn apply_toml(&mut self, doc: &Toml) -> Result<()> {
+        let Some(map) = doc.get("model") else {
+            return Ok(());
+        };
+        if let Some(v) = map.get("kind") {
+            let s = v.as_str().context("[model] kind must be a string")?;
+            self.kind = ModelKind::parse(s).with_context(|| format!("[model] kind '{s}'"))?;
+        }
+        for (key, dst) in [
+            ("n", &mut self.n),
+            ("classes", &mut self.classes),
+            ("heads", &mut self.heads),
+            ("seq_len", &mut self.seq_len),
+        ] {
+            if let Some(v) = map.get(key) {
+                let u = v
+                    .as_usize()
+                    .with_context(|| format!("[model] {key} must be a non-negative int"))?;
+                if u == 0 {
+                    bail!("[model] {key} must be >= 1");
+                }
+                *dst = u;
+            }
+        }
+        if let Some(v) = map.get("lr") {
+            let f = v.as_f64().context("[model] lr must be a number")?;
+            if !(f.is_finite() && f > 0.0) {
+                bail!("[model] lr must be a positive number");
+            }
+            self.lr = f as f32;
+        }
+        if let Some(v) = map.get("checkpoint") {
+            self.checkpoint = v.as_str().context("[model] checkpoint must be a string")?.into();
+        }
+        Ok(())
+    }
+
+    /// Lower to the spm-core factory config (the `[op]` section supplies
+    /// the student operator at this model's width).
+    pub fn to_model_cfg(&self, op: &OpConfig, seed: u64) -> ModelCfg {
+        ModelCfg::new(self.kind, op.to_linear_cfg(self.n, seed))
+            .with_classes(self.classes)
+            .with_heads(self.heads)
+            .with_seq_len(self.seq_len)
+            .with_lr(self.lr)
+            .with_seed(seed ^ 0xC1A55)
+            .with_exec(op.exec)
+    }
+
+    /// Build the configured model and, when `checkpoint` is set,
+    /// warm-start it from disk (rejecting wrong-architecture files).
+    pub fn build(&self, op: &OpConfig, seed: u64) -> Result<Box<dyn Model>> {
+        if self.kind == ModelKind::Attention && self.n % self.heads != 0 {
+            bail!("[model] heads = {} must divide n = {}", self.heads, self.n);
+        }
+        let mut model = build_model(&self.to_model_cfg(op, seed));
+        if !self.checkpoint.is_empty() {
+            load_checkpoint(model.as_mut(), &self.checkpoint)
+                .with_context(|| format!("loading checkpoint {}", self.checkpoint))?;
+        }
+        Ok(model)
+    }
+}
+
 /// Run-level knobs every experiment honours. Training hyper-parameters
 /// (lr, batch) are baked into the drivers/artifacts; the run config
 /// controls duration, cadence, seeds, reporting, and — for the *native*
@@ -203,6 +309,8 @@ pub struct RunConfig {
     pub artifacts: String,
     /// the student LinearOp ([op] section)
     pub op: OpConfig,
+    /// the network to build/serve ([model] section)
+    pub model: ModelConfig,
 }
 
 impl Default for RunConfig {
@@ -217,6 +325,7 @@ impl Default for RunConfig {
             threads: 0,
             artifacts: "artifacts".into(),
             op: OpConfig::default(),
+            model: ModelConfig::default(),
         }
     }
 }
@@ -252,7 +361,8 @@ impl RunConfig {
                 }
             }
         }
-        self.op.apply_toml(doc)
+        self.op.apply_toml(doc)?;
+        self.model.apply_toml(doc)
     }
 
     pub fn load_file(&mut self, path: &str) -> Result<()> {
@@ -357,6 +467,71 @@ fast = true
         let cfg = op.to_linear_cfg(16, 1);
         assert_eq!(cfg.kind, LinearKind::Dense);
         assert_eq!((cfg.d_in, cfg.d_out), (16, 16));
+    }
+
+    #[test]
+    fn model_config_applies_and_builds_every_kind() {
+        for kind in ModelKind::ALL {
+            let doc = parse_toml(&format!(
+                "[model]\nkind = \"{}\"\nn = 8\nclasses = 3\nheads = 2\nseq_len = 2\nlr = 0.002\n",
+                kind.name()
+            ))
+            .unwrap();
+            let mut rc = RunConfig::default();
+            rc.apply_toml(&doc).unwrap();
+            assert_eq!(rc.model.kind, kind);
+            assert_eq!((rc.model.n, rc.model.classes), (8, 3));
+            assert_eq!((rc.model.heads, rc.model.seq_len), (2, 2));
+            assert!((rc.model.lr - 0.002).abs() < 1e-9);
+            let model = rc.model.build(&rc.op, 5).unwrap();
+            assert_eq!(model.kind(), kind);
+            assert!(model.param_count() > 0);
+        }
+    }
+
+    #[test]
+    fn model_config_lowers_op_section_into_the_student() {
+        let doc = parse_toml(
+            "[op]\nvariant = \"rotation\"\nschedule = \"shift\"\n[model]\nkind = \"gru\"\nn = 16\n",
+        )
+        .unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        let mcfg = rc.model.to_model_cfg(&rc.op, 9);
+        assert_eq!(mcfg.kind, ModelKind::Gru);
+        assert_eq!(mcfg.op.n(), 16);
+        assert_eq!(mcfg.op.variant, Variant::Rotation);
+        assert_eq!(mcfg.op.schedule, Schedule::Shift);
+    }
+
+    #[test]
+    fn model_config_rejects_bad_values() {
+        let mut rc = RunConfig::default();
+        for bad in [
+            "[model]\nkind = \"transformer\"\n",
+            "[model]\nn = 0\n",
+            "[model]\nseq_len = 0\n",
+            "[model]\nlr = -0.1\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(rc.apply_toml(&doc).is_err(), "{bad}");
+        }
+        // attention heads must divide n — caught at build time
+        let doc =
+            parse_toml("[model]\nkind = \"attention\"\nn = 10\nheads = 4\n").unwrap();
+        rc.apply_toml(&doc).unwrap();
+        assert!(rc.model.build(&rc.op, 1).is_err());
+    }
+
+    #[test]
+    fn model_config_missing_checkpoint_fails_loudly() {
+        let doc =
+            parse_toml("[model]\nkind = \"mlp\"\nn = 8\ncheckpoint = \"/nonexistent/x.ckpt\"\n")
+                .unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        let err = rc.model.build(&rc.op, 1).unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "{err}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use spm_core::models::mlp::Classifier;
+use spm_core::models::api::{build_model, ModelCfg, ModelKind, Target};
 use spm_core::ops::{LinearCfg, LinearOp};
 use spm_core::optim::Adam;
 use spm_core::rng::Rng;
@@ -76,7 +76,9 @@ pub struct ClfOutcome {
     pub steps: usize,
 }
 
-/// Train + evaluate a native `LinearOp` classifier on a data source.
+/// Train + evaluate a native classifier on a data source, through the
+/// unified `Model` trait (DESIGN.md §13) — the driver no longer knows
+/// which architecture it is holding.
 pub fn run_clf_native(
     label: &str,
     op_cfg: LinearCfg,
@@ -86,11 +88,14 @@ pub fn run_clf_native(
     cfg: &RunConfig,
 ) -> Result<ClfOutcome> {
     let n = op_cfg.n();
-    let mut clf = Classifier::new(op_cfg, classes, 1e-3, cfg.seed ^ 0xC1A55);
-    // `[op] exec` selects the SPM stage-loop path (fused default; "simd"
-    // downgrades to fused where the vectorized backend is unavailable);
-    // the head is rectangular dense and ignores it.
-    clf.mixer.set_exec(cfg.op.exec);
+    // `[op] exec` selects the SPM stage-loop path on every owned op
+    // (fused default; "simd" downgrades to fused where the vectorized
+    // backend is unavailable); dense heads ignore it.
+    let mcfg = ModelCfg::new(ModelKind::Mlp, op_cfg)
+        .with_classes(classes)
+        .with_seed(cfg.seed ^ 0xC1A55)
+        .with_exec(cfg.op.exec);
+    let mut model = build_model(&mcfg);
     let data_cl = data.clone();
     let steps = cfg.steps;
     let mut feed = Prefetcher::new(steps, 4, move |i| data_cl.batch(i, batch, true));
@@ -98,7 +103,7 @@ pub fn run_clf_native(
     let mut last_loss = f32::NAN;
     while let Some((x, y)) = feed.next() {
         timer.start();
-        let (loss, _acc) = clf.train_step(&x, &y);
+        let (loss, _acc) = model.train_step(&x, &Target::Labels(&y));
         timer.stop();
         last_loss = loss;
     }
@@ -106,7 +111,7 @@ pub fn run_clf_native(
     let mut loss_sum = 0.0f64;
     for i in 0..cfg.eval_batches {
         let (x, y) = data.batch(i, batch, false);
-        let (l, a) = clf.evaluate(&x, &y);
+        let (l, a) = model.evaluate(&x, &Target::Labels(&y));
         acc_sum += a as f64;
         loss_sum += l as f64;
     }

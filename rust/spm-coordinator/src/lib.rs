@@ -1,13 +1,14 @@
 //! # spm-coordinator
 //!
 //! L3 of the three-layer stack: the experiment coordinator. Owns the
-//! config system (including the `[op]` LinearOp student config), metrics,
-//! the native experiment drivers, and the engine-agnostic batched-serving
-//! router. Fully dependency-free so the default workspace builds and
-//! tests offline; the PJRT/XLA drivers, checkpointing and the `spm` CLI
-//! live in `spm-runtime` (excluded from the default members) and call
-//! back into this crate so every reported number has a single source of
-//! truth.
+//! config system (the `[op]` LinearOp student config and the `[model]`
+//! section building any network from the unified model zoo), metrics,
+//! the native experiment drivers, and the deadline-batched serving
+//! engine (`ServeEngine` over the `Executor` trait — DESIGN.md §13).
+//! Fully dependency-free so the default workspace builds and tests
+//! offline; the PJRT/XLA drivers and the `spm` CLI live in `spm-runtime`
+//! (excluded from the default members) and call back into this crate so
+//! every reported number has a single source of truth.
 
 pub mod config;
 pub mod error;
@@ -15,5 +16,5 @@ pub mod experiments;
 pub mod metrics;
 pub mod serve;
 
-pub use config::{OpConfig, RunConfig};
+pub use config::{ModelConfig, OpConfig, RunConfig};
 pub use error::Result;

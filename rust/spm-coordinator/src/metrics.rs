@@ -129,6 +129,22 @@ pub fn fmt_f(v: f64, prec: usize) -> String {
     format!("{v:.prec$}")
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample: the smallest
+/// element with at least `p` (in `0.0..=1.0`) of the sample at or below
+/// it, i.e. `sorted[ceil(p * N) - 1]`. An empty sample reports 0.0;
+/// `p = 0.0` reports the minimum, `p = 1.0` the maximum, and for N <= 100
+/// the p99 IS the maximum (there is no element with exactly 99% below
+/// it, so nearest-rank rounds up — the conservative tail for a latency
+/// report).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = (p * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +183,53 @@ mod tests {
         let text = std::fs::read_to_string(p).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
         let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn percentile_empty_sample_is_zero() {
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample() {
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[42.5], p), 42.5);
+        }
+    }
+
+    #[test]
+    fn percentile_p99_is_max_for_small_samples() {
+        // nearest-rank: for N <= 100, ceil(0.99 * N) == N -> the max
+        for n in [2usize, 10, 50, 100] {
+            let xs: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+            assert_eq!(percentile(&xs, 0.99), n as f64, "N={n}");
+        }
+        // and just past that boundary it stops being the max
+        let xs: Vec<f64> = (1..=101).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.99), 100.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_interior() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0); // rank clamps to the min
+        assert_eq!(percentile(&xs, 0.25), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert_eq!(percentile(&xs, 0.51), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_is_monotone_in_p() {
+        let xs = [0.5, 1.0, 2.5, 7.0, 7.0, 9.0, 12.0];
+        let mut last = f64::MIN;
+        for i in 0..=100 {
+            let v = percentile(&xs, i as f64 / 100.0);
+            assert!(v >= last, "p={i}%: {v} < {last}");
+            last = v;
+        }
     }
 
     #[test]

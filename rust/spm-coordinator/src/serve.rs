@@ -1,29 +1,47 @@
-//! Serving: a batched request router in front of ANY forward executor
-//! (the §7 "projection layers dominate serving cost" story).
+//! The serving engine (DESIGN.md §13): a deadline-batched request router
+//! in front of N executor replicas — the §7 "projection layers dominate
+//! serving cost" story, for EVERY model in the zoo.
 //!
-//! Client threads submit single-row requests through an mpsc channel; the
-//! router (on the calling thread — PJRT clients are not Send) drains up
-//! to the executor's batch size, pads the tail, runs one forward, and
-//! fans the rows back out through per-request reply channels. Latency
-//! percentiles and throughput are reported.
+//! Client threads submit single-row requests through an mpsc channel.
+//! The router opens a micro-batch at the first request and keeps
+//! collecting until the batch is full OR `max_wait_us` has elapsed
+//! (deadline flush — the old router flushed on an empty `try_recv`, so
+//! under a trickle of traffic every batch had fill 1). Batches are
+//! dispatched round-robin to worker threads, one per [`Executor`]
+//! replica, and ragged tails are forwarded at their TRUE fill: the
+//! native models take any row count down to the fused stage kernels, so
+//! the router never zero-pads (executors that need fixed shapes — AOT
+//! XLA executables — pad privately inside [`Executor::forward`]).
 //!
-//! The router core ([`serve_with`]) is engine-agnostic: [`serve_native`]
-//! drives a `LinearOp` classifier with no PJRT anywhere, and
-//! `spm-runtime::drivers::serve_demo` plugs in an AOT-compiled forward.
+//! [`ServeEngine::native`] wraps any [`Model`] (mlp, gru, charlm,
+//! attention) as an executor; [`ServeEngine::run_inline`] runs the same
+//! loop single-replica on the calling thread for executors that are not
+//! `Send` (PJRT clients must stay on the thread that built them — see
+//! `spm-runtime::drivers::serve_demo`).
+//!
+//! The [`ServeReport`] splits request latency into queue wait (submit ->
+//! forward start) and exec time (the forward itself), on top of the
+//! nearest-rank latency percentiles and throughput.
 //!
 //! Requests are split across clients by [`client_shares`], which spreads
-//! the remainder of `num_requests / num_clients` over the first clients —
-//! the old integer division silently dropped up to `num_clients - 1`
-//! requests, under-reporting the requested load.
+//! the remainder of `num_requests / num_clients` over the first clients
+//! so every request is issued (no silent drop).
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use spm_core::models::mlp::Classifier;
+use spm_core::models::api::Model;
 use spm_core::rng::Rng;
 use spm_core::tensor::Mat;
 
 use crate::error::Result;
+use crate::metrics::percentile;
+
+/// Default micro-batch cap for native executors.
+pub const DEFAULT_BATCH: usize = 32;
+
+/// Default deadline before a partial batch is flushed.
+pub const DEFAULT_MAX_WAIT_US: u64 = 200;
 
 pub struct Request {
     pub features: Vec<f32>,
@@ -31,38 +49,92 @@ pub struct Request {
     pub submitted: Instant,
 }
 
-#[derive(Debug, Clone)]
+/// One forward engine the router can dispatch micro-batches to.
+pub trait Executor {
+    /// Feature width of one request row.
+    fn width(&self) -> usize;
+    /// Hard cap on rows per `forward` call.
+    fn max_batch(&self) -> usize;
+    /// Forward `rows` filled rows (`1 <= rows <= max_batch()`,
+    /// `flat.len() == rows * width()`); returns `rows * d_out` outputs.
+    /// The buffer is owned (no copy on the hot path — a native executor
+    /// wraps it straight into a `Mat`) and the router always passes the
+    /// true fill: if the underlying engine needs a fixed shape, padding
+    /// (and un-padding) is this executor's private business.
+    fn forward(&mut self, rows: usize, flat: Vec<f32>) -> Result<Vec<f32>>;
+}
+
+/// Any [`Model`] as an executor: one `Mat` forward per micro-batch, at
+/// the batch's true row count.
+pub struct NativeExecutor {
+    model: Box<dyn Model>,
+    max_batch: usize,
+}
+
+impl NativeExecutor {
+    pub fn new(model: Box<dyn Model>, max_batch: usize) -> Self {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        NativeExecutor { model, max_batch }
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn width(&self) -> usize {
+        self.model.d_in()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn forward(&mut self, rows: usize, flat: Vec<f32>) -> Result<Vec<f32>> {
+        let x = Mat::from_vec(rows, self.model.d_in(), flat);
+        Ok(self.model.forward(&x).data)
+    }
+}
+
+/// Synthetic serving workload: how many requests, from how many
+/// concurrent client threads, under which feature seed.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub num_requests: usize,
+    pub num_clients: usize,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, Default)]
 pub struct ServeReport {
     pub requests: usize,
     pub batches: usize,
     pub mean_batch_fill: f64,
+    /// Mean submit -> forward-start time per request (batching delay +
+    /// dispatch queueing).
+    pub mean_queue_wait_ms: f64,
+    /// Mean forward wall time per request (the whole micro-batch's exec
+    /// attributed to each of its rows).
+    pub mean_exec_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub throughput_rps: f64,
+    /// Batches each replica executed, in replica order.
+    pub replica_batches: Vec<usize>,
 }
 
 impl std::fmt::Display for ServeReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "requests      : {}", self.requests)?;
         writeln!(f, "batches       : {} (mean fill {:.1})", self.batches, self.mean_batch_fill)?;
+        if self.replica_batches.len() > 1 {
+            writeln!(f, "replicas      : {:?} batches", self.replica_batches)?;
+        }
+        writeln!(f, "queue wait    : {:.2} ms mean", self.mean_queue_wait_ms)?;
+        writeln!(f, "exec          : {:.2} ms mean", self.mean_exec_ms)?;
         writeln!(f, "latency p50   : {:.2} ms", self.p50_ms)?;
         writeln!(f, "latency p95   : {:.2} ms", self.p95_ms)?;
         writeln!(f, "latency p99   : {:.2} ms", self.p99_ms)?;
         write!(f, "throughput    : {:.0} req/s", self.throughput_rps)
     }
-}
-
-/// Shape of one serving run: executor batch/width + client workload.
-#[derive(Clone, Copy, Debug)]
-pub struct ServeSpec {
-    /// executor batch size (tail batches are zero-padded up to this)
-    pub batch: usize,
-    /// feature width per request
-    pub n: usize,
-    pub num_requests: usize,
-    pub num_clients: usize,
-    pub seed: u64,
 }
 
 /// Split `num_requests` across `num_clients`, spreading the remainder over
@@ -74,120 +146,380 @@ pub fn client_shares(num_requests: usize, num_clients: usize) -> Vec<usize> {
     (0..num_clients).map(|c| base + usize::from(c < rem)).collect()
 }
 
-/// Run the batched serving loop against `forward`, which maps one padded
-/// (batch * n) row-major feature buffer to (batch * out_width) outputs.
-pub fn serve_with<F>(spec: &ServeSpec, mut forward: F) -> Result<ServeReport>
-where
-    F: FnMut(Vec<f32>) -> Result<Vec<f32>>,
-{
-    let ServeSpec { batch, n, num_requests, num_clients, seed } = *spec;
-    let (tx, rx) = mpsc::channel::<Request>();
-    // client threads: generate feature rows and wait for replies
-    let handles: Vec<_> = client_shares(num_requests, num_clients)
+/// Per-replica accounting, accumulated where the forwards run.
+#[derive(Default)]
+struct ExecStats {
+    batches: usize,
+    rows: usize,
+    queue_wait_ms: f64,
+    exec_ms: f64,
+    error: Option<crate::error::Error>,
+}
+
+/// Run one micro-batch through `exec` at its true fill and fan the rows
+/// back out. On executor failure the replies are dropped, which unblocks
+/// the waiting clients; the error is surfaced through the stats.
+fn exec_batch(exec: &mut dyn Executor, pending: Vec<Request>, stats: &mut ExecStats) {
+    let width = exec.width();
+    let fill = pending.len();
+    let mut flat = vec![0.0f32; fill * width];
+    for (row, r) in flat.chunks_mut(width).zip(&pending) {
+        assert_eq!(r.features.len(), width, "request feature width");
+        row.copy_from_slice(&r.features);
+    }
+    let t0 = Instant::now();
+    let out = match exec.forward(fill, flat) {
+        Ok(out) => out,
+        Err(e) => {
+            stats.error = Some(e);
+            return;
+        }
+    };
+    let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let per_row = out.len() / fill.max(1);
+    for (i, r) in pending.into_iter().enumerate() {
+        stats.queue_wait_ms += t0.duration_since(r.submitted).as_secs_f64() * 1e3;
+        stats.exec_ms += exec_ms;
+        let _ = r.reply.send(out[i * per_row..(i + 1) * per_row].to_vec());
+    }
+    stats.batches += 1;
+    stats.rows += fill;
+}
+
+/// Spawn the synthetic client threads: each submits its share of
+/// single-row requests, waits for every reply, and returns its observed
+/// latencies (ms). A closed channel means the engine failed — the client
+/// aborts quietly and the engine surfaces the executor error instead.
+fn spawn_clients(
+    w: &Workload,
+    width: usize,
+    tx: mpsc::Sender<Request>,
+) -> Vec<std::thread::JoinHandle<Vec<f64>>> {
+    let handles = client_shares(w.num_requests, w.num_clients)
         .into_iter()
         .enumerate()
         .map(|(c, per_client)| {
             let tx = tx.clone();
+            let seed = w.seed;
             std::thread::spawn(move || {
-                let mut rng = Rng::new(seed ^ (c as u64 + 1) * 0xABCD);
+                let mut rng = Rng::new(seed ^ (c as u64 + 1).wrapping_mul(0xABCD));
                 let mut latencies = Vec::with_capacity(per_client);
                 for _ in 0..per_client {
-                    let features = rng.normal_vec(n, 1.0);
+                    let features = rng.normal_vec(width, 1.0);
                     let (rtx, rrx) = mpsc::channel();
                     let started = Instant::now();
-                    tx.send(Request { features, reply: rtx, submitted: started })
-                        .expect("router gone");
-                    let _out = rrx.recv().expect("no reply");
-                    latencies.push(started.elapsed().as_secs_f64() * 1e3);
-                    // small jitter so batching has something to do
-                    if c % 2 == 0 {
-                        std::thread::sleep(Duration::from_micros(200));
+                    if tx.send(Request { features, reply: rtx, submitted: started }).is_err() {
+                        break;
                     }
+                    if rrx.recv().is_err() {
+                        break;
+                    }
+                    latencies.push(started.elapsed().as_secs_f64() * 1e3);
                 }
                 latencies
             })
         })
         .collect();
     drop(tx);
+    handles
+}
 
-    // router loop (executor thread)
-    let t0 = Instant::now();
-    let mut batches = 0usize;
-    let mut served = 0usize;
-    let mut fill_sum = 0usize;
+/// The deadline-batching core: open a micro-batch at the first request,
+/// then keep collecting until it is full or `max_wait` has elapsed since
+/// it opened. `max_wait = 0` degenerates to greedy draining (flush
+/// whatever is already queued). Returns when every client has hung up.
+fn route(
+    rx: &mpsc::Receiver<Request>,
+    batch: usize,
+    max_wait: Duration,
+    mut dispatch: impl FnMut(Vec<Request>),
+) {
     loop {
-        // block for the first request, then drain greedily up to `batch`
         let first = match rx.recv() {
             Ok(r) => r,
             Err(_) => break,
         };
         let mut pending = vec![first];
-        while pending.len() < batch {
-            match rx.try_recv() {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
+        if max_wait.is_zero() {
+            while pending.len() < batch {
+                match rx.try_recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+            }
+        } else {
+            let deadline = Instant::now() + max_wait;
+            while pending.len() < batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    // Timeout: the deadline expired on a partial batch.
+                    // Disconnected: the workload is over — flush the tail
+                    // immediately instead of sleeping out the deadline.
+                    Err(_) => break,
+                }
             }
         }
-        let fill = pending.len();
-        let mut flat = vec![0.0f32; batch * n];
-        for (i, r) in pending.iter().enumerate() {
-            flat[i * n..(i + 1) * n].copy_from_slice(&r.features);
-        }
-        let out = forward(flat)?;
-        let per_row = out.len() / batch.max(1);
-        for (i, r) in pending.into_iter().enumerate() {
-            let row = out[i * per_row..(i + 1) * per_row].to_vec();
-            let _ = r.reply.send(row);
-        }
-        batches += 1;
-        served += fill;
-        fill_sum += fill;
+        dispatch(pending);
     }
-    let wall = t0.elapsed().as_secs_f64();
+}
 
-    let mut latencies: Vec<f64> = handles
-        .into_iter()
-        .flat_map(|h| h.join().expect("client panicked"))
-        .collect();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| -> f64 {
-        if latencies.is_empty() {
-            return 0.0;
+fn assemble(
+    mut stats: Vec<ExecStats>,
+    mut latencies: Vec<f64>,
+    wall_secs: f64,
+) -> Result<ServeReport> {
+    for st in stats.iter_mut() {
+        if let Some(e) = st.error.take() {
+            return Err(e);
         }
-        let idx = ((latencies.len() as f64 - 1.0) * p).round() as usize;
-        latencies[idx]
-    };
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let served: usize = stats.iter().map(|s| s.rows).sum();
+    let batches: usize = stats.iter().map(|s| s.batches).sum();
+    let per_req = 1.0 / served.max(1) as f64;
     Ok(ServeReport {
         requests: served,
         batches,
-        mean_batch_fill: fill_sum as f64 / batches.max(1) as f64,
-        p50_ms: pct(0.50),
-        p95_ms: pct(0.95),
-        p99_ms: pct(0.99),
-        throughput_rps: served as f64 / wall.max(1e-9),
+        mean_batch_fill: served as f64 / batches.max(1) as f64,
+        mean_queue_wait_ms: stats.iter().map(|s| s.queue_wait_ms).sum::<f64>() * per_req,
+        mean_exec_ms: stats.iter().map(|s| s.exec_ms).sum::<f64>() * per_req,
+        p50_ms: percentile(&latencies, 0.50),
+        p95_ms: percentile(&latencies, 0.95),
+        p99_ms: percentile(&latencies, 0.99),
+        throughput_rps: served as f64 / wall_secs.max(1e-9),
+        replica_batches: stats.iter().map(|s| s.batches).collect(),
     })
 }
 
-/// Serve a native `LinearOp` classifier — the same router with zero PJRT:
-/// executor = `Classifier::logits` over the padded batch.
-pub fn serve_native(
-    clf: &Classifier,
-    batch: usize,
-    num_requests: usize,
-    num_clients: usize,
-    seed: u64,
-) -> Result<ServeReport> {
-    let n = clf.mixer.d_in();
-    let spec = ServeSpec { batch, n, num_requests, num_clients, seed };
-    serve_with(&spec, |flat| {
-        let x = Mat::from_vec(batch, n, flat);
-        Ok(clf.logits(&x).data)
-    })
+/// Builder + driver for a serving run: executor replicas, the batching
+/// policy, then [`ServeEngine::run`] against a [`Workload`].
+pub struct ServeEngine {
+    executors: Vec<Box<dyn Executor + Send>>,
+    max_wait: Duration,
+    max_batch: Option<usize>,
+}
+
+impl Default for ServeEngine {
+    fn default() -> Self {
+        ServeEngine {
+            executors: Vec::new(),
+            max_wait: Duration::from_micros(DEFAULT_MAX_WAIT_US),
+            max_batch: None,
+        }
+    }
+}
+
+impl ServeEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One native replica serving `model` — works for every `ModelKind`
+    /// (this replaces the old closure-bound `serve_native`).
+    pub fn native(model: Box<dyn Model>) -> Self {
+        Self::new().with_executor(Box::new(NativeExecutor::new(model, DEFAULT_BATCH)))
+    }
+
+    /// Add an executor replica. All replicas must agree on the feature
+    /// width (they serve the same request stream).
+    pub fn with_executor(mut self, exec: Box<dyn Executor + Send>) -> Self {
+        if let Some(first) = self.executors.first() {
+            assert_eq!(first.width(), exec.width(), "replica feature width");
+        }
+        self.executors.push(exec);
+        self
+    }
+
+    /// Add another native replica (its own model copy, its own worker
+    /// thread) — shard the request stream for multi-worker throughput.
+    pub fn with_replica(self, model: Box<dyn Model>) -> Self {
+        let batch = self.executors.first().map_or(DEFAULT_BATCH, |e| e.max_batch());
+        self.with_executor(Box::new(NativeExecutor::new(model, batch)))
+    }
+
+    /// Deadline before a partial micro-batch is flushed (0 = greedy).
+    pub fn with_max_wait_us(mut self, us: u64) -> Self {
+        self.max_wait = Duration::from_micros(us);
+        self
+    }
+
+    /// Cap the micro-batch size below the executors' own maximum.
+    pub fn with_max_batch(mut self, batch: usize) -> Self {
+        assert!(batch >= 1, "max_batch must be >= 1");
+        self.max_batch = Some(batch);
+        self
+    }
+
+    fn effective_batch(&self) -> usize {
+        let hw = self.executors.iter().map(|e| e.max_batch()).min().unwrap_or(1);
+        self.max_batch.map_or(hw, |b| b.min(hw))
+    }
+
+    /// Drive `workload` through the replicas: one worker thread per
+    /// executor, deadline-batched dispatch round-robin across them.
+    pub fn run(&mut self, workload: &Workload) -> Result<ServeReport> {
+        if self.executors.is_empty() {
+            crate::bail!("serve engine has no executors");
+        }
+        let width = self.executors[0].width();
+        let batch = self.effective_batch();
+        let max_wait = self.max_wait;
+
+        let (tx, rx) = mpsc::channel::<Request>();
+        let clients = spawn_clients(workload, width, tx);
+
+        let t0 = Instant::now();
+        let mut stats: Vec<ExecStats> = Vec::new();
+        std::thread::scope(|s| {
+            let mut jobs = Vec::new();
+            let mut workers = Vec::new();
+            for exec in self.executors.iter_mut() {
+                let (jtx, jrx) = mpsc::channel::<Vec<Request>>();
+                jobs.push(jtx);
+                workers.push(s.spawn(move || {
+                    let mut st = ExecStats::default();
+                    while let Ok(pending) = jrx.recv() {
+                        if st.error.is_some() {
+                            // dropping the batch closes its reply channels,
+                            // so clients unblock instead of hanging
+                            continue;
+                        }
+                        exec_batch(exec.as_mut(), pending, &mut st);
+                    }
+                    st
+                }));
+            }
+            let mut next = 0usize;
+            route(&rx, batch, max_wait, |pending| {
+                let _ = jobs[next].send(pending);
+                next = (next + 1) % jobs.len();
+            });
+            drop(jobs);
+            stats = workers.into_iter().map(|w| w.join().expect("serve worker panicked")).collect();
+        });
+        let wall = t0.elapsed().as_secs_f64();
+
+        let latencies: Vec<f64> =
+            clients.into_iter().flat_map(|h| h.join().expect("client panicked")).collect();
+        assemble(stats, latencies, wall)
+    }
+
+    /// The same deadline-batched loop with ONE executor on the calling
+    /// thread — for executors that are not `Send` (PJRT clients must stay
+    /// on the thread that built them). Forwards run inside the router, so
+    /// a batch's queue wait includes the previous batch's exec time.
+    pub fn run_inline(
+        workload: &Workload,
+        exec: &mut dyn Executor,
+        max_wait_us: u64,
+    ) -> Result<ServeReport> {
+        let width = exec.width();
+        let batch = exec.max_batch();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let clients = spawn_clients(workload, width, tx);
+
+        let t0 = Instant::now();
+        let mut st = ExecStats::default();
+        route(&rx, batch, Duration::from_micros(max_wait_us), |pending| {
+            if st.error.is_none() {
+                exec_batch(exec, pending, &mut st);
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+
+        let latencies: Vec<f64> =
+            clients.into_iter().flat_map(|h| h.join().expect("client panicked")).collect();
+        assemble(vec![st], latencies, wall)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Echoes its input rows back; counts what the engine forwarded so
+    /// tests can assert on the TRUE fill contract.
+    struct EchoExecutor {
+        width: usize,
+        max_batch: usize,
+        rows_seen: Arc<AtomicUsize>,
+        floats_seen: Arc<AtomicUsize>,
+        max_fill_seen: Arc<AtomicUsize>,
+    }
+
+    impl EchoExecutor {
+        fn new(width: usize, max_batch: usize) -> Self {
+            EchoExecutor {
+                width,
+                max_batch,
+                rows_seen: Arc::new(AtomicUsize::new(0)),
+                floats_seen: Arc::new(AtomicUsize::new(0)),
+                max_fill_seen: Arc::new(AtomicUsize::new(0)),
+            }
+        }
+    }
+
+    impl Executor for EchoExecutor {
+        fn width(&self) -> usize {
+            self.width
+        }
+
+        fn max_batch(&self) -> usize {
+            self.max_batch
+        }
+
+        fn forward(&mut self, rows: usize, flat: Vec<f32>) -> Result<Vec<f32>> {
+            assert_eq!(flat.len(), rows * self.width, "true-fill contract");
+            assert!((1..=self.max_batch).contains(&rows), "fill {rows}");
+            self.rows_seen.fetch_add(rows, Ordering::SeqCst);
+            self.floats_seen.fetch_add(flat.len(), Ordering::SeqCst);
+            self.max_fill_seen.fetch_max(rows, Ordering::SeqCst);
+            Ok(flat)
+        }
+    }
+
+    struct SleepExecutor {
+        width: usize,
+        sleep: Duration,
+    }
+
+    impl Executor for SleepExecutor {
+        fn width(&self) -> usize {
+            self.width
+        }
+
+        fn max_batch(&self) -> usize {
+            8
+        }
+
+        fn forward(&mut self, rows: usize, flat: Vec<f32>) -> Result<Vec<f32>> {
+            std::thread::sleep(self.sleep);
+            let _ = rows;
+            Ok(flat)
+        }
+    }
+
+    struct FailingExecutor;
+
+    impl Executor for FailingExecutor {
+        fn width(&self) -> usize {
+            2
+        }
+
+        fn max_batch(&self) -> usize {
+            4
+        }
+
+        fn forward(&mut self, _rows: usize, _flat: Vec<f32>) -> Result<Vec<f32>> {
+            Err("forward exploded".into())
+        }
+    }
 
     #[test]
     fn shares_cover_every_request() {
@@ -207,12 +539,144 @@ mod tests {
     }
 
     #[test]
-    fn serve_with_echo_executor_serves_all() {
-        let spec = ServeSpec { batch: 4, n: 2, num_requests: 11, num_clients: 3, seed: 1 };
-        let report = serve_with(&spec, |flat| Ok(flat)).unwrap();
+    fn engine_serves_every_request() {
+        let mut engine = ServeEngine::new()
+            .with_executor(Box::new(EchoExecutor::new(3, 4)))
+            .with_max_wait_us(500);
+        let report = engine.run(&Workload { num_requests: 11, num_clients: 3, seed: 1 }).unwrap();
         assert_eq!(report.requests, 11);
-        assert!(report.batches >= 3); // 11 requests can't fit two 4-batches
+        assert!(report.batches >= 3, "11 requests cannot fit two 4-batches");
         assert!(report.p99_ms >= report.p50_ms);
+        assert!(report.throughput_rps > 0.0);
         assert!((report.mean_batch_fill - 11.0 / report.batches as f64).abs() < 1e-9);
+    }
+
+    /// Satellite regression: exec cost must scale with the true fill. The
+    /// old router forwarded a full zero-padded `batch * n` buffer even at
+    /// fill 1; the engine must hand the executor exactly `requests * n`
+    /// floats across the whole run, ragged tails included.
+    #[test]
+    fn ragged_fills_forward_only_filled_rows() {
+        let exec = EchoExecutor::new(5, 4);
+        let (rows, floats, max_fill) =
+            (exec.rows_seen.clone(), exec.floats_seen.clone(), exec.max_fill_seen.clone());
+        let mut engine = ServeEngine::new().with_executor(Box::new(exec));
+        let report = engine.run(&Workload { num_requests: 11, num_clients: 2, seed: 3 }).unwrap();
+        assert_eq!(report.requests, 11);
+        assert_eq!(rows.load(Ordering::SeqCst), 11, "row count must equal requests");
+        assert_eq!(
+            floats.load(Ordering::SeqCst),
+            11 * 5,
+            "exec cost must scale with fill — no zero-padded rows"
+        );
+        assert!(max_fill.load(Ordering::SeqCst) <= 4);
+        // 11 requests in 4-caps cannot come out even: some batch was ragged
+        assert!(report.batches * 4 > 11, "sweep must include a ragged tail");
+    }
+
+    /// A lone in-flight request must be flushed when the deadline
+    /// expires, not held hostage for a full batch.
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        let mut engine = ServeEngine::new()
+            .with_executor(Box::new(EchoExecutor::new(2, 64)))
+            .with_max_wait_us(20_000);
+        let report = engine.run(&Workload { num_requests: 2, num_clients: 1, seed: 5 }).unwrap();
+        // one synchronous client: each request waits out the 20ms window
+        // alone, then flushes at fill 1
+        assert_eq!(report.requests, 2);
+        assert_eq!(report.batches, 2);
+        assert!(report.p50_ms >= 15.0, "deadline flush came too early: {}", report.p50_ms);
+        assert!(report.mean_queue_wait_ms >= 15.0, "{}", report.mean_queue_wait_ms);
+    }
+
+    /// With many concurrent clients inside one deadline window, the
+    /// engine must aggregate — the greedy old router degraded to fill ~1
+    /// whenever the queue momentarily emptied.
+    #[test]
+    fn deadline_window_aggregates_concurrent_requests() {
+        let mut engine = ServeEngine::new()
+            .with_executor(Box::new(EchoExecutor::new(2, 8)))
+            .with_max_wait_us(30_000);
+        let report = engine.run(&Workload { num_requests: 32, num_clients: 8, seed: 7 }).unwrap();
+        assert_eq!(report.requests, 32);
+        assert!(
+            report.mean_batch_fill > 1.5,
+            "deadline batching failed to aggregate: fill {}",
+            report.mean_batch_fill
+        );
+        assert!(report.batches < 32);
+    }
+
+    #[test]
+    fn two_replicas_share_the_batches() {
+        let mut engine = ServeEngine::new()
+            .with_executor(Box::new(EchoExecutor::new(3, 2)))
+            .with_executor(Box::new(EchoExecutor::new(3, 2)))
+            .with_max_wait_us(0);
+        let report = engine.run(&Workload { num_requests: 16, num_clients: 4, seed: 9 }).unwrap();
+        assert_eq!(report.requests, 16);
+        assert_eq!(report.replica_batches.len(), 2);
+        assert_eq!(report.replica_batches.iter().sum::<usize>(), report.batches);
+        assert!(
+            report.replica_batches.iter().all(|&b| b > 0),
+            "round-robin must reach both replicas: {:?}",
+            report.replica_batches
+        );
+    }
+
+    #[test]
+    fn report_splits_queue_wait_from_exec_time() {
+        let mut engine = ServeEngine::new()
+            .with_executor(Box::new(SleepExecutor { width: 2, sleep: Duration::from_millis(5) }))
+            .with_max_wait_us(10_000);
+        let report = engine.run(&Workload { num_requests: 4, num_clients: 1, seed: 11 }).unwrap();
+        assert_eq!(report.requests, 4);
+        // one synchronous client: every batch waits out the 10ms window
+        assert!(report.mean_queue_wait_ms >= 8.0, "{}", report.mean_queue_wait_ms);
+        assert!(report.mean_exec_ms >= 4.0, "{}", report.mean_exec_ms);
+        // the client-observed latency covers both components: the max
+        // latency dominates the mean of (queue + exec) by construction
+        assert!(
+            report.p99_ms + 0.5 >= report.mean_queue_wait_ms + report.mean_exec_ms,
+            "p99 {} vs wait {} + exec {}",
+            report.p99_ms,
+            report.mean_queue_wait_ms,
+            report.mean_exec_ms
+        );
+    }
+
+    #[test]
+    fn executor_error_propagates_without_hanging() {
+        let mut engine = ServeEngine::new().with_executor(Box::new(FailingExecutor));
+        let err = engine
+            .run(&Workload { num_requests: 6, num_clients: 2, seed: 13 })
+            .unwrap_err();
+        assert!(err.to_string().contains("exploded"), "{err}");
+    }
+
+    #[test]
+    fn run_inline_matches_the_engine_contract() {
+        let mut exec = EchoExecutor::new(4, 8);
+        let rows = exec.rows_seen.clone();
+        let report = ServeEngine::run_inline(
+            &Workload { num_requests: 10, num_clients: 3, seed: 15 },
+            &mut exec,
+            500,
+        )
+        .unwrap();
+        assert_eq!(report.requests, 10);
+        assert_eq!(rows.load(Ordering::SeqCst), 10);
+        assert_eq!(report.replica_batches.len(), 1);
+        assert!(report.p99_ms >= report.p50_ms);
+    }
+
+    #[test]
+    fn empty_workload_reports_zeroes() {
+        let mut engine = ServeEngine::new().with_executor(Box::new(EchoExecutor::new(2, 4)));
+        let report = engine.run(&Workload { num_requests: 0, num_clients: 2, seed: 17 }).unwrap();
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.batches, 0);
+        assert_eq!(report.p99_ms, 0.0);
     }
 }

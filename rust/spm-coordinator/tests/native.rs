@@ -1,13 +1,15 @@
-//! Native integration tests: config -> LinearOp experiments -> serving
-//! router, with no PJRT/XLA anywhere (the default offline workspace).
+//! Native integration tests: config -> Model factory -> experiments ->
+//! serving engine, with no PJRT/XLA anywhere (the default offline
+//! workspace).
 
 use spm_coordinator::config::{parse_toml, RunConfig};
 use spm_coordinator::experiments::{self, DataSource};
-use spm_coordinator::serve::{client_shares, serve_native, serve_with, ServeSpec};
-use spm_core::models::mlp::Classifier;
+use spm_coordinator::serve::{client_shares, ServeEngine, Workload};
+use spm_core::models::api::{build_model, save_checkpoint, ModelCfg, ModelKind};
 use spm_core::ops::{LinearCfg, LinearKind};
 use spm_core::pairing::Schedule;
 use spm_core::spm::Variant;
+use spm_core::tensor::Mat;
 
 fn quick_cfg() -> RunConfig {
     RunConfig { steps: 4, eval_batches: 2, warmup: 1, ..Default::default() }
@@ -71,11 +73,14 @@ fn op_config_simd_exec_trains_on_any_build() {
 }
 
 #[test]
-fn serving_router_native_end_to_end_serves_remainder() {
-    // 97 requests over 4 clients: the old num_requests / num_clients split
-    // dropped 1 request; the router must see all 97.
-    let clf = Classifier::new(LinearCfg::dense(8), 3, 1e-3, 1);
-    let report = serve_native(&clf, 16, 97, 4, 2).unwrap();
+fn serving_engine_serves_remainder_workload() {
+    // 97 requests over 4 clients: the pre-PR-1 num_requests / num_clients
+    // split dropped 1 request; the engine must see all 97.
+    let model = build_model(
+        &ModelCfg::new(ModelKind::Mlp, LinearCfg::dense(8)).with_classes(3).with_seed(1),
+    );
+    let mut engine = ServeEngine::native(model).with_max_batch(16);
+    let report = engine.run(&Workload { num_requests: 97, num_clients: 4, seed: 2 }).unwrap();
     assert_eq!(report.requests, 97);
     assert!(report.batches >= 7); // 97 requests can't fit six 16-batches
     assert!(report.p99_ms >= report.p50_ms);
@@ -83,17 +88,80 @@ fn serving_router_native_end_to_end_serves_remainder() {
 }
 
 #[test]
-fn serve_with_custom_executor_pads_tail_batches() {
-    let spec = ServeSpec { batch: 8, n: 3, num_requests: 10, num_clients: 2, seed: 7 };
-    let mut calls = 0usize;
-    let report = serve_with(&spec, |flat| {
-        calls += 1;
-        assert_eq!(flat.len(), 8 * 3); // always padded to full batch
-        Ok(vec![0.0; 8])
-    })
+fn serving_engine_serves_every_model_kind() {
+    // the acceptance bar: all four architectures through the SAME
+    // `ServeEngine::native(model)` entry point
+    for kind in ModelKind::ALL {
+        let cfg = ModelCfg::new(kind, LinearCfg::spm(8, Variant::General))
+            .with_classes(3)
+            .with_heads(2)
+            .with_seq_len(2)
+            .with_seed(7);
+        let mut engine = ServeEngine::native(build_model(&cfg)).with_max_wait_us(300);
+        let report = engine.run(&Workload { num_requests: 23, num_clients: 3, seed: 4 }).unwrap();
+        assert_eq!(report.requests, 23, "{kind:?}");
+        assert!(report.batches >= 1, "{kind:?}");
+        assert!(report.throughput_rps > 0.0, "{kind:?}");
+        assert!(report.p99_ms >= report.p50_ms, "{kind:?}");
+    }
+}
+
+#[test]
+fn serving_engine_replicates_any_model_kind() {
+    // two gru replicas sharding one request stream
+    let cfg = ModelCfg::new(ModelKind::Gru, LinearCfg::spm(8, Variant::Rotation))
+        .with_classes(3)
+        .with_seq_len(2)
+        .with_seed(9);
+    let mut engine = ServeEngine::native(build_model(&cfg))
+        .with_replica(build_model(&cfg))
+        .with_max_batch(2)
+        .with_max_wait_us(0);
+    let report = engine.run(&Workload { num_requests: 12, num_clients: 3, seed: 6 }).unwrap();
+    assert_eq!(report.requests, 12);
+    assert_eq!(report.replica_batches.len(), 2);
+    assert!(report.replica_batches.iter().all(|&b| b > 0), "{:?}", report.replica_batches);
+}
+
+#[test]
+fn model_config_serves_from_toml() {
+    // [model] + [op] all the way to a serving run, no code in between
+    let doc = parse_toml(
+        "[op]\nvariant = \"general\"\n[model]\nkind = \"attention\"\nn = 8\nheads = 2\nseq_len = 2\n",
+    )
     .unwrap();
-    assert_eq!(report.requests, 10);
-    assert_eq!(report.batches, calls);
+    let mut cfg = quick_cfg();
+    cfg.apply_toml(&doc).unwrap();
+    let model = cfg.model.build(&cfg.op, cfg.seed).unwrap();
+    assert_eq!(model.kind(), ModelKind::Attention);
+    assert_eq!(model.d_in(), 2 * 8);
+    let mut engine = ServeEngine::native(model);
+    let report = engine.run(&Workload { num_requests: 9, num_clients: 2, seed: 3 }).unwrap();
+    assert_eq!(report.requests, 9);
+}
+
+#[test]
+fn served_model_warm_starts_from_checkpoint() {
+    // save a trained-ish model, point [model] checkpoint at it, and the
+    // config-built model must produce identical logits
+    let mcfg = ModelCfg::new(ModelKind::Mlp, LinearCfg::spm(8, Variant::General))
+        .with_classes(3)
+        .with_seed(quick_cfg().seed ^ 0xC1A55);
+    let src = build_model(&mcfg);
+    let path = std::env::temp_dir().join("spm_test_native_warmstart.ckpt");
+    save_checkpoint(src.as_ref(), &path).unwrap();
+
+    let doc = parse_toml(&format!(
+        "[model]\nkind = \"mlp\"\nn = 8\nclasses = 3\ncheckpoint = \"{}\"\n",
+        path.display()
+    ))
+    .unwrap();
+    let mut cfg = quick_cfg();
+    cfg.apply_toml(&doc).unwrap();
+    let warm = cfg.model.build(&cfg.op, cfg.seed).unwrap();
+    let x = Mat::from_vec(4, 8, (0..32).map(|i| (i as f32) * 0.1 - 1.5).collect());
+    assert_eq!(warm.forward(&x).data, src.forward(&x).data);
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

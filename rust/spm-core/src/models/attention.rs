@@ -4,10 +4,12 @@
 //! are [`LinearOp`]s updated through the flat apply_grads kernel.
 
 use crate::loss::mse;
-use crate::ops::{LinearCfg, LinearOp, LinearTrace};
+use crate::ops::{LinearCfg, LinearOp, LinearTrace, SpmExec};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::Mat;
+
+use super::api::{Model, ModelKind, Target};
 
 pub struct Attention {
     pub d: usize,
@@ -114,6 +116,12 @@ impl Attention {
         loss
     }
 
+    /// MSE against `target` (B*T, d) without updates.
+    pub fn evaluate(&self, x_flat: &Mat, target: &Mat, b: usize, t: usize) -> f32 {
+        let y = self.forward(x_flat, b, t);
+        mse(&y, target).0
+    }
+
     /// Exact backward; applies flat Adam updates internally, returns g_x.
     fn backward(&mut self, tr: &FwdTrace, gy: &Mat) -> Mat {
         let d = self.d;
@@ -206,6 +214,92 @@ impl Attention {
             m.apply_grads(&mut self.adam);
         }
         gx
+    }
+}
+
+/// [`Model`]-shaped view of attention over fixed-length sequences: one
+/// request row is the flattened `(T, d)` sequence, so
+/// `d_in = d_out = seq_len * d`. A `(B, T*d)` row-major matrix has the
+/// SAME memory layout as the `(B*T, d)` flat-rows matrix the attention
+/// core consumes, so the reshapes are pure buffer reinterpretations.
+pub struct AttnSeq {
+    pub attn: Attention,
+    pub seq_len: usize,
+}
+
+impl AttnSeq {
+    pub fn new(cfg: LinearCfg, heads: usize, seq_len: usize, lr: f32, seed: u64) -> Self {
+        assert!(seq_len >= 1, "seq_len must be >= 1");
+        AttnSeq { attn: Attention::new(cfg, heads, lr, seed), seq_len }
+    }
+
+    /// `(B, T*d)` -> `(B*T, d)` (same data, different row stride).
+    fn flat_rows(&self, x: &Mat) -> Mat {
+        let d = self.attn.d;
+        assert_eq!(x.cols, self.seq_len * d, "row must hold T={} steps of width {d}", self.seq_len);
+        Mat::from_vec(x.rows * self.seq_len, d, x.data.clone())
+    }
+}
+
+impl Model for AttnSeq {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Attention
+    }
+
+    fn d_in(&self) -> usize {
+        self.seq_len * self.attn.d
+    }
+
+    fn d_out(&self) -> usize {
+        self.seq_len * self.attn.d
+    }
+
+    fn param_count(&self) -> usize {
+        self.attn.param_count()
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        let y = self.attn.forward(&self.flat_rows(x), x.rows, self.seq_len);
+        Mat::from_vec(x.rows, self.seq_len * self.attn.d, y.data)
+    }
+
+    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+        let Target::Values(t) = target else { panic!("attention trains on value targets (MSE)") };
+        let xf = self.flat_rows(x);
+        let tf = self.flat_rows(t);
+        let loss = self.attn.train_step(&xf, &tf, x.rows, self.seq_len);
+        (loss, 0.0)
+    }
+
+    fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32) {
+        let Target::Values(t) = target else { panic!("attention evaluates on value targets") };
+        let loss =
+            self.attn.evaluate(&self.flat_rows(x), &self.flat_rows(t), x.rows, self.seq_len);
+        (loss, 0.0)
+    }
+
+    fn set_exec(&mut self, exec: SpmExec) {
+        for m in self.attn.maps.iter_mut() {
+            m.set_exec(exec);
+        }
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&str, &[f32])) {
+        for (name, m) in ["q", "k", "v", "o"].iter().zip(&self.attn.maps) {
+            f(name, m.params());
+        }
+    }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
+        for (name, m) in ["q", "k", "v", "o"].iter().zip(self.attn.maps.iter_mut()) {
+            f(name, m.params_mut());
+        }
+    }
+
+    fn visit_ops(&self, f: &mut dyn FnMut(&LinearOp)) {
+        for m in &self.attn.maps {
+            f(m);
+        }
     }
 }
 

@@ -5,10 +5,12 @@
 //! keeps its own flat Adam slot next to the two LinearOps.
 
 use crate::loss::softmax_xent;
-use crate::ops::{LinearCfg, LinearOp};
+use crate::ops::{LinearCfg, LinearOp, SpmExec};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::Mat;
+
+use super::api::{Model, ModelKind, Target};
 
 pub const VOCAB: usize = 256;
 
@@ -45,21 +47,29 @@ impl CharLM {
         h
     }
 
-    /// Mean NLL (nats) of next-byte prediction; inputs/targets are flat
-    /// (B*T) token streams with `targets[i]` the byte following `inputs[i]`.
-    pub fn evaluate(&self, inputs: &[u8], targets: &[u8]) -> f32 {
-        let h0 = self.embed_tokens(inputs);
+    /// Next-byte logits for a flat token stream: one row of `VOCAB`
+    /// logits per input token (the model is per-token, so this IS the
+    /// batched forward the serving engine drives).
+    pub fn logits(&self, tokens: &[u8]) -> Mat {
+        let h0 = self.embed_tokens(tokens);
         let mut h = self.mixer.forward(&h0);
         for v in h.data.iter_mut() {
             *v = v.max(0.0);
         }
-        let logits = self.head.forward(&h);
+        self.head.forward(&h)
+    }
+
+    /// Mean NLL (nats) of next-byte prediction; inputs/targets are flat
+    /// (B*T) token streams with `targets[i]` the byte following `inputs[i]`.
+    pub fn evaluate(&self, inputs: &[u8], targets: &[u8]) -> f32 {
+        let logits = self.logits(inputs);
         let labels: Vec<u32> = targets.iter().map(|&t| t as u32).collect();
         softmax_xent(&logits, &labels).0
     }
 
-    /// One training step over a flat (B*T) token batch; returns mean NLL.
-    pub fn train_step(&mut self, inputs: &[u8], targets: &[u8]) -> f32 {
+    /// One training step over a flat (B*T) token batch; returns
+    /// (mean NLL, next-byte accuracy).
+    pub fn train_step(&mut self, inputs: &[u8], targets: &[u8]) -> (f32, f32) {
         assert_eq!(inputs.len(), targets.len());
         let h0 = self.embed_tokens(inputs);
         let (h_pre, mix_tr) = self.mixer.forward_train(&h0);
@@ -69,7 +79,7 @@ impl CharLM {
         }
         let (logits, head_tr) = self.head.forward_train(&h);
         let labels: Vec<u32> = targets.iter().map(|&t| t as u32).collect();
-        let (loss, _acc, glogits) = softmax_xent(&logits, &labels);
+        let (loss, acc, glogits) = softmax_xent(&logits, &labels);
 
         let mut gh = self.head.backward(&h, &head_tr, &glogits);
         for (g, pre) in gh.data.iter_mut().zip(&h_pre.data) {
@@ -92,7 +102,76 @@ impl CharLM {
         self.mixer.apply_grads(&mut self.adam);
         self.head.apply_grads(&mut self.adam);
         self.adam.update(self.embed_slot, &mut self.embed.data, &gembed);
-        loss
+        (loss, acc)
+    }
+}
+
+/// `(B, 1)` request rows of f32 byte values -> flat token stream. The
+/// serving contract is all-f32 feature rows; values are rounded and
+/// clamped into the byte vocabulary.
+fn row_tokens(x: &Mat) -> Vec<u8> {
+    assert_eq!(x.cols, 1, "charlm request rows carry exactly one token");
+    x.data.iter().map(|&v| v.round().clamp(0.0, 255.0) as u8).collect()
+}
+
+impl Model for CharLM {
+    fn kind(&self) -> ModelKind {
+        ModelKind::CharLm
+    }
+
+    fn d_in(&self) -> usize {
+        1
+    }
+
+    fn d_out(&self) -> usize {
+        VOCAB
+    }
+
+    fn param_count(&self) -> usize {
+        CharLM::param_count(self)
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        self.logits(&row_tokens(x))
+    }
+
+    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+        let Target::Labels(y) = target else { panic!("charlm trains on next-byte labels") };
+        let inputs = row_tokens(x);
+        let targets: Vec<u8> = y
+            .iter()
+            .map(|&t| u8::try_from(t).expect("charlm labels must be bytes"))
+            .collect();
+        CharLM::train_step(self, &inputs, &targets)
+    }
+
+    fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32) {
+        let Target::Labels(y) = target else { panic!("charlm evaluates on next-byte labels") };
+        let logits = self.logits(&row_tokens(x));
+        let (loss, acc, _g) = softmax_xent(&logits, y);
+        (loss, acc)
+    }
+
+    fn set_exec(&mut self, exec: SpmExec) {
+        self.mixer.set_exec(exec);
+        self.head.set_exec(exec);
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&str, &[f32])) {
+        f("embed", &self.embed.data);
+        f("mixer", self.mixer.params());
+        f("head", self.head.params());
+    }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
+        f("embed", &mut self.embed.data);
+        f("mixer", self.mixer.params_mut());
+        f("head", self.head.params_mut());
+    }
+
+    fn visit_ops(&self, f: &mut dyn FnMut(&LinearOp)) {
+        f(&self.mixer);
+        f(&self.head);
     }
 }
 
@@ -112,10 +191,10 @@ mod tests {
         let inputs = &stream[..256];
         let targets = &stream[1..257];
         let mut lm = CharLM::new(LinearCfg::dense(16), 3e-3, 1);
-        let first = lm.train_step(inputs, targets);
+        let first = lm.train_step(inputs, targets).0;
         let mut last = first;
         for _ in 0..60 {
-            last = lm.train_step(inputs, targets);
+            last = lm.train_step(inputs, targets).0;
         }
         assert!(last < first * 0.3, "{first} -> {last}");
     }
@@ -126,10 +205,10 @@ mod tests {
         let inputs = &stream[..256];
         let targets = &stream[1..257];
         let mut lm = CharLM::new(LinearCfg::spm(16, Variant::Rotation), 3e-3, 2);
-        let first = lm.train_step(inputs, targets);
+        let first = lm.train_step(inputs, targets).0;
         let mut last = first;
         for _ in 0..60 {
-            last = lm.train_step(inputs, targets);
+            last = lm.train_step(inputs, targets).0;
         }
         assert!(last < first * 0.5, "{first} -> {last}");
     }

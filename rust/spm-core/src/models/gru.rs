@@ -8,10 +8,12 @@
 //! consumes the total.
 
 use crate::loss::softmax_xent;
-use crate::ops::{LinearCfg, LinearOp, LinearTrace};
+use crate::ops::{LinearCfg, LinearOp, LinearTrace, SpmExec};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::{col_sum, Mat};
+
+use super::api::{Model, ModelKind, Target};
 
 fn sigmoid(v: f32) -> f32 {
     1.0 / (1.0 + (-v).exp())
@@ -200,6 +202,105 @@ impl Gru {
         self.adam.update(s1, &mut self.b_r, &gb_r);
         self.adam.update(s2, &mut self.b_h, &gb_h);
         (loss, acc)
+    }
+}
+
+/// [`Model`]-shaped view of the GRU sequence classifier: one request row
+/// is the WHOLE sequence with timesteps concatenated
+/// `[x_1 | x_2 | .. | x_T]`, so `d_in = seq_len * n` and the serving
+/// engine can route flat feature rows to it like to any other model.
+pub struct GruSeq {
+    pub gru: Gru,
+    pub seq_len: usize,
+}
+
+impl GruSeq {
+    pub fn new(cfg: LinearCfg, classes: usize, seq_len: usize, lr: f32, seed: u64) -> Self {
+        assert!(seq_len >= 1, "seq_len must be >= 1");
+        GruSeq { gru: Gru::new(cfg, classes, lr, seed), seq_len }
+    }
+
+    /// `(B, T*n)` concatenated rows -> the T `(B, n)` timestep matrices
+    /// the BPTT core consumes.
+    fn split_steps(&self, x: &Mat) -> Vec<Mat> {
+        let n = self.gru.n;
+        assert_eq!(
+            x.cols,
+            self.seq_len * n,
+            "row must hold T={} timesteps of width {n}",
+            self.seq_len
+        );
+        (0..self.seq_len)
+            .map(|t| Mat::from_fn(x.rows, n, |b, j| x.at(b, t * n + j)))
+            .collect()
+    }
+}
+
+impl Model for GruSeq {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Gru
+    }
+
+    fn d_in(&self) -> usize {
+        self.seq_len * self.gru.n
+    }
+
+    fn d_out(&self) -> usize {
+        self.gru.head.d_out()
+    }
+
+    fn param_count(&self) -> usize {
+        self.gru.param_count()
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        self.gru.logits(&self.split_steps(x))
+    }
+
+    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+        let Target::Labels(y) = target else { panic!("gru trains on class labels") };
+        let steps = self.split_steps(x);
+        self.gru.train_step(&steps, y)
+    }
+
+    fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32) {
+        let Target::Labels(y) = target else { panic!("gru evaluates on class labels") };
+        self.gru.evaluate(&self.split_steps(x), y)
+    }
+
+    fn set_exec(&mut self, exec: SpmExec) {
+        for m in self.gru.maps.iter_mut() {
+            m.set_exec(exec);
+        }
+        self.gru.head.set_exec(exec);
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&str, &[f32])) {
+        for (name, m) in ["wz", "uz", "wr", "ur", "wh", "uh"].iter().zip(&self.gru.maps) {
+            f(name, m.params());
+        }
+        f("b_z", &self.gru.b_z);
+        f("b_r", &self.gru.b_r);
+        f("b_h", &self.gru.b_h);
+        f("head", self.gru.head.params());
+    }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
+        let maps = self.gru.maps.iter_mut();
+        for (name, m) in ["wz", "uz", "wr", "ur", "wh", "uh"].iter().zip(maps) {
+            f(name, m.params_mut());
+        }
+        f("b_z", &mut self.gru.b_z);
+        f("b_r", &mut self.gru.b_r);
+        f("b_h", &mut self.gru.b_h);
+        f("head", self.gru.head.params_mut());
+    }
+
+    fn visit_ops(&self, f: &mut dyn FnMut(&LinearOp)) {
+        for m in &self.gru.maps {
+            f(m);
+        }
+        f(&self.gru.head);
     }
 }
 

@@ -3,10 +3,12 @@
 //! both linear maps update through the flat apply_grads kernel.
 
 use crate::loss::softmax_xent;
-use crate::ops::{LinearCfg, LinearOp};
+use crate::ops::{LinearCfg, LinearOp, SpmExec};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::Mat;
+
+use super::api::{Model, ModelKind, Target};
 
 pub struct Classifier {
     pub mixer: LinearOp,
@@ -67,6 +69,58 @@ impl Classifier {
         let logits = self.logits(x);
         let (loss, acc, _g) = softmax_xent(&logits, y);
         (loss, acc)
+    }
+}
+
+impl Model for Classifier {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Mlp
+    }
+
+    fn d_in(&self) -> usize {
+        self.mixer.d_in()
+    }
+
+    fn d_out(&self) -> usize {
+        self.head.d_out()
+    }
+
+    fn param_count(&self) -> usize {
+        Classifier::param_count(self)
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        self.logits(x)
+    }
+
+    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+        let Target::Labels(y) = target else { panic!("mlp trains on class labels") };
+        Classifier::train_step(self, x, y)
+    }
+
+    fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32) {
+        let Target::Labels(y) = target else { panic!("mlp evaluates on class labels") };
+        Classifier::evaluate(self, x, y)
+    }
+
+    fn set_exec(&mut self, exec: SpmExec) {
+        self.mixer.set_exec(exec);
+        self.head.set_exec(exec);
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&str, &[f32])) {
+        f("mixer", self.mixer.params());
+        f("head", self.head.params());
+    }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
+        f("mixer", self.mixer.params_mut());
+        f("head", self.head.params_mut());
+    }
+
+    fn visit_ops(&self, f: &mut dyn FnMut(&LinearOp)) {
+        f(&self.mixer);
+        f(&self.head);
     }
 }
 

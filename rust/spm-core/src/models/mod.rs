@@ -4,9 +4,16 @@
 //! square mixers AND rectangular heads — is constructed through the
 //! planned [`crate::ops::LinearOp`] layer; no model wires `Dense` or
 //! `SpmParams` directly.
+//!
+//! Every model also implements the unified [`api::Model`] trait
+//! (DESIGN.md §13), so coordinators, the serving engine, and checkpoints
+//! drive any of them through one batched interface; [`api::build_model`]
+//! is the factory.
+pub mod api;
 pub mod attention;
 pub mod charlm;
 pub mod gru;
 pub mod mlp;
 
 pub use crate::ops::{LinearCfg, LinearKind, LinearOp, LinearTrace};
+pub use api::{build_model, Model, ModelCfg, ModelKind, Target};

@@ -11,6 +11,14 @@
 //! with one flat optimizer kernel ([`crate::optim::Optimizer`]). The SPM
 //! path executes against a precomputed [`SpmPlan`]; `spm.rs` keeps the
 //! closed-form reference implementation this file is tested against.
+//!
+//! The flat `params()`/`params_mut()` buffers are also the substrate of
+//! the model-level `visit_params` enumeration (DESIGN.md §13): the
+//! unified `models::api::Model` trait checkpoints and restores every
+//! network purely through these slices, and `models::api::Model::set_exec`
+//! fans [`LinearOp::set_exec`] out across all ops a model owns. Forwards
+//! take the TRUE batch row count on every exec path — ragged serving
+//! micro-batches never pad.
 
 use crate::optim::Optimizer;
 use crate::pairing::Schedule;

@@ -16,7 +16,7 @@ use spm_coordinator::config::RunConfig;
 use spm_coordinator::error::Result;
 use spm_coordinator::experiments::{CharLmRow, ClfOutcome, DataSource, render_pair_table};
 use spm_coordinator::metrics::{fmt_f, Csv, StepTimer, Table};
-use spm_coordinator::serve::{serve_with, ServeReport, ServeSpec};
+use spm_coordinator::serve::{Executor, ServeEngine, ServeReport, Workload};
 use spm_core::rng::Rng;
 use spm_data::batch::Prefetcher;
 use spm_data::charcorpus::Corpus;
@@ -260,9 +260,50 @@ pub fn run_ablation(
     Ok(format!("Ablation: {which} (n=1024, {} steps)\n{}", cfg.steps, t.render()))
 }
 
+/// One AOT-compiled forward executable behind the serving engine's
+/// [`Executor`] contract. The compiled executable has a FIXED batch
+/// shape, so ragged fills are padded here — inside the executor, which
+/// is exactly where the engine's true-fill contract puts that cost —
+/// and only the filled rows are returned.
+struct XlaExecutor<'e> {
+    sess: TrainSession<'e>,
+    batch: usize,
+    n: usize,
+    is_teacher: bool,
+}
+
+impl Executor for XlaExecutor<'_> {
+    fn width(&self) -> usize {
+        self.n
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn forward(&mut self, rows: usize, flat: Vec<f32>) -> Result<Vec<f32>> {
+        let mut padded = flat;
+        padded.resize(self.batch * self.n, 0.0);
+        let out: Vec<f32> = if self.is_teacher {
+            // teacher forward returns i32 labels
+            self.sess
+                .forward_i32(&HostTensor::F32(padded))?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect()
+        } else {
+            self.sess.forward(&HostTensor::F32(padded))?
+        };
+        let per_row = out.len() / self.batch.max(1);
+        Ok(out[..rows * per_row].to_vec())
+    }
+}
+
 /// Run the serving demo against one manifest entry's `forward` artifact,
-/// through the coordinator's engine-agnostic batched router.
-/// `entry_name` must be a classifier/teacher-style model taking (B, n) f32.
+/// through the coordinator's deadline-batched engine. PJRT clients are
+/// not `Send`, so the executor runs on the calling thread via
+/// [`ServeEngine::run_inline`]. `entry_name` must be a
+/// classifier/teacher-style model taking (B, n) f32.
 pub fn serve_demo(
     engine: &Engine,
     manifest: &Manifest,
@@ -276,17 +317,7 @@ pub fn serve_demo(
     let batch = sess.entry.meta_usize("batch")?;
     let n = sess.entry.meta_usize("n")?;
     let is_teacher = sess.entry.meta_str("model") == "teacher";
-    let spec = ServeSpec { batch, n, num_requests, num_clients, seed };
-    serve_with(&spec, |flat| {
-        if is_teacher {
-            // teacher forward returns i32 labels
-            Ok(sess
-                .forward_i32(&HostTensor::F32(flat))?
-                .into_iter()
-                .map(|v| v as f32)
-                .collect())
-        } else {
-            Ok(sess.forward(&HostTensor::F32(flat))?)
-        }
-    })
+    let mut exec = XlaExecutor { sess, batch, n, is_teacher };
+    let workload = Workload { num_requests, num_clients, seed };
+    ServeEngine::run_inline(&workload, &mut exec, 200)
 }
