@@ -1,0 +1,308 @@
+//! Bench: the data-parallel TrainEngine (DESIGN.md §14) — one epoch of
+//! teacher-student mlp training per replica count, same microbatch
+//! stream, same group size, so the table isolates what replicas buy in
+//! wall-clock while the parameter trajectory stays fixed.
+//!
+//! Also buildable as an example (same file, see spm-coordinator's
+//! Cargo.toml) so CI can drive a reduced pass with plain `cargo run`:
+//!
+//! ```text
+//! cargo run --release -p spm-coordinator --example train_bench -- \
+//!     --n 48 --rows 32 --steps 5 --replicas 2 --json BENCH_train.json --check
+//! ```
+//!
+//! Flags: `--n N` mixing width (default 1024), `--rows B` rows per
+//! microbatch (default 64), `--steps S` optimizer steps per replica
+//! count (default 8), `--replicas R` the largest replica count swept
+//! (default 4; the sweep is 1, 2, 4, ... up to R), `--json <path>`
+//! writes the throughput trajectory as machine-readable JSON, `--check`
+//! exits non-zero unless every replica count reduced the loss from
+//! init, the R=1 and R=max trajectories are bit-identical under pinned
+//! per-replica threads (the deterministic-reduction gate), and — at
+//! n >= 1024 — the largest replica count clears 1.5x the single-replica
+//! epoch throughput.
+
+use spm_core::models::api::{Model, ModelCfg, ModelKind};
+use spm_core::ops::{backend, LinearCfg, SpmExec};
+use spm_core::spm::Variant;
+use spm_coordinator::experiments::DataSource;
+use spm_coordinator::metrics::{fmt_f, Table};
+use spm_coordinator::train::{TrainBatch, TrainEngine, TrainReport};
+
+struct Args {
+    n: usize,
+    rows: usize,
+    steps: usize,
+    replicas: usize,
+    json: Option<String>,
+    check: bool,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().collect();
+    let get = |key: &str| argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1));
+    let usize_flag = |key: &str, default: usize| match get(key) {
+        Some(s) => s.parse().unwrap_or_else(|_| panic!("{key}: bad count")),
+        None => default,
+    };
+    Args {
+        n: usize_flag("--n", 1024).max(2),
+        rows: usize_flag("--rows", 64).max(1),
+        steps: usize_flag("--steps", 8).max(1),
+        replicas: usize_flag("--replicas", 4).max(1),
+        json: get("--json").cloned(),
+        check: argv.iter().any(|a| a == "--check"),
+    }
+}
+
+/// The exec path this run trains with: `SPM_EXEC` when set (the CI
+/// matrix contract — bad names are an error, not a silent default),
+/// otherwise the fused default.
+fn train_exec() -> SpmExec {
+    match std::env::var("SPM_EXEC") {
+        Ok(name) => SpmExec::parse(&name)
+            .unwrap_or_else(|| panic!("SPM_EXEC '{name}' is not an exec mode")),
+        Err(_) => SpmExec::default(),
+    }
+}
+
+fn model_cfg(n: usize, exec: SpmExec) -> ModelCfg {
+    ModelCfg::new(ModelKind::Mlp, LinearCfg::spm(n, Variant::General))
+        .with_classes(10)
+        .with_seed(7)
+        .with_exec(exec)
+}
+
+/// 1, 2, 4, ... up to and including `max`.
+fn replica_sweep(max: usize) -> Vec<usize> {
+    let mut sweep = Vec::new();
+    let mut r = 1;
+    while r < max {
+        sweep.push(r);
+        r *= 2;
+    }
+    sweep.push(max);
+    sweep
+}
+
+/// The epoch's microbatch stream — identical for every replica count.
+fn make_batches(data: &DataSource, count: usize, rows: usize) -> Vec<TrainBatch> {
+    (0..count)
+        .map(|m| {
+            let (x, y) = data.batch(m, rows, true);
+            TrainBatch::labels(x, y)
+        })
+        .collect()
+}
+
+struct BenchRow {
+    replicas: usize,
+    threads_per_replica: usize,
+    loss_before: f32,
+    loss_after: f32,
+    report: TrainReport,
+    speedup: f64,
+}
+
+fn flat_params(model: &dyn Model) -> Vec<f32> {
+    let mut out = Vec::new();
+    model.visit_params(&mut |_n, p| out.extend_from_slice(p));
+    out
+}
+
+fn bench_replicas(
+    cfg: &ModelCfg,
+    replicas: usize,
+    accum: usize,
+    batches: &[TrainBatch],
+    eval: &TrainBatch,
+) -> BenchRow {
+    let mut engine = TrainEngine::from_cfg(cfg, replicas).with_accum(accum);
+    let threads_per_replica = engine.threads_per_replica();
+    let (loss_before, _a) = engine.model().evaluate(&eval.x, &eval.target.as_target());
+    let report = engine.train_epoch(batches);
+    let (loss_after, _a) = engine.model().evaluate(&eval.x, &eval.target.as_target());
+    BenchRow { replicas, threads_per_replica, loss_before, loss_after, report, speedup: 1.0 }
+}
+
+/// The deterministic-reduction gate: R=1 vs R=max under pinned
+/// per-replica threads and a fixed group size must produce
+/// bit-identical parameters.
+fn invariance_holds(cfg: &ModelCfg, rmax: usize, batches: &[TrainBatch]) -> bool {
+    let probe = batches.len().min(2 * rmax.max(1));
+    let run = |replicas: usize| -> Vec<f32> {
+        let mut engine = TrainEngine::from_cfg(cfg, replicas)
+            .with_accum(rmax)
+            .with_threads_per_replica(1);
+        engine.train_epoch(&batches[..probe]);
+        flat_params(engine.model())
+    };
+    run(1) == run(rmax)
+}
+
+fn print_table(rows: &[BenchRow]) {
+    let mut t = Table::new(&[
+        "replicas",
+        "threads/rep",
+        "steps",
+        "microbatches",
+        "mean loss",
+        "eval init",
+        "eval final",
+        "rows/s",
+        "speedup",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.replicas.to_string(),
+            r.threads_per_replica.to_string(),
+            r.report.steps.to_string(),
+            r.report.microbatches.to_string(),
+            fmt_f(r.report.mean_loss, 4),
+            fmt_f(r.loss_before as f64, 4),
+            fmt_f(r.loss_after as f64, 4),
+            fmt_f(r.report.rows_per_sec, 0),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    t.print();
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Hand-rolled JSON (the default workspace is dependency-free): the run
+/// setup plus one row per replica count.
+fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec, invariant: bool) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"train\",\n");
+    let _ = writeln!(s, "  \"exec\": \"{}\",", exec.name());
+    let _ = writeln!(s, "  \"n\": {},", args.n);
+    let _ = writeln!(s, "  \"rows_per_microbatch\": {},", args.rows);
+    let _ = writeln!(s, "  \"steps\": {},", args.steps);
+    let _ = writeln!(s, "  \"max_replicas\": {},", args.replicas);
+    let _ = writeln!(s, "  \"r_invariant\": {invariant},");
+    s.push_str("  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"replicas\": {}, \"threads_per_replica\": {}, \"steps\": {}, \"microbatches\": {}, \"mean_loss\": {}, \"loss_before\": {}, \"loss_after\": {}, \"rows_per_sec\": {}, \"speedup\": {}}}",
+            r.replicas,
+            r.threads_per_replica,
+            r.report.steps,
+            r.report.microbatches,
+            json_num(r.report.mean_loss),
+            json_num(r.loss_before as f64),
+            json_num(r.loss_after as f64),
+            json_num(r.report.rows_per_sec),
+            json_num(r.speedup)
+        );
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// The CI gate: loss must decrease from init at every replica count,
+/// the trajectory must be replica-count invariant, the simd leg must
+/// actually train vectorized, and at bench scale (n >= 1024) the
+/// largest replica count must clear 1.5x single-replica throughput.
+fn check_rows(rows: &[BenchRow], args: &Args, invariant: bool) -> Result<(), String> {
+    if std::env::var("SPM_EXEC").as_deref() == Ok("simd") && !backend::simd_available() {
+        return Err(
+            "SPM_EXEC=simd but the simd backend did not activate (feature off or AVX2/FMA \
+             undetected) — the train smoke would only re-measure the fused path"
+                .into(),
+        );
+    }
+    for r in rows {
+        if !(r.loss_after < r.loss_before) {
+            return Err(format!(
+                "R={}: loss did not decrease from init ({} -> {})",
+                r.replicas, r.loss_before, r.loss_after
+            ));
+        }
+        if !(r.report.rows_per_sec > 0.0) {
+            return Err(format!("R={}: zero throughput", r.replicas));
+        }
+    }
+    if !invariant {
+        return Err(format!(
+            "R=1 vs R={} parameter trajectories diverged under pinned threads — the \
+             all-reduce is not deterministic",
+            args.replicas
+        ));
+    }
+    if args.n >= 1024 && args.replicas > 1 {
+        let last = rows.last().unwrap();
+        if last.speedup < 1.5 {
+            return Err(format!(
+                "R={} epoch throughput is only {:.2}x single-replica (need >= 1.5x at n={})",
+                last.replicas, last.speedup, args.n
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = parse_args();
+    let exec = train_exec();
+    let rmax = args.replicas;
+    let microbatches = args.steps * rmax;
+    println!(
+        "train engine: mlp n={}, {} microbatches x {} rows, accum {}, replicas {:?}, exec {}\n",
+        args.n,
+        microbatches,
+        args.rows,
+        rmax,
+        replica_sweep(rmax),
+        exec.name()
+    );
+    let cfg = model_cfg(args.n, exec);
+    let data = DataSource::Teacher { n: args.n, classes: 10, seed: 7 };
+    let batches = make_batches(&data, microbatches, args.rows);
+    let (ex, ey) = data.batch(0, args.rows, false);
+    let eval = TrainBatch::labels(ex, ey);
+
+    let mut rows: Vec<BenchRow> = replica_sweep(rmax)
+        .into_iter()
+        .map(|r| bench_replicas(&cfg, r, rmax, &batches, &eval))
+        .collect();
+    let base = rows[0].report.rows_per_sec;
+    for r in rows.iter_mut() {
+        r.speedup = if base > 0.0 { r.report.rows_per_sec / base } else { 0.0 };
+    }
+    print_table(&rows);
+
+    let invariant = invariance_holds(&cfg, rmax, &batches);
+    println!(
+        "\nR=1 vs R={rmax} trajectory (pinned threads): {}",
+        if invariant { "bit-identical" } else { "DIVERGED" }
+    );
+
+    if let Some(path) = &args.json {
+        std::fs::write(path, to_json(&rows, &args, exec, invariant))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+
+    if args.check {
+        match check_rows(&rows, &args, invariant) {
+            Ok(()) => println!(
+                "check: loss decreased at every replica count and the reduction is \
+                 deterministic — OK"
+            ),
+            Err(msg) => {
+                eprintln!("check FAILED: {msg}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -41,6 +41,15 @@ fi
 cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example serve_bench -- \
     --requests 64 --clients 4 --replicas 2 --check
 
+# Data-parallel training smoke: the TrainEngine over 2 replicas at a
+# small width; --check gates loss-decreases-from-init at every replica
+# count AND that the R=1 and R=2 parameter trajectories are
+# bit-identical under pinned per-replica threads (the deterministic
+# all-reduce contract, DESIGN.md §14). The CI train-smoke job runs the
+# same pass and records the BENCH_train.json artifact.
+cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example train_bench -- \
+    --n 32 --rows 16 --steps 4 --replicas 2 --check
+
 # Format check. Non-fatal unless SPM_FMT_STRICT=1: rustfmt output can
 # drift across toolchain versions and must not mask real build/test
 # failures on machines with a different rustfmt.

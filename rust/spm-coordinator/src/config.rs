@@ -14,6 +14,10 @@
 //! `[op]` student) through `spm_core::models::api::build_model` and
 //! optionally warm-starts it from a native checkpoint, so the serving
 //! engine and any model-generic driver construct from config alone.
+//!
+//! The `[train]` section shapes the data-parallel `TrainEngine`
+//! (DESIGN.md §14): replica count, the per-replica thread budget, and
+//! the microbatches-per-step accumulation.
 
 use std::collections::BTreeMap;
 
@@ -284,6 +288,53 @@ impl ModelConfig {
     }
 }
 
+/// The `[train]` section: the data-parallel TrainEngine shape
+/// (DESIGN.md §14). Defaults reproduce single-replica training exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrainConfig {
+    /// Replica models the microbatch stream fans out across.
+    pub replicas: usize,
+    /// Worker threads EACH replica's kernels may use (0 = split the
+    /// global thread budget evenly: floor(budget / replicas), min 1).
+    /// Pin this explicitly when parameter trajectories must be
+    /// comparable across replica counts.
+    pub threads_per_replica: usize,
+    /// Microbatches reduced into ONE optimizer step (0 = one per
+    /// replica). Pin together with `threads_per_replica` for
+    /// replica-count-invariant trajectories.
+    pub accum: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { replicas: 1, threads_per_replica: 0, accum: 0 }
+    }
+}
+
+impl TrainConfig {
+    /// Apply `[train]` keys; unknown values are rejected.
+    pub fn apply_toml(&mut self, doc: &Toml) -> Result<()> {
+        let Some(map) = doc.get("train") else {
+            return Ok(());
+        };
+        if let Some(v) = map.get("replicas") {
+            let u = v.as_usize().context("[train] replicas must be a non-negative int")?;
+            if u == 0 {
+                bail!("[train] replicas must be >= 1");
+            }
+            self.replicas = u;
+        }
+        if let Some(v) = map.get("threads_per_replica") {
+            self.threads_per_replica =
+                v.as_usize().context("[train] threads_per_replica must be a non-negative int")?;
+        }
+        if let Some(v) = map.get("accum") {
+            self.accum = v.as_usize().context("[train] accum must be a non-negative int")?;
+        }
+        Ok(())
+    }
+}
+
 /// Run-level knobs every experiment honours. Training hyper-parameters
 /// (lr, batch) are baked into the drivers/artifacts; the run config
 /// controls duration, cadence, seeds, reporting, and — for the *native*
@@ -311,6 +362,8 @@ pub struct RunConfig {
     pub op: OpConfig,
     /// the network to build/serve ([model] section)
     pub model: ModelConfig,
+    /// the data-parallel engine shape ([train] section)
+    pub train: TrainConfig,
 }
 
 impl Default for RunConfig {
@@ -326,6 +379,7 @@ impl Default for RunConfig {
             artifacts: "artifacts".into(),
             op: OpConfig::default(),
             model: ModelConfig::default(),
+            train: TrainConfig::default(),
         }
     }
 }
@@ -362,7 +416,8 @@ impl RunConfig {
             }
         }
         self.op.apply_toml(doc)?;
-        self.model.apply_toml(doc)
+        self.model.apply_toml(doc)?;
+        self.train.apply_toml(doc)
     }
 
     pub fn load_file(&mut self, path: &str) -> Result<()> {
@@ -532,6 +587,30 @@ fast = true
         rc.apply_toml(&doc).unwrap();
         let err = rc.model.build(&rc.op, 1).unwrap_err();
         assert!(err.to_string().contains("checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn train_config_applies_and_defaults() {
+        let mut rc = RunConfig::default();
+        assert_eq!(rc.train, TrainConfig { replicas: 1, threads_per_replica: 0, accum: 0 });
+        let doc =
+            parse_toml("[train]\nreplicas = 4\nthreads_per_replica = 2\naccum = 8\n").unwrap();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.train, TrainConfig { replicas: 4, threads_per_replica: 2, accum: 8 });
+    }
+
+    #[test]
+    fn train_config_rejects_bad_values() {
+        let mut rc = RunConfig::default();
+        for bad in [
+            "[train]\nreplicas = 0\n",
+            "[train]\nreplicas = -1\n",
+            "[train]\nthreads_per_replica = \"all\"\n",
+            "[train]\naccum = -2\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(rc.apply_toml(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use spm_core::models::api::{build_model, ModelCfg, ModelKind, Target};
+use spm_core::models::api::{ModelCfg, ModelKind, Target};
 use spm_core::ops::{LinearCfg, LinearOp};
 use spm_core::optim::Adam;
 use spm_core::rng::Rng;
@@ -21,6 +21,7 @@ use spm_data::teacher::Teacher;
 use crate::config::RunConfig;
 use crate::error::Result;
 use crate::metrics::{fmt_f, Csv, StepTimer, Table};
+use crate::train::{TrainBatch, TrainEngine};
 
 /// Where classification batches come from.
 #[derive(Clone)]
@@ -77,8 +78,13 @@ pub struct ClfOutcome {
 }
 
 /// Train + evaluate a native classifier on a data source, through the
-/// unified `Model` trait (DESIGN.md §13) — the driver no longer knows
-/// which architecture it is holding.
+/// unified `Model` trait (DESIGN.md §13) and the data-parallel
+/// `TrainEngine` (DESIGN.md §14) — the driver no longer knows which
+/// architecture it is holding or how many replicas train it. `cfg.steps`
+/// counts MINIBATCHES: with the default `[train]` section (1 replica,
+/// accum 0 -> 1) every minibatch is one optimizer step, exactly the
+/// pre-engine trajectory; `[train] replicas = R` fans groups of `accum`
+/// minibatches across R replicas per optimizer step.
 pub fn run_clf_native(
     label: &str,
     op_cfg: LinearCfg,
@@ -95,18 +101,36 @@ pub fn run_clf_native(
         .with_classes(classes)
         .with_seed(cfg.seed ^ 0xC1A55)
         .with_exec(cfg.op.exec);
-    let mut model = build_model(&mcfg);
+    let mut engine = TrainEngine::from_cfg(&mcfg, cfg.train.replicas.max(1))
+        .with_threads_per_replica(cfg.train.threads_per_replica)
+        .with_accum(cfg.train.accum);
+    let accum = engine.accum_per_step();
     let data_cl = data.clone();
     let steps = cfg.steps;
     let mut feed = Prefetcher::new(steps, 4, move |i| data_cl.batch(i, batch, true));
-    let mut timer = StepTimer::new(cfg.warmup.min(steps.saturating_sub(1)));
-    let mut last_loss = f32::NAN;
+    // the timer brackets OPTIMIZER steps (one group of `accum`
+    // minibatches each), so the warmup count converts from minibatch
+    // units and stays below the group count — otherwise accum > 1 could
+    // swallow every timed interval and report 0 ms/step
+    let groups = steps.div_ceil(accum).max(1);
+    let mut timer = StepTimer::new((cfg.warmup / accum).min(groups - 1));
+    let mut group: Vec<TrainBatch> = Vec::with_capacity(accum);
     while let Some((x, y)) = feed.next() {
-        timer.start();
-        let (loss, _acc) = model.train_step(&x, &Target::Labels(&y));
-        timer.stop();
-        last_loss = loss;
+        group.push(TrainBatch::labels(x, y));
+        if group.len() == accum {
+            timer.start();
+            engine.step(&group);
+            timer.stop();
+            group.clear();
+        }
     }
+    if !group.is_empty() {
+        // ragged tail group: step at its true size
+        timer.start();
+        engine.step(&group);
+        timer.stop();
+    }
+    let model = engine.model();
     let mut acc_sum = 0.0f64;
     let mut loss_sum = 0.0f64;
     for i in 0..cfg.eval_batches {
@@ -116,7 +140,6 @@ pub fn run_clf_native(
         loss_sum += l as f64;
     }
     let k = cfg.eval_batches.max(1) as f64;
-    let _ = last_loss;
     Ok(ClfOutcome {
         label: label.to_string(),
         n,

@@ -1,20 +1,25 @@
 //! # spm-coordinator
 //!
 //! L3 of the three-layer stack: the experiment coordinator. Owns the
-//! config system (the `[op]` LinearOp student config and the `[model]`
-//! section building any network from the unified model zoo), metrics,
-//! the native experiment drivers, and the deadline-batched serving
-//! engine (`ServeEngine` over the `Executor` trait — DESIGN.md §13).
-//! Fully dependency-free so the default workspace builds and tests
-//! offline; the PJRT/XLA drivers and the `spm` CLI live in `spm-runtime`
-//! (excluded from the default members) and call back into this crate so
-//! every reported number has a single source of truth.
+//! config system (the `[op]` LinearOp student config, the `[model]`
+//! section building any network from the unified model zoo, and the
+//! `[train]` data-parallel shape), metrics, the native experiment
+//! drivers, the deadline-batched serving engine (`ServeEngine` over the
+//! `Executor` trait — DESIGN.md §13), and the data-parallel training
+//! engine (`TrainEngine` with its deterministic gradient all-reduce —
+//! DESIGN.md §14). Fully dependency-free so the default workspace
+//! builds and tests offline; the PJRT/XLA drivers and the `spm` CLI
+//! live in `spm-runtime` (excluded from the default members) and call
+//! back into this crate so every reported number has a single source of
+//! truth.
 
 pub mod config;
 pub mod error;
 pub mod experiments;
 pub mod metrics;
 pub mod serve;
+pub mod train;
 
-pub use config::{ModelConfig, OpConfig, RunConfig};
+pub use config::{ModelConfig, OpConfig, RunConfig, TrainConfig};
 pub use error::Result;
+pub use train::{TrainBatch, TrainEngine, TrainReport, TrainTarget};

@@ -13,6 +13,12 @@
 //! the router never zero-pads (executors that need fixed shapes — AOT
 //! XLA executables — pad privately inside [`Executor::forward`]).
 //!
+//! Replica workers split one core budget: each runs its forwards under
+//! `parallel::with_thread_budget(floor(threads / R))`, so R replicas
+//! never fan out to R x `available_parallelism()` worker threads
+//! between them (`ServeEngine::with_threads` overrides the global
+//! budget they divide).
+//!
 //! [`ServeEngine::native`] wraps any [`Model`] (mlp, gru, charlm,
 //! attention) as an executor; [`ServeEngine::run_inline`] runs the same
 //! loop single-replica on the calling thread for executors that are not
@@ -31,6 +37,7 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use spm_core::models::api::Model;
+use spm_core::parallel;
 use spm_core::rng::Rng;
 use spm_core::tensor::Mat;
 
@@ -301,6 +308,7 @@ pub struct ServeEngine {
     executors: Vec<Box<dyn Executor + Send>>,
     max_wait: Duration,
     max_batch: Option<usize>,
+    threads: usize,
 }
 
 impl Default for ServeEngine {
@@ -309,6 +317,7 @@ impl Default for ServeEngine {
             executors: Vec::new(),
             max_wait: Duration::from_micros(DEFAULT_MAX_WAIT_US),
             max_batch: None,
+            threads: 0,
         }
     }
 }
@@ -354,9 +363,26 @@ impl ServeEngine {
         self
     }
 
+    /// Total worker-thread budget the replicas split between them
+    /// (0 = the global `parallel::num_threads()` setting). Each replica
+    /// worker runs its forwards under `floor(budget / replicas)`
+    /// threads, min 1 — without the split every replica's kernels
+    /// default to `available_parallelism()` and R replicas contend for
+    /// R x the machine.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     fn effective_batch(&self) -> usize {
         let hw = self.executors.iter().map(|e| e.max_batch()).min().unwrap_or(1);
         self.max_batch.map_or(hw, |b| b.min(hw))
+    }
+
+    /// Worker threads each replica's kernels may use.
+    fn threads_per_replica(&self) -> usize {
+        let budget = if self.threads > 0 { self.threads } else { parallel::num_threads() };
+        (budget / self.executors.len().max(1)).max(1)
     }
 
     /// Drive `workload` through the replicas: one worker thread per
@@ -368,6 +394,9 @@ impl ServeEngine {
         let width = self.executors[0].width();
         let batch = self.effective_batch();
         let max_wait = self.max_wait;
+        // partition the core budget: R replicas at the full
+        // `available_parallelism()` each would oversubscribe R-fold
+        let threads_per_replica = self.threads_per_replica();
 
         let (tx, rx) = mpsc::channel::<Request>();
         let clients = spawn_clients(workload, width, tx);
@@ -381,16 +410,19 @@ impl ServeEngine {
                 let (jtx, jrx) = mpsc::channel::<Vec<Request>>();
                 jobs.push(jtx);
                 workers.push(s.spawn(move || {
-                    let mut st = ExecStats::default();
-                    while let Ok(pending) = jrx.recv() {
-                        if st.error.is_some() {
-                            // dropping the batch closes its reply channels,
-                            // so clients unblock instead of hanging
-                            continue;
+                    parallel::with_thread_budget(threads_per_replica, || {
+                        let mut st = ExecStats::default();
+                        while let Ok(pending) = jrx.recv() {
+                            if st.error.is_some() {
+                                // dropping the batch closes its reply
+                                // channels, so clients unblock instead
+                                // of hanging
+                                continue;
+                            }
+                            exec_batch(exec.as_mut(), pending, &mut st);
                         }
-                        exec_batch(exec.as_mut(), pending, &mut st);
-                    }
-                    st
+                        st
+                    })
                 }));
             }
             let mut next = 0usize;
@@ -480,6 +512,28 @@ mod tests {
             self.rows_seen.fetch_add(rows, Ordering::SeqCst);
             self.floats_seen.fetch_add(flat.len(), Ordering::SeqCst);
             self.max_fill_seen.fetch_max(rows, Ordering::SeqCst);
+            Ok(flat)
+        }
+    }
+
+    /// Echoes its rows back while recording the worker-thread budget
+    /// (`parallel::num_threads()`) each forward observed.
+    struct ThreadProbeExecutor {
+        width: usize,
+        seen: Arc<std::sync::Mutex<Vec<usize>>>,
+    }
+
+    impl Executor for ThreadProbeExecutor {
+        fn width(&self) -> usize {
+            self.width
+        }
+
+        fn max_batch(&self) -> usize {
+            4
+        }
+
+        fn forward(&mut self, _rows: usize, flat: Vec<f32>) -> Result<Vec<f32>> {
+            self.seen.lock().unwrap().push(parallel::num_threads());
             Ok(flat)
         }
     }
@@ -606,6 +660,41 @@ mod tests {
             report.mean_batch_fill
         );
         assert!(report.batches < 32);
+    }
+
+    /// Satellite regression (thread oversubscription): each of R replica
+    /// workers must see `floor(budget / R)` kernel threads, not the whole
+    /// machine — before the fix every replica's `for_each_chunk` defaulted
+    /// to `available_parallelism()` and R replicas contended for R x the
+    /// cores.
+    #[test]
+    fn replica_workers_split_the_thread_budget() {
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut engine = ServeEngine::new()
+            .with_executor(Box::new(ThreadProbeExecutor { width: 2, seen: seen.clone() }))
+            .with_executor(Box::new(ThreadProbeExecutor { width: 2, seen: seen.clone() }))
+            .with_threads(4)
+            .with_max_wait_us(0);
+        let report = engine.run(&Workload { num_requests: 8, num_clients: 2, seed: 21 }).unwrap();
+        assert_eq!(report.requests, 8);
+        let seen = seen.lock().unwrap();
+        assert!(!seen.is_empty());
+        assert!(
+            seen.iter().all(|&t| t == 2),
+            "2 replicas must split a 4-thread budget as 2 each, saw {seen:?}"
+        );
+    }
+
+    #[test]
+    fn single_replica_keeps_the_whole_budget() {
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut engine = ServeEngine::new()
+            .with_executor(Box::new(ThreadProbeExecutor { width: 2, seen: seen.clone() }))
+            .with_threads(3);
+        engine.run(&Workload { num_requests: 4, num_clients: 2, seed: 23 }).unwrap();
+        let seen = seen.lock().unwrap();
+        assert!(!seen.is_empty());
+        assert!(seen.iter().all(|&t| t == 3), "lone replica keeps the budget, saw {seen:?}");
     }
 
     #[test]

@@ -97,6 +97,16 @@ impl Target<'_> {
 /// no accuracy is defined (attention trains on MSE). Implementations
 /// panic on a [`Target`] variant their objective cannot consume — the
 /// mismatch is a caller bug, not a runtime condition.
+///
+/// Training decomposes into three phases so a data-parallel engine can
+/// interpose between backward and the optimizer (DESIGN.md §14):
+/// [`Model::accumulate_step`] (forward + backward, gradients SUM into
+/// the model's flat gradient buffers), a gradient all-reduce over
+/// [`Model::visit_grads`] / [`Model::visit_grads_mut`], then
+/// [`Model::apply_step`] (one optimizer step consuming the accumulated
+/// gradients). `train_step` is exactly `zero_grads` + `accumulate_step`
+/// + `apply_step` — single-replica training and the R-replica engine
+/// walk the same arithmetic.
 pub trait Model: Send {
     fn kind(&self) -> ModelKind;
     /// Feature width of one request row.
@@ -109,7 +119,22 @@ pub trait Model: Send {
     /// count (no padding anywhere in the native stack).
     fn forward(&self, x: &Mat) -> Mat;
     /// One optimizer step on the batch; returns `(loss, metric)`.
-    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32);
+    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+        self.zero_grads();
+        let lm = self.accumulate_step(x, target);
+        self.apply_step();
+        lm
+    }
+    /// Forward + backward only: parameter gradients ACCUMULATE into the
+    /// model's flat gradient buffers (repeated calls sum, exactly like
+    /// `LinearOp::backward`); no optimizer state is touched. Returns
+    /// this batch's `(loss, metric)`.
+    fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32);
+    /// One optimizer step consuming the accumulated gradients (advances
+    /// the model's shared Adam step count), then clears them.
+    fn apply_step(&mut self);
+    /// Clear every gradient buffer [`Model::visit_grads`] enumerates.
+    fn zero_grads(&mut self);
     /// `(loss, metric)` without updates.
     fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32);
     /// Select the SPM stage-loop exec path on EVERY owned `LinearOp`
@@ -122,6 +147,15 @@ pub trait Model: Send {
     /// Mutable counterpart of [`Model::visit_params`] (same names, same
     /// order).
     fn visit_params_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32]));
+    /// Visit every flat GRADIENT buffer — same names, same order, same
+    /// lengths as [`Model::visit_params`]. This is the transport the
+    /// data-parallel all-reduce runs over: a replica's accumulated
+    /// gradients stream out here and the reduced sum streams back in
+    /// through [`Model::visit_grads_mut`] before [`Model::apply_step`].
+    fn visit_grads(&self, f: &mut dyn FnMut(&str, &[f32]));
+    /// Mutable counterpart of [`Model::visit_grads`] (same names, same
+    /// order).
+    fn visit_grads_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32]));
     /// Visit every owned `LinearOp`, in a stable order — the checkpoint
     /// architecture fingerprint ([`arch_fingerprint`]) and any future
     /// op-level tooling are built on this enumeration.
@@ -509,6 +543,107 @@ mod tests {
             let total: usize = ro.iter().map(|(_n, l)| l).sum();
             assert_eq!(total, model.param_count(), "{kind:?}: visit must cover every param");
         }
+    }
+
+    #[test]
+    fn visit_grads_mirrors_visit_params_layout() {
+        // the all-reduce transport contract: same names, same order,
+        // same lengths as the parameter enumeration, on both views
+        for kind in ModelKind::ALL {
+            let mut model = build_model(&small_cfg(kind));
+            let params: Vec<(String, usize)> = collect_params(model.as_ref())
+                .into_iter()
+                .map(|(n, d)| (n, d.len()))
+                .collect();
+            let mut ro: Vec<(String, usize)> = Vec::new();
+            model.visit_grads(&mut |n, g| ro.push((n.to_string(), g.len())));
+            assert_eq!(params, ro, "{kind:?}: visit_grads layout");
+            let mut rw: Vec<(String, usize)> = Vec::new();
+            model.visit_grads_mut(&mut |n, g| rw.push((n.to_string(), g.len())));
+            assert_eq!(params, rw, "{kind:?}: visit_grads_mut layout");
+        }
+    }
+
+    #[test]
+    fn accumulate_then_apply_matches_train_step_exactly() {
+        // the decomposition the data-parallel engine is built on:
+        // zero + accumulate + apply must reproduce train_step bit for bit
+        for kind in ModelKind::ALL {
+            let cfg = small_cfg(kind);
+            let mut rng = Rng::new(41 + kind as u64);
+            let mut one = build_model(&cfg);
+            let x = input_for(one.as_ref(), 9, &mut rng);
+            let base = if kind == ModelKind::CharLm { 97 } else { 0 };
+            let labels: Vec<u32> = (0..9).map(|i| base + (i % 4) as u32).collect();
+            let values = x.clone();
+
+            let (l1, m1) = one.train_step(&x, &target_for(one.as_ref(), &labels, &values));
+            let mut two = build_model(&cfg);
+            two.zero_grads();
+            let (l2, m2) = two.accumulate_step(&x, &target_for(two.as_ref(), &labels, &values));
+            two.apply_step();
+            assert_eq!((l1, m1), (l2, m2), "{kind:?}: loss/metric");
+            assert_eq!(
+                collect_params(one.as_ref()),
+                collect_params(two.as_ref()),
+                "{kind:?}: post-step params must be identical"
+            );
+        }
+    }
+
+    #[test]
+    fn accumulate_step_sums_and_zero_grads_clears() {
+        for kind in ModelKind::ALL {
+            let mut model = build_model(&small_cfg(kind));
+            let mut rng = Rng::new(53);
+            let x = input_for(model.as_ref(), 5, &mut rng);
+            let base = if kind == ModelKind::CharLm { 97 } else { 0 };
+            let labels: Vec<u32> = (0..5).map(|i| base + (i % 4) as u32).collect();
+            let values = x.clone();
+            model.zero_grads();
+            model.accumulate_step(&x, &target_for(model.as_ref(), &labels, &values));
+            let mut once: Vec<f32> = Vec::new();
+            model.visit_grads(&mut |_n, g| once.extend_from_slice(g));
+            assert!(once.iter().any(|&g| g != 0.0), "{kind:?}: no gradient flowed");
+            model.accumulate_step(&x, &target_for(model.as_ref(), &labels, &values));
+            let mut twice: Vec<f32> = Vec::new();
+            model.visit_grads(&mut |_n, g| twice.extend_from_slice(g));
+            for (t, o) in twice.iter().zip(&once) {
+                // a + a is exact in f32, so the sum is exactly double
+                assert_eq!(*t, 2.0 * o, "{kind:?}: accumulate must sum");
+            }
+            model.zero_grads();
+            model.visit_grads(&mut |n, g| {
+                assert!(g.iter().all(|&v| v == 0.0), "{kind:?}/{n}: zero_grads must clear")
+            });
+        }
+    }
+
+    #[test]
+    fn visit_grads_mut_writes_feed_apply_step() {
+        // external gradients loaded through visit_grads_mut must drive
+        // the optimizer exactly like locally accumulated ones
+        let cfg = small_cfg(ModelKind::Mlp);
+        let mut rng = Rng::new(61);
+        let x = input_for(build_model(&cfg).as_ref(), 6, &mut rng);
+        let labels: Vec<u32> = (0..6).map(|i| (i % 4) as u32).collect();
+
+        let mut local = build_model(&cfg);
+        local.zero_grads();
+        local.accumulate_step(&x, &Target::Labels(&labels));
+        let mut flat: Vec<f32> = Vec::new();
+        local.visit_grads(&mut |_n, g| flat.extend_from_slice(g));
+        local.apply_step();
+
+        let mut loaded = build_model(&cfg);
+        let mut off = 0usize;
+        loaded.visit_grads_mut(&mut |_n, g| {
+            g.copy_from_slice(&flat[off..off + g.len()]);
+            off += g.len();
+        });
+        assert_eq!(off, flat.len(), "write-back must cover every gradient");
+        loaded.apply_step();
+        assert_eq!(collect_params(local.as_ref()), collect_params(loaded.as_ref()));
     }
 
     #[test]

@@ -107,12 +107,37 @@ impl Attention {
         self.forward_inner(x_flat, b, t).0
     }
 
-    /// One MSE training step against `target` (B*T, d); returns loss.
-    pub fn train_step(&mut self, x_flat: &Mat, target: &Mat, b: usize, t: usize) -> f32 {
+    /// Forward + backward only: projection gradients accumulate in the
+    /// four ops' flat buffers, the optimizer does not fire. Returns the
+    /// MSE loss against `target` (B*T, d).
+    pub fn accumulate_step(&mut self, x_flat: &Mat, target: &Mat, b: usize, t: usize) -> f32 {
         let (y, tr) = self.forward_inner(x_flat, b, t);
         let (loss, gy) = mse(&y, target);
         let gx = self.backward(&tr, &gy);
         let _ = gx;
+        loss
+    }
+
+    /// One flat Adam step from the accumulated gradients, then clear them.
+    pub fn apply_step(&mut self) {
+        self.adam.next_step();
+        for m in self.maps.iter_mut() {
+            m.apply_grads(&mut self.adam);
+        }
+    }
+
+    /// Clear the four projections' gradient accumulators.
+    pub fn zero_grads(&mut self) {
+        for m in self.maps.iter_mut() {
+            m.zero_grads();
+        }
+    }
+
+    /// One MSE training step against `target` (B*T, d); returns loss.
+    pub fn train_step(&mut self, x_flat: &Mat, target: &Mat, b: usize, t: usize) -> f32 {
+        self.zero_grads();
+        let loss = self.accumulate_step(x_flat, target, b, t);
+        self.apply_step();
         loss
     }
 
@@ -122,7 +147,9 @@ impl Attention {
         mse(&y, target).0
     }
 
-    /// Exact backward; applies flat Adam updates internally, returns g_x.
+    /// Exact backward; ACCUMULATES into the projections' flat gradient
+    /// buffers (no optimizer update — see [`Attention::apply_step`]) and
+    /// returns g_x.
     fn backward(&mut self, tr: &FwdTrace, gy: &Mat) -> Mat {
         let d = self.d;
         let h = self.heads;
@@ -208,11 +235,6 @@ impl Attention {
         for i in 0..gx.data.len() {
             gx.data[i] += gx_k.data[i] + gx_v.data[i];
         }
-
-        self.adam.next_step();
-        for m in self.maps.iter_mut() {
-            m.apply_grads(&mut self.adam);
-        }
         gx
     }
 }
@@ -263,12 +285,20 @@ impl Model for AttnSeq {
         Mat::from_vec(x.rows, self.seq_len * self.attn.d, y.data)
     }
 
-    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+    fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
         let Target::Values(t) = target else { panic!("attention trains on value targets (MSE)") };
         let xf = self.flat_rows(x);
         let tf = self.flat_rows(t);
-        let loss = self.attn.train_step(&xf, &tf, x.rows, self.seq_len);
+        let loss = self.attn.accumulate_step(&xf, &tf, x.rows, self.seq_len);
         (loss, 0.0)
+    }
+
+    fn apply_step(&mut self) {
+        self.attn.apply_step()
+    }
+
+    fn zero_grads(&mut self) {
+        self.attn.zero_grads()
     }
 
     fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32) {
@@ -293,6 +323,18 @@ impl Model for AttnSeq {
     fn visit_params_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
         for (name, m) in ["q", "k", "v", "o"].iter().zip(self.attn.maps.iter_mut()) {
             f(name, m.params_mut());
+        }
+    }
+
+    fn visit_grads(&self, f: &mut dyn FnMut(&str, &[f32])) {
+        for (name, m) in ["q", "k", "v", "o"].iter().zip(&self.attn.maps) {
+            f(name, m.grads());
+        }
+    }
+
+    fn visit_grads_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
+        for (name, m) in ["q", "k", "v", "o"].iter().zip(self.attn.maps.iter_mut()) {
+            f(name, m.grads_mut());
         }
     }
 

@@ -20,6 +20,10 @@ pub struct CharLM {
     pub mixer: LinearOp,
     pub head: LinearOp, // d -> VOCAB
     embed_slot: usize,
+    // persistent embedding-gradient accumulator (the lookup table is not
+    // a LinearOp, so the data-parallel all-reduce needs its gradient to
+    // live on the model like the ops' flat buffers do)
+    gembed: Vec<f32>,
     pub adam: Adam,
 }
 
@@ -32,7 +36,8 @@ impl CharLM {
         let embed = Mat::from_vec(VOCAB, d, rng.normal_vec(VOCAB * d, 0.02));
         let head = LinearOp::new(LinearCfg::dense_rect(VOCAB, d), &mut rng, &mut adam);
         let embed_slot = adam.register(embed.data.len());
-        CharLM { d, embed, mixer, head, embed_slot, adam }
+        let gembed = vec![0.0; VOCAB * d];
+        CharLM { d, embed, mixer, head, embed_slot, gembed, adam }
     }
 
     pub fn param_count(&self) -> usize {
@@ -67,9 +72,10 @@ impl CharLM {
         softmax_xent(&logits, &labels).0
     }
 
-    /// One training step over a flat (B*T) token batch; returns
-    /// (mean NLL, next-byte accuracy).
-    pub fn train_step(&mut self, inputs: &[u8], targets: &[u8]) -> (f32, f32) {
+    /// Forward + backward only: op gradients accumulate in their flat
+    /// buffers and the embedding scatter-add in the model's persistent
+    /// accumulator; the optimizer does not fire.
+    pub fn accumulate_step(&mut self, inputs: &[u8], targets: &[u8]) -> (f32, f32) {
         assert_eq!(inputs.len(), targets.len());
         let h0 = self.embed_tokens(inputs);
         let (h_pre, mix_tr) = self.mixer.forward_train(&h0);
@@ -90,19 +96,38 @@ impl CharLM {
         let gx = self.mixer.backward(&h0, &mix_tr, &gh);
 
         // embedding scatter-add
-        let mut gembed = vec![0.0f32; self.embed.data.len()];
         for (i, &t) in inputs.iter().enumerate() {
-            let dst = &mut gembed[t as usize * self.d..(t as usize + 1) * self.d];
+            let dst = &mut self.gembed[t as usize * self.d..(t as usize + 1) * self.d];
             for (dv, sv) in dst.iter_mut().zip(gx.row(i)) {
                 *dv += sv;
             }
         }
+        (loss, acc)
+    }
 
+    /// One flat Adam step from the accumulated gradients, then clear them.
+    pub fn apply_step(&mut self) {
         self.adam.next_step();
         self.mixer.apply_grads(&mut self.adam);
         self.head.apply_grads(&mut self.adam);
-        self.adam.update(self.embed_slot, &mut self.embed.data, &gembed);
-        (loss, acc)
+        self.adam.update(self.embed_slot, &mut self.embed.data, &self.gembed);
+        self.gembed.fill(0.0);
+    }
+
+    /// Clear every gradient accumulator (ops + embedding table).
+    pub fn zero_grads(&mut self) {
+        self.mixer.zero_grads();
+        self.head.zero_grads();
+        self.gembed.fill(0.0);
+    }
+
+    /// One training step over a flat (B*T) token batch; returns
+    /// (mean NLL, next-byte accuracy).
+    pub fn train_step(&mut self, inputs: &[u8], targets: &[u8]) -> (f32, f32) {
+        self.zero_grads();
+        let lm = self.accumulate_step(inputs, targets);
+        self.apply_step();
+        lm
     }
 }
 
@@ -135,14 +160,22 @@ impl Model for CharLM {
         self.logits(&row_tokens(x))
     }
 
-    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+    fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
         let Target::Labels(y) = target else { panic!("charlm trains on next-byte labels") };
         let inputs = row_tokens(x);
         let targets: Vec<u8> = y
             .iter()
             .map(|&t| u8::try_from(t).expect("charlm labels must be bytes"))
             .collect();
-        CharLM::train_step(self, &inputs, &targets)
+        CharLM::accumulate_step(self, &inputs, &targets)
+    }
+
+    fn apply_step(&mut self) {
+        CharLM::apply_step(self)
+    }
+
+    fn zero_grads(&mut self) {
+        CharLM::zero_grads(self)
     }
 
     fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32) {
@@ -167,6 +200,18 @@ impl Model for CharLM {
         f("embed", &mut self.embed.data);
         f("mixer", self.mixer.params_mut());
         f("head", self.head.params_mut());
+    }
+
+    fn visit_grads(&self, f: &mut dyn FnMut(&str, &[f32])) {
+        f("embed", &self.gembed);
+        f("mixer", self.mixer.grads());
+        f("head", self.head.grads());
+    }
+
+    fn visit_grads_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
+        f("embed", &mut self.gembed);
+        f("mixer", self.mixer.grads_mut());
+        f("head", self.head.grads_mut());
     }
 
     fn visit_ops(&self, f: &mut dyn FnMut(&LinearOp)) {

@@ -45,6 +45,12 @@ pub struct Gru {
     pub b_h: Vec<f32>,
     pub head: LinearOp,
     bias_slots: [usize; 3],
+    // persistent gate-bias gradient accumulators (the biases are not
+    // LinearOps, so BPTT accumulation and the data-parallel all-reduce
+    // need their gradients to live on the model like the ops' do)
+    gb_z: Vec<f32>,
+    gb_r: Vec<f32>,
+    gb_h: Vec<f32>,
     pub adam: Adam,
 }
 
@@ -61,7 +67,19 @@ impl Gru {
         let b_h = vec![0.0; n];
         let bias_slots = [adam.register(n), adam.register(n), adam.register(n)];
         let head = LinearOp::new(LinearCfg::dense_rect(num_classes, n), &mut rng, &mut adam);
-        Gru { n, maps, b_z, b_r, b_h, head, bias_slots, adam }
+        Gru {
+            n,
+            maps,
+            b_z,
+            b_r,
+            b_h,
+            head,
+            bias_slots,
+            gb_z: vec![0.0; n],
+            gb_r: vec![0.0; n],
+            gb_h: vec![0.0; n],
+            adam,
+        }
     }
 
     pub fn param_count(&self) -> usize {
@@ -125,8 +143,10 @@ impl Gru {
         (l, a)
     }
 
-    /// One BPTT training step; returns (loss, accuracy).
-    pub fn train_step(&mut self, xs: &[Mat], y: &[u32]) -> (f32, f32) {
+    /// Forward + exact BPTT backward only: map gradients accumulate in
+    /// each op's flat buffer and gate-bias gradients in the model's
+    /// persistent accumulators; the optimizer does not fire.
+    pub fn accumulate_step(&mut self, xs: &[Mat], y: &[u32]) -> (f32, f32) {
         let b = xs[0].rows;
         let mut h = Mat::zeros(b, self.n);
         let mut steps = Vec::with_capacity(xs.len());
@@ -138,10 +158,6 @@ impl Gru {
         let (logits, head_tr) = self.head.forward_train(&h);
         let (loss, acc, glogits) = softmax_xent(&logits, y);
         let mut g_h = self.head.backward(&h, &head_tr, &glogits);
-
-        let mut gb_z = vec![0.0f32; self.n];
-        let mut gb_r = vec![0.0f32; self.n];
-        let mut gb_h = vec![0.0f32; self.n];
 
         for st in steps.iter().rev() {
             // eqs. (24)-(26)
@@ -162,7 +178,7 @@ impl Gru {
             );
             // candidate: g_a = g_htilde * (1 - htilde^2)
             let g_a = ew(&g_htilde, &st.h_tilde, |g, t| g * (1.0 - t * t));
-            for (s, v) in gb_h.iter_mut().zip(col_sum(&g_a)) {
+            for (s, v) in self.gb_h.iter_mut().zip(col_sum(&g_a)) {
                 *s += v;
             }
             // map gradients accumulate inside each op's flat buffer
@@ -176,10 +192,10 @@ impl Gru {
             // gates: eqs. (27)-(28)
             let g_sz = ew(&g_z, &st.z, |g, z| g * z * (1.0 - z));
             let g_sr = ew(&g_r, &st.r, |g, r| g * r * (1.0 - r));
-            for (s, v) in gb_z.iter_mut().zip(col_sum(&g_sz)) {
+            for (s, v) in self.gb_z.iter_mut().zip(col_sum(&g_sz)) {
                 *s += v;
             }
-            for (s, v) in gb_r.iter_mut().zip(col_sum(&g_sr)) {
+            for (s, v) in self.gb_r.iter_mut().zip(col_sum(&g_sr)) {
                 *s += v;
             }
             let _gx_wz = self.maps[0].backward(&st.x_t, &st.traces[0], &g_sz);
@@ -191,17 +207,43 @@ impl Gru {
             }
             g_h = g_hprev;
         }
+        (loss, acc)
+    }
 
+    /// One flat Adam step from the accumulated map + bias gradients,
+    /// then clear them (same update order as the pre-split train_step).
+    pub fn apply_step(&mut self) {
         self.adam.next_step();
         for m in self.maps.iter_mut() {
             m.apply_grads(&mut self.adam);
         }
         self.head.apply_grads(&mut self.adam);
         let [s0, s1, s2] = self.bias_slots;
-        self.adam.update(s0, &mut self.b_z, &gb_z);
-        self.adam.update(s1, &mut self.b_r, &gb_r);
-        self.adam.update(s2, &mut self.b_h, &gb_h);
-        (loss, acc)
+        self.adam.update(s0, &mut self.b_z, &self.gb_z);
+        self.adam.update(s1, &mut self.b_r, &self.gb_r);
+        self.adam.update(s2, &mut self.b_h, &self.gb_h);
+        self.gb_z.fill(0.0);
+        self.gb_r.fill(0.0);
+        self.gb_h.fill(0.0);
+    }
+
+    /// Clear every gradient accumulator (maps, head, gate biases).
+    pub fn zero_grads(&mut self) {
+        for m in self.maps.iter_mut() {
+            m.zero_grads();
+        }
+        self.head.zero_grads();
+        self.gb_z.fill(0.0);
+        self.gb_r.fill(0.0);
+        self.gb_h.fill(0.0);
+    }
+
+    /// One BPTT training step; returns (loss, accuracy).
+    pub fn train_step(&mut self, xs: &[Mat], y: &[u32]) -> (f32, f32) {
+        self.zero_grads();
+        let lm = self.accumulate_step(xs, y);
+        self.apply_step();
+        lm
     }
 }
 
@@ -257,10 +299,18 @@ impl Model for GruSeq {
         self.gru.logits(&self.split_steps(x))
     }
 
-    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+    fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
         let Target::Labels(y) = target else { panic!("gru trains on class labels") };
         let steps = self.split_steps(x);
-        self.gru.train_step(&steps, y)
+        self.gru.accumulate_step(&steps, y)
+    }
+
+    fn apply_step(&mut self) {
+        self.gru.apply_step()
+    }
+
+    fn zero_grads(&mut self) {
+        self.gru.zero_grads()
     }
 
     fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32) {
@@ -294,6 +344,27 @@ impl Model for GruSeq {
         f("b_r", &mut self.gru.b_r);
         f("b_h", &mut self.gru.b_h);
         f("head", self.gru.head.params_mut());
+    }
+
+    fn visit_grads(&self, f: &mut dyn FnMut(&str, &[f32])) {
+        for (name, m) in ["wz", "uz", "wr", "ur", "wh", "uh"].iter().zip(&self.gru.maps) {
+            f(name, m.grads());
+        }
+        f("b_z", &self.gru.gb_z);
+        f("b_r", &self.gru.gb_r);
+        f("b_h", &self.gru.gb_h);
+        f("head", self.gru.head.grads());
+    }
+
+    fn visit_grads_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
+        let maps = self.gru.maps.iter_mut();
+        for (name, m) in ["wz", "uz", "wr", "ur", "wh", "uh"].iter().zip(maps) {
+            f(name, m.grads_mut());
+        }
+        f("b_z", &mut self.gru.gb_z);
+        f("b_r", &mut self.gru.gb_r);
+        f("b_h", &mut self.gru.gb_h);
+        f("head", self.gru.head.grads_mut());
     }
 
     fn visit_ops(&self, f: &mut dyn FnMut(&LinearOp)) {

@@ -37,8 +37,10 @@ impl Classifier {
         self.head.forward(&h)
     }
 
-    /// One training step; returns (loss, accuracy).
-    pub fn train_step(&mut self, x: &Mat, y: &[u32]) -> (f32, f32) {
+    /// Forward + backward only: gradients ACCUMULATE into the two ops'
+    /// flat buffers, the optimizer does not fire (the data-parallel
+    /// engine reduces across replicas before [`Classifier::apply_step`]).
+    pub fn accumulate_step(&mut self, x: &Mat, y: &[u32]) -> (f32, f32) {
         // forward
         let (h_pre, mix_tr) = self.mixer.forward_train(x);
         let mut h = h_pre.clone();
@@ -56,12 +58,23 @@ impl Classifier {
             }
         }
         let _gx = self.mixer.backward(x, &mix_tr, &gh);
+        (loss, acc)
+    }
 
-        // update: one flat kernel per op
+    /// One flat Adam step from the accumulated gradients, then clear them.
+    pub fn apply_step(&mut self) {
         self.adam.next_step();
         self.mixer.apply_grads(&mut self.adam);
         self.head.apply_grads(&mut self.adam);
-        (loss, acc)
+    }
+
+    /// One training step; returns (loss, accuracy).
+    pub fn train_step(&mut self, x: &Mat, y: &[u32]) -> (f32, f32) {
+        self.mixer.zero_grads();
+        self.head.zero_grads();
+        let lm = self.accumulate_step(x, y);
+        self.apply_step();
+        lm
     }
 
     /// Evaluation: (loss, accuracy) without updates.
@@ -93,9 +106,18 @@ impl Model for Classifier {
         self.logits(x)
     }
 
-    fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
+    fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
         let Target::Labels(y) = target else { panic!("mlp trains on class labels") };
-        Classifier::train_step(self, x, y)
+        Classifier::accumulate_step(self, x, y)
+    }
+
+    fn apply_step(&mut self) {
+        Classifier::apply_step(self)
+    }
+
+    fn zero_grads(&mut self) {
+        self.mixer.zero_grads();
+        self.head.zero_grads();
     }
 
     fn evaluate(&self, x: &Mat, target: &Target) -> (f32, f32) {
@@ -116,6 +138,16 @@ impl Model for Classifier {
     fn visit_params_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
         f("mixer", self.mixer.params_mut());
         f("head", self.head.params_mut());
+    }
+
+    fn visit_grads(&self, f: &mut dyn FnMut(&str, &[f32])) {
+        f("mixer", self.mixer.grads());
+        f("head", self.head.grads());
+    }
+
+    fn visit_grads_mut(&mut self, f: &mut dyn FnMut(&str, &mut [f32])) {
+        f("mixer", self.mixer.grads_mut());
+        f("head", self.head.grads_mut());
     }
 
     fn visit_ops(&self, f: &mut dyn FnMut(&LinearOp)) {

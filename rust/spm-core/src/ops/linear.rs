@@ -288,6 +288,13 @@ impl LinearOp {
         &self.grads
     }
 
+    /// Mutable view of the accumulated gradients — the write-back path
+    /// for externally reduced gradients (the data-parallel TrainEngine
+    /// loads the all-reduced sum here before one `apply_grads`).
+    pub fn grads_mut(&mut self) -> &mut [f32] {
+        &mut self.grads
+    }
+
     pub fn zero_grads(&mut self) {
         self.grads.fill(0.0);
     }

@@ -2,9 +2,18 @@
 //! vendor set, and we want explicit control over thread count anyway: the
 //! paper's timings are quoted at a fixed CPU thread budget).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread worker-budget override (0 = defer to the global
+    /// setting). Engine workers set this via [`with_thread_budget`] so R
+    /// replicas split one core budget instead of each claiming
+    /// `available_parallelism()` (R-fold oversubscription).
+    static THREAD_BUDGET: Cell<usize> = const { Cell::new(0) };
+}
 
 /// Override the worker count (0 = auto). Mirrors the paper's "OpenMP with
 /// two threads" setting when the coordinator pins `--threads 2`.
@@ -12,7 +21,32 @@ pub fn set_threads(n: usize) {
     THREADS.store(n, Ordering::Relaxed);
 }
 
+/// Run `f` with THIS thread's worker budget pinned to `n` (0 = defer to
+/// the process-global [`set_threads`] setting). The override is
+/// thread-local and restored on exit — even across panics — so engines
+/// that run replicas on worker threads can give each replica
+/// `floor(budget / R)` cores without touching the global static (which
+/// would race between engines and leak into unrelated callers).
+///
+/// The budget does NOT propagate into threads spawned inside `f`: the
+/// parallel helpers read it on the thread that CALLS them, which is
+/// exactly where an engine worker drives its model's kernels.
+pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_BUDGET.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(THREAD_BUDGET.with(|c| c.replace(n)));
+    f()
+}
+
 pub fn num_threads() -> usize {
+    let local = THREAD_BUDGET.with(|c| c.get());
+    if local > 0 {
+        return local;
+    }
     let n = THREADS.load(Ordering::Relaxed);
     if n > 0 {
         return n;
@@ -185,6 +219,52 @@ mod tests {
         for r in 0..7 {
             assert_eq!(data[r * 3 + 2], r as f32);
         }
+    }
+
+    #[test]
+    fn thread_budget_overrides_on_this_thread_only() {
+        let before = num_threads();
+        let (inside, nested) = with_thread_budget(2, || {
+            let nested = with_thread_budget(5, num_threads);
+            (num_threads(), nested)
+        });
+        assert_eq!(inside, 2, "override must be visible inside the closure");
+        assert_eq!(nested, 5, "nested override wins, then restores");
+        assert_eq!(num_threads(), before, "override must not outlive the closure");
+        // another thread never sees this thread's budget
+        let other = with_thread_budget(2, || std::thread::spawn(num_threads).join().unwrap());
+        assert_eq!(other, before, "budget is thread-local, not global");
+    }
+
+    #[test]
+    fn thread_budget_restores_across_panics() {
+        let before = num_threads();
+        let caught = std::panic::catch_unwind(|| {
+            with_thread_budget(3, || panic!("boom"));
+        });
+        assert!(caught.is_err());
+        assert_eq!(num_threads(), before, "budget must restore even on unwind");
+    }
+
+    #[test]
+    fn for_each_chunk_honours_the_budget() {
+        // 8 rows under a budget of 2 must split into exactly 2 chunks
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        let mut data = vec![0.0f32; 8 * 4];
+        with_thread_budget(2, || {
+            for_each_chunk(&mut data, 4, |_first, chunk| {
+                calls.fetch_add(1, Ordering::SeqCst);
+                assert_eq!(chunk.len(), 4 * 4, "even split under budget 2");
+            });
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn map_row_ranges_honours_the_budget() {
+        let parts = with_thread_budget(3, || map_row_ranges(9, |_t, r| r));
+        assert_eq!(parts.len(), 3, "budget 3 over 9 rows = 3 ranges");
+        assert_eq!(parts.iter().map(|r| r.len()).sum::<usize>(), 9);
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //!
 //! Only f32 leaves are stored (all current models); the manifest leaf list
 //! is the schema against which a load is validated.
+//!
+//! Loading treats every length field as UNTRUSTED: names, leaf counts,
+//! and element counts are validated against sane caps AND the bytes
+//! actually remaining in the file BEFORE any buffer is allocated (the
+//! same hardening the spm-core native checkpoints got in PR 4 — a
+//! corrupt or truncated file must error, never demand a multi-GiB
+//! allocation), and trailing bytes after the last leaf are rejected.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -19,6 +26,14 @@ use crate::manifest::{Entry, TensorSpec};
 
 const MAGIC: &[u8; 8] = b"SPMCKPT1";
 
+/// Cap on entry/leaf name lengths. Real names are tens of bytes; a
+/// length field beyond this is corruption, not a name.
+const MAX_NAME_LEN: usize = 4096;
+
+/// Cap on the leaf count. Every current model has < 20 leaves; a count
+/// beyond this is corruption.
+const MAX_LEAVES: usize = 1 << 16;
+
 pub struct Checkpoint {
     pub entry_name: String,
     pub leaves: Vec<(String, Vec<f32>)>,
@@ -27,12 +42,6 @@ pub struct Checkpoint {
 fn w_u32(f: &mut impl Write, v: u32) -> Result<()> {
     f.write_all(&v.to_le_bytes())?;
     Ok(())
-}
-
-fn r_u32(f: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
 }
 
 pub fn save(path: &Path, entry: &Entry, leaves: &[Vec<f32>]) -> Result<()> {
@@ -59,32 +68,83 @@ pub fn save(path: &Path, entry: &Entry, leaves: &[Vec<f32>]) -> Result<()> {
     Ok(())
 }
 
+/// `read_exact` that accounts against the bytes known to remain in the
+/// file, so a corrupt length field is caught BEFORE any allocation or
+/// read happens.
+fn r_exact(f: &mut impl Read, remaining: &mut u64, buf: &mut [u8]) -> Result<()> {
+    if buf.len() as u64 > *remaining {
+        bail!("checkpoint truncated: need {} bytes, {} remain", buf.len(), remaining);
+    }
+    f.read_exact(buf)?;
+    *remaining -= buf.len() as u64;
+    Ok(())
+}
+
+fn r_u32_bounded(f: &mut impl Read, remaining: &mut u64) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r_exact(f, remaining, &mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Length-validated name read: the untrusted u32 is checked against the
+/// name cap and the remaining file size before the buffer exists.
+fn r_name(f: &mut impl Read, remaining: &mut u64, what: &str) -> Result<String> {
+    let len = r_u32_bounded(f, remaining)? as usize;
+    if len > MAX_NAME_LEN {
+        bail!("{what} name length {len} exceeds the {MAX_NAME_LEN}-byte cap");
+    }
+    if len as u64 > *remaining {
+        bail!("{what} name length {len} exceeds the {remaining} bytes remaining");
+    }
+    let mut buf = vec![0u8; len];
+    r_exact(f, remaining, &mut buf)?;
+    String::from_utf8(buf).with_context(|| format!("{what} name not utf-8"))
+}
+
 pub fn load(path: &Path) -> Result<Checkpoint> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    // every subsequent length field is validated against this budget
+    // before its buffer is allocated
+    let mut remaining = f
+        .metadata()
+        .with_context(|| format!("stat checkpoint {}", path.display()))?
+        .len();
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    r_exact(&mut f, &mut remaining, &mut magic)?;
     if &magic != MAGIC {
         bail!("{} is not an SPM checkpoint", path.display());
     }
-    let nlen = r_u32(&mut f)? as usize;
-    let mut name = vec![0u8; nlen];
-    f.read_exact(&mut name)?;
-    let entry_name = String::from_utf8(name).context("entry name not utf-8")?;
-    let count = r_u32(&mut f)? as usize;
+    let entry_name = r_name(&mut f, &mut remaining, "entry")?;
+    let count = r_u32_bounded(&mut f, &mut remaining)? as usize;
+    if count > MAX_LEAVES {
+        bail!("leaf count {count} exceeds the {MAX_LEAVES} cap");
+    }
+    // each leaf carries at least its two u32 length fields
+    if (count as u64) * 8 > remaining {
+        bail!("leaf count {count} cannot fit in the {remaining} bytes remaining");
+    }
     let mut leaves = Vec::with_capacity(count);
     for _ in 0..count {
-        let ln = r_u32(&mut f)? as usize;
-        let mut lname = vec![0u8; ln];
-        f.read_exact(&mut lname)?;
-        let elems = r_u32(&mut f)? as usize;
+        let lname = r_name(&mut f, &mut remaining, "leaf")?;
+        let elems = r_u32_bounded(&mut f, &mut remaining)? as usize;
+        let bytes = elems as u64 * 4;
+        if bytes > remaining {
+            bail!(
+                "leaf '{lname}' claims {elems} f32s ({bytes} bytes) but only {remaining} \
+                 bytes remain"
+            );
+        }
         let mut raw = vec![0u8; elems * 4];
-        f.read_exact(&mut raw)?;
+        r_exact(&mut f, &mut remaining, &mut raw)?;
         let data = raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        leaves.push((String::from_utf8(lname).context("leaf name")?, data));
+        leaves.push((lname, data));
+    }
+    if remaining != 0 {
+        bail!("checkpoint has {remaining} trailing bytes after the last leaf");
     }
     Ok(Checkpoint { entry_name, leaves })
 }
@@ -168,5 +228,89 @@ mod tests {
         let leaves = vec![vec![0.0; 5], vec![0.0; 3]]; // 5 != 6
         let path = std::env::temp_dir().join("spm_ckpt_test4.bin");
         assert!(save(&path, &entry, &leaves).is_err());
+    }
+
+    // ---- corrupt-file suite: every untrusted length field must be
+    // rejected BEFORE it can provoke an allocation, and the errors must
+    // be errors — never panics ----
+
+    fn write_tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(name);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    fn valid_bytes() -> Vec<u8> {
+        let entry = toy_entry();
+        let leaves = vec![vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![-1.0, 0.5, 2.25]];
+        let path = std::env::temp_dir().join("spm_ckpt_valid_src.bin");
+        save(&path, &entry, &leaves).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        bytes
+    }
+
+    #[test]
+    fn rejects_truncated_header() {
+        // any prefix of a valid file must error cleanly
+        let bytes = valid_bytes();
+        for cut in [0, 4, 8, 10, bytes.len() - 1] {
+            let path = write_tmp("spm_ckpt_trunc.bin", &bytes[..cut]);
+            assert!(load(&path).is_err(), "prefix of {cut} bytes must be rejected");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_name_len_without_allocating() {
+        // magic + u32::MAX entry-name length: must error on the length
+        // field, not attempt a 4 GiB name buffer
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        let path = write_tmp("spm_ckpt_badname.bin", &bytes);
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("name length"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_oversized_leaf_count() {
+        // plausible header, then a u32::MAX leaf count in a tiny file
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(b"toy");
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        let path = write_tmp("spm_ckpt_badcount.bin", &bytes);
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("leaf count"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_oversized_leaf_elems_without_allocating() {
+        // one leaf claiming ~4 billion f32s: the element count must be
+        // checked against the bytes remaining before any data buffer
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(b"toy");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one leaf
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'w');
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // elems
+        bytes.extend_from_slice(&[0u8; 16]); // a few real bytes
+        let path = write_tmp("spm_ckpt_badelems.bin", &bytes);
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("bytes remain"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = valid_bytes();
+        bytes.extend_from_slice(b"junk");
+        let path = write_tmp("spm_ckpt_trailing.bin", &bytes);
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 }
