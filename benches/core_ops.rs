@@ -22,15 +22,24 @@
 //! slower than the reference path — or loses forward parity — at n=1024
 //! (falling back to the largest benched width when 1024 is not in
 //! `--sizes`), and additionally, when the simd backend is active, if it
-//! is slower than the scalar fused path or loses parity.
+//! is slower than the scalar fused path or loses parity. The same gate
+//! fails if the fused/simd `forward_into` hot path touches the
+//! allocator in steady state (DESIGN.md §15; every path's measured
+//! `allocs_per_iter` is reported in the table and JSON).
 
 use spm_core::ops::{LinearCfg, LinearOp, SpmExec};
 use spm_core::optim::Adam;
 use spm_core::rng::Rng;
 use spm_core::spm::{Spm, SpmSpec, Variant};
 use spm_core::tensor::Mat;
+use spm_coordinator::allocs::{self, CountingAlloc};
 use spm_coordinator::experiments::{self, ScalingRow};
 use std::time::Instant;
+
+// Count every allocator call so steady-state allocs_per_iter is a
+// measured, gated number (DESIGN.md §15).
+#[global_allocator]
+static ALLOC_COUNTER: CountingAlloc = CountingAlloc;
 
 fn ms_per(t0: Instant, reps: usize) -> f64 {
     t0.elapsed().as_secs_f64() * 1e3 / reps as f64
@@ -63,6 +72,14 @@ struct SpmRow {
     row_fwd_diff: f32,
     fused_fwd_diff: f32,
     simd_fwd_diff: Option<f32>,
+    /// steady-state allocator calls per forward, per path. The legacy
+    /// paths allocate by design (fresh output + trace buffers); the
+    /// fused/simd paths run `forward_into` through reused buffers and
+    /// must report 0 (gated by `--check`).
+    ref_allocs: f64,
+    row_allocs: f64,
+    fused_allocs: f64,
+    simd_allocs: Option<f64>,
 }
 
 struct Args {
@@ -148,6 +165,28 @@ fn bench_spm_row(n: usize, batch: usize) -> SpmRow {
         })
     });
 
+    // steady-state allocator calls per forward: legacy paths through
+    // their (allocating) entry points, fused/simd through `forward_into`
+    // with a warm reused output — the serving hot path, expected 0
+    const ALLOC_ITERS: u64 = 8;
+    let ref_allocs = allocs::allocs_per_iter(ALLOC_ITERS, || {
+        let _ = reference.forward(&ref_params, &x);
+    });
+    let row_allocs = allocs::allocs_per_iter(ALLOC_ITERS, || {
+        let _ = rowwise.forward(&x);
+    });
+    let mut y_into = Mat { rows: 0, cols: 0, data: Vec::new() };
+    fused.forward_into(&x, &mut y_into); // warm the reused buffer
+    let fused_allocs = allocs::allocs_per_iter(ALLOC_ITERS, || {
+        fused.forward_into(&x, &mut y_into);
+    });
+    let simd_allocs = simd_on.then(|| {
+        simd.forward_into(&x, &mut y_into);
+        allocs::allocs_per_iter(ALLOC_ITERS, || {
+            simd.forward_into(&x, &mut y_into);
+        })
+    });
+
     SpmRow {
         n,
         variant: variant.name(),
@@ -162,6 +201,10 @@ fn bench_spm_row(n: usize, batch: usize) -> SpmRow {
         row_fwd_diff,
         fused_fwd_diff,
         simd_fwd_diff,
+        ref_allocs,
+        row_allocs,
+        fused_allocs,
+        simd_allocs,
     }
 }
 
@@ -208,6 +251,21 @@ fn print_spm_table(rows: &[SpmRow], batch: usize) {
             opt_x(r.fused_bwd, r.simd_bwd),
         );
     }
+    println!("\nsteady-state allocator calls per forward (allocs_per_iter; fused/simd run forward_into through reused buffers and must be 0)");
+    println!(
+        "{:<7} {:>10} {:>10} {:>10} {:>10}",
+        "n", "ref", "rowwise", "fused", "simd"
+    );
+    for r in rows {
+        println!(
+            "{:<7} {:>10.1} {:>10.1} {:>10.1} {:>10}",
+            r.n,
+            r.ref_allocs,
+            r.row_allocs,
+            r.fused_allocs,
+            r.simd_allocs.map_or("-".to_string(), |a| format!("{a:.1}")),
+        );
+    }
 }
 
 /// JSON number or `null` — non-finite floats (a NaN parity diff from a
@@ -243,24 +301,26 @@ fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
     s.push_str("  ],\n  \"planned_vs_reference\": [\n");
     let mut first = true;
     for r in rows {
-        let mut paths: Vec<(&str, f64, f64, f32)> = vec![
-            ("reference", r.ref_fwd, r.ref_bwd, 0.0),
-            ("rowwise", r.row_fwd, r.row_bwd, r.row_fwd_diff),
-            ("fused", r.fused_fwd, r.fused_bwd, r.fused_fwd_diff),
+        let mut paths: Vec<(&str, f64, f64, f32, f64)> = vec![
+            ("reference", r.ref_fwd, r.ref_bwd, 0.0, r.ref_allocs),
+            ("rowwise", r.row_fwd, r.row_bwd, r.row_fwd_diff, r.row_allocs),
+            ("fused", r.fused_fwd, r.fused_bwd, r.fused_fwd_diff, r.fused_allocs),
         ];
         // the simd row family only exists where the backend ran — its
         // absence in the artifact is itself the "downgraded" signal
-        if let (Some(sf), Some(sb), Some(sd)) = (r.simd_fwd, r.simd_bwd, r.simd_fwd_diff) {
-            paths.push(("simd", sf, sb, sd));
+        if let (Some(sf), Some(sb), Some(sd), Some(sa)) =
+            (r.simd_fwd, r.simd_bwd, r.simd_fwd_diff, r.simd_allocs)
+        {
+            paths.push(("simd", sf, sb, sd, sa));
         }
-        for (path, fwd, bwd, diff) in paths {
+        for (path, fwd, bwd, diff, apfi) in paths {
             if !first {
                 s.push_str(",\n");
             }
             first = false;
             let _ = write!(
                 s,
-                "    {{\"n\": {}, \"variant\": \"{}\", \"path\": \"{}\", \"fwd_ms\": {:.6}, \"bwd_ms\": {:.6}, \"fwd_speedup_vs_ref\": {}, \"bwd_speedup_vs_ref\": {}, \"fwd_max_abs_diff_vs_ref\": {}}}",
+                "    {{\"n\": {}, \"variant\": \"{}\", \"path\": \"{}\", \"fwd_ms\": {:.6}, \"bwd_ms\": {:.6}, \"fwd_speedup_vs_ref\": {}, \"bwd_speedup_vs_ref\": {}, \"fwd_max_abs_diff_vs_ref\": {}, \"allocs_per_iter\": {}}}",
                 r.n,
                 r.variant,
                 path,
@@ -268,7 +328,8 @@ fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
                 bwd,
                 json_num(r.ref_fwd / fwd),
                 json_num(r.ref_bwd / bwd),
-                json_num(diff as f64)
+                json_num(diff as f64),
+                json_num(apfi)
             );
         }
     }
@@ -311,6 +372,22 @@ fn check_trajectory(rows: &[SpmRow]) -> Result<(), String> {
             "fused forward parity broke at n={}: max|diff| = {:.3e}",
             r.n, r.fused_fwd_diff
         ));
+    }
+    // the zero-allocation steady-state gate (DESIGN.md §15): the fused
+    // (and simd) forward_into hot path must not touch the allocator
+    if r.fused_allocs != 0.0 {
+        return Err(format!(
+            "fused forward_into allocated in steady state at n={}: {:.1} allocs/iter (want 0)",
+            r.n, r.fused_allocs
+        ));
+    }
+    if let Some(sa) = r.simd_allocs {
+        if sa != 0.0 {
+            return Err(format!(
+                "simd forward_into allocated in steady state at n={}: {sa:.1} allocs/iter (want 0)",
+                r.n
+            ));
+        }
     }
     match (r.simd_fwd, r.simd_fwd_diff) {
         (Some(simd_fwd), Some(simd_diff)) => {

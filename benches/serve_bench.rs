@@ -16,14 +16,23 @@
 //! replicas per model (default 2), `--json <path>` writes the per-model
 //! serving trajectory as machine-readable JSON, `--check` exits non-zero
 //! if any model failed to serve EVERY request, reported zero throughput,
-//! or an idle replica (the all-requests-served + sharding gate CI
-//! enforces).
+//! an idle replica (the all-requests-served + sharding gate CI
+//! enforces), or a warm executor micro-batch that touched the allocator
+//! (the DESIGN.md §15 zero-allocation steady-state gate, reported as
+//! `allocs_per_iter` in the table and JSON).
 
 use spm_core::models::api::{build_model, ModelCfg, ModelKind};
 use spm_core::ops::{backend, LinearCfg, SpmExec};
+use spm_core::parallel;
 use spm_core::spm::Variant;
+use spm_coordinator::allocs::{self, CountingAlloc};
 use spm_coordinator::metrics::{fmt_f, Table};
-use spm_coordinator::serve::{ServeEngine, ServeReport, Workload};
+use spm_coordinator::serve::{Executor, NativeExecutor, ServeEngine, ServeReport, Workload};
+
+// Count every allocator call so steady-state allocs_per_iter is a
+// measured, gated number (DESIGN.md §15).
+#[global_allocator]
+static ALLOC_COUNTER: CountingAlloc = CountingAlloc;
 
 struct Args {
     requests: usize,
@@ -90,6 +99,42 @@ struct BenchRow {
     d_in: usize,
     params: usize,
     report: ServeReport,
+    /// steady-state allocator calls per executor micro-batch on the
+    /// router's batch-assembly ping-pong (DESIGN.md §15) — must be 0
+    allocs_per_iter: f64,
+}
+
+/// One router iteration against a native executor, mimicking the serve
+/// engine's batch-assembly ping-pong: take the pool, refill it with the
+/// batch's rows, forward, keep the returned buffer as the next pool.
+fn exec_iter(kind: ModelKind, exec: &mut NativeExecutor, rows: usize, pool: &mut Vec<f32>) {
+    let width = exec.width();
+    let mut flat = std::mem::take(pool);
+    flat.clear();
+    flat.resize(rows * width, 0.0);
+    for (i, v) in flat.iter_mut().enumerate() {
+        // charlm rows carry byte tokens, everything else small reals
+        *v = match kind {
+            ModelKind::CharLm => 97.0 + (i % 3) as f32,
+            _ => ((i * 37 % 11) as f32) * 0.1 - 0.5,
+        };
+    }
+    let out = exec.forward(rows, flat).expect("executor forward");
+    *pool = out;
+}
+
+/// Measured steady-state allocs per served micro-batch: warm the
+/// executor + pool pair, then count a batch-cap-sized iteration on one
+/// thread (the engine's workers drive the identical path).
+fn steady_allocs(kind: ModelKind, cfg: &ModelCfg, rows: usize) -> f64 {
+    let mut exec = NativeExecutor::new(build_model(cfg), rows.max(1));
+    let mut pool: Vec<f32> = Vec::new();
+    parallel::with_thread_budget(1, || {
+        for _ in 0..4 {
+            exec_iter(kind, &mut exec, rows.max(1), &mut pool);
+        }
+        allocs::allocs_per_iter(4, || exec_iter(kind, &mut exec, rows.max(1), &mut pool))
+    })
 }
 
 fn bench_kind(kind: ModelKind, exec: SpmExec, args: &Args) -> BenchRow {
@@ -106,7 +151,8 @@ fn bench_kind(kind: ModelKind, exec: SpmExec, args: &Args) -> BenchRow {
     let report = engine
         .run(&workload)
         .unwrap_or_else(|e| panic!("{}: serve failed: {e}", kind.name()));
-    BenchRow { kind, d_in, params, report }
+    let allocs_per_iter = steady_allocs(kind, &cfg, args.batch);
+    BenchRow { kind, d_in, params, report, allocs_per_iter }
 }
 
 fn print_table(rows: &[BenchRow]) {
@@ -122,6 +168,7 @@ fn print_table(rows: &[BenchRow]) {
         "p50 ms",
         "p99 ms",
         "req/s",
+        "allocs/iter",
     ]);
     for r in rows {
         t.row(vec![
@@ -136,6 +183,7 @@ fn print_table(rows: &[BenchRow]) {
             fmt_f(r.report.p50_ms, 3),
             fmt_f(r.report.p99_ms, 3),
             fmt_f(r.report.throughput_rps, 0),
+            fmt_f(r.allocs_per_iter, 1),
         ]);
     }
     t.print();
@@ -167,7 +215,7 @@ fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec) -> String {
             r.report.replica_batches.iter().map(|b| b.to_string()).collect();
         let _ = write!(
             s,
-            "    {{\"kind\": \"{}\", \"d_in\": {}, \"param_count\": {}, \"requests\": {}, \"batches\": {}, \"mean_fill\": {}, \"mean_queue_wait_ms\": {}, \"mean_exec_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}, \"throughput_rps\": {}, \"replica_batches\": [{}]}}",
+            "    {{\"kind\": \"{}\", \"d_in\": {}, \"param_count\": {}, \"requests\": {}, \"batches\": {}, \"mean_fill\": {}, \"mean_queue_wait_ms\": {}, \"mean_exec_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}, \"throughput_rps\": {}, \"allocs_per_iter\": {}, \"replica_batches\": [{}]}}",
             r.kind.name(),
             r.d_in,
             r.params,
@@ -180,6 +228,7 @@ fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec) -> String {
             json_num(r.report.p95_ms),
             json_num(r.report.p99_ms),
             json_num(r.report.throughput_rps),
+            json_num(r.allocs_per_iter),
             rb.join(", ")
         );
         s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
@@ -226,6 +275,14 @@ fn check_rows(rows: &[BenchRow], args: &Args) -> Result<(), String> {
             return Err(format!(
                 "{name}: idle replica with {} batches across {:?}",
                 r.report.batches, r.report.replica_batches
+            ));
+        }
+        // the zero-allocation steady-state gate (DESIGN.md §15): a warm
+        // executor micro-batch must not touch the allocator
+        if r.allocs_per_iter != 0.0 {
+            return Err(format!(
+                "{name}: steady-state serve iteration allocated ({:.1} allocs/iter, want 0)",
+                r.allocs_per_iter
             ));
         }
     }

@@ -18,16 +18,25 @@
 //! writes the throughput trajectory as machine-readable JSON, `--check`
 //! exits non-zero unless every replica count reduced the loss from
 //! init, the R=1 and R=max trajectories are bit-identical under pinned
-//! per-replica threads (the deterministic-reduction gate), and — at
-//! n >= 1024 — the largest replica count clears 1.5x the single-replica
-//! epoch throughput.
+//! per-replica threads (the deterministic-reduction gate), the R=1
+//! steady-state step stays at its documented allocation floor (the
+//! DESIGN.md §15 gate, reported as `allocs_per_iter` in the table and
+//! JSON), and — at n >= 1024 — the largest replica count clears 1.5x
+//! the single-replica epoch throughput.
 
 use spm_core::models::api::{Model, ModelCfg, ModelKind};
 use spm_core::ops::{backend, LinearCfg, SpmExec};
+use spm_core::parallel;
 use spm_core::spm::Variant;
+use spm_coordinator::allocs::{self, CountingAlloc};
 use spm_coordinator::experiments::DataSource;
 use spm_coordinator::metrics::{fmt_f, Table};
 use spm_coordinator::train::{TrainBatch, TrainEngine, TrainReport};
+
+// Count every allocator call so steady-state allocs_per_iter is a
+// measured, gated number (DESIGN.md §15).
+#[global_allocator]
+static ALLOC_COUNTER: CountingAlloc = CountingAlloc;
 
 struct Args {
     n: usize,
@@ -102,6 +111,14 @@ struct BenchRow {
     loss_after: f32,
     report: TrainReport,
     speedup: f64,
+    /// steady-state allocator calls per 2-microbatch optimizer step
+    /// under a pinned thread budget of 1 (DESIGN.md §15). R=1 runs the
+    /// in-place reduce and must stay near zero (gated by `--check`; the
+    /// expected count is 2: one trace-handle Vec per SPM General
+    /// `forward_train` per microbatch). R>1 spawns scoped replica
+    /// workers and snapshot deals, which allocate by design — the
+    /// column documents the cost instead of gating it.
+    allocs_per_step: f64,
 }
 
 fn flat_params(model: &dyn Model) -> Vec<f32> {
@@ -122,7 +139,29 @@ fn bench_replicas(
     let (loss_before, _a) = engine.model().evaluate(&eval.x, &eval.target.as_target());
     let report = engine.train_epoch(batches);
     let (loss_after, _a) = engine.model().evaluate(&eval.x, &eval.target.as_target());
-    BenchRow { replicas, threads_per_replica, loss_before, loss_after, report, speedup: 1.0 }
+
+    // steady-state allocs per step: warm the 2-microbatch group path on
+    // the (already hot) engine, then count; the pinned budget keeps the
+    // kernels inline so the count reflects the workspaces, not spawns
+    let probe = &batches[..batches.len().min(2).max(1)];
+    let allocs_per_step = parallel::with_thread_budget(1, || {
+        for _ in 0..2 {
+            engine.step(probe);
+        }
+        allocs::allocs_per_iter(2, || {
+            engine.step(probe);
+        })
+    });
+
+    BenchRow {
+        replicas,
+        threads_per_replica,
+        loss_before,
+        loss_after,
+        report,
+        speedup: 1.0,
+        allocs_per_step,
+    }
 }
 
 /// The deterministic-reduction gate: R=1 vs R=max under pinned
@@ -151,6 +190,7 @@ fn print_table(rows: &[BenchRow]) {
         "eval final",
         "rows/s",
         "speedup",
+        "allocs/step",
     ]);
     for r in rows {
         t.row(vec![
@@ -163,6 +203,7 @@ fn print_table(rows: &[BenchRow]) {
             fmt_f(r.loss_after as f64, 4),
             fmt_f(r.report.rows_per_sec, 0),
             format!("{:.2}x", r.speedup),
+            fmt_f(r.allocs_per_step, 1),
         ]);
     }
     t.print();
@@ -192,7 +233,7 @@ fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec, invariant: bool) -> St
     for (i, r) in rows.iter().enumerate() {
         let _ = write!(
             s,
-            "    {{\"replicas\": {}, \"threads_per_replica\": {}, \"steps\": {}, \"microbatches\": {}, \"mean_loss\": {}, \"loss_before\": {}, \"loss_after\": {}, \"rows_per_sec\": {}, \"speedup\": {}}}",
+            "    {{\"replicas\": {}, \"threads_per_replica\": {}, \"steps\": {}, \"microbatches\": {}, \"mean_loss\": {}, \"loss_before\": {}, \"loss_after\": {}, \"rows_per_sec\": {}, \"speedup\": {}, \"allocs_per_iter\": {}}}",
             r.replicas,
             r.threads_per_replica,
             r.report.steps,
@@ -201,7 +242,8 @@ fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec, invariant: bool) -> St
             json_num(r.loss_before as f64),
             json_num(r.loss_after as f64),
             json_num(r.report.rows_per_sec),
-            json_num(r.speedup)
+            json_num(r.speedup),
+            json_num(r.allocs_per_step)
         );
         s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -231,6 +273,18 @@ fn check_rows(rows: &[BenchRow], args: &Args, invariant: bool) -> Result<(), Str
         if !(r.report.rows_per_sec > 0.0) {
             return Err(format!("R={}: zero throughput", r.replicas));
         }
+    }
+    // the zero-allocation steady-state gate (DESIGN.md §15): the
+    // single-replica in-place reduce step must stay at its documented
+    // floor — 1 trace-handle Vec per SPM General forward_train per
+    // microbatch, with small headroom
+    let r1 = &rows[0];
+    if r1.replicas == 1 && r1.allocs_per_step > 8.0 {
+        return Err(format!(
+            "R=1 steady-state step allocated {:.1} times (cap 8: one trace-handle Vec per \
+             microbatch plus headroom)",
+            r1.allocs_per_step
+        ));
     }
     if !invariant {
         return Err(format!(

@@ -1,0 +1,64 @@
+//! Allocator-call counting for the bench binaries (DESIGN.md §15): each
+//! bench installs [`CountingAlloc`] as its `#[global_allocator]` and
+//! reports steady-state `allocs_per_iter` next to its timings, so the
+//! zero-allocation hot-path claim is a measured, gated number — not a
+//! comment.
+//!
+//! The counter is a process-global atomic: measurement windows must be
+//! quiet (no live worker threads), which every bench guarantees by
+//! measuring single-threaded warm iterations outside engine runs. The
+//! `#[global_allocator]` attribute itself stays in each binary — the
+//! library must never hijack its consumers' allocator.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator that counts every `alloc`/`alloc_zeroed`/`realloc`
+/// call (frees are not counted: the gated number is "how often does the
+/// hot path ask for memory").
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocator calls made process-wide while running `f`. Only meaningful
+/// when [`CountingAlloc`] is the binary's global allocator (otherwise it
+/// returns 0) and no unrelated threads are allocating concurrently.
+pub fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    f();
+    ALLOC_CALLS.load(Ordering::Relaxed) - before
+}
+
+/// Mean allocator calls per iteration over `iters` runs of `f` (callers
+/// warm the path first so growth allocations are not amortized into the
+/// steady-state figure).
+pub fn allocs_per_iter(iters: u64, mut f: impl FnMut()) -> f64 {
+    assert!(iters > 0, "need at least one iteration");
+    let total = allocs_during(|| {
+        for _ in 0..iters {
+            f();
+        }
+    });
+    total as f64 / iters as f64
+}

@@ -13,6 +13,7 @@
 //! back into this crate so every reported number has a single source of
 //! truth.
 
+pub mod allocs;
 pub mod config;
 pub mod error;
 pub mod experiments;

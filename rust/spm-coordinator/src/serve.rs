@@ -76,12 +76,17 @@ pub trait Executor {
 pub struct NativeExecutor {
     model: Box<dyn Model>,
     max_batch: usize,
+    // reusable output matrix: each forward writes here, then swaps its
+    // buffer out for the spent request buffer (DESIGN.md §15) — the pair
+    // ping-pongs with the router's batch pool so the steady state never
+    // allocates
+    y: Mat,
 }
 
 impl NativeExecutor {
     pub fn new(model: Box<dyn Model>, max_batch: usize) -> Self {
         assert!(max_batch >= 1, "max_batch must be >= 1");
-        NativeExecutor { model, max_batch }
+        NativeExecutor { model, max_batch, y: Mat { rows: 0, cols: 0, data: Vec::new() } }
     }
 }
 
@@ -96,7 +101,10 @@ impl Executor for NativeExecutor {
 
     fn forward(&mut self, rows: usize, flat: Vec<f32>) -> Result<Vec<f32>> {
         let x = Mat::from_vec(rows, self.model.d_in(), flat);
-        Ok(self.model.forward(&x).data)
+        self.model.forward_into(&x, &mut self.y);
+        // hand the result out and keep the request buffer as the next
+        // call's output scratch (`forward_into` reshapes it)
+        Ok(std::mem::replace(&mut self.y.data, x.data))
     }
 }
 
@@ -166,10 +174,22 @@ struct ExecStats {
 /// Run one micro-batch through `exec` at its true fill and fan the rows
 /// back out. On executor failure the replies are dropped, which unblocks
 /// the waiting clients; the error is surfaced through the stats.
-fn exec_batch(exec: &mut dyn Executor, pending: Vec<Request>, stats: &mut ExecStats) {
+///
+/// `pool` is the worker's reusable batch-assembly buffer (DESIGN.md §15):
+/// it is moved into [`Executor::forward`] and refilled from the returned
+/// output, so the steady state recycles capacity instead of allocating —
+/// only the per-reply `to_vec` remains (each reply is owned by a client).
+fn exec_batch(
+    exec: &mut dyn Executor,
+    pending: Vec<Request>,
+    stats: &mut ExecStats,
+    pool: &mut Vec<f32>,
+) {
     let width = exec.width();
     let fill = pending.len();
-    let mut flat = vec![0.0f32; fill * width];
+    let mut flat = std::mem::take(pool);
+    flat.clear();
+    flat.resize(fill * width, 0.0);
     for (row, r) in flat.chunks_mut(width).zip(&pending) {
         assert_eq!(r.features.len(), width, "request feature width");
         row.copy_from_slice(&r.features);
@@ -189,6 +209,7 @@ fn exec_batch(exec: &mut dyn Executor, pending: Vec<Request>, stats: &mut ExecSt
         stats.exec_ms += exec_ms;
         let _ = r.reply.send(out[i * per_row..(i + 1) * per_row].to_vec());
     }
+    *pool = out;
     stats.batches += 1;
     stats.rows += fill;
 }
@@ -412,6 +433,8 @@ impl ServeEngine {
                 workers.push(s.spawn(move || {
                     parallel::with_thread_budget(threads_per_replica, || {
                         let mut st = ExecStats::default();
+                        // per-worker batch buffer, recycled across batches
+                        let mut pool = Vec::new();
                         while let Ok(pending) = jrx.recv() {
                             if st.error.is_some() {
                                 // dropping the batch closes its reply
@@ -419,7 +442,7 @@ impl ServeEngine {
                                 // of hanging
                                 continue;
                             }
-                            exec_batch(exec.as_mut(), pending, &mut st);
+                            exec_batch(exec.as_mut(), pending, &mut st, &mut pool);
                         }
                         st
                     })
@@ -456,9 +479,10 @@ impl ServeEngine {
 
         let t0 = Instant::now();
         let mut st = ExecStats::default();
+        let mut pool = Vec::new();
         route(&rx, batch, Duration::from_micros(max_wait_us), |pending| {
             if st.error.is_none() {
-                exec_batch(exec, pending, &mut st);
+                exec_batch(exec, pending, &mut st, &mut pool);
             }
         });
         let wall = t0.elapsed().as_secs_f64();

@@ -122,12 +122,6 @@ fn assigned_replica(m: usize, r: usize) -> usize {
     m % r
 }
 
-fn flat_params(model: &dyn Model) -> Vec<f32> {
-    let mut out = Vec::with_capacity(model.param_count());
-    model.visit_params(&mut |_n, p| out.extend_from_slice(p));
-    out
-}
-
 fn load_params(model: &mut dyn Model, flat: &[f32]) {
     let mut off = 0usize;
     model.visit_params_mut(&mut |_n, p| {
@@ -137,10 +131,27 @@ fn load_params(model: &mut dyn Model, flat: &[f32]) {
     assert_eq!(off, flat.len(), "param broadcast must cover every buffer");
 }
 
-fn flat_grads(model: &dyn Model) -> Vec<f32> {
-    let mut out = Vec::with_capacity(model.param_count());
+/// Snapshot the model's flat gradient view into a caller-owned buffer
+/// (cleared + refilled, so reused slots never allocate in steady state).
+fn flat_grads_into(model: &dyn Model, out: &mut Vec<f32>) {
+    out.clear();
     model.visit_grads(&mut |_n, g| out.extend_from_slice(g));
-    out
+}
+
+/// Accumulate the model's flat gradient view into `acc` element-wise —
+/// the single-replica reduce: when one replica owns every microbatch the
+/// per-microbatch snapshots collapse to in-place accumulation in
+/// microbatch order, which sums element `i` as `(g_0[i] + g_1[i]) + ...`
+/// exactly like the chunked snapshot reduce does.
+fn add_grads(model: &dyn Model, acc: &mut [f32]) {
+    let mut off = 0usize;
+    model.visit_grads(&mut |_n, g| {
+        for (a, v) in acc[off..off + g.len()].iter_mut().zip(g) {
+            *a += v;
+        }
+        off += g.len();
+    });
+    assert_eq!(off, acc.len(), "gradient reduce must cover every buffer");
 }
 
 fn load_grads(model: &mut dyn Model, flat: &[f32]) {
@@ -150,6 +161,19 @@ fn load_grads(model: &mut dyn Model, flat: &[f32]) {
         off += g.len();
     });
     assert_eq!(off, flat.len(), "gradient write-back must cover every buffer");
+}
+
+/// Reusable step workspace (DESIGN.md §15): the all-reduce accumulator,
+/// per-microbatch gradient-snapshot slots (multi-replica path, in
+/// microbatch order), per-microbatch metrics and the parameter-broadcast
+/// buffer all live across steps, so the steady-state single-replica step
+/// allocates nothing here.
+#[derive(Default)]
+struct StepWorkspace {
+    acc: Vec<f32>,
+    snaps: Vec<Vec<f32>>,
+    metrics: Vec<(f32, f32)>,
+    bcast: Vec<f32>,
 }
 
 /// Builder + driver for data-parallel training: replica models, the
@@ -162,13 +186,20 @@ pub struct TrainEngine {
     threads_per_replica: usize,
     accum: usize,
     synced: bool,
+    ws: StepWorkspace,
 }
 
 impl TrainEngine {
     /// Single-replica engine around `primary` (add shards with
     /// [`TrainEngine::with_replica`]).
     pub fn new(primary: Box<dyn Model>) -> TrainEngine {
-        TrainEngine { replicas: vec![primary], threads_per_replica: 0, accum: 0, synced: false }
+        TrainEngine {
+            replicas: vec![primary],
+            threads_per_replica: 0,
+            accum: 0,
+            synced: false,
+            ws: StepWorkspace::default(),
+        }
     }
 
     /// Build `replicas` identical models from one factory config — the
@@ -256,12 +287,15 @@ impl TrainEngine {
         self.replicas.swap_remove(0)
     }
 
-    /// Broadcast the primary's parameters to every other replica.
+    /// Broadcast the primary's parameters to every other replica through
+    /// the persistent broadcast buffer.
     fn broadcast_params(&mut self) {
         if self.replicas.len() > 1 {
-            let params = flat_params(self.replicas[0].as_ref());
+            let bcast = &mut self.ws.bcast;
+            bcast.clear();
+            self.replicas[0].visit_params(&mut |_n, p| bcast.extend_from_slice(p));
             for rep in self.replicas[1..].iter_mut() {
-                load_params(rep.as_mut(), &params);
+                load_params(rep.as_mut(), bcast);
             }
         }
         self.synced = true;
@@ -297,77 +331,98 @@ impl TrainEngine {
             });
         }
 
-        // (microbatch index, flat gradient snapshot, loss, metric) from
-        // every replica; reassembled into microbatch order below.
-        let mut parts: Vec<(usize, Vec<f32>, f32, f32)> = Vec::with_capacity(group.len());
+        let total = self.replicas[0].param_count();
+        let inv = 1.0 / group.len() as f32;
+        if self.ws.metrics.len() < group.len() {
+            self.ws.metrics.resize(group.len(), (0.0, 0.0));
+        }
+
         if r == 1 {
+            // a single replica owns EVERY microbatch, so the snapshot
+            // slots and the chunked reduce collapse to in-place
+            // accumulation in microbatch order — bit-identical to the
+            // general reduce (element `i` still sums
+            // `(g_0[i] + g_1[i]) + ...` from a zeroed accumulator) with
+            // zero steady-state allocations.
+            let ws = &mut self.ws;
+            ws.acc.clear();
+            ws.acc.resize(total, 0.0);
+            let (acc, metrics) = (&mut ws.acc, &mut ws.metrics[..group.len()]);
             let model = self.replicas[0].as_mut();
             parallel::with_thread_budget(tpr, || {
-                for (m, mb) in group.iter().enumerate() {
+                for (mb, met) in group.iter().zip(metrics.iter_mut()) {
                     model.zero_grads();
-                    let (l, a) = model.accumulate_step(&mb.x, &mb.target.as_target());
-                    parts.push((m, flat_grads(model), l, a));
+                    *met = model.accumulate_step(&mb.x, &mb.target.as_target());
+                    add_grads(&*model, acc);
                 }
             });
+            for a in self.ws.acc.iter_mut() {
+                *a *= inv;
+            }
         } else {
-            let worker_parts = std::thread::scope(|s| {
+            // persistent per-microbatch snapshot slots, dealt round-robin
+            // to the replica workers (microbatch m -> replica m % R); the
+            // slots land pre-sorted in microbatch order.
+            if self.ws.snaps.len() < group.len() {
+                self.ws.snaps.resize_with(group.len(), Vec::new);
+            }
+            let snaps = &mut self.ws.snaps[..group.len()];
+            let metrics = &mut self.ws.metrics[..group.len()];
+            std::thread::scope(|s| {
+                let mut slots: Vec<Vec<(&TrainBatch, &mut Vec<f32>, &mut (f32, f32))>> =
+                    (0..r).map(|_| Vec::new()).collect();
+                for (((m, mb), snap), met) in
+                    group.iter().enumerate().zip(snaps.iter_mut()).zip(metrics.iter_mut())
+                {
+                    slots[assigned_replica(m, r)].push((mb, snap, met));
+                }
                 let mut handles = Vec::with_capacity(r);
-                for (i, model) in self.replicas.iter_mut().enumerate() {
-                    let assigned: Vec<(usize, &TrainBatch)> = group
-                        .iter()
-                        .enumerate()
-                        .filter(|(m, _mb)| assigned_replica(*m, r) == i)
-                        .collect();
+                for (model, assigned) in self.replicas.iter_mut().zip(slots) {
                     handles.push(s.spawn(move || {
                         parallel::with_thread_budget(tpr, || {
-                            let mut out = Vec::with_capacity(assigned.len());
-                            for (m, mb) in assigned {
+                            for (mb, snap, met) in assigned {
                                 model.zero_grads();
-                                let (l, a) = model.accumulate_step(&mb.x, &mb.target.as_target());
-                                out.push((m, flat_grads(&**model), l, a));
+                                *met = model.accumulate_step(&mb.x, &mb.target.as_target());
+                                flat_grads_into(&**model, snap);
                             }
-                            out
                         })
                     }));
                 }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("train worker panicked"))
-                    .collect::<Vec<_>>()
-            });
-            for wp in worker_parts {
-                parts.extend(wp);
-            }
-        }
-        parts.sort_by_key(|(m, ..)| *m);
-        debug_assert!(parts.iter().enumerate().all(|(i, (m, ..))| i == *m));
-
-        // deterministic chunked all-reduce: per element, snapshots sum in
-        // microbatch order; chunks only shape cache traffic / threading
-        let total = self.replicas[0].param_count();
-        let snaps: Vec<&Vec<f32>> = parts.iter().map(|(_m, g, ..)| g).collect();
-        let inv = 1.0 / group.len() as f32;
-        let mut acc = vec![0.0f32; total];
-        let chunk_len = REDUCE_CHUNK.min(total.max(1));
-        parallel::for_each_chunk(&mut acc, chunk_len, |first, chunk| {
-            let off = first * chunk_len;
-            for snap in &snaps {
-                for (a, v) in chunk.iter_mut().zip(&snap[off..off + chunk.len()]) {
-                    *a += v;
+                for h in handles {
+                    h.join().expect("train worker panicked");
                 }
-            }
-            for a in chunk.iter_mut() {
-                *a *= inv;
-            }
-        });
+            });
 
-        let primary = self.replicas[0].as_mut();
-        load_grads(primary, &acc);
+            // deterministic chunked all-reduce: per element, snapshots
+            // sum in microbatch order; chunks only shape cache traffic /
+            // threading
+            let ws = &mut self.ws;
+            ws.acc.clear();
+            ws.acc.resize(total, 0.0);
+            let snaps = &ws.snaps[..group.len()];
+            let chunk_len = REDUCE_CHUNK.min(total.max(1));
+            parallel::for_each_chunk(&mut ws.acc, chunk_len, |first, chunk| {
+                let off = first * chunk_len;
+                for snap in snaps {
+                    for (a, v) in chunk.iter_mut().zip(&snap[off..off + chunk.len()]) {
+                        *a += v;
+                    }
+                }
+                for a in chunk.iter_mut() {
+                    *a *= inv;
+                }
+            });
+        }
+
+        let (replicas, ws) = (&mut self.replicas, &self.ws);
+        let primary = replicas[0].as_mut();
+        load_grads(primary, &ws.acc);
         primary.apply_step();
         self.broadcast_params();
 
-        let loss_sum: f64 = parts.iter().map(|&(_m, _, l, _)| l as f64).sum();
-        let metric_sum: f64 = parts.iter().map(|&(_m, _, _, a)| a as f64).sum();
+        let metrics = &self.ws.metrics[..group.len()];
+        let loss_sum: f64 = metrics.iter().map(|&(l, _)| l as f64).sum();
+        let metric_sum: f64 = metrics.iter().map(|&(_, a)| a as f64).sum();
         let k = group.len() as f64;
         ((loss_sum / k) as f32, (metric_sum / k) as f32)
     }

@@ -22,15 +22,26 @@ pub fn softmax_rows(m: &mut Mat) {
 /// Mean softmax cross-entropy over rows with integer labels.
 /// Returns (loss, accuracy, g_logits) where g_logits = (softmax - onehot)/B.
 pub fn softmax_xent(logits: &Mat, labels: &[u32]) -> (f32, f32, Mat) {
+    let mut g = Mat { rows: 0, cols: 0, data: Vec::new() };
+    let (loss, acc) = softmax_xent_into(logits, labels, &mut g);
+    (loss, acc, g)
+}
+
+/// [`softmax_xent`] writing the logit gradient into a caller-owned buffer
+/// so steady-state training loops never allocate here.
+pub fn softmax_xent_into(logits: &Mat, labels: &[u32], g: &mut Mat) -> (f32, f32) {
     assert_eq!(logits.rows, labels.len());
     let b = logits.rows as f32;
-    let mut probs = logits.clone();
-    softmax_rows(&mut probs);
+    g.rows = logits.rows;
+    g.cols = logits.cols;
+    g.data.clear();
+    g.data.extend_from_slice(&logits.data);
+    softmax_rows(g);
     let mut loss = 0.0;
     let mut correct = 0usize;
     for i in 0..logits.rows {
         let li = labels[i] as usize;
-        let row = probs.row(i);
+        let row = g.row(i);
         loss -= row[li].max(1e-30).ln();
         let argmax = row
             .iter()
@@ -42,7 +53,6 @@ pub fn softmax_xent(logits: &Mat, labels: &[u32]) -> (f32, f32, Mat) {
             correct += 1;
         }
     }
-    let mut g = probs;
     for i in 0..g.rows {
         let li = labels[i] as usize;
         g.row_mut(i)[li] -= 1.0;
@@ -50,21 +60,31 @@ pub fn softmax_xent(logits: &Mat, labels: &[u32]) -> (f32, f32, Mat) {
     for v in g.data.iter_mut() {
         *v /= b;
     }
-    (loss / b, correct as f32 / b, g)
+    (loss / b, correct as f32 / b)
 }
 
 /// Mean squared error: returns (loss, g_pred).
 pub fn mse(pred: &Mat, target: &Mat) -> (f32, Mat) {
+    let mut g = Mat { rows: 0, cols: 0, data: Vec::new() };
+    let loss = mse_into(pred, target, &mut g);
+    (loss, g)
+}
+
+/// [`mse`] writing the prediction gradient into a caller-owned buffer.
+pub fn mse_into(pred: &Mat, target: &Mat, g: &mut Mat) -> f32 {
     assert_eq!(pred.data.len(), target.data.len());
     let n = pred.data.len() as f32;
-    let mut g = pred.clone();
+    g.rows = pred.rows;
+    g.cols = pred.cols;
+    g.data.clear();
+    g.data.extend_from_slice(&pred.data);
     let mut loss = 0.0;
     for (gv, t) in g.data.iter_mut().zip(&target.data) {
         let d = *gv - t;
         loss += d * d;
         *gv = 2.0 * d / n;
     }
-    (loss / n, g)
+    loss / n
 }
 
 /// Bits-per-character from an NLL in nats (paper §9.3 metric).

@@ -118,6 +118,13 @@ pub trait Model: Send {
     /// every path down to the fused stage kernels takes the true row
     /// count (no padding anywhere in the native stack).
     fn forward(&self, x: &Mat) -> Mat;
+    /// [`Model::forward`] into a caller-owned output buffer. `&mut self`
+    /// so models can route through their reusable activation scratch
+    /// (DESIGN.md §15) and make steady-state serving allocation-free;
+    /// the default delegates to the allocating `forward`.
+    fn forward_into(&mut self, x: &Mat, out: &mut Mat) {
+        *out = self.forward(x);
+    }
     /// One optimizer step on the batch; returns `(loss, metric)`.
     fn train_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
         self.zero_grads();

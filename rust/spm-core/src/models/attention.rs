@@ -11,11 +11,39 @@ use crate::tensor::Mat;
 
 use super::api::{Model, ModelKind, Target};
 
+fn empty_mat() -> Mat {
+    Mat { rows: 0, cols: 0, data: Vec::new() }
+}
+
+/// Reusable buffers for the trace-free forward (serving path, DESIGN.md
+/// §15): Q/K/V/context plus ONE `(T, T)` scores matrix reused across
+/// every (batch, head) pair — the forward only needs scores transiently.
+struct Scratch {
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    ctx: Mat,
+    scores: Mat,
+}
+
+impl Scratch {
+    fn new() -> Self {
+        Scratch {
+            q: empty_mat(),
+            k: empty_mat(),
+            v: empty_mat(),
+            ctx: empty_mat(),
+            scores: empty_mat(),
+        }
+    }
+}
+
 pub struct Attention {
     pub d: usize,
     pub heads: usize,
     pub maps: [LinearOp; 4], // q, k, v, o
     pub adam: Adam,
+    scratch: Scratch,
 }
 
 struct FwdTrace {
@@ -38,7 +66,7 @@ impl Attention {
         let maps = std::array::from_fn(|i| {
             LinearOp::new(cfg.with_seed(cfg.seed + i as u64), &mut rng, &mut adam)
         });
-        Attention { d: cfg.n(), heads, maps, adam }
+        Attention { d: cfg.n(), heads, maps, adam, scratch: Scratch::new() }
     }
 
     pub fn param_count(&self) -> usize {
@@ -105,6 +133,59 @@ impl Attention {
     /// x: (B*T, d) flat rows; returns (B*T, d).
     pub fn forward(&self, x_flat: &Mat, b: usize, t: usize) -> Mat {
         self.forward_inner(x_flat, b, t).0
+    }
+
+    /// Trace-free [`Attention::forward`] through the model-owned scratch:
+    /// zero steady-state allocations for a stable `(b, t)` shape. Same
+    /// arithmetic order as [`Attention::forward_inner`], so serving and
+    /// training forwards agree bit-for-bit.
+    pub fn forward_only_into(&mut self, x_flat: &Mat, b: usize, t: usize, out: &mut Mat) {
+        let d = self.d;
+        let h = self.heads;
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let s = &mut self.scratch;
+        self.maps[0].forward_into(x_flat, &mut s.q); // eq. (29)
+        self.maps[1].forward_into(x_flat, &mut s.k); // eq. (30)
+        self.maps[2].forward_into(x_flat, &mut s.v); // eq. (31)
+        s.ctx.rows = b * t;
+        s.ctx.cols = d;
+        s.ctx.data.clear();
+        s.ctx.data.resize(b * t * d, 0.0);
+        for bi in 0..b {
+            for hi in 0..h {
+                let off = hi * dh;
+                // scores S = Q K^T / sqrt(dh)  (eq. 32), per (batch, head)
+                s.scores.rows = t;
+                s.scores.cols = t;
+                s.scores.data.clear();
+                s.scores.data.resize(t * t, 0.0);
+                for i in 0..t {
+                    let qrow = &s.q.row(bi * t + i)[off..off + dh];
+                    for j in 0..t {
+                        let krow = &s.k.row(bi * t + j)[off..off + dh];
+                        let mut acc = 0.0;
+                        for e in 0..dh {
+                            acc += qrow[e] * krow[e];
+                        }
+                        s.scores.data[i * t + j] = acc * scale;
+                    }
+                }
+                crate::loss::softmax_rows(&mut s.scores); // eq. (33)
+                // H = A V  (eq. 34)
+                for i in 0..t {
+                    let crow = &mut s.ctx.data[(bi * t + i) * d + off..(bi * t + i) * d + off + dh];
+                    for j in 0..t {
+                        let aij = s.scores.data[i * t + j];
+                        let vrow = &s.v.data[(bi * t + j) * d + off..(bi * t + j) * d + off + dh];
+                        for e in 0..dh {
+                            crow[e] += aij * vrow[e];
+                        }
+                    }
+                }
+            }
+        }
+        self.maps[3].forward_into(&s.ctx, out); // eq. (35)
     }
 
     /// Forward + backward only: projection gradients accumulate in the
@@ -247,12 +328,14 @@ impl Attention {
 pub struct AttnSeq {
     pub attn: Attention,
     pub seq_len: usize,
+    // reusable `(B*T, d)` restride buffer for the serving path
+    xf: Mat,
 }
 
 impl AttnSeq {
     pub fn new(cfg: LinearCfg, heads: usize, seq_len: usize, lr: f32, seed: u64) -> Self {
         assert!(seq_len >= 1, "seq_len must be >= 1");
-        AttnSeq { attn: Attention::new(cfg, heads, lr, seed), seq_len }
+        AttnSeq { attn: Attention::new(cfg, heads, lr, seed), seq_len, xf: empty_mat() }
     }
 
     /// `(B, T*d)` -> `(B*T, d)` (same data, different row stride).
@@ -283,6 +366,20 @@ impl Model for AttnSeq {
     fn forward(&self, x: &Mat) -> Mat {
         let y = self.attn.forward(&self.flat_rows(x), x.rows, self.seq_len);
         Mat::from_vec(x.rows, self.seq_len * self.attn.d, y.data)
+    }
+
+    fn forward_into(&mut self, x: &Mat, out: &mut Mat) {
+        let d = self.attn.d;
+        assert_eq!(x.cols, self.seq_len * d, "row must hold T={} steps of width {d}", self.seq_len);
+        // (B, T*d) and (B*T, d) share one row-major layout: restride into
+        // the reusable buffer, run the trace-free core, restride back.
+        self.xf.rows = x.rows * self.seq_len;
+        self.xf.cols = d;
+        self.xf.data.clear();
+        self.xf.data.extend_from_slice(&x.data);
+        self.attn.forward_only_into(&self.xf, x.rows, self.seq_len, out);
+        out.rows = x.rows;
+        out.cols = self.seq_len * d;
     }
 
     fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
@@ -405,6 +502,21 @@ mod tests {
             last = attn.train_step(&x, &target, 4, 4);
         }
         assert!(last < first * 0.7, "{first} -> {last}");
+    }
+
+    #[test]
+    fn serving_forward_into_matches_forward() {
+        let cfg = LinearCfg::spm(8, Variant::Rotation);
+        let mut m = AttnSeq::new(cfg, 2, 3, 1e-3, 11);
+        let mut rng = Rng::new(12);
+        let x = Mat::from_vec(4, 3 * 8, rng.normal_vec(4 * 3 * 8, 1.0));
+        let want = m.forward(&x);
+        let mut got = Mat::zeros(0, 0);
+        m.forward_into(&x, &mut got);
+        assert_eq!(want, got);
+        // second call reuses the scratch and must stay bit-identical
+        m.forward_into(&x, &mut got);
+        assert_eq!(want, got);
     }
 
     #[test]

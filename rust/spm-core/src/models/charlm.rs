@@ -4,8 +4,8 @@
 //! scatter-add. The embedding is a lookup table, not a linear map, so it
 //! keeps its own flat Adam slot next to the two LinearOps.
 
-use crate::loss::softmax_xent;
-use crate::ops::{LinearCfg, LinearOp, SpmExec};
+use crate::loss::{softmax_xent, softmax_xent_into};
+use crate::ops::{LinearCfg, LinearOp, LinearTrace, SpmExec};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::Mat;
@@ -13,6 +13,46 @@ use crate::tensor::Mat;
 use super::api::{Model, ModelKind, Target};
 
 pub const VOCAB: usize = 256;
+
+fn empty_mat() -> Mat {
+    Mat { rows: 0, cols: 0, data: Vec::new() }
+}
+
+/// Reusable activation/trace/token buffers (DESIGN.md §15), reshaped in
+/// place each call so steady-state serving and training allocate nothing.
+struct Scratch {
+    tokens: Vec<u8>,
+    targets: Vec<u8>,
+    labels: Vec<u32>,
+    h0: Mat,
+    h_pre: Mat,
+    h: Mat,
+    mix_tr: LinearTrace,
+    logits: Mat,
+    head_tr: LinearTrace,
+    glogits: Mat,
+    gh: Mat,
+    gx: Mat,
+}
+
+impl Scratch {
+    fn new() -> Self {
+        Scratch {
+            tokens: Vec::new(),
+            targets: Vec::new(),
+            labels: Vec::new(),
+            h0: empty_mat(),
+            h_pre: empty_mat(),
+            h: empty_mat(),
+            mix_tr: LinearTrace::Dense,
+            logits: empty_mat(),
+            head_tr: LinearTrace::Dense,
+            glogits: empty_mat(),
+            gh: empty_mat(),
+            gx: empty_mat(),
+        }
+    }
+}
 
 pub struct CharLM {
     pub d: usize,
@@ -25,6 +65,7 @@ pub struct CharLM {
     // live on the model like the ops' flat buffers do)
     gembed: Vec<f32>,
     pub adam: Adam,
+    scratch: Scratch,
 }
 
 impl CharLM {
@@ -37,7 +78,7 @@ impl CharLM {
         let head = LinearOp::new(LinearCfg::dense_rect(VOCAB, d), &mut rng, &mut adam);
         let embed_slot = adam.register(embed.data.len());
         let gembed = vec![0.0; VOCAB * d];
-        CharLM { d, embed, mixer, head, embed_slot, gembed, adam }
+        CharLM { d, embed, mixer, head, embed_slot, gembed, adam, scratch: Scratch::new() }
     }
 
     pub fn param_count(&self) -> usize {
@@ -45,10 +86,8 @@ impl CharLM {
     }
 
     fn embed_tokens(&self, tokens: &[u8]) -> Mat {
-        let mut h = Mat::zeros(tokens.len(), self.d);
-        for (i, &t) in tokens.iter().enumerate() {
-            h.row_mut(i).copy_from_slice(self.embed.row(t as usize));
-        }
+        let mut h = empty_mat();
+        embed_tokens_into(&self.embed, self.d, tokens, &mut h);
         h
     }
 
@@ -64,6 +103,18 @@ impl CharLM {
         self.head.forward(&h)
     }
 
+    /// [`CharLM::logits`] through the model-owned scratch: zero
+    /// steady-state allocations for a stable token-stream length.
+    pub fn logits_into(&mut self, tokens: &[u8], out: &mut Mat) {
+        let s = &mut self.scratch;
+        embed_tokens_into(&self.embed, self.d, tokens, &mut s.h0);
+        self.mixer.forward_into(&s.h0, &mut s.h);
+        for v in s.h.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        self.head.forward_into(&s.h, out);
+    }
+
     /// Mean NLL (nats) of next-byte prediction; inputs/targets are flat
     /// (B*T) token streams with `targets[i]` the byte following `inputs[i]`.
     pub fn evaluate(&self, inputs: &[u8], targets: &[u8]) -> f32 {
@@ -77,28 +128,34 @@ impl CharLM {
     /// accumulator; the optimizer does not fire.
     pub fn accumulate_step(&mut self, inputs: &[u8], targets: &[u8]) -> (f32, f32) {
         assert_eq!(inputs.len(), targets.len());
-        let h0 = self.embed_tokens(inputs);
-        let (h_pre, mix_tr) = self.mixer.forward_train(&h0);
-        let mut h = h_pre.clone();
-        for v in h.data.iter_mut() {
+        // forward (all intermediates live in the model-owned scratch)
+        let s = &mut self.scratch;
+        embed_tokens_into(&self.embed, self.d, inputs, &mut s.h0);
+        self.mixer.forward_train_into(&s.h0, &mut s.h_pre, &mut s.mix_tr);
+        s.h.rows = s.h_pre.rows;
+        s.h.cols = s.h_pre.cols;
+        s.h.data.clear();
+        s.h.data.extend_from_slice(&s.h_pre.data);
+        for v in s.h.data.iter_mut() {
             *v = v.max(0.0);
         }
-        let (logits, head_tr) = self.head.forward_train(&h);
-        let labels: Vec<u32> = targets.iter().map(|&t| t as u32).collect();
-        let (loss, acc, glogits) = softmax_xent(&logits, &labels);
+        self.head.forward_train_into(&s.h, &mut s.logits, &mut s.head_tr);
+        s.labels.clear();
+        s.labels.extend(targets.iter().map(|&t| t as u32));
+        let (loss, acc) = softmax_xent_into(&s.logits, &s.labels, &mut s.glogits);
 
-        let mut gh = self.head.backward(&h, &head_tr, &glogits);
-        for (g, pre) in gh.data.iter_mut().zip(&h_pre.data) {
+        self.head.backward_into(&s.h, &s.head_tr, &s.glogits, &mut s.gh);
+        for (g, pre) in s.gh.data.iter_mut().zip(&s.h_pre.data) {
             if *pre <= 0.0 {
                 *g = 0.0;
             }
         }
-        let gx = self.mixer.backward(&h0, &mix_tr, &gh);
+        self.mixer.backward_into(&s.h0, &s.mix_tr, &s.gh, &mut s.gx);
 
         // embedding scatter-add
         for (i, &t) in inputs.iter().enumerate() {
             let dst = &mut self.gembed[t as usize * self.d..(t as usize + 1) * self.d];
-            for (dv, sv) in dst.iter_mut().zip(gx.row(i)) {
+            for (dv, sv) in dst.iter_mut().zip(s.gx.row(i)) {
                 *dv += sv;
             }
         }
@@ -131,12 +188,32 @@ impl CharLM {
     }
 }
 
+/// Token-stream embedding lookup into a caller-owned matrix (free
+/// function so callers can borrow the table while holding model scratch).
+fn embed_tokens_into(embed: &Mat, d: usize, tokens: &[u8], h: &mut Mat) {
+    h.rows = tokens.len();
+    h.cols = d;
+    h.data.clear();
+    h.data.resize(tokens.len() * d, 0.0);
+    for (i, &t) in tokens.iter().enumerate() {
+        h.row_mut(i).copy_from_slice(embed.row(t as usize));
+    }
+}
+
 /// `(B, 1)` request rows of f32 byte values -> flat token stream. The
 /// serving contract is all-f32 feature rows; values are rounded and
 /// clamped into the byte vocabulary.
 fn row_tokens(x: &Mat) -> Vec<u8> {
+    let mut out = Vec::new();
+    row_tokens_into(x, &mut out);
+    out
+}
+
+/// [`row_tokens`] into a caller-owned buffer.
+fn row_tokens_into(x: &Mat, out: &mut Vec<u8>) {
     assert_eq!(x.cols, 1, "charlm request rows carry exactly one token");
-    x.data.iter().map(|&v| v.round().clamp(0.0, 255.0) as u8).collect()
+    out.clear();
+    out.extend(x.data.iter().map(|&v| v.round().clamp(0.0, 255.0) as u8));
 }
 
 impl Model for CharLM {
@@ -160,14 +237,26 @@ impl Model for CharLM {
         self.logits(&row_tokens(x))
     }
 
+    fn forward_into(&mut self, x: &Mat, out: &mut Mat) {
+        // move the token buffer out of scratch so `logits_into` can borrow
+        // the rest of the model mutably; moved back below (no allocation)
+        let mut tokens = std::mem::take(&mut self.scratch.tokens);
+        row_tokens_into(x, &mut tokens);
+        self.logits_into(&tokens, out);
+        self.scratch.tokens = tokens;
+    }
+
     fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
         let Target::Labels(y) = target else { panic!("charlm trains on next-byte labels") };
-        let inputs = row_tokens(x);
-        let targets: Vec<u8> = y
-            .iter()
-            .map(|&t| u8::try_from(t).expect("charlm labels must be bytes"))
-            .collect();
-        CharLM::accumulate_step(self, &inputs, &targets)
+        let mut inputs = std::mem::take(&mut self.scratch.tokens);
+        row_tokens_into(x, &mut inputs);
+        let mut targets = std::mem::take(&mut self.scratch.targets);
+        targets.clear();
+        targets.extend(y.iter().map(|&t| u8::try_from(t).expect("charlm labels must be bytes")));
+        let lm = CharLM::accumulate_step(self, &inputs, &targets);
+        self.scratch.tokens = inputs;
+        self.scratch.targets = targets;
+        lm
     }
 
     fn apply_step(&mut self) {
@@ -256,6 +345,20 @@ mod tests {
             last = lm.train_step(inputs, targets).0;
         }
         assert!(last < first * 0.5, "{first} -> {last}");
+    }
+
+    #[test]
+    fn serving_forward_into_matches_forward() {
+        let mut lm = CharLM::new(LinearCfg::spm(16, Variant::Rotation), 1e-3, 5);
+        let stream = periodic_stream(32);
+        let x = Mat::from_vec(32, 1, stream.iter().map(|&b| b as f32).collect());
+        let want = Model::forward(&lm, &x);
+        let mut got = Mat::zeros(0, 0);
+        lm.forward_into(&x, &mut got);
+        assert_eq!(want, got);
+        // second call reuses the scratch and must stay bit-identical
+        lm.forward_into(&x, &mut got);
+        assert_eq!(want, got);
     }
 
     #[test]

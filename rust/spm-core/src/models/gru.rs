@@ -37,6 +37,39 @@ struct StepTrace {
     traces: [LinearTrace; 6], // wz, uz, wr, ur, wh, uh
 }
 
+fn empty_mat() -> Mat {
+    Mat { rows: 0, cols: 0, data: Vec::new() }
+}
+
+/// Reusable buffers for the trace-free forward cell (serving path,
+/// DESIGN.md §15): `h` carries the hidden state across timesteps, the
+/// rest are per-step intermediates reshaped in place.
+struct FwdScratch {
+    h: Mat,
+    x_t: Mat,
+    a: Mat, // W·x map output
+    b: Mat, // U·h map output
+    z: Mat,
+    r: Mat,
+    u: Mat,  // r * h_prev
+    ht: Mat, // candidate h_tilde
+}
+
+impl FwdScratch {
+    fn new() -> Self {
+        FwdScratch {
+            h: empty_mat(),
+            x_t: empty_mat(),
+            a: empty_mat(),
+            b: empty_mat(),
+            z: empty_mat(),
+            r: empty_mat(),
+            u: empty_mat(),
+            ht: empty_mat(),
+        }
+    }
+}
+
 pub struct Gru {
     pub n: usize,
     pub maps: [LinearOp; 6], // wz, uz, wr, ur, wh, uh
@@ -52,6 +85,7 @@ pub struct Gru {
     gb_r: Vec<f32>,
     gb_h: Vec<f32>,
     pub adam: Adam,
+    fwd: FwdScratch,
 }
 
 impl Gru {
@@ -79,6 +113,7 @@ impl Gru {
             gb_r: vec![0.0; n],
             gb_h: vec![0.0; n],
             adam,
+            fwd: FwdScratch::new(),
         }
     }
 
@@ -135,6 +170,81 @@ impl Gru {
             h = next;
         }
         self.head.forward(&h)
+    }
+
+    /// One trace-free cell step: advances `self.fwd.h` reading
+    /// `self.fwd.x_t`. Arithmetic order matches [`Gru::cell`] exactly so
+    /// serving and training forwards agree bit-for-bit.
+    fn step_forward_only(&mut self) {
+        let s = &mut self.fwd;
+        // eq. (20): z = sigmoid(W_z x + U_z h + b_z)
+        self.maps[0].forward_into(&s.x_t, &mut s.a);
+        self.maps[1].forward_into(&s.h, &mut s.b);
+        s.z.rows = s.a.rows;
+        s.z.cols = s.a.cols;
+        s.z.data.clear();
+        s.z.data.extend_from_slice(&s.a.data);
+        for ((v, bv), bias) in s.z.data.iter_mut().zip(&s.b.data).zip(self.b_z.iter().cycle()) {
+            *v = sigmoid(*v + bv + bias);
+        }
+        // eq. (21): r = sigmoid(W_r x + U_r h + b_r)
+        self.maps[2].forward_into(&s.x_t, &mut s.a);
+        self.maps[3].forward_into(&s.h, &mut s.b);
+        s.r.rows = s.a.rows;
+        s.r.cols = s.a.cols;
+        s.r.data.clear();
+        s.r.data.extend_from_slice(&s.a.data);
+        for ((v, bv), bias) in s.r.data.iter_mut().zip(&s.b.data).zip(self.b_r.iter().cycle()) {
+            *v = sigmoid(*v + bv + bias);
+        }
+        // u = r * h_prev
+        s.u.rows = s.r.rows;
+        s.u.cols = s.r.cols;
+        s.u.data.clear();
+        s.u.data.extend_from_slice(&s.r.data);
+        for (v, hv) in s.u.data.iter_mut().zip(&s.h.data) {
+            *v *= hv;
+        }
+        // eq. (22): h_tilde = tanh(W_h x + U_h u + b_h)
+        self.maps[4].forward_into(&s.x_t, &mut s.a);
+        self.maps[5].forward_into(&s.u, &mut s.b);
+        s.ht.rows = s.a.rows;
+        s.ht.cols = s.a.cols;
+        s.ht.data.clear();
+        s.ht.data.extend_from_slice(&s.a.data);
+        for ((v, bv), bias) in s.ht.data.iter_mut().zip(&s.b.data).zip(self.b_h.iter().cycle()) {
+            *v = (*v + bv + bias).tanh();
+        }
+        // eq. (23): h = (1 - z) * h_prev + z * h_tilde, in place
+        for i in 0..s.h.data.len() {
+            s.h.data[i] = (1.0 - s.z.data[i]) * s.h.data[i] + s.z.data[i] * s.ht.data[i];
+        }
+    }
+
+    /// [`Gru::logits`] over `(B, T*n)` concatenated rows through the
+    /// model-owned scratch: zero steady-state allocations for a stable
+    /// batch shape (the serving hot path).
+    pub fn logits_concat_into(&mut self, x: &Mat, seq_len: usize, out: &mut Mat) {
+        let n = self.n;
+        assert_eq!(x.cols, seq_len * n, "row must hold T={seq_len} timesteps of width {n}");
+        {
+            let s = &mut self.fwd;
+            s.h.rows = x.rows;
+            s.h.cols = n;
+            s.h.data.clear();
+            s.h.data.resize(x.rows * n, 0.0);
+        }
+        for t in 0..seq_len {
+            let s = &mut self.fwd;
+            s.x_t.rows = x.rows;
+            s.x_t.cols = n;
+            s.x_t.data.clear();
+            for bi in 0..x.rows {
+                s.x_t.data.extend_from_slice(&x.row(bi)[t * n..(t + 1) * n]);
+            }
+            self.step_forward_only();
+        }
+        self.head.forward_into(&self.fwd.h, out);
     }
 
     pub fn evaluate(&self, xs: &[Mat], y: &[u32]) -> (f32, f32) {
@@ -299,6 +409,10 @@ impl Model for GruSeq {
         self.gru.logits(&self.split_steps(x))
     }
 
+    fn forward_into(&mut self, x: &Mat, out: &mut Mat) {
+        self.gru.logits_concat_into(x, self.seq_len, out);
+    }
+
     fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
         let Target::Labels(y) = target else { panic!("gru trains on class labels") };
         let steps = self.split_steps(x);
@@ -428,6 +542,21 @@ mod tests {
             last = gru.train_step(&xs, &y).0;
         }
         assert!(last < first * 0.8, "{first} -> {last}");
+    }
+
+    #[test]
+    fn serving_forward_into_matches_forward() {
+        let cfg = LinearCfg::spm(8, Variant::General).with_schedule(Schedule::Shift);
+        let mut m = GruSeq::new(cfg, 3, 4, 1e-3, 21);
+        let mut rng = Rng::new(22);
+        let x = Mat::from_vec(5, 4 * 8, rng.normal_vec(5 * 4 * 8, 1.0));
+        let want = m.forward(&x);
+        let mut got = Mat::zeros(0, 0);
+        m.forward_into(&x, &mut got);
+        assert_eq!(want, got);
+        // second call reuses the scratch and must stay bit-identical
+        m.forward_into(&x, &mut got);
+        assert_eq!(want, got);
     }
 
     fn set_wz00(gru: &mut Gru, v: f32) -> f32 {

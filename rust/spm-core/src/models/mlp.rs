@@ -2,18 +2,52 @@
 //! softmax-xent. Exact hand-derived backward; Adam owned by the model;
 //! both linear maps update through the flat apply_grads kernel.
 
-use crate::loss::softmax_xent;
-use crate::ops::{LinearCfg, LinearOp, SpmExec};
+use crate::loss::{softmax_xent, softmax_xent_into};
+use crate::ops::{LinearCfg, LinearOp, LinearTrace, SpmExec};
 use crate::optim::Adam;
 use crate::rng::Rng;
 use crate::tensor::Mat;
 
 use super::api::{Model, ModelKind, Target};
 
+fn empty_mat() -> Mat {
+    Mat { rows: 0, cols: 0, data: Vec::new() }
+}
+
+/// Reusable activation/trace buffers (DESIGN.md §15): owned by the model,
+/// reshaped in place each step so repeated forward/train calls with a
+/// stable batch shape allocate nothing.
+struct Scratch {
+    h_pre: Mat,
+    h: Mat,
+    mix_tr: LinearTrace,
+    logits: Mat,
+    head_tr: LinearTrace,
+    glogits: Mat,
+    gh: Mat,
+    gx: Mat,
+}
+
+impl Scratch {
+    fn new() -> Self {
+        Scratch {
+            h_pre: empty_mat(),
+            h: empty_mat(),
+            mix_tr: LinearTrace::Dense,
+            logits: empty_mat(),
+            head_tr: LinearTrace::Dense,
+            glogits: empty_mat(),
+            gh: empty_mat(),
+            gx: empty_mat(),
+        }
+    }
+}
+
 pub struct Classifier {
     pub mixer: LinearOp,
     pub head: LinearOp,
     pub adam: Adam,
+    scratch: Scratch,
 }
 
 impl Classifier {
@@ -22,7 +56,7 @@ impl Classifier {
         let mut rng = Rng::new(seed);
         let mixer = LinearOp::new(cfg, &mut rng, &mut adam);
         let head = LinearOp::new(LinearCfg::dense_rect(num_classes, cfg.n()), &mut rng, &mut adam);
-        Classifier { mixer, head, adam }
+        Classifier { mixer, head, adam, scratch: Scratch::new() }
     }
 
     pub fn param_count(&self) -> usize {
@@ -37,27 +71,42 @@ impl Classifier {
         self.head.forward(&h)
     }
 
+    /// [`Classifier::logits`] through the model-owned scratch: zero
+    /// steady-state allocations for a stable batch shape.
+    fn logits_into(&mut self, x: &Mat, out: &mut Mat) {
+        let s = &mut self.scratch;
+        self.mixer.forward_into(x, &mut s.h);
+        for v in s.h.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        self.head.forward_into(&s.h, out);
+    }
+
     /// Forward + backward only: gradients ACCUMULATE into the two ops'
     /// flat buffers, the optimizer does not fire (the data-parallel
     /// engine reduces across replicas before [`Classifier::apply_step`]).
     pub fn accumulate_step(&mut self, x: &Mat, y: &[u32]) -> (f32, f32) {
-        // forward
-        let (h_pre, mix_tr) = self.mixer.forward_train(x);
-        let mut h = h_pre.clone();
-        for v in h.data.iter_mut() {
+        // forward (all intermediates live in the model-owned scratch)
+        let s = &mut self.scratch;
+        self.mixer.forward_train_into(x, &mut s.h_pre, &mut s.mix_tr);
+        s.h.rows = s.h_pre.rows;
+        s.h.cols = s.h_pre.cols;
+        s.h.data.clear();
+        s.h.data.extend_from_slice(&s.h_pre.data);
+        for v in s.h.data.iter_mut() {
             *v = v.max(0.0);
         }
-        let (logits, head_tr) = self.head.forward_train(&h);
-        let (loss, acc, glogits) = softmax_xent(&logits, y);
+        self.head.forward_train_into(&s.h, &mut s.logits, &mut s.head_tr);
+        let (loss, acc) = softmax_xent_into(&s.logits, y, &mut s.glogits);
 
         // backward (gradients accumulate inside each op)
-        let mut gh = self.head.backward(&h, &head_tr, &glogits);
-        for (g, pre) in gh.data.iter_mut().zip(&h_pre.data) {
+        self.head.backward_into(&s.h, &s.head_tr, &s.glogits, &mut s.gh);
+        for (g, pre) in s.gh.data.iter_mut().zip(&s.h_pre.data) {
             if *pre <= 0.0 {
                 *g = 0.0; // ReLU'
             }
         }
-        let _gx = self.mixer.backward(x, &mix_tr, &gh);
+        self.mixer.backward_into(x, &s.mix_tr, &s.gh, &mut s.gx);
         (loss, acc)
     }
 
@@ -104,6 +153,10 @@ impl Model for Classifier {
 
     fn forward(&self, x: &Mat) -> Mat {
         self.logits(x)
+    }
+
+    fn forward_into(&mut self, x: &Mat, out: &mut Mat) {
+        self.logits_into(x, out);
     }
 
     fn accumulate_step(&mut self, x: &Mat, target: &Target) -> (f32, f32) {
@@ -205,6 +258,20 @@ mod tests {
             last = clf.train_step(&x, &y).0;
         }
         assert!(last < first * 0.6, "{first} -> {last}");
+    }
+
+    #[test]
+    fn serving_forward_into_matches_forward() {
+        let (x, _y) = toy_problem(16, 4, 32, 9);
+        let cfg = LinearCfg::spm(16, Variant::General).with_schedule(Schedule::Shift);
+        let mut clf = Classifier::new(cfg, 4, 1e-3, 10);
+        let want = Model::forward(&clf, &x);
+        let mut got = Mat::zeros(0, 0);
+        clf.forward_into(&x, &mut got);
+        assert_eq!(want, got);
+        // second call reuses the scratch and must stay bit-identical
+        clf.forward_into(&x, &mut got);
+        assert_eq!(want, got);
     }
 
     #[test]

@@ -17,11 +17,14 @@
 //!   Compiled behind `feature = "simd"` + x86_64; selected at runtime via
 //!   [`simd_available`].
 //!
-//! Kernel coefficient access goes through a per-call `prepare` scratch
-//! whose layout is backend-private (scalar: interleaved `(cos, sin)` per
+//! Kernel coefficient access goes through a `prepare_into` scratch whose
+//! layout is backend-private (scalar: interleaved `(cos, sin)` per
 //! rotation pair; AVX2: lane-padded SoA tables for both variants), because
 //! the flat parameter buffer's interleaved mix layout is what a scalar
-//! loop wants but not what vector loads want.
+//! loop wants but not what vector loads want. The scratch is rebuilt into
+//! a caller-owned buffer — `LinearOp` caches it per op and invalidates on
+//! its params-version counter (DESIGN.md §15), so steady-state calls with
+//! unchanged parameters touch the allocator zero times.
 
 // The kernel signatures pass the plan, parameter/scratch/gradient buffers
 // and the tile blocks individually on purpose — bundling them into a
@@ -42,10 +45,22 @@ use super::plan::SpmPlan;
 /// gradient layout, and `scratch` is whatever [`StageBackend::prepare`]
 /// built for this call's parameters.
 pub trait StageBackend: Sync {
-    /// Backend-private per-call coefficient scratch, built once per
-    /// forward/backward call from the flat parameter buffer and shared
-    /// read-only by every thread.
-    fn prepare(&self, plan: &SpmPlan, params: &[f32]) -> Vec<f32>;
+    /// Backend-private coefficient scratch, rebuilt into `out` from the
+    /// flat parameter buffer and shared read-only by every thread. `out`
+    /// is a caller-owned reusable buffer (cleared here, capacity kept):
+    /// the steady-state path re-derives coefficients without allocating,
+    /// and `LinearOp` caches the result per op under a params-version
+    /// counter so unchanged parameters skip the rebuild entirely.
+    fn prepare_into(&self, plan: &SpmPlan, params: &[f32], out: &mut Vec<f32>);
+
+    /// Allocating convenience wrapper over [`StageBackend::prepare_into`]
+    /// — one-shot callers (tests, foreign-parameter FD probes) that have
+    /// no buffer to reuse.
+    fn prepare(&self, plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.prepare_into(plan, params, &mut out);
+        out
+    }
 
     /// Apply stage `l` in place to `block` (eqs. 5-6 / 10-11).
     fn stage_fwd_batch(
@@ -156,10 +171,12 @@ pub fn backend_for(exec: SpmExec) -> &'static dyn StageBackend {
 
 /// Per-stage interleaved (cos, sin) tables for the rotation variant —
 /// the scalar backend's `prepare` scratch AND the row-wise path's trig
-/// table; recomputed per call because the thetas change every step.
-pub(crate) fn rotation_trig(plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+/// table; rebuilt into a reusable buffer because the thetas change every
+/// optimizer step while the buffer's capacity does not.
+pub(crate) fn rotation_trig_into(plan: &SpmPlan, params: &[f32], cs: &mut Vec<f32>) {
     let lay = plan.layout;
-    let mut cs = Vec::with_capacity(2 * lay.num_stages * lay.mix_stride);
+    cs.clear();
+    cs.reserve(2 * lay.num_stages * lay.mix_stride);
     for l in 0..lay.num_stages {
         for &t in &params[lay.mix(l)] {
             let (s, c) = t.sin_cos();
@@ -167,6 +184,13 @@ pub(crate) fn rotation_trig(plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
             cs.push(s);
         }
     }
+}
+
+/// Allocating wrapper over [`rotation_trig_into`] for one-shot callers
+/// (the legacy row-wise path keeps its per-call table).
+pub(crate) fn rotation_trig(plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+    let mut cs = Vec::new();
+    rotation_trig_into(plan, params, &mut cs);
     cs
 }
 
@@ -213,10 +237,11 @@ pub(crate) fn lone_bwd(
 pub struct ScalarBackend;
 
 impl StageBackend for ScalarBackend {
-    fn prepare(&self, plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+    fn prepare_into(&self, plan: &SpmPlan, params: &[f32], out: &mut Vec<f32>) {
         match plan.variant {
-            Variant::Rotation => rotation_trig(plan, params),
-            Variant::General => Vec::new(),
+            Variant::Rotation => rotation_trig_into(plan, params, out),
+            // the general kernels read the interleaved mix block directly
+            Variant::General => out.clear(),
         }
     }
 

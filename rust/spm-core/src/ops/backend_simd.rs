@@ -13,9 +13,12 @@
 //! makes the zero padding safe even when a real pair in the same group
 //! touches coordinate 0.
 //!
-//! `prepare` deinterleaves the flat mix parameters into lane-padded SoA
-//! tables (general: `[a | b | c | d]` per stage; rotation: `[cos | sin]`)
-//! so coefficient loads are plain vector loads. In the backwards the
+//! `prepare_into` deinterleaves the flat mix parameters into lane-padded
+//! SoA tables (general: `[a | b | c | d]` per stage; rotation:
+//! `[cos | sin]`) so coefficient loads are plain vector loads; the table
+//! lives in a reusable buffer that `LinearOp` caches against its
+//! params-version counter, so steady-state kernel calls skip both the
+//! allocation and the deinterleave. In the backwards the
 //! per-pair coefficient gradients live in vector accumulators across the
 //! row loop and fold into the flat gradient buffer once per group.
 //!
@@ -41,21 +44,25 @@ pub static AVX2: Avx2Backend = Avx2Backend;
 pub struct Avx2Backend;
 
 impl StageBackend for Avx2Backend {
-    /// Lane-padded SoA coefficient tables. General: stage stride
-    /// `4 * lane_pairs`, groups `[a | b | c | d]`; rotation: stride
-    /// `2 * lane_pairs`, groups `[cos | sin]`. Padded lanes hold the
-    /// identity (a = d = 1 / cos = 1) so their computed values are
-    /// harmless even before the write-back skips them.
-    fn prepare(&self, plan: &SpmPlan, params: &[f32]) -> Vec<f32> {
+    /// Lane-padded SoA coefficient tables, rebuilt into the caller's
+    /// reusable buffer. General: stage stride `4 * lane_pairs`, groups
+    /// `[a | b | c | d]`; rotation: stride `2 * lane_pairs`, groups
+    /// `[cos | sin]`. Padded lanes hold the identity (a = d = 1 /
+    /// cos = 1) so their computed values are harmless even before the
+    /// write-back skips them. This used to allocate and re-deinterleave
+    /// on EVERY kernel call; `LinearOp`'s params-version cache now makes
+    /// the rebuild a once-per-optimizer-step event.
+    fn prepare_into(&self, plan: &SpmPlan, params: &[f32], out: &mut Vec<f32>) {
         let lp = plan.lane_pairs;
         let p = plan.num_pairs();
         let lay = plan.layout;
+        out.clear();
         match plan.variant {
             Variant::General => {
-                let mut soa = vec![0.0f32; plan.num_stages * 4 * lp];
+                out.resize(plan.num_stages * 4 * lp, 0.0);
                 for l in 0..plan.num_stages {
                     let m = &params[lay.mix(l)];
-                    let st = &mut soa[l * 4 * lp..(l + 1) * 4 * lp];
+                    let st = &mut out[l * 4 * lp..(l + 1) * 4 * lp];
                     for k in 0..p {
                         st[k] = m[4 * k];
                         st[lp + k] = m[4 * k + 1];
@@ -67,13 +74,12 @@ impl StageBackend for Avx2Backend {
                         st[3 * lp + k] = 1.0; // d
                     }
                 }
-                soa
             }
             Variant::Rotation => {
-                let mut soa = vec![0.0f32; plan.num_stages * 2 * lp];
+                out.resize(plan.num_stages * 2 * lp, 0.0);
                 for l in 0..plan.num_stages {
                     let m = &params[lay.mix(l)];
-                    let st = &mut soa[l * 2 * lp..(l + 1) * 2 * lp];
+                    let st = &mut out[l * 2 * lp..(l + 1) * 2 * lp];
                     for k in 0..p {
                         let (s, c) = m[k].sin_cos();
                         st[k] = c;
@@ -83,7 +89,6 @@ impl StageBackend for Avx2Backend {
                         st[k] = 1.0; // cos
                     }
                 }
-                soa
             }
         }
     }

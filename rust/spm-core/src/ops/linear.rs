@@ -20,6 +20,8 @@
 //! take the TRUE batch row count on every exec path — ragged serving
 //! micro-batches never pad.
 
+use std::cell::{Ref, RefCell};
+
 use crate::optim::Optimizer;
 use crate::pairing::Schedule;
 use crate::parallel;
@@ -29,6 +31,7 @@ use crate::tensor::{self, Mat};
 
 use super::backend::{self, rotation_trig, StageBackend};
 use super::plan::SpmPlan;
+use super::workspace::{BwdScratch, Prepared, Workspace};
 
 /// Which operator family a [`LinearOp`] executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -193,6 +196,19 @@ pub struct LinearOp {
     grads: Vec<f32>,
     slot: usize,
     exec: SpmExec,
+    /// Monotone counter bumped by every parameter write (`params_mut`,
+    /// `apply_grads`); [`Prepared`] caches invalidate against it
+    /// (DESIGN.md §15). Starts at 1 so an empty cache (version 0) is
+    /// always stale.
+    params_version: u64,
+    /// Cached backend-prepared coefficient table for the fused/SIMD
+    /// paths. `RefCell` because `forward` takes `&self`; the cache is
+    /// refreshed on the calling thread before any parallel region, and
+    /// the parallel closures only ever see the inner `&[f32]`.
+    prepared: RefCell<Prepared>,
+    /// Reusable backward scratch (per-chunk partials + reduce
+    /// accumulator).
+    ws: Workspace,
 }
 
 impl LinearOp {
@@ -224,6 +240,9 @@ impl LinearOp {
             grads,
             slot,
             exec: SpmExec::default(),
+            params_version: 1,
+            prepared: RefCell::new(Prepared::empty()),
+            ws: Workspace::new(),
         }
     }
 
@@ -279,7 +298,11 @@ impl LinearOp {
         &self.params
     }
 
+    /// Mutable parameter access. Bumps the params-version counter so the
+    /// prepared-coefficient cache rebuilds on the next forward/backward —
+    /// callers that only read should use [`LinearOp::params`].
     pub fn params_mut(&mut self) -> &mut [f32] {
+        self.params_version += 1;
         &mut self.params
     }
 
@@ -306,11 +329,51 @@ impl LinearOp {
 
     /// y = op(x); x is (B, d_in) -> (B, d_out).
     pub fn forward(&self, x: &Mat) -> Mat {
-        self.forward_with(&self.params, x)
+        let mut y = Mat { rows: 0, cols: 0, data: Vec::new() };
+        self.forward_into(x, &mut y);
+        y
+    }
+
+    /// [`LinearOp::forward`] into a caller-owned output buffer, reusing
+    /// the op's cached prepared-coefficient table: with a stable batch
+    /// shape the fused/SIMD paths perform zero steady-state allocations
+    /// (DESIGN.md §15). The row-wise path stays the allocating legacy
+    /// bench comparator.
+    pub fn forward_into(&self, x: &Mat, out: &mut Mat) {
+        match &self.imp {
+            OpImpl::Dense => {
+                assert_eq!(x.cols, self.d_in, "input width");
+                let wlen = self.d_out * self.d_in;
+                tensor::matmul_nt_slice_into(x, &self.params[..wlen], self.d_out, out);
+                tensor::add_bias(out, &self.params[wlen..]);
+            }
+            OpImpl::Spm(plan) => match self.exec {
+                SpmExec::RowWise => *out = spm_forward_rowwise(plan, &self.params, x),
+                e => {
+                    assert_eq!(x.cols, plan.n, "input width");
+                    let (be, simd) = resolved_backend(e);
+                    let prep = refresh_prepared(
+                        &self.prepared,
+                        plan,
+                        &self.params,
+                        self.params_version,
+                        be,
+                        simd,
+                    );
+                    out.rows = x.rows;
+                    out.cols = plan.n;
+                    out.data.clear();
+                    out.data.extend_from_slice(&x.data);
+                    spm_forward_fused_inplace(plan, be, &self.params, &prep.buf, &mut out.data);
+                }
+            },
+        }
     }
 
     /// Forward with an explicit (flat) parameter buffer — used by the
-    /// finite-difference tests; layout must match this op's.
+    /// finite-difference tests; layout must match this op's. Always
+    /// prepares coefficients fresh from `params` (the cache belongs to
+    /// the op's OWN parameter buffer and must not serve nudged copies).
     pub fn forward_with(&self, params: &[f32], x: &Mat) -> Mat {
         assert_eq!(params.len(), self.params.len(), "param buffer length");
         match &self.imp {
@@ -327,9 +390,41 @@ impl LinearOp {
 
     /// Forward keeping the residuals `backward` needs.
     pub fn forward_train(&self, x: &Mat) -> (Mat, LinearTrace) {
+        let mut y = Mat { rows: 0, cols: 0, data: Vec::new() };
+        let mut trace = LinearTrace::Dense;
+        self.forward_train_into(x, &mut y, &mut trace);
+        (y, trace)
+    }
+
+    /// [`LinearOp::forward_train`] into caller-owned output AND trace
+    /// buffers. Trace `Mat`s are reshaped in place when the variant
+    /// matches (the steady-state training case), so repeated microbatches
+    /// of the same shape allocate nothing on the fused/SIMD paths.
+    pub fn forward_train_into(&self, x: &Mat, out: &mut Mat, trace: &mut LinearTrace) {
         match &self.imp {
-            OpImpl::Dense => (self.forward(x), LinearTrace::Dense),
-            OpImpl::Spm(plan) => spm_forward_trace(plan, self.exec, &self.params, x),
+            OpImpl::Dense => {
+                self.forward_into(x, out);
+                *trace = LinearTrace::Dense;
+            }
+            OpImpl::Spm(plan) => match self.exec {
+                SpmExec::RowWise => {
+                    let (y, tr) = spm_forward_trace_rowwise(plan, &self.params, x);
+                    *out = y;
+                    *trace = tr;
+                }
+                e => {
+                    let (be, simd) = resolved_backend(e);
+                    let prep = refresh_prepared(
+                        &self.prepared,
+                        plan,
+                        &self.params,
+                        self.params_version,
+                        be,
+                        simd,
+                    );
+                    spm_forward_trace_fused_into(plan, be, &self.params, &prep.buf, x, out, trace);
+                }
+            },
         }
     }
 
@@ -337,13 +432,25 @@ impl LinearOp {
     /// gradient buffer (so repeated calls sum, e.g. across BPTT steps) and
     /// returns g_x. `x` is the input that produced `trace`.
     pub fn backward(&mut self, x: &Mat, trace: &LinearTrace, gy: &Mat) -> Mat {
+        let mut gx = Mat { rows: 0, cols: 0, data: Vec::new() };
+        self.backward_into(x, trace, gy, &mut gx);
+        gx
+    }
+
+    /// [`LinearOp::backward`] writing g_x into a caller-owned buffer. The
+    /// fused/SIMD paths run entirely out of the op's [`Workspace`]
+    /// (per-chunk partials, staged tiles, reduce accumulator), writing
+    /// g_x rows in place — zero steady-state allocations — while keeping
+    /// the exact two-phase chunk-ordered gradient reduction the
+    /// bit-identity suites pin down.
+    pub fn backward_into(&mut self, x: &Mat, trace: &LinearTrace, gy: &Mat, gx: &mut Mat) {
         assert_eq!(gy.rows, x.rows, "batch size");
         match (&self.imp, trace) {
             (OpImpl::Dense, LinearTrace::Dense) => {
                 assert_eq!(x.cols, self.d_in, "input width");
                 assert_eq!(gy.cols, self.d_out, "adjoint width");
                 let wlen = self.d_out * self.d_in;
-                let gx = tensor::matmul_slice(gy, &self.params[..wlen], self.d_in);
+                tensor::matmul_slice_into(gy, &self.params[..wlen], self.d_in, gx);
                 let (gw, gb) = self.grads.split_at_mut(wlen);
                 tensor::matmul_tn_accum(gy, x, gw);
                 for r in 0..gy.rows {
@@ -351,33 +458,124 @@ impl LinearOp {
                         *b += v;
                     }
                 }
-                gx
             }
-            (OpImpl::Spm(plan), LinearTrace::Rotation { z_last }) => {
-                let (gx, partial) =
-                    spm_backward_rotation(plan, self.exec, &self.params, x, z_last, gy);
-                for (g, p) in self.grads.iter_mut().zip(&partial) {
-                    *g += p;
+            (OpImpl::Spm(plan), LinearTrace::Rotation { z_last }) => match self.exec {
+                SpmExec::RowWise => {
+                    let (gxm, partial) =
+                        spm_backward_rotation_rowwise(plan, &self.params, x, z_last, gy);
+                    for (g, p) in self.grads.iter_mut().zip(&partial) {
+                        *g += p;
+                    }
+                    *gx = gxm;
                 }
-                gx
-            }
-            (OpImpl::Spm(plan), LinearTrace::General { zs }) => {
-                let (gx, partial) = spm_backward_general(plan, self.exec, &self.params, x, zs, gy);
-                for (g, p) in self.grads.iter_mut().zip(&partial) {
-                    *g += p;
+                e => {
+                    let (be, simd) = resolved_backend(e);
+                    let prep = refresh_prepared(
+                        &self.prepared,
+                        plan,
+                        &self.params,
+                        self.params_version,
+                        be,
+                        simd,
+                    );
+                    spm_backward_rotation_fused_into(
+                        plan,
+                        be,
+                        &self.params,
+                        &prep.buf,
+                        x,
+                        z_last,
+                        gy,
+                        &mut self.ws,
+                        &mut self.grads,
+                        gx,
+                    );
                 }
-                gx
-            }
+            },
+            (OpImpl::Spm(plan), LinearTrace::General { zs }) => match self.exec {
+                SpmExec::RowWise => {
+                    let (gxm, partial) =
+                        spm_backward_general_rowwise(plan, &self.params, x, zs, gy);
+                    for (g, p) in self.grads.iter_mut().zip(&partial) {
+                        *g += p;
+                    }
+                    *gx = gxm;
+                }
+                e => {
+                    let (be, simd) = resolved_backend(e);
+                    let prep = refresh_prepared(
+                        &self.prepared,
+                        plan,
+                        &self.params,
+                        self.params_version,
+                        be,
+                        simd,
+                    );
+                    spm_backward_general_fused_into(
+                        plan,
+                        be,
+                        &self.params,
+                        &prep.buf,
+                        x,
+                        zs,
+                        gy,
+                        &mut self.ws,
+                        &mut self.grads,
+                        gx,
+                    );
+                }
+            },
             _ => panic!("trace/op kind mismatch"),
         }
     }
 
     /// Apply the accumulated gradients with ONE flat optimizer call, then
-    /// clear the gradient buffer.
+    /// clear the gradient buffer. Bumps the params-version counter: the
+    /// update wrote new parameters, so cached prepared coefficients are
+    /// stale.
     pub fn apply_grads<O: Optimizer>(&mut self, opt: &mut O) {
         opt.update(self.slot, &mut self.params, &self.grads);
         self.grads.fill(0.0);
+        self.params_version += 1;
     }
+}
+
+/// Resolve a (non-row-wise) exec mode to its concrete stage backend plus
+/// the cache tag recording whether the AVX2 backend was chosen — its
+/// prepared-coefficient layout differs from the scalar one, so a cached
+/// table from the other backend must not be served.
+fn resolved_backend(exec: SpmExec) -> (&'static dyn StageBackend, bool) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if exec == SpmExec::Simd && backend::simd_available() {
+            return (&super::backend_simd::AVX2, true);
+        }
+    }
+    let _ = exec;
+    (backend::backend_for(SpmExec::BatchFused), false)
+}
+
+/// Refresh an op's [`Prepared`] cache if its params-version or backend
+/// tag is stale, then hand back a shared borrow. Runs on the calling
+/// thread BEFORE any parallel region; the returned guard only feeds
+/// `&prep.buf` slices into the kernels.
+fn refresh_prepared<'a>(
+    cache: &'a RefCell<Prepared>,
+    plan: &SpmPlan,
+    params: &[f32],
+    version: u64,
+    be: &dyn StageBackend,
+    simd: bool,
+) -> Ref<'a, Prepared> {
+    {
+        let mut p = cache.borrow_mut();
+        if p.version != version || p.simd != simd {
+            be.prepare_into(plan, params, &mut p.buf);
+            p.version = version;
+            p.simd = simd;
+        }
+    }
+    cache.borrow()
 }
 
 /// Apply stage `l` in place on one row (planned path, flat params).
@@ -449,31 +647,46 @@ fn spm_forward(plan: &SpmPlan, exec: SpmExec, params: &[f32], x: &Mat) -> Mat {
     }
 }
 
-/// Batch-fused forward: each thread owns a row block; inside it the block
-/// is cut into `plan.fused_rows` tiles and every stage is applied to a
-/// tile before moving on, so activations stay L2-resident across the
-/// whole D_in -> stages -> D_out sweep. The per-stage kernel is whatever
-/// [`StageBackend`] the exec mode resolved to (DESIGN.md §12).
+/// Batch-fused forward for a FOREIGN parameter buffer (the FD tests'
+/// `forward_with` path): prepares coefficients fresh, then runs the
+/// shared in-place body.
 fn spm_forward_fused(plan: &SpmPlan, be: &dyn StageBackend, params: &[f32], x: &Mat) -> Mat {
     assert_eq!(x.cols, plan.n, "input width");
+    let scratch = be.prepare(plan, params);
+    let mut z = x.clone();
+    spm_forward_fused_inplace(plan, be, params, &scratch, &mut z.data);
+    z
+}
+
+/// Batch-fused forward body: `data` already holds the input rows and is
+/// transformed in place. Each thread owns a row block; inside it the
+/// block is cut into `plan.fused_rows` tiles and every stage is applied
+/// to a tile before moving on, so activations stay L2-resident across
+/// the whole D_in -> stages -> D_out sweep. The per-stage kernel is
+/// whatever [`StageBackend`] the exec mode resolved to (DESIGN.md §12);
+/// `scratch` is that backend's prepared coefficient table.
+fn spm_forward_fused_inplace(
+    plan: &SpmPlan,
+    be: &dyn StageBackend,
+    params: &[f32],
+    scratch: &[f32],
+    data: &mut [f32],
+) {
     let n = plan.n;
     let lay = plan.layout;
     let d_in = &params[lay.d_in()];
     let d_out = &params[lay.d_out()];
     let bias = &params[lay.bias()];
-    let scratch = be.prepare(plan, params);
     let tile = plan.fused_rows * n;
-    let mut z = x.clone();
-    parallel::for_each_chunk(&mut z.data, n, |_first, chunk| {
+    parallel::for_each_chunk(data, n, |_first, chunk| {
         for block in chunk.chunks_mut(tile) {
             scale_rows(block, n, d_in);
             for l in 0..plan.num_stages {
-                be.stage_fwd_batch(plan, params, &scratch, l, block); // eq. (3)
+                be.stage_fwd_batch(plan, params, scratch, l, block); // eq. (3)
             }
             finish_rows(block, n, d_out, bias);
         }
     });
-    z
 }
 
 fn spm_forward_rowwise(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
@@ -505,24 +718,32 @@ fn spm_forward_rowwise(plan: &SpmPlan, params: &[f32], x: &Mat) -> Mat {
     z
 }
 
-fn spm_forward_trace(plan: &SpmPlan, exec: SpmExec, params: &[f32], x: &Mat) -> (Mat, LinearTrace) {
-    match exec {
-        SpmExec::RowWise => spm_forward_trace_rowwise(plan, params, x),
-        _ => spm_forward_trace_fused(plan, backend::backend_for(exec), params, x),
-    }
+/// Reshape a `Mat` in place (clear + zero-resize): allocation-free once
+/// its capacity matches the steady-state shape.
+fn reshape_mat(m: &mut Mat, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.clear();
+    m.data.resize(rows * cols, 0.0);
 }
 
-/// Batch-fused training forward. One parallel region for the whole sweep:
-/// each thread walks its row block tile by tile, applies all stages to the
-/// hot tile, and writes the residuals `backward` needs (rotation: z_L;
-/// general: every stage input) into per-stage buffers at the same row
-/// offsets via `parallel::for_each_chunk_with`.
-fn spm_forward_trace_fused(
+/// Batch-fused training forward into caller-owned output and trace
+/// buffers. One parallel region for the whole sweep: each thread walks
+/// its row block tile by tile, applies all stages to the hot tile, and
+/// writes the residuals `backward` needs (rotation: z_L; general: every
+/// stage input) into per-stage buffers at the same row offsets via
+/// `parallel::for_each_chunk_with`. Trace `Mat`s are reshaped in place
+/// when the incoming `trace` already carries the right variant, so
+/// steady-state training reuses them verbatim.
+fn spm_forward_trace_fused_into(
     plan: &SpmPlan,
     be: &dyn StageBackend,
     params: &[f32],
+    scratch: &[f32],
     x: &Mat,
-) -> (Mat, LinearTrace) {
+    out: &mut Mat,
+    trace: &mut LinearTrace,
+) {
     assert_eq!(x.cols, plan.n, "input width");
     let n = plan.n;
     let rows = x.rows;
@@ -530,14 +751,21 @@ fn spm_forward_trace_fused(
     let d_in = &params[lay.d_in()];
     let d_out = &params[lay.d_out()];
     let bias = &params[lay.bias()];
-    let scratch = be.prepare(plan, params);
     let tile = plan.fused_rows * n;
+    out.rows = rows;
+    out.cols = n;
+    out.data.clear();
+    out.data.extend_from_slice(&x.data);
     match plan.variant {
         Variant::Rotation => {
-            let mut z = x.clone();
-            let mut z_last = Mat::zeros(rows, n);
+            if !matches!(trace, LinearTrace::Rotation { .. }) {
+                *trace =
+                    LinearTrace::Rotation { z_last: Mat { rows: 0, cols: 0, data: Vec::new() } };
+            }
+            let LinearTrace::Rotation { z_last } = trace else { unreachable!() };
+            reshape_mat(z_last, rows, n);
             parallel::for_each_chunk_with(
-                &mut z.data,
+                &mut out.data,
                 &mut [&mut z_last.data],
                 n,
                 |_f, chunk, snaps| {
@@ -545,7 +773,7 @@ fn spm_forward_trace_fused(
                     for block in chunk.chunks_mut(tile) {
                         scale_rows(block, n, d_in);
                         for l in 0..plan.num_stages {
-                            be.stage_fwd_batch(plan, params, &scratch, l, block);
+                            be.stage_fwd_batch(plan, params, scratch, l, block);
                         }
                         snaps[0][off..off + block.len()].copy_from_slice(block);
                         finish_rows(block, n, d_out, bias);
@@ -553,33 +781,41 @@ fn spm_forward_trace_fused(
                     }
                 },
             );
-            (z, LinearTrace::Rotation { z_last })
         }
         Variant::General => {
             // zs[0] = D_in x and zs[l+1] = stage-l output, all written
             // while the tile is hot — no per-stage barrier, no separate
             // scale/finish passes. The per-stage trace kernel captures
             // the stage output as part of the stage sweep.
-            let mut z = x.clone();
-            let mut zs: Vec<Mat> = (0..=plan.num_stages).map(|_| Mat::zeros(rows, n)).collect();
+            if !matches!(trace, LinearTrace::General { .. }) {
+                *trace = LinearTrace::General { zs: Vec::new() };
+            }
+            let LinearTrace::General { zs } = trace else { unreachable!() };
+            if zs.len() != plan.num_stages + 1 {
+                zs.resize_with(plan.num_stages + 1, || Mat { rows: 0, cols: 0, data: Vec::new() });
+            }
+            for m in zs.iter_mut() {
+                reshape_mat(m, rows, n);
+            }
             {
+                // the only remaining per-call allocation on this path: a
+                // Vec of L+1 slice handles (documented in DESIGN.md §15)
                 let mut extras: Vec<&mut [f32]> =
                     zs.iter_mut().map(|m| m.data.as_mut_slice()).collect();
-                parallel::for_each_chunk_with(&mut z.data, &mut extras, n, |_f, chunk, snaps| {
+                parallel::for_each_chunk_with(&mut out.data, &mut extras, n, |_f, chunk, snaps| {
                     let mut off = 0;
                     for block in chunk.chunks_mut(tile) {
                         scale_rows(block, n, d_in);
                         snaps[0][off..off + block.len()].copy_from_slice(block);
                         for l in 0..plan.num_stages {
                             let snap = &mut snaps[l + 1][off..off + block.len()];
-                            be.stage_fwd_batch_trace(plan, params, &scratch, l, block, snap);
+                            be.stage_fwd_batch_trace(plan, params, scratch, l, block, snap);
                         }
                         finish_rows(block, n, d_out, bias);
                         off += block.len();
                     }
                 });
             }
-            (z, LinearTrace::General { zs })
         }
     }
 }
@@ -644,89 +880,92 @@ fn spm_forward_trace_rowwise(plan: &SpmPlan, params: &[f32], x: &Mat) -> (Mat, L
     }
 }
 
-/// Rotation backward (paper §4, DESIGN.md §8) on flat buffers. Returns
-/// (g_x, flat parameter-gradient contribution).
-fn spm_backward_rotation(
-    plan: &SpmPlan,
-    exec: SpmExec,
-    params: &[f32],
-    x: &Mat,
-    z_last: &Mat,
-    gy: &Mat,
-) -> (Mat, Vec<f32>) {
-    match exec {
-        SpmExec::RowWise => spm_backward_rotation_rowwise(plan, params, x, z_last, gy),
-        _ => spm_backward_rotation_fused(plan, backend::backend_for(exec), params, x, z_last, gy),
-    }
-}
-
-/// Batch-fused rotation backward: per-thread row ranges, swept in
-/// `fused_rows` tiles; each reverse stage runs pair-major over the whole
-/// tile's adjoint AND recomputed-activation blocks.
-fn spm_backward_rotation_fused(
+/// Batch-fused rotation backward (paper §4, DESIGN.md §8) out of the
+/// op's [`Workspace`]: per-chunk row ranges swept in `fused_rows` tiles,
+/// each reverse stage pair-major over the whole tile's adjoint AND
+/// recomputed-activation blocks. Chunk `t` writes its g_x rows directly
+/// into the caller's (pre-sized) `gx` and its parameter-gradient partial
+/// into `ws.bwd[t].grads`; the reduction afterwards sums partials in
+/// chunk order into `ws.acc` and then adds `acc` to `grads` once — the
+/// same two-phase arithmetic the old collect-then-reduce produced, so
+/// gradients stay bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn spm_backward_rotation_fused_into(
     plan: &SpmPlan,
     be: &dyn StageBackend,
     params: &[f32],
+    scratch: &[f32],
     x: &Mat,
     z_last: &Mat,
     gy: &Mat,
-) -> (Mat, Vec<f32>) {
+    ws: &mut Workspace,
+    grads: &mut [f32],
+    gx: &mut Mat,
+) {
     let n = plan.n;
     let ls = plan.num_stages;
     let lay = plan.layout;
     let d_in = &params[lay.d_in()];
     let d_out = &params[lay.d_out()];
-    let scratch = be.prepare(plan, params);
     let rows = gy.rows;
     let (o_din, o_dout, o_bias) = (lay.d_in().start, lay.d_out().start, lay.bias().start);
 
-    let gx = Mat::zeros(rows, n);
-    let partials = parallel::map_row_ranges(rows, |_t, range| {
-        let lo = range.start;
-        let mut grads = vec![0.0f32; lay.total];
-        let mut gx_chunk = vec![0.0f32; range.len() * n];
-        let tile_rows = plan.fused_rows.min(range.len().max(1));
-        let mut g = vec![0.0f32; tile_rows * n];
-        let mut z = vec![0.0f32; tile_rows * n];
-        let mut r0 = range.start;
-        while r0 < range.end {
-            let rt = tile_rows.min(range.end - r0);
-            let g_blk = &mut g[..rt * n];
-            let z_blk = &mut z[..rt * n];
-            // eqs. (15)-(17) row by row, filling the tile's blocks
-            for ri in 0..rt {
-                let r = r0 + ri;
-                let gyr = gy.row(r);
-                let zl = z_last.row(r);
-                z_blk[ri * n..(ri + 1) * n].copy_from_slice(zl);
-                let grow = &mut g_blk[ri * n..(ri + 1) * n];
-                for i in 0..n {
-                    grads[o_bias + i] += gyr[i];
-                    grads[o_dout + i] += gyr[i] * zl[i];
-                    grow[i] = gyr[i] * d_out[i];
+    reshape_mat(gx, rows, n);
+    let used = parallel::for_each_chunk_scratch(
+        &mut gx.data,
+        n,
+        &mut ws.bwd,
+        BwdScratch::default,
+        |_t, first, gx_chunk, s| {
+            let chunk_rows = gx_chunk.len() / n;
+            let end = first + chunk_rows;
+            s.grads.clear();
+            s.grads.resize(lay.total, 0.0);
+            let tile_rows = plan.fused_rows.min(chunk_rows.max(1));
+            s.g.clear();
+            s.g.resize(tile_rows * n, 0.0);
+            s.z.clear();
+            s.z.resize(tile_rows * n, 0.0);
+            let grads = &mut s.grads;
+            let mut r0 = first;
+            while r0 < end {
+                let rt = tile_rows.min(end - r0);
+                let g_blk = &mut s.g[..rt * n];
+                let z_blk = &mut s.z[..rt * n];
+                // eqs. (15)-(17) row by row, filling the tile's blocks
+                for ri in 0..rt {
+                    let r = r0 + ri;
+                    let gyr = gy.row(r);
+                    let zl = z_last.row(r);
+                    z_blk[ri * n..(ri + 1) * n].copy_from_slice(zl);
+                    let grow = &mut g_blk[ri * n..(ri + 1) * n];
+                    for i in 0..n {
+                        grads[o_bias + i] += gyr[i];
+                        grads[o_dout + i] += gyr[i] * zl[i];
+                        grow[i] = gyr[i] * d_out[i];
+                    }
                 }
-            }
-            // stages in reverse, batched over the tile
-            for l in (0..ls).rev() {
-                be.stage_bwd_batch_rotation(plan, &scratch, l, g_blk, z_blk, &mut grads);
-            }
-            // eqs. (18)-(19)
-            for ri in 0..rt {
-                let r = r0 + ri;
-                let xr = x.row(r);
-                let grow = &g_blk[ri * n..(ri + 1) * n];
-                let gxr = &mut gx_chunk[(r - lo) * n..(r - lo + 1) * n];
-                for i in 0..n {
-                    grads[o_din + i] += grow[i] * xr[i];
-                    gxr[i] = grow[i] * d_in[i];
+                // stages in reverse, batched over the tile
+                for l in (0..ls).rev() {
+                    be.stage_bwd_batch_rotation(plan, scratch, l, g_blk, z_blk, grads);
                 }
+                // eqs. (18)-(19)
+                for ri in 0..rt {
+                    let r = r0 + ri;
+                    let xr = x.row(r);
+                    let grow = &g_blk[ri * n..(ri + 1) * n];
+                    let gxr = &mut gx_chunk[(r - first) * n..(r - first + 1) * n];
+                    for i in 0..n {
+                        grads[o_din + i] += grow[i] * xr[i];
+                        gxr[i] = grow[i] * d_in[i];
+                    }
+                }
+                r0 += rt;
             }
-            r0 += rt;
-        }
-        (grads, lo, gx_chunk)
-    });
+        },
+    );
 
-    reduce_partials(lay.total, partials, gx)
+    reduce_workspace(ws, used, lay.total, grads);
 }
 
 fn spm_backward_rotation_rowwise(
@@ -798,84 +1037,83 @@ fn spm_backward_rotation_rowwise(
     reduce_partials(lay.total, partials, gx)
 }
 
-/// General backward (paper §4) on flat buffers.
-fn spm_backward_general(
-    plan: &SpmPlan,
-    exec: SpmExec,
-    params: &[f32],
-    x: &Mat,
-    zs: &[Mat],
-    gy: &Mat,
-) -> (Mat, Vec<f32>) {
-    match exec {
-        SpmExec::RowWise => spm_backward_general_rowwise(plan, params, x, zs, gy),
-        _ => spm_backward_general_fused(plan, backend::backend_for(exec), params, x, zs, gy),
-    }
-}
-
-/// Batch-fused general backward: per-thread row ranges in `fused_rows`
-/// tiles; each reverse stage reads the matching rows of the stage-input
-/// trace (`zs[l]`) directly — the trace rows of one tile are contiguous,
-/// so no copy is needed.
-fn spm_backward_general_fused(
+/// Batch-fused general backward (paper §4) out of the op's
+/// [`Workspace`]: per-chunk row ranges in `fused_rows` tiles; each
+/// reverse stage reads the matching rows of the stage-input trace
+/// (`zs[l]`) directly — the trace rows of one tile are contiguous, so no
+/// copy is needed. Same in-place g_x / chunk-ordered two-phase reduction
+/// contract as [`spm_backward_rotation_fused_into`].
+#[allow(clippy::too_many_arguments)]
+fn spm_backward_general_fused_into(
     plan: &SpmPlan,
     be: &dyn StageBackend,
     params: &[f32],
+    scratch: &[f32],
     x: &Mat,
     zs: &[Mat],
     gy: &Mat,
-) -> (Mat, Vec<f32>) {
+    ws: &mut Workspace,
+    grads: &mut [f32],
+    gx: &mut Mat,
+) {
     let n = plan.n;
     let ls = plan.num_stages;
     let lay = plan.layout;
     let d_in = &params[lay.d_in()];
     let d_out = &params[lay.d_out()];
-    let scratch = be.prepare(plan, params);
     let rows = gy.rows;
     let (o_din, o_dout, o_bias) = (lay.d_in().start, lay.d_out().start, lay.bias().start);
 
-    let gx = Mat::zeros(rows, n);
-    let partials = parallel::map_row_ranges(rows, |_t, range| {
-        let lo = range.start;
-        let mut grads = vec![0.0f32; lay.total];
-        let mut gx_chunk = vec![0.0f32; range.len() * n];
-        let tile_rows = plan.fused_rows.min(range.len().max(1));
-        let mut g = vec![0.0f32; tile_rows * n];
-        let mut r0 = range.start;
-        while r0 < range.end {
-            let rt = tile_rows.min(range.end - r0);
-            let g_blk = &mut g[..rt * n];
-            for ri in 0..rt {
-                let r = r0 + ri;
-                let gyr = gy.row(r);
-                let zl = zs[ls].row(r);
-                let grow = &mut g_blk[ri * n..(ri + 1) * n];
-                for i in 0..n {
-                    grads[o_bias + i] += gyr[i];
-                    grads[o_dout + i] += gyr[i] * zl[i];
-                    grow[i] = gyr[i] * d_out[i];
+    reshape_mat(gx, rows, n);
+    let used = parallel::for_each_chunk_scratch(
+        &mut gx.data,
+        n,
+        &mut ws.bwd,
+        BwdScratch::default,
+        |_t, first, gx_chunk, s| {
+            let chunk_rows = gx_chunk.len() / n;
+            let end = first + chunk_rows;
+            s.grads.clear();
+            s.grads.resize(lay.total, 0.0);
+            let tile_rows = plan.fused_rows.min(chunk_rows.max(1));
+            s.g.clear();
+            s.g.resize(tile_rows * n, 0.0);
+            let grads = &mut s.grads;
+            let mut r0 = first;
+            while r0 < end {
+                let rt = tile_rows.min(end - r0);
+                let g_blk = &mut s.g[..rt * n];
+                for ri in 0..rt {
+                    let r = r0 + ri;
+                    let gyr = gy.row(r);
+                    let zl = zs[ls].row(r);
+                    let grow = &mut g_blk[ri * n..(ri + 1) * n];
+                    for i in 0..n {
+                        grads[o_bias + i] += gyr[i];
+                        grads[o_dout + i] += gyr[i] * zl[i];
+                        grow[i] = gyr[i] * d_out[i];
+                    }
                 }
-            }
-            for l in (0..ls).rev() {
-                let zin = &zs[l].data[r0 * n..(r0 + rt) * n];
-                be.stage_bwd_batch(plan, params, &scratch, l, g_blk, zin, &mut grads);
-            }
-            for ri in 0..rt {
-                let r = r0 + ri;
-                let xr = x.row(r);
-                let grow = &g_blk[ri * n..(ri + 1) * n];
-                let gxr = &mut gx_chunk[(r - lo) * n..(r - lo + 1) * n];
-                for i in 0..n {
-                    grads[o_din + i] += grow[i] * xr[i];
-                    gxr[i] = grow[i] * d_in[i];
+                for l in (0..ls).rev() {
+                    let zin = &zs[l].data[r0 * n..(r0 + rt) * n];
+                    be.stage_bwd_batch(plan, params, scratch, l, g_blk, zin, grads);
                 }
+                for ri in 0..rt {
+                    let r = r0 + ri;
+                    let xr = x.row(r);
+                    let grow = &g_blk[ri * n..(ri + 1) * n];
+                    let gxr = &mut gx_chunk[(r - first) * n..(r - first + 1) * n];
+                    for i in 0..n {
+                        grads[o_din + i] += grow[i] * xr[i];
+                        gxr[i] = grow[i] * d_in[i];
+                    }
+                }
+                r0 += rt;
             }
-            r0 += rt;
-        }
-        (grads, lo, gx_chunk)
-    });
+        },
+    );
 
-    reduce_partials(lay.total, partials, gx)
+    reduce_workspace(ws, used, lay.total, grads);
 }
 
 fn spm_backward_general_rowwise(
@@ -948,6 +1186,25 @@ fn spm_backward_general_rowwise(
     });
 
     reduce_partials(lay.total, partials, gx)
+}
+
+/// Phase-two reduction for the workspace-backed fused backwards: sum the
+/// first `used` per-chunk partials into `ws.acc` IN CHUNK ORDER, then add
+/// the accumulator to the op's gradient buffer once. Identical summation
+/// order (and therefore identical f32 rounding) to [`reduce_partials`]
+/// followed by the caller's `grads += partial` — starting from a zeroed
+/// accumulator, `0 + p` is exactly `p`.
+fn reduce_workspace(ws: &mut Workspace, used: usize, total: usize, grads: &mut [f32]) {
+    ws.acc.clear();
+    ws.acc.resize(total, 0.0);
+    for s in &ws.bwd[..used] {
+        for (a, b) in ws.acc.iter_mut().zip(&s.grads) {
+            *a += b;
+        }
+    }
+    for (g, a) in grads.iter_mut().zip(&ws.acc) {
+        *g += a;
+    }
 }
 
 /// (flat param-grad partial, first row index, contiguous g_x block)

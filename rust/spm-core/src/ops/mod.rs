@@ -7,7 +7,9 @@ pub mod backend;
 pub mod backend_simd;
 pub mod linear;
 pub mod plan;
+pub mod workspace;
 
 pub use backend::{ScalarBackend, StageBackend};
 pub use linear::{LinearCfg, LinearKind, LinearOp, LinearTrace, SpmExec};
 pub use plan::{ParamLayout, SpmPlan, PAIR_LANES};
+pub use workspace::{BwdScratch, Prepared, Workspace};

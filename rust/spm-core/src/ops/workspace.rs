@@ -1,0 +1,77 @@
+//! Reusable scratch buffers for the planned-operator hot paths
+//! (DESIGN.md §15).
+//!
+//! Every `LinearOp` owns one [`Workspace`] plus one [`Prepared`] cache.
+//! The contract:
+//!
+//! * **The op allocates, the call reuses.** All buffers here grow on first
+//!   use (or when the batch shape grows) and are then recycled verbatim by
+//!   every later `forward_into` / `forward_train_into` / `backward_into`
+//!   call, so steady-state traffic through an op performs zero heap
+//!   allocations on the fused and SIMD execution paths.
+//! * **Per-thread scratch is indexed by chunk id.** The fused backward
+//!   splits the batch into at most `parallel::num_threads()` row chunks;
+//!   chunk `t` gets exclusive `&mut` access to `Workspace::bwd[t]` for the
+//!   duration of the parallel region, so no locking is needed and the
+//!   per-thread partial gradients are reduced afterwards in chunk order —
+//!   preserving the bit-exact two-phase reduction the determinism tests
+//!   pin down.
+//! * **The prepared cache is invalidated by a params-version counter.**
+//!   [`Prepared::version`] is compared against `LinearOp`'s counter, which
+//!   is bumped by every parameter write (`params_mut`, `apply_grads`).
+//!   The cache also keys on which backend built it (`simd`), because the
+//!   scalar and AVX2 coefficient layouts differ.
+//!
+//! Buffers are cleared with `clear()` + `resize(_, 0.0)` rather than
+//! reallocated: once capacity matches the steady-state shape, both calls
+//! are allocation-free.
+
+/// Per-chunk scratch for one fused backward region: the thread-local
+/// parameter-gradient partial plus the gy/z tile staging buffers that the
+/// tile sweep previously allocated per call.
+#[derive(Default)]
+pub struct BwdScratch {
+    /// Thread-local parameter-gradient partial (`ParamLayout::total` long).
+    pub grads: Vec<f32>,
+    /// Staged gy tile (`fused_rows * n` at most).
+    pub g: Vec<f32>,
+    /// Staged pre-output activations tile (rotation backward only).
+    pub z: Vec<f32>,
+}
+
+/// Reusable scratch owned by one `LinearOp`.
+#[derive(Default)]
+pub struct Workspace {
+    /// Per-chunk backward scratch; grown to the number of row chunks the
+    /// parallel split actually produces, never shrunk.
+    pub bwd: Vec<BwdScratch>,
+    /// Phase-two accumulator for the deterministic gradient reduction
+    /// (`acc = Σ_t bwd[t].grads`, then `grads += acc`).
+    pub acc: Vec<f32>,
+}
+
+impl Workspace {
+    pub const fn new() -> Workspace {
+        Workspace { bwd: Vec::new(), acc: Vec::new() }
+    }
+}
+
+/// Cached backend-prepared coefficient table (trig pairs for rotation
+/// plans, SoA mix lanes for the AVX2 backend), rebuilt only when the
+/// owning op's parameters change or the resolved backend switches.
+pub struct Prepared {
+    /// Params version the table was built from; 0 means "never built"
+    /// (ops start their counter at 1).
+    pub version: u64,
+    /// Whether the AVX2 backend built the table (its layout differs from
+    /// the scalar one).
+    pub simd: bool,
+    /// The prepared coefficient table itself.
+    pub buf: Vec<f32>,
+}
+
+impl Prepared {
+    pub const fn empty() -> Prepared {
+        Prepared { version: 0, simd: false, buf: Vec::new() }
+    }
+}

@@ -126,6 +126,59 @@ where
     });
 }
 
+/// Like [`for_each_chunk`], but hands chunk `t` exclusive access to
+/// `scratch[t]` alongside its rows: the zero-allocation replacement for
+/// [`map_row_ranges`] in the fused backward. Callers pre-size `data` to
+/// the full output, keep one scratch slot per chunk alive across calls,
+/// and reduce `scratch[..returned]` afterwards in chunk order — the same
+/// deterministic order [`map_row_ranges`] joined its partials in, so the
+/// two-phase gradient reduction stays bit-identical. The row split is the
+/// same `rows.div_ceil(nt)` partition both other helpers use. Scratch
+/// slots are created with `mk` on demand and never shrunk. Returns the
+/// number of chunks actually run.
+pub fn for_each_chunk_scratch<S, F>(
+    data: &mut [f32],
+    row_len: usize,
+    scratch: &mut Vec<S>,
+    mk: impl FnMut() -> S,
+    f: F,
+) -> usize
+where
+    S: Send,
+    F: Fn(usize, usize, &mut [f32], &mut S) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+    let nt = num_threads().min(rows.max(1));
+    if scratch.len() < nt {
+        scratch.resize_with(nt, mk);
+    }
+    if nt <= 1 {
+        f(0, 0, data, &mut scratch[0]);
+        return 1;
+    }
+    let rows_per = rows.div_ceil(nt);
+    let mut used = 0;
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut srest = &mut scratch[..];
+        let mut start_row = 0;
+        while !rest.is_empty() {
+            let take = (rows_per * row_len).min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let (slot, stail) = srest.split_first_mut().unwrap();
+            srest = stail;
+            let fr = &f;
+            let sr = start_row;
+            let ti = used;
+            scope.spawn(move || fr(ti, sr, chunk, slot));
+            start_row += take / row_len;
+            used += 1;
+        }
+    });
+    used
+}
+
 /// Run `f(thread_idx, row_range)` over `rows` rows in parallel and collect
 /// one partial result per thread (for gradient-accumulator reduction).
 pub fn map_row_ranges<T, F>(rows: usize, f: F) -> Vec<T>
@@ -265,6 +318,34 @@ mod tests {
         let parts = with_thread_budget(3, || map_row_ranges(9, |_t, r| r));
         assert_eq!(parts.len(), 3, "budget 3 over 9 rows = 3 ranges");
         assert_eq!(parts.iter().map(|r| r.len()).sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn chunk_scratch_splits_like_map_ranges_and_reuses_slots() {
+        let mut data = vec![0.0f32; 9 * 2];
+        let mut scratch: Vec<Vec<usize>> = Vec::new();
+        let used = with_thread_budget(3, || {
+            for_each_chunk_scratch(&mut data, 2, &mut scratch, Vec::new, |t, first, chunk, s| {
+                s.push(t);
+                s.push(first);
+                s.push(chunk.len() / 2);
+            })
+        });
+        assert_eq!(used, 3, "budget 3 over 9 rows = 3 chunks");
+        assert_eq!(scratch.len(), 3);
+        for (t, slot) in scratch.iter().enumerate() {
+            assert_eq!(slot, &vec![t, t * 3, 3], "chunk {t} rows/order");
+        }
+        let used2 = with_thread_budget(1, || {
+            for_each_chunk_scratch(&mut data, 2, &mut scratch, Vec::new, |t, first, chunk, s| {
+                assert_eq!((t, first), (0, 0));
+                assert_eq!(chunk.len(), 9 * 2, "single chunk sees everything");
+                s.push(99);
+            })
+        });
+        assert_eq!(used2, 1);
+        assert_eq!(scratch.len(), 3, "slots are never shrunk");
+        assert_eq!(scratch[0].last(), Some(&99), "slot 0 was reused in place");
     }
 
     #[test]

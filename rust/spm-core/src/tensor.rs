@@ -87,9 +87,20 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 /// [`matmul`] against a flat row-major (a.cols, n) right operand — the
 /// shape the flat-buffer `ops::LinearOp` stores its dense weights in.
 pub fn matmul_slice(a: &Mat, b: &[f32], n: usize) -> Mat {
+    let mut c = Mat { rows: 0, cols: 0, data: Vec::new() };
+    matmul_slice_into(a, b, n, &mut c);
+    c
+}
+
+/// [`matmul_slice`] into a caller-owned output, reshaped and zeroed in
+/// place so repeated calls with a stable shape never allocate.
+pub fn matmul_slice_into(a: &Mat, b: &[f32], n: usize, c: &mut Mat) {
     let (m, k) = (a.rows, a.cols);
     assert_eq!(b.len(), k * n, "matmul_slice inner dims");
-    let mut c = Mat::zeros(m, n);
+    c.rows = m;
+    c.cols = n;
+    c.data.clear();
+    c.data.resize(m * n, 0.0);
     const KB: usize = 64;
     parallel::for_each_chunk(&mut c.data, n, |i0, crows| {
         for (di, crow) in crows.chunks_mut(n).enumerate() {
@@ -110,7 +121,6 @@ pub fn matmul_slice(a: &Mat, b: &[f32], n: usize) -> Mat {
             }
         }
     });
-    c
 }
 
 /// C = A (m,k) * B^T where B is (n,k): the "x @ W^T" shape of a linear layer.
@@ -122,9 +132,20 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 
 /// [`matmul_nt`] against a flat row-major (n, a.cols) weight slice.
 pub fn matmul_nt_slice(a: &Mat, w: &[f32], n: usize) -> Mat {
+    let mut c = Mat { rows: 0, cols: 0, data: Vec::new() };
+    matmul_nt_slice_into(a, w, n, &mut c);
+    c
+}
+
+/// [`matmul_nt_slice`] into a caller-owned output, reshaped in place so
+/// repeated calls with a stable shape never allocate.
+pub fn matmul_nt_slice_into(a: &Mat, w: &[f32], n: usize, c: &mut Mat) {
     let (m, k) = (a.rows, a.cols);
     assert_eq!(w.len(), n * k, "matmul_nt_slice inner dims");
-    let mut c = Mat::zeros(m, n);
+    c.rows = m;
+    c.cols = n;
+    c.data.clear();
+    c.data.resize(m * n, 0.0);
     parallel::for_each_chunk(&mut c.data, n, |i0, crows| {
         for (di, crow) in crows.chunks_mut(n).enumerate() {
             let arow = a.row(i0 + di);
@@ -151,7 +172,6 @@ pub fn matmul_nt_slice(a: &Mat, w: &[f32], n: usize) -> Mat {
             }
         }
     });
-    c
 }
 
 /// C = A^T (k,m)^T=(m,k)... precisely: A is (k,m), B is (k,n), returns (m,n)
@@ -202,14 +222,21 @@ pub fn add_bias(y: &mut Mat, bias: &[f32]) {
 
 /// Column-wise sum (the bias gradient).
 pub fn col_sum(m: &Mat) -> Vec<f32> {
-    let mut s = vec![0.0; m.cols];
+    let mut s = Vec::new();
+    col_sum_into(m, &mut s);
+    s
+}
+
+/// [`col_sum`] into a caller-owned buffer, resized in place.
+pub fn col_sum_into(m: &Mat, s: &mut Vec<f32>) {
+    s.clear();
+    s.resize(m.cols, 0.0);
     for i in 0..m.rows {
         let row = m.row(i);
         for j in 0..row.len() {
             s[j] += row[j];
         }
     }
-    s
 }
 
 #[cfg(test)]
