@@ -33,6 +33,7 @@ use spm_core::rng::Rng;
 use spm_core::spm::{Spm, SpmSpec, Variant};
 use spm_core::tensor::Mat;
 use spm_coordinator::allocs::{self, CountingAlloc};
+use spm_coordinator::bench_args::{json_header, json_num, BenchArgs};
 use spm_coordinator::experiments::{self, ScalingRow};
 use std::time::Instant;
 
@@ -93,14 +94,12 @@ struct Args {
 }
 
 fn parse_args() -> Args {
-    let argv: Vec<String> = std::env::args().collect();
-    let get = |key: &str| argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1));
+    let a = BenchArgs::parse();
     Args {
-        sizes: get("--sizes")
-            .map(|s| s.split(',').map(|w| w.parse().expect("--sizes: bad width")).collect()),
-        batch: get("--batch").map(|s| s.parse().expect("--batch: bad count")).unwrap_or(64),
-        json: get("--json").cloned(),
-        check: argv.iter().any(|a| a == "--check"),
+        sizes: a.sizes(),
+        batch: a.usize_flag("--batch", 64),
+        json: a.json_path(),
+        check: a.check(),
     }
 }
 
@@ -268,23 +267,11 @@ fn print_spm_table(rows: &[SpmRow], batch: usize) {
     }
 }
 
-/// JSON number or `null` — non-finite floats (a NaN parity diff from a
-/// broken kernel, an inf ratio) must not corrupt the artifact that is
-/// supposed to explain the failure.
-fn json_num(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v:.6}")
-    } else {
-        "null".into()
-    }
-}
-
 /// Hand-rolled JSON (the default workspace is dependency-free): one object
 /// with the run setup, the §5 scaling rows, and the SPM path rows.
 fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
     use std::fmt::Write as _;
-    let mut s = String::new();
-    s.push_str("{\n  \"bench\": \"core_ops\",\n");
+    let mut s = json_header("core_ops");
     let _ = writeln!(s, "  \"batch\": {batch},");
     s.push_str("  \"core_scaling\": [\n");
     for (i, r) in scaling.iter().enumerate() {

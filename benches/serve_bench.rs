@@ -1,33 +1,46 @@
 //! Bench: the deadline-batched serving engine (DESIGN.md §13) over every
 //! `ModelKind` — all four architectures through the same
-//! `ServeEngine::native(model)` entry point, with replica sharding.
+//! `ServeEngine::native(model)` entry point, with replica sharding — and,
+//! under `--gateway`, the closed-loop load generator for the TCP
+//! front-end (DESIGN.md §16): interactive + batch lanes over loopback, a
+//! mid-run checkpoint hot-swap, and a deliberate overload phase whose
+//! shed-rate and p99 the `--check` gate enforces.
 //!
 //! Also buildable as an example (same file, see spm-coordinator's
-//! Cargo.toml) so CI can drive a reduced pass with plain `cargo run`:
+//! Cargo.toml) so CI can drive reduced passes with plain `cargo run`:
 //!
 //! ```text
 //! cargo run --release -p spm-coordinator --example serve_bench -- \
 //!     --requests 97 --clients 4 --json BENCH_serve.json --check
+//! cargo run --release -p spm-coordinator --example serve_bench -- \
+//!     --gateway --requests 40 --clients 4 --json BENCH_gateway.json --check
 //! ```
 //!
-//! Flags: `--requests N` (default 256), `--clients C` (default 8),
-//! `--batch B` micro-batch cap (default 16), `--wait-us W` deadline
-//! before a partial batch flushes (default 200), `--replicas R` native
-//! replicas per model (default 2), `--json <path>` writes the per-model
-//! serving trajectory as machine-readable JSON, `--check` exits non-zero
-//! if any model failed to serve EVERY request, reported zero throughput,
-//! an idle replica (the all-requests-served + sharding gate CI
-//! enforces), or a warm executor micro-batch that touched the allocator
-//! (the DESIGN.md §15 zero-allocation steady-state gate, reported as
-//! `allocs_per_iter` in the table and JSON).
+//! Flags (shared parser: `spm_coordinator::bench_args`): `--requests N`
+//! (default 256; per client per phase under `--gateway`), `--clients C`
+//! (default 8), `--batch B` micro-batch cap (default 16), `--wait-us W`
+//! interactive-lane deadline (default 200), `--replicas R` (default 2),
+//! `--json <path>` machine-readable output (stamped with
+//! `schema_version`), `--check` the CI gate. Gateway mode adds
+//! `--p99-ms MS` (default 250): the steady-phase p99 budget the gate
+//! enforces, alongside zero steady sheds, a hot-swap with zero dropped
+//! in-flight requests, and an overload phase that MUST shed without a
+//! single engine failure.
 
-use spm_core::models::api::{build_model, ModelCfg, ModelKind};
+use std::time::{Duration, Instant};
+
+use spm_core::models::api::{build_model, save_checkpoint, ModelCfg, ModelKind};
 use spm_core::ops::{backend, LinearCfg, SpmExec};
 use spm_core::parallel;
+use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_coordinator::allocs::{self, CountingAlloc};
-use spm_coordinator::metrics::{fmt_f, Table};
-use spm_coordinator::serve::{Executor, NativeExecutor, ServeEngine, ServeReport, Workload};
+use spm_coordinator::bench_args::{env_exec, json_header, json_num, BenchArgs};
+use spm_coordinator::gateway::{Gateway, GatewayClient, InferOutcome};
+use spm_coordinator::metrics::{fmt_f, summarize, Summary, Table};
+use spm_coordinator::serve::{
+    Executor, Lane, NativeExecutor, ServeEngine, ServeReport, Shed, Workload,
+};
 
 // Count every allocator call so steady-state allocs_per_iter is a
 // measured, gated number (DESIGN.md §15).
@@ -40,27 +53,24 @@ struct Args {
     batch: usize,
     wait_us: u64,
     replicas: usize,
+    gateway: bool,
+    p99_ms: f64,
     json: Option<String>,
     check: bool,
 }
 
 fn parse_args() -> Args {
-    let argv: Vec<String> = std::env::args().collect();
-    let get = |key: &str| argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1));
-    let usize_flag = |key: &str, default: usize| match get(key) {
-        Some(s) => s.parse().unwrap_or_else(|_| panic!("{key}: bad count")),
-        None => default,
-    };
+    let a = BenchArgs::parse();
     Args {
-        requests: usize_flag("--requests", 256),
-        clients: usize_flag("--clients", 8),
-        batch: usize_flag("--batch", 16),
-        wait_us: get("--wait-us")
-            .map(|s| s.parse().expect("--wait-us: bad micros"))
-            .unwrap_or(200),
-        replicas: usize_flag("--replicas", 2).max(1),
-        json: get("--json").cloned(),
-        check: argv.iter().any(|a| a == "--check"),
+        requests: a.usize_flag("--requests", 256),
+        clients: a.usize_flag("--clients", 8),
+        batch: a.usize_flag("--batch", 16),
+        wait_us: a.u64_flag("--wait-us", 200),
+        replicas: a.usize_flag("--replicas", 2).max(1),
+        gateway: a.has("--gateway"),
+        p99_ms: a.u64_flag("--p99-ms", 250) as f64,
+        json: a.json_path(),
+        check: a.check(),
     }
 }
 
@@ -81,17 +91,6 @@ fn model_cfg(kind: ModelKind, exec: SpmExec) -> ModelCfg {
         .with_seq_len(seq_len)
         .with_seed(7)
         .with_exec(exec)
-}
-
-/// The exec path this run serves with: `SPM_EXEC` when set (the CI
-/// matrix contract — bad names are an error, not a silent default),
-/// otherwise the fused default.
-fn serve_exec() -> SpmExec {
-    match std::env::var("SPM_EXEC") {
-        Ok(name) => SpmExec::parse(&name)
-            .unwrap_or_else(|| panic!("SPM_EXEC '{name}' is not an exec mode")),
-        Err(_) => SpmExec::default(),
-    }
 }
 
 struct BenchRow {
@@ -189,20 +188,11 @@ fn print_table(rows: &[BenchRow]) {
     t.print();
 }
 
-fn json_num(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v:.6}")
-    } else {
-        "null".into()
-    }
-}
-
 /// Hand-rolled JSON (the default workspace is dependency-free): the run
 /// setup plus one row per served model.
 fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec) -> String {
     use std::fmt::Write as _;
-    let mut s = String::new();
-    s.push_str("{\n  \"bench\": \"serve\",\n");
+    let mut s = json_header("serve");
     let _ = writeln!(s, "  \"exec\": \"{}\",", exec.name());
     let _ = writeln!(s, "  \"requests\": {},", args.requests);
     let _ = writeln!(s, "  \"clients\": {},", args.clients);
@@ -215,11 +205,15 @@ fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec) -> String {
             r.report.replica_batches.iter().map(|b| b.to_string()).collect();
         let _ = write!(
             s,
-            "    {{\"kind\": \"{}\", \"d_in\": {}, \"param_count\": {}, \"requests\": {}, \"batches\": {}, \"mean_fill\": {}, \"mean_queue_wait_ms\": {}, \"mean_exec_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}, \"throughput_rps\": {}, \"allocs_per_iter\": {}, \"replica_batches\": [{}]}}",
+            "    {{\"kind\": \"{}\", \"d_in\": {}, \"param_count\": {}, \"requests\": {}, \"submitted\": {}, \"shed_queue\": {}, \"shed_expired\": {}, \"failed\": {}, \"batches\": {}, \"mean_fill\": {}, \"mean_queue_wait_ms\": {}, \"mean_exec_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}, \"throughput_rps\": {}, \"allocs_per_iter\": {}, \"replica_batches\": [{}]}}",
             r.kind.name(),
             r.d_in,
             r.params,
             r.report.requests,
+            r.report.submitted,
+            r.report.shed_queue,
+            r.report.shed_expired,
+            r.report.failed,
             r.report.batches,
             json_num(r.report.mean_batch_fill),
             json_num(r.report.mean_queue_wait_ms),
@@ -260,6 +254,14 @@ fn check_rows(rows: &[BenchRow], args: &Args) -> Result<(), String> {
                 r.report.requests, args.requests
             ));
         }
+        if r.report.submitted != args.requests || r.report.shed() > 0 || r.report.failed > 0 {
+            return Err(format!(
+                "{name}: admission accounting broke — submitted {}, shed {}, failed {}",
+                r.report.submitted,
+                r.report.shed(),
+                r.report.failed
+            ));
+        }
         if !(r.report.throughput_rps > 0.0) {
             return Err(format!("{name}: throughput {} req/s", r.report.throughput_rps));
         }
@@ -289,9 +291,366 @@ fn check_rows(rows: &[BenchRow], args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Gateway mode: the closed-loop load generator over loopback.
+// ---------------------------------------------------------------------------
+
+/// What one load-generator phase measured, wire-side.
+struct PhaseRow {
+    name: &'static str,
+    submitted: usize,
+    served: usize,
+    shed_queue: usize,
+    shed_expired: usize,
+    failed: usize,
+    latency: Summary,
+    throughput_rps: f64,
+    swaps_applied: usize,
+    replicas: usize,
+}
+
+/// The serving model for gateway mode: the zoo's mlp (width 64).
+fn gateway_model_cfg(exec: SpmExec, seed: u64) -> ModelCfg {
+    model_cfg(ModelKind::Mlp, exec).with_seed(seed)
+}
+
+/// Closed-loop clients: each opens its own connection and issues its
+/// share back-to-back (a reply triggers the next request), 3:1
+/// interactive:batch. Returns per-request wire latencies (ms) and the
+/// client-observed outcome counts.
+fn drive_clients(
+    addr: std::net::SocketAddr,
+    width: usize,
+    clients: usize,
+    per_client: usize,
+    deadline_us: u32,
+) -> (Vec<f64>, usize, usize, usize) {
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = GatewayClient::connect(addr).expect("connect");
+                let mut rng = Rng::new(0x6A7E ^ (c as u64 + 1) * 0x9E37);
+                let mut lat = Vec::with_capacity(per_client);
+                let (mut ok, mut shed) = (0usize, 0usize);
+                for i in 0..per_client {
+                    let lane = if i % 4 == 3 { Lane::Batch } else { Lane::Interactive };
+                    let features = rng.normal_vec(width, 1.0);
+                    let t0 = Instant::now();
+                    match client.infer(lane, &features, deadline_us).expect("infer") {
+                        InferOutcome::Ok(row) => {
+                            assert!(!row.is_empty(), "empty output row");
+                            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                            ok += 1;
+                        }
+                        InferOutcome::Shed(Shed::EngineDown) => {
+                            panic!("engine down mid-phase");
+                        }
+                        InferOutcome::Shed(_) => shed += 1,
+                    }
+                }
+                (lat, ok, shed)
+            })
+        })
+        .collect();
+    let mut lat = Vec::new();
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for w in workers {
+        let (l, o, s) = w.join().expect("client panicked");
+        lat.extend(l);
+        ok += o;
+        shed += s;
+    }
+    (lat, ok, shed, clients * per_client)
+}
+
+fn phase_row(
+    name: &'static str,
+    report: &ServeReport,
+    mut lat: Vec<f64>,
+    wall_secs: f64,
+    replicas: usize,
+) -> PhaseRow {
+    PhaseRow {
+        name,
+        submitted: report.submitted,
+        served: report.requests,
+        shed_queue: report.shed_queue,
+        shed_expired: report.shed_expired,
+        failed: report.failed,
+        latency: summarize(&mut lat),
+        throughput_rps: report.requests as f64 / wall_secs.max(1e-9),
+        swaps_applied: report.swaps_applied,
+        replicas,
+    }
+}
+
+/// Phase 1+2 share one gateway: a steady closed-loop pass, then the same
+/// load with a checkpoint hot-swap fired mid-run from a separate
+/// connection. Phase 3 runs its own gateway with tiny admission caps so
+/// overload MUST shed.
+fn run_gateway_bench(args: &Args, exec: SpmExec) -> Vec<PhaseRow> {
+    let cfg = gateway_model_cfg(exec, 7);
+    let build_engine = || {
+        let mut engine = ServeEngine::native(build_model(&cfg))
+            .with_max_batch(args.batch)
+            .with_max_wait_us(args.wait_us);
+        for _ in 1..args.replicas {
+            engine = engine.with_replica(build_model(&cfg));
+        }
+        engine
+    };
+    let mut rows = Vec::new();
+
+    // -- phase 1: steady state, unbounded queues — nothing may shed
+    {
+        let gw = Gateway::start(build_engine().start().expect("start"), "127.0.0.1:0")
+            .expect("gateway");
+        let width = gw.session().width();
+        let t0 = Instant::now();
+        let (lat, ok, shed, submitted) =
+            drive_clients(gw.addr(), width, args.clients, args.requests, 0);
+        let wall = t0.elapsed().as_secs_f64();
+        let report = gw.stop().expect("stop");
+        assert_eq!(
+            (ok, shed, submitted),
+            (report.requests, report.shed(), report.submitted),
+            "wire-side and engine-side accounting must agree"
+        );
+        rows.push(phase_row("steady", &report, lat, wall, args.replicas));
+    }
+
+    // -- phase 2: the same load with a mid-run wire hot-swap
+    {
+        let gw = Gateway::start(build_engine().start().expect("start"), "127.0.0.1:0")
+            .expect("gateway");
+        let width = gw.session().width();
+        // same arch (butterfly pairing is seed-independent), new params
+        let swap_src = build_model(&gateway_model_cfg(exec, 13));
+        let ckpt = std::env::temp_dir().join(format!("spm_gateway_bench_{}.ckpt", std::process::id()));
+        save_checkpoint(swap_src.as_ref(), &ckpt).expect("save checkpoint");
+        let image = std::fs::read(&ckpt).expect("read checkpoint");
+        let _ = std::fs::remove_file(&ckpt);
+
+        let addr = gw.addr();
+        let swapper = std::thread::spawn(move || {
+            // land mid-run: give the load a moment to ramp
+            std::thread::sleep(Duration::from_millis(20));
+            let mut c = GatewayClient::connect(addr).expect("swap connect");
+            c.hot_swap(&image).expect("wire hot swap")
+        });
+        let t0 = Instant::now();
+        let (lat, ok, shed, submitted) =
+            drive_clients(gw.addr(), width, args.clients, args.requests, 0);
+        let wall = t0.elapsed().as_secs_f64();
+        let notified = swapper.join().expect("swapper panicked");
+        assert_eq!(notified, args.replicas, "hot swap must reach every replica");
+        let report = gw.stop().expect("stop");
+        assert_eq!(
+            (ok, shed, submitted),
+            (report.requests, report.shed(), report.submitted),
+            "wire-side and engine-side accounting must agree"
+        );
+        rows.push(phase_row("hotswap", &report, lat, wall, args.replicas));
+    }
+
+    // -- phase 3: deliberate overload — admission caps far below the
+    // closed-loop client population, a long batching window to keep the
+    // in-flight depth pinned high. Shedding here is the system WORKING.
+    {
+        let cap = (args.clients / 4).max(1);
+        let engine = build_engine()
+            .with_max_wait_us(5_000)
+            .with_queue_depth(Lane::Interactive, cap)
+            .with_queue_depth(Lane::Batch, cap);
+        let gw = Gateway::start(engine.start().expect("start"), "127.0.0.1:0")
+            .expect("gateway");
+        let width = gw.session().width();
+        let overload_clients = (args.clients * 2).max(cap + 2);
+        let t0 = Instant::now();
+        let (lat, ok, shed, submitted) =
+            drive_clients(gw.addr(), width, overload_clients, args.requests, 0);
+        let wall = t0.elapsed().as_secs_f64();
+        let report = gw.stop().expect("stop");
+        assert_eq!(
+            (ok, shed, submitted),
+            (report.requests, report.shed(), report.submitted),
+            "wire-side and engine-side accounting must agree"
+        );
+        rows.push(phase_row("overload", &report, lat, wall, args.replicas));
+    }
+
+    rows
+}
+
+fn print_gateway_table(rows: &[PhaseRow]) {
+    let mut t = Table::new(&[
+        "phase",
+        "submitted",
+        "served",
+        "shed q",
+        "shed ddl",
+        "failed",
+        "shed %",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "req/s",
+        "swaps",
+    ]);
+    for r in rows {
+        let shed = r.shed_queue + r.shed_expired;
+        t.row(vec![
+            r.name.to_string(),
+            r.submitted.to_string(),
+            r.served.to_string(),
+            r.shed_queue.to_string(),
+            r.shed_expired.to_string(),
+            r.failed.to_string(),
+            fmt_f(100.0 * shed as f64 / r.submitted.max(1) as f64, 1),
+            fmt_f(r.latency.p50, 3),
+            fmt_f(r.latency.p95, 3),
+            fmt_f(r.latency.p99, 3),
+            fmt_f(r.throughput_rps, 0),
+            r.swaps_applied.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn gateway_to_json(rows: &[PhaseRow], args: &Args, exec: SpmExec) -> String {
+    use std::fmt::Write as _;
+    let mut s = json_header("gateway");
+    let _ = writeln!(s, "  \"exec\": \"{}\",", exec.name());
+    let _ = writeln!(s, "  \"requests_per_client\": {},", args.requests);
+    let _ = writeln!(s, "  \"clients\": {},", args.clients);
+    let _ = writeln!(s, "  \"batch\": {},", args.batch);
+    let _ = writeln!(s, "  \"max_wait_us\": {},", args.wait_us);
+    let _ = writeln!(s, "  \"replicas\": {},", args.replicas);
+    let _ = writeln!(s, "  \"p99_budget_ms\": {},", json_num(args.p99_ms));
+    s.push_str("  \"phases\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let shed = r.shed_queue + r.shed_expired;
+        let _ = write!(
+            s,
+            "    {{\"phase\": \"{}\", \"submitted\": {}, \"served\": {}, \"shed_queue\": {}, \"shed_expired\": {}, \"failed\": {}, \"shed_rate\": {}, \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}, \"throughput_rps\": {}, \"swaps_applied\": {}, \"replicas\": {}}}",
+            r.name,
+            r.submitted,
+            r.served,
+            r.shed_queue,
+            r.shed_expired,
+            r.failed,
+            json_num(shed as f64 / r.submitted.max(1) as f64),
+            json_num(r.latency.p50),
+            json_num(r.latency.p95),
+            json_num(r.latency.p99),
+            json_num(r.throughput_rps),
+            r.swaps_applied,
+            r.replicas
+        );
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// The gateway CI gate (the ISSUE-7 acceptance bar):
+/// - steady: zero sheds, zero failures, p99 within the `--p99-ms` budget
+/// - hotswap: every replica applied the swap and NOT ONE in-flight
+///   request was dropped (served == submitted, failed == 0)
+/// - overload: the gateway MUST shed (the admission queue works) while
+///   still failing nothing and serving everything it admitted
+fn check_gateway(rows: &[PhaseRow], args: &Args) -> Result<(), String> {
+    if std::env::var("SPM_EXEC").as_deref() == Ok("simd") && !backend::simd_available() {
+        return Err(
+            "SPM_EXEC=simd but the simd backend did not activate (feature off or AVX2/FMA \
+             undetected) — the gateway smoke would only re-measure the fused path"
+                .into(),
+        );
+    }
+    let get = |name: &str| {
+        rows.iter().find(|r| r.name == name).ok_or_else(|| format!("missing phase '{name}'"))
+    };
+    let steady = get("steady")?;
+    if steady.shed_queue + steady.shed_expired > 0 || steady.failed > 0 {
+        return Err(format!(
+            "steady phase shed/failed under no overload: shed {} + {}, failed {}",
+            steady.shed_queue, steady.shed_expired, steady.failed
+        ));
+    }
+    if steady.served != steady.submitted {
+        return Err(format!(
+            "steady phase dropped requests: served {} of {}",
+            steady.served, steady.submitted
+        ));
+    }
+    if steady.latency.p99 > args.p99_ms {
+        return Err(format!(
+            "steady p99 {:.3} ms blew the {:.0} ms budget",
+            steady.latency.p99, args.p99_ms
+        ));
+    }
+    let hotswap = get("hotswap")?;
+    if hotswap.swaps_applied != args.replicas {
+        return Err(format!(
+            "hot swap reached {} of {} replicas",
+            hotswap.swaps_applied, args.replicas
+        ));
+    }
+    if hotswap.served != hotswap.submitted || hotswap.failed > 0 {
+        return Err(format!(
+            "hot swap dropped in-flight work: served {} of {}, failed {}",
+            hotswap.served, hotswap.submitted, hotswap.failed
+        ));
+    }
+    let overload = get("overload")?;
+    if overload.shed_queue == 0 {
+        return Err(
+            "overload phase shed nothing — the admission queue cap is not engaging".into()
+        );
+    }
+    if overload.failed > 0 {
+        return Err(format!("overload phase failed {} requests", overload.failed));
+    }
+    if overload.served + overload.shed_queue + overload.shed_expired != overload.submitted {
+        return Err(format!(
+            "overload accounting leak: {} served + {} + {} shed != {} submitted",
+            overload.served, overload.shed_queue, overload.shed_expired, overload.submitted
+        ));
+    }
+    Ok(())
+}
+
 fn main() {
     let args = parse_args();
-    let exec = serve_exec();
+    let exec = env_exec();
+
+    if args.gateway {
+        println!(
+            "gateway load generator: {} requests/client, {} clients, batch cap {}, deadline {} us, {} replica(s), exec {}\n",
+            args.requests, args.clients, args.batch, args.wait_us, args.replicas,
+            exec.name()
+        );
+        let rows = run_gateway_bench(&args, exec);
+        print_gateway_table(&rows);
+        if let Some(path) = &args.json {
+            std::fs::write(path, gateway_to_json(&rows, &args, exec))
+                .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+            println!("\nwrote {path}");
+        }
+        if args.check {
+            match check_gateway(&rows, &args) {
+                Ok(()) => println!(
+                    "\ncheck: steady p99 within budget, hot swap dropped nothing, overload shed — OK"
+                ),
+                Err(msg) => {
+                    eprintln!("check FAILED: {msg}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        return;
+    }
+
     println!(
         "serving engine: {} requests, {} clients, batch cap {}, deadline {} us, {} replica(s), exec {}\n",
         args.requests,

@@ -29,6 +29,7 @@ use spm_core::ops::{backend, LinearCfg, SpmExec};
 use spm_core::parallel;
 use spm_core::spm::Variant;
 use spm_coordinator::allocs::{self, CountingAlloc};
+use spm_coordinator::bench_args::{env_exec, json_header, json_num, BenchArgs};
 use spm_coordinator::experiments::DataSource;
 use spm_coordinator::metrics::{fmt_f, Table};
 use spm_coordinator::train::{TrainBatch, TrainEngine, TrainReport};
@@ -48,30 +49,14 @@ struct Args {
 }
 
 fn parse_args() -> Args {
-    let argv: Vec<String> = std::env::args().collect();
-    let get = |key: &str| argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1));
-    let usize_flag = |key: &str, default: usize| match get(key) {
-        Some(s) => s.parse().unwrap_or_else(|_| panic!("{key}: bad count")),
-        None => default,
-    };
+    let a = BenchArgs::parse();
     Args {
-        n: usize_flag("--n", 1024).max(2),
-        rows: usize_flag("--rows", 64).max(1),
-        steps: usize_flag("--steps", 8).max(1),
-        replicas: usize_flag("--replicas", 4).max(1),
-        json: get("--json").cloned(),
-        check: argv.iter().any(|a| a == "--check"),
-    }
-}
-
-/// The exec path this run trains with: `SPM_EXEC` when set (the CI
-/// matrix contract — bad names are an error, not a silent default),
-/// otherwise the fused default.
-fn train_exec() -> SpmExec {
-    match std::env::var("SPM_EXEC") {
-        Ok(name) => SpmExec::parse(&name)
-            .unwrap_or_else(|| panic!("SPM_EXEC '{name}' is not an exec mode")),
-        Err(_) => SpmExec::default(),
+        n: a.usize_flag("--n", 1024).max(2),
+        rows: a.usize_flag("--rows", 64).max(1),
+        steps: a.usize_flag("--steps", 8).max(1),
+        replicas: a.usize_flag("--replicas", 4).max(1),
+        json: a.json_path(),
+        check: a.check(),
     }
 }
 
@@ -209,20 +194,11 @@ fn print_table(rows: &[BenchRow]) {
     t.print();
 }
 
-fn json_num(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v:.6}")
-    } else {
-        "null".into()
-    }
-}
-
 /// Hand-rolled JSON (the default workspace is dependency-free): the run
 /// setup plus one row per replica count.
 fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec, invariant: bool) -> String {
     use std::fmt::Write as _;
-    let mut s = String::new();
-    s.push_str("{\n  \"bench\": \"train\",\n");
+    let mut s = json_header("train");
     let _ = writeln!(s, "  \"exec\": \"{}\",", exec.name());
     let _ = writeln!(s, "  \"n\": {},", args.n);
     let _ = writeln!(s, "  \"rows_per_microbatch\": {},", args.rows);
@@ -307,7 +283,7 @@ fn check_rows(rows: &[BenchRow], args: &Args, invariant: bool) -> Result<(), Str
 
 fn main() {
     let args = parse_args();
-    let exec = train_exec();
+    let exec = env_exec();
     let rmax = args.replicas;
     let microbatches = args.steps * rmax;
     println!(

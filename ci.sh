@@ -41,6 +41,16 @@ fi
 cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example serve_bench -- \
     --requests 64 --clients 4 --replicas 2 --check
 
+# Gateway smoke: the TCP front-end over loopback — closed-loop clients
+# on both lanes, a mid-run checkpoint hot-swap, and a deliberate
+# overload phase. --check gates zero steady-phase sheds, the p99
+# budget, zero dropped in-flight requests across the swap, and that
+# overload actually sheds (queue caps working) without one engine
+# failure. The CI gateway-smoke job runs the bigger pass and records
+# the BENCH_gateway.json artifact.
+cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example serve_bench -- \
+    --gateway --requests 24 --clients 4 --replicas 2 --check
+
 # Data-parallel training smoke: the TrainEngine over 2 replicas at a
 # small width; --check gates loss-decreases-from-init at every replica
 # count AND that the R=1 and R=2 parameter trajectories are

@@ -13,7 +13,7 @@ use spm_core::ops::LinearCfg;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_core::tensor::Mat;
-use spm_coordinator::serve::{ServeEngine, Workload};
+use spm_coordinator::serve::{Lane, ServeEngine};
 use spm_runtime::drivers::serve_demo;
 use spm_runtime::{Engine, Manifest};
 
@@ -46,11 +46,31 @@ fn main() -> spm_coordinator::error::Result<()> {
     load_checkpoint(replica.as_mut(), &ckpt)?;
     let _ = std::fs::remove_file(&ckpt);
     println!("\n[serve native] 64 sequence requests from 4 clients -> 2 attention replicas");
-    let mut engine = ServeEngine::native(attn)
+    // session API: start() -> per-client SubmitHandles -> shutdown drains
+    let session = ServeEngine::native(attn)
         .with_replica(replica)
         .with_max_batch(8)
-        .with_max_wait_us(300);
-    let report = engine.run(&Workload { num_requests: 64, num_clients: 4, seed: 1 })?;
+        .with_max_wait_us(300)
+        .start()?;
+    let width = session.width();
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let handle = session.handle();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(1 + c as u64);
+                for i in 0..16usize {
+                    let lane = if i % 4 == 3 { Lane::Batch } else { Lane::Interactive };
+                    let pending =
+                        handle.submit_to(lane, rng.normal_vec(width, 1.0), None).expect("submit");
+                    pending.wait().expect("serve");
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    let report = session.shutdown()?;
     println!("{report}");
 
     // --- batched serving router over a PJRT forward -------------------------

@@ -16,7 +16,7 @@ use spm_core::ops::LinearCfg;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_core::tensor::Mat;
-use spm_coordinator::serve::{ServeEngine, Workload};
+use spm_coordinator::serve::{Lane, ServeEngine};
 use spm_coordinator::ModelConfig;
 
 fn main() -> spm_coordinator::error::Result<()> {
@@ -73,10 +73,33 @@ fn main() -> spm_coordinator::error::Result<()> {
     assert_eq!((wl, wa), (loss, acc), "warm start must restore the exact model");
 
     // --- serve both copies as deadline-batched replicas --------------------
+    // the session API: start() hands back cloneable SubmitHandles, each
+    // client thread submits its own stream, shutdown() drains in-flight
     println!("\n[serve] 512 requests from 4 clients -> 2 replicas");
-    let mut engine =
-        ServeEngine::native(model).with_replica(warm).with_max_batch(16).with_max_wait_us(300);
-    let report = engine.run(&Workload { num_requests: 512, num_clients: 4, seed: 3 })?;
+    let session = ServeEngine::native(model)
+        .with_replica(warm)
+        .with_max_batch(16)
+        .with_max_wait_us(300)
+        .start()?;
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let handle = session.handle();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(3 ^ (c as u64) << 8);
+                for i in 0..128usize {
+                    // 3:1 interactive:batch, like a real mixed workload
+                    let lane = if i % 4 == 3 { Lane::Batch } else { Lane::Interactive };
+                    let features = rng.normal_vec(n, 1.0);
+                    let pending = handle.submit_to(lane, features, None).expect("submit");
+                    pending.wait().expect("serve");
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    let report = session.shutdown()?;
     println!("{report}");
     let _ = std::fs::remove_file(&ckpt);
     println!("quickstart OK");

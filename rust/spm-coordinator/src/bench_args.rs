@@ -1,0 +1,160 @@
+//! Shared flag parsing + JSON conventions for the bench/example binaries
+//! (`benches/{core_ops,serve_bench,train_bench}.rs`). Every bench used
+//! to carry its own copy-pasted `--json`/`--check`/`--sizes`/`--batch`
+//! scanner; this module is the one implementation, plus the
+//! `schema_version` stamp every emitted `BENCH_*.json` carries so the
+//! perf-trajectory tooling can tell at a glance which layout it holds.
+
+use spm_core::ops::SpmExec;
+
+/// Version of the BENCH_*.json layout. Bump when a bench renames or
+/// restructures its emitted fields (additive fields do not need a bump).
+///
+/// - 1: the implicit pre-stamp layout (no `schema_version` field)
+/// - 2: `schema_version` added everywhere; serve rows gained the
+///   admission counters and BENCH_gateway.json exists
+pub const SCHEMA_VERSION: u32 = 2;
+
+/// A parsed argv: positional lookups over `--key value` pairs and bare
+/// `--switch` flags, shared by every bench binary.
+pub struct BenchArgs {
+    argv: Vec<String>,
+}
+
+impl BenchArgs {
+    /// Parse the process argv.
+    pub fn parse() -> BenchArgs {
+        BenchArgs { argv: std::env::args().collect() }
+    }
+
+    /// Parse an explicit argv (tests).
+    pub fn from_vec(argv: Vec<String>) -> BenchArgs {
+        BenchArgs { argv }
+    }
+
+    /// Is the bare switch present? (`--check`-style flags.)
+    pub fn has(&self, key: &str) -> bool {
+        self.argv.iter().any(|a| a == key)
+    }
+
+    /// The value following `--key`, if any.
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.argv
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.argv.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    /// `--key N` as usize, `default` when absent; a malformed value is a
+    /// loud error, never a silent default.
+    pub fn usize_flag(&self, key: &str, default: usize) -> usize {
+        match self.str_opt(key) {
+            Some(s) => s.parse().unwrap_or_else(|_| panic!("{key}: bad count '{s}'")),
+            None => default,
+        }
+    }
+
+    /// `--key N` as u64 (micros-style flags), `default` when absent.
+    pub fn u64_flag(&self, key: &str, default: u64) -> u64 {
+        match self.str_opt(key) {
+            Some(s) => s.parse().unwrap_or_else(|_| panic!("{key}: bad value '{s}'")),
+            None => default,
+        }
+    }
+
+    /// `--sizes a,b,c` as widths, `None` when absent (each bench keeps
+    /// its own default sweep).
+    pub fn sizes(&self) -> Option<Vec<usize>> {
+        self.str_opt("--sizes").map(|s| {
+            s.split(',')
+                .map(|w| w.parse().unwrap_or_else(|_| panic!("--sizes: bad width '{w}'")))
+                .collect()
+        })
+    }
+
+    /// `--json <path>`: where to write the machine-readable artifact.
+    pub fn json_path(&self) -> Option<String> {
+        self.str_opt("--json").map(|s| s.to_string())
+    }
+
+    /// `--check`: run the CI gate and exit non-zero on failure.
+    pub fn check(&self) -> bool {
+        self.has("--check")
+    }
+}
+
+/// The exec path a bench runs with: `SPM_EXEC` when set (the CI matrix
+/// contract — bad names are an error, not a silent default), otherwise
+/// the fused default.
+pub fn env_exec() -> SpmExec {
+    match std::env::var("SPM_EXEC") {
+        Ok(name) => SpmExec::parse(&name)
+            .unwrap_or_else(|| panic!("SPM_EXEC '{name}' is not an exec mode")),
+        Err(_) => SpmExec::default(),
+    }
+}
+
+/// JSON number or `null` — non-finite floats (a NaN parity diff from a
+/// broken kernel, an inf ratio) must not corrupt the artifact that is
+/// supposed to explain the failure.
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+/// The opening of every BENCH_*.json object: `{`, the bench name, and
+/// the schema stamp — so no bench can forget the version field.
+pub fn json_header(bench: &str) -> String {
+    format!("{{\n  \"bench\": \"{bench}\",\n  \"schema_version\": {SCHEMA_VERSION},\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> BenchArgs {
+        BenchArgs::from_vec(s.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn flags_parse_with_defaults() {
+        let a = args(&["bench", "--requests", "97", "--json", "out.json", "--check"]);
+        assert_eq!(a.usize_flag("--requests", 256), 97);
+        assert_eq!(a.usize_flag("--clients", 8), 8);
+        assert_eq!(a.u64_flag("--wait-us", 200), 200);
+        assert_eq!(a.json_path().as_deref(), Some("out.json"));
+        assert!(a.check());
+        assert!(!a.has("--gateway"));
+    }
+
+    #[test]
+    fn sizes_split_on_commas() {
+        let a = args(&["bench", "--sizes", "256,1024,4096"]);
+        assert_eq!(a.sizes(), Some(vec![256, 1024, 4096]));
+        assert_eq!(args(&["bench"]).sizes(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "--requests: bad count")]
+    fn malformed_count_is_loud() {
+        args(&["bench", "--requests", "many"]).usize_flag("--requests", 1);
+    }
+
+    #[test]
+    fn json_header_stamps_the_schema() {
+        let h = json_header("serve");
+        assert!(h.contains("\"bench\": \"serve\""));
+        assert!(h.contains(&format!("\"schema_version\": {SCHEMA_VERSION}")));
+    }
+
+    #[test]
+    fn json_num_nulls_non_finite() {
+        assert_eq!(json_num(1.5), "1.500000");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+    }
+}

@@ -18,6 +18,11 @@
 //! The `[train]` section shapes the data-parallel `TrainEngine`
 //! (DESIGN.md §14): replica count, the per-replica thread budget, and
 //! the microbatches-per-step accumulation.
+//!
+//! The `[serve]` section shapes the serving deployment (DESIGN.md §13,
+//! §16): replica pool, per-lane batching windows and admission caps, the
+//! engine-wide shed budget, and the gateway's listen address;
+//! [`ServeConfig::to_engine`] lowers it onto a `ServeEngine` builder.
 
 use std::collections::BTreeMap;
 
@@ -335,6 +340,120 @@ impl TrainConfig {
     }
 }
 
+/// The `[serve]` section: the serving deployment shape (DESIGN.md §13,
+/// §16) — replica pool, batching windows, admission caps, and where the
+/// gateway listens. Defaults reproduce the engine builder defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Native executor replicas sharding the request stream.
+    pub replicas: usize,
+    /// Interactive-lane deadline (us) before a partial batch flushes.
+    pub max_wait_us: u64,
+    /// Batch-lane deadline (us) before a partial batch flushes.
+    pub batch_wait_us: u64,
+    /// Micro-batch row cap per forward.
+    pub max_batch: usize,
+    /// Interactive-lane in-flight cap for `try_submit` (0 = unbounded
+    /// here; the engine treats it as "no cap").
+    pub queue_depth: usize,
+    /// Batch-lane in-flight cap (0 = unbounded).
+    pub batch_queue_depth: usize,
+    /// Engine-wide shed budget (us): queued requests older than this are
+    /// shed before dispatch (0 = off).
+    pub shed_deadline_us: u64,
+    /// Where the TCP gateway binds ("" = no gateway; ":0" picks a port).
+    pub listen_addr: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            replicas: 1,
+            max_wait_us: crate::serve::DEFAULT_MAX_WAIT_US,
+            batch_wait_us: crate::serve::DEFAULT_BATCH_WAIT_US,
+            max_batch: crate::serve::DEFAULT_BATCH,
+            queue_depth: 0,
+            batch_queue_depth: 0,
+            shed_deadline_us: 0,
+            listen_addr: String::new(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply `[serve]` keys; unknown values are rejected.
+    pub fn apply_toml(&mut self, doc: &Toml) -> Result<()> {
+        let Some(map) = doc.get("serve") else {
+            return Ok(());
+        };
+        if let Some(v) = map.get("replicas") {
+            let u = v.as_usize().context("[serve] replicas must be a non-negative int")?;
+            if u == 0 {
+                bail!("[serve] replicas must be >= 1");
+            }
+            self.replicas = u;
+        }
+        if let Some(v) = map.get("max_batch") {
+            let u = v.as_usize().context("[serve] max_batch must be a non-negative int")?;
+            if u == 0 {
+                bail!("[serve] max_batch must be >= 1");
+            }
+            self.max_batch = u;
+        }
+        for (key, dst) in [
+            ("max_wait_us", &mut self.max_wait_us),
+            ("batch_wait_us", &mut self.batch_wait_us),
+            ("shed_deadline_us", &mut self.shed_deadline_us),
+        ] {
+            if let Some(v) = map.get(key) {
+                *dst = v
+                    .as_usize()
+                    .with_context(|| format!("[serve] {key} must be a non-negative int"))?
+                    as u64;
+            }
+        }
+        for (key, dst) in [
+            ("queue_depth", &mut self.queue_depth),
+            ("batch_queue_depth", &mut self.batch_queue_depth),
+        ] {
+            if let Some(v) = map.get(key) {
+                *dst = v
+                    .as_usize()
+                    .with_context(|| format!("[serve] {key} must be a non-negative int"))?;
+            }
+        }
+        if let Some(v) = map.get("listen_addr") {
+            self.listen_addr = v.as_str().context("[serve] listen_addr must be a string")?.into();
+        }
+        Ok(())
+    }
+
+    /// Lower to a `ServeEngine` over `replicas` native copies built from
+    /// `build` (called once per replica index). The engine honours every
+    /// `[serve]` knob except `listen_addr`, which belongs to the gateway.
+    pub fn to_engine(
+        &self,
+        mut build: impl FnMut(usize) -> Box<dyn Model>,
+    ) -> crate::serve::ServeEngine {
+        use crate::serve::{Lane, NativeExecutor, ServeEngine};
+        let mut engine = ServeEngine::new()
+            .with_max_wait_us(self.max_wait_us)
+            .with_batch_wait_us(self.batch_wait_us)
+            .with_max_batch(self.max_batch)
+            .with_shed_deadline_us(self.shed_deadline_us);
+        if self.queue_depth > 0 {
+            engine = engine.with_queue_depth(Lane::Interactive, self.queue_depth);
+        }
+        if self.batch_queue_depth > 0 {
+            engine = engine.with_queue_depth(Lane::Batch, self.batch_queue_depth);
+        }
+        for i in 0..self.replicas {
+            engine = engine.with_executor(Box::new(NativeExecutor::new(build(i), self.max_batch)));
+        }
+        engine
+    }
+}
+
 /// Run-level knobs every experiment honours. Training hyper-parameters
 /// (lr, batch) are baked into the drivers/artifacts; the run config
 /// controls duration, cadence, seeds, reporting, and — for the *native*
@@ -364,6 +483,8 @@ pub struct RunConfig {
     pub model: ModelConfig,
     /// the data-parallel engine shape ([train] section)
     pub train: TrainConfig,
+    /// the serving deployment shape ([serve] section)
+    pub serve: ServeConfig,
 }
 
 impl Default for RunConfig {
@@ -380,6 +501,7 @@ impl Default for RunConfig {
             op: OpConfig::default(),
             model: ModelConfig::default(),
             train: TrainConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -417,7 +539,8 @@ impl RunConfig {
         }
         self.op.apply_toml(doc)?;
         self.model.apply_toml(doc)?;
-        self.train.apply_toml(doc)
+        self.train.apply_toml(doc)?;
+        self.serve.apply_toml(doc)
     }
 
     pub fn load_file(&mut self, path: &str) -> Result<()> {
@@ -611,6 +734,60 @@ fast = true
             let doc = parse_toml(bad).unwrap();
             assert!(rc.apply_toml(&doc).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn serve_config_applies_and_defaults() {
+        let mut rc = RunConfig::default();
+        assert_eq!(rc.serve, ServeConfig::default());
+        let doc = parse_toml(
+            "[serve]\nreplicas = 3\nmax_wait_us = 150\nbatch_wait_us = 4000\nmax_batch = 8\n\
+             queue_depth = 64\nbatch_queue_depth = 512\nshed_deadline_us = 20000\n\
+             listen_addr = \"127.0.0.1:0\"\n",
+        )
+        .unwrap();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.serve.replicas, 3);
+        assert_eq!(rc.serve.max_wait_us, 150);
+        assert_eq!(rc.serve.batch_wait_us, 4000);
+        assert_eq!(rc.serve.max_batch, 8);
+        assert_eq!(rc.serve.queue_depth, 64);
+        assert_eq!(rc.serve.batch_queue_depth, 512);
+        assert_eq!(rc.serve.shed_deadline_us, 20000);
+        assert_eq!(rc.serve.listen_addr, "127.0.0.1:0");
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_values() {
+        let mut rc = RunConfig::default();
+        for bad in [
+            "[serve]\nreplicas = 0\n",
+            "[serve]\nmax_batch = 0\n",
+            "[serve]\nqueue_depth = -1\n",
+            "[serve]\nmax_wait_us = \"fast\"\n",
+            "[serve]\nlisten_addr = 8080\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(rc.apply_toml(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn serve_config_lowers_onto_a_working_engine() {
+        use spm_core::ops::LinearCfg;
+        use spm_core::spm::Variant;
+        let doc = parse_toml("[serve]\nreplicas = 2\nmax_batch = 4\nmax_wait_us = 0\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        let mcfg = ModelCfg::new(ModelKind::Mlp, LinearCfg::spm(8, Variant::General))
+            .with_classes(3)
+            .with_seed(5);
+        let mut engine = rc.serve.to_engine(|_i| build_model(&mcfg));
+        let report = engine
+            .run(&crate::serve::Workload { num_requests: 9, num_clients: 3, seed: 1 })
+            .unwrap();
+        assert_eq!(report.requests, 9);
+        assert_eq!(report.replica_batches.len(), 2);
     }
 
     #[test]

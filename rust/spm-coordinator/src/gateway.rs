@@ -1,0 +1,548 @@
+//! The network front-end (DESIGN.md §16): a dependency-free TCP gateway
+//! over the [`ServeSession`] — length-prefixed binary frames, blocking
+//! I/O, one OS thread per connection. This is where the repro's serving
+//! story leaves the process boundary: admission control, lane selection,
+//! checkpoint hot-swap, and the stats counters are all reachable on the
+//! wire, with zero protocol dependencies (the workspace ships no serde,
+//! no tokio — a frame is a `u32` length plus bytes).
+//!
+//! # Wire frame layout
+//!
+//! Every message, both directions, is one frame:
+//!
+//! ```text
+//! [len: u32 LE] [payload: len bytes]        len <= MAX_FRAME
+//! ```
+//!
+//! A request payload is `[op: u8][body]`:
+//!
+//! | op | name        | body                                         |
+//! |----|-------------|----------------------------------------------|
+//! | 1  | infer (interactive lane) | `[deadline_us: u32 LE][features: f32 LE xW]` |
+//! | 2  | infer (batch lane)       | same as op 1                       |
+//! | 3  | hot-swap    | a complete `SPMCKPT1` checkpoint image        |
+//! | 4  | stats       | empty                                         |
+//!
+//! `deadline_us == 0` means no deadline. A response payload is
+//! `[status: u8][body]`:
+//!
+//! | status | meaning           | body                                  |
+//! |--------|-------------------|---------------------------------------|
+//! | 0      | ok                | op-specific (below)                   |
+//! | 1      | shed: queue full  | empty                                 |
+//! | 2      | shed: deadline    | empty                                 |
+//! | 3      | engine down       | empty                                 |
+//! | 4      | bad request       | utf-8 error message                   |
+//!
+//! An ok infer body is the output row (`f32 LE x d_out`); an ok
+//! hot-swap body is `[replicas_notified: u64 LE]`; an ok stats body is
+//! the eight [`SessionStats`] counters as `u64 LE` in declaration
+//! order (replicas, in_flight, submitted, served, shed_queue,
+//! shed_expired, failed, swaps_applied).
+//!
+//! Requests on one connection are served strictly in order (the
+//! connection thread blocks on each reply); concurrency comes from
+//! opening more connections, which is also how the closed-loop bench
+//! models independent clients.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use spm_core::models::api::CkptData;
+
+use crate::error::Result;
+use crate::serve::{Lane, ServeReport, ServeSession, SessionStats, Shed, SubmitHandle};
+
+/// Hard cap on one frame (requests AND responses): a 4 MiB frame holds a
+/// ~1M-float checkpoint image, far past any model in the zoo, while a
+/// garbage length prefix fails fast instead of allocating gigabytes.
+pub const MAX_FRAME: usize = 4 << 20;
+
+/// Request opcodes.
+pub const OP_INFER_INTERACTIVE: u8 = 1;
+pub const OP_INFER_BATCH: u8 = 2;
+pub const OP_HOT_SWAP: u8 = 3;
+pub const OP_STATS: u8 = 4;
+
+/// Response status bytes.
+pub const ST_OK: u8 = 0;
+pub const ST_SHED_QUEUE: u8 = 1;
+pub const ST_SHED_DEADLINE: u8 = 2;
+pub const ST_ENGINE_DOWN: u8 = 3;
+pub const ST_BAD_REQUEST: u8 = 4;
+
+fn shed_status(s: Shed) -> u8 {
+    match s {
+        Shed::QueueFull => ST_SHED_QUEUE,
+        Shed::DeadlineExpired => ST_SHED_DEADLINE,
+        Shed::EngineDown => ST_ENGINE_DOWN,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame codec: shared by the server loop and the client.
+// ---------------------------------------------------------------------------
+
+/// Write one `[len][payload]` frame.
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    assert!(payload.len() <= MAX_FRAME, "frame too large to send");
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()
+}
+
+/// Read exactly `buf.len()` bytes. A read-timeout wakeup polls `stop`
+/// when one is given (the server loop) and is a hard error otherwise
+/// (the client: a silent peer means the gateway is gone). Returns
+/// `false` on a clean EOF at a frame boundary or a stop-flag exit.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: Option<&AtomicBool>,
+) -> std::io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ));
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                match stop {
+                    Some(s) if !s.load(Ordering::SeqCst) => {}
+                    Some(_) => return Ok(false),
+                    None => return Err(e),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame; `Ok(None)` means clean EOF or a stop-flag exit.
+fn read_frame(
+    stream: &mut TcpStream,
+    stop: Option<&AtomicBool>,
+) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len4 = [0u8; 4];
+    if !read_full(stream, &mut len4, stop)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    if !read_full(stream, &mut payload, stop)? {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "connection closed mid-frame",
+        ));
+    }
+    Ok(Some(payload))
+}
+
+fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn bad_request(msg: &str) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(1 + msg.len());
+    payload.push(ST_BAD_REQUEST);
+    payload.extend_from_slice(msg.as_bytes());
+    payload
+}
+
+// ---------------------------------------------------------------------------
+// Server side.
+// ---------------------------------------------------------------------------
+
+/// Handle one request payload against the session. Every malformed input
+/// becomes a `ST_BAD_REQUEST` response — a bad client never takes the
+/// gateway down.
+fn handle_request(payload: &[u8], handle: &SubmitHandle, session: &ServeSession) -> Vec<u8> {
+    let Some((&op, body)) = payload.split_first() else {
+        return bad_request("empty frame");
+    };
+    match op {
+        OP_INFER_INTERACTIVE | OP_INFER_BATCH => {
+            let lane = if op == OP_INFER_INTERACTIVE { Lane::Interactive } else { Lane::Batch };
+            if body.len() < 4 {
+                return bad_request("infer body shorter than its deadline header");
+            }
+            let deadline_us = u32::from_le_bytes([body[0], body[1], body[2], body[3]]);
+            let feat_bytes = &body[4..];
+            if feat_bytes.len() != handle.width() * 4 {
+                return bad_request(&format!(
+                    "expected {} feature floats, got {} bytes",
+                    handle.width(),
+                    feat_bytes.len()
+                ));
+            }
+            let features = bytes_to_f32s(feat_bytes);
+            let deadline = (deadline_us > 0).then(|| Duration::from_micros(deadline_us as u64));
+            // the gateway is the untrusted edge: everything goes through
+            // the admission-control path
+            match handle.try_submit(lane, features, deadline) {
+                Ok(pending) => match pending.wait() {
+                    Ok(row) => {
+                        let mut payload = Vec::with_capacity(1 + row.len() * 4);
+                        payload.push(ST_OK);
+                        payload.extend_from_slice(&f32s_to_bytes(&row));
+                        payload
+                    }
+                    Err(shed) => vec![shed_status(shed)],
+                },
+                Err(shed) => vec![shed_status(shed)],
+            }
+        }
+        OP_HOT_SWAP => match CkptData::from_bytes(body) {
+            Ok(data) => match session.hot_swap(data) {
+                Ok(notified) => {
+                    let mut payload = Vec::with_capacity(9);
+                    payload.push(ST_OK);
+                    payload.extend_from_slice(&(notified as u64).to_le_bytes());
+                    payload
+                }
+                Err(e) => bad_request(&e.to_string()),
+            },
+            Err(e) => bad_request(&format!("malformed checkpoint image: {e}")),
+        },
+        OP_STATS => {
+            let s = session.stats();
+            let mut payload = Vec::with_capacity(1 + 8 * 8);
+            payload.push(ST_OK);
+            for v in [
+                s.replicas,
+                s.in_flight,
+                s.submitted,
+                s.served,
+                s.shed_queue,
+                s.shed_expired,
+                s.failed,
+                s.swaps_applied,
+            ] {
+                payload.extend_from_slice(&(v as u64).to_le_bytes());
+            }
+            payload
+        }
+        other => bad_request(&format!("unknown opcode {other}")),
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    handle: SubmitHandle,
+    session: Arc<ServeSession>,
+    stop: Arc<AtomicBool>,
+) {
+    // short read timeout so the thread notices a gateway stop even on an
+    // idle connection
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.set_nodelay(true);
+    while !stop.load(Ordering::SeqCst) {
+        let payload = match read_frame(&mut stream, Some(&stop)) {
+            Ok(Some(p)) => p,
+            Ok(None) => break,
+            Err(_) => break,
+        };
+        let response = handle_request(&payload, &handle, &session);
+        if write_frame(&mut stream, &response).is_err() {
+            break;
+        }
+    }
+}
+
+/// The TCP front-end: owns the [`ServeSession`], accepts connections on
+/// a loopback/LAN address, and serves the frame protocol until
+/// [`Gateway::stop`] — which drains the engine and returns its
+/// [`ServeReport`].
+pub struct Gateway {
+    session: Arc<ServeSession>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl Gateway {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an OS-assigned port) and
+    /// start accepting. The session keeps serving in-process handles too;
+    /// the gateway is just another producer.
+    pub fn start(session: ServeSession, addr: &str) -> Result<Gateway> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| crate::error::Error::from(format!("binding gateway to {addr}: {e}")))?;
+        let local = listener.local_addr()?;
+        let session = Arc::new(session);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (session, stop, conns) = (session.clone(), stop.clone(), conns.clone());
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let handle = session.handle();
+                    let (session, stop) = (session.clone(), stop.clone());
+                    conns.lock().unwrap().push(std::thread::spawn(move || {
+                        serve_connection(stream, handle, session, stop);
+                    }));
+                }
+            })
+        };
+        Ok(Gateway { session, addr: local, stop, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The live session, for in-process producers and counters.
+    pub fn session(&self) -> &ServeSession {
+        &self.session
+    }
+
+    /// Stop accepting, close every connection, drain the engine, report.
+    pub fn stop(mut self) -> Result<ServeReport> {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a throwaway self-connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in conns {
+            let _ = c.join();
+        }
+        let session = Arc::try_unwrap(self.session)
+            .map_err(|_| crate::error::Error::from("gateway session still shared at stop".to_string()))?;
+        session.shutdown()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side: the same codec, packaged for the bench and tests.
+// ---------------------------------------------------------------------------
+
+/// What a wire infer came back as.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InferOutcome {
+    Ok(Vec<f32>),
+    Shed(Shed),
+}
+
+impl InferOutcome {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, InferOutcome::Ok(_))
+    }
+
+    pub fn shed(&self) -> Option<Shed> {
+        match self {
+            InferOutcome::Ok(_) => None,
+            InferOutcome::Shed(s) => Some(*s),
+        }
+    }
+}
+
+/// A blocking client for the gateway protocol: one connection, strictly
+/// ordered request/reply. Open one per concurrent load-generator client.
+pub struct GatewayClient {
+    stream: TcpStream,
+}
+
+impl GatewayClient {
+    pub fn connect(addr: SocketAddr) -> Result<GatewayClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| crate::error::Error::from(format!("connecting to gateway {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        // generous: a response must arrive or the peer is gone
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(GatewayClient { stream })
+    }
+
+    fn roundtrip(&mut self, request: &[u8]) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, request)?;
+        match read_frame(&mut self.stream, None)? {
+            Some(p) if !p.is_empty() => Ok(p),
+            _ => crate::bail!("gateway closed the connection"),
+        }
+    }
+
+    fn expect_ok<'a>(&self, payload: &'a [u8], what: &str) -> Result<&'a [u8]> {
+        match payload[0] {
+            ST_OK => Ok(&payload[1..]),
+            ST_BAD_REQUEST => crate::bail!(
+                "{what} rejected: {}",
+                String::from_utf8_lossy(&payload[1..])
+            ),
+            other => crate::bail!("{what} failed with status {other}"),
+        }
+    }
+
+    /// One inference round trip. Shed responses are an `Ok(Shed)`
+    /// outcome, not an error — load shedding is the protocol working.
+    pub fn infer(
+        &mut self,
+        lane: Lane,
+        features: &[f32],
+        deadline_us: u32,
+    ) -> Result<InferOutcome> {
+        let op = match lane {
+            Lane::Interactive => OP_INFER_INTERACTIVE,
+            Lane::Batch => OP_INFER_BATCH,
+        };
+        let mut req = Vec::with_capacity(5 + features.len() * 4);
+        req.push(op);
+        req.extend_from_slice(&deadline_us.to_le_bytes());
+        req.extend_from_slice(&f32s_to_bytes(features));
+        let resp = self.roundtrip(&req)?;
+        match resp[0] {
+            ST_OK => Ok(InferOutcome::Ok(bytes_to_f32s(&resp[1..]))),
+            ST_SHED_QUEUE => Ok(InferOutcome::Shed(Shed::QueueFull)),
+            ST_SHED_DEADLINE => Ok(InferOutcome::Shed(Shed::DeadlineExpired)),
+            ST_ENGINE_DOWN => Ok(InferOutcome::Shed(Shed::EngineDown)),
+            ST_BAD_REQUEST => crate::bail!(
+                "infer rejected: {}",
+                String::from_utf8_lossy(&resp[1..])
+            ),
+            other => crate::bail!("unknown response status {other}"),
+        }
+    }
+
+    /// Push a checkpoint image through the wire hot-swap; returns how
+    /// many replicas were notified.
+    pub fn hot_swap(&mut self, ckpt_image: &[u8]) -> Result<usize> {
+        let mut req = Vec::with_capacity(1 + ckpt_image.len());
+        req.push(OP_HOT_SWAP);
+        req.extend_from_slice(ckpt_image);
+        let resp = self.roundtrip(&req)?;
+        let body = self.expect_ok(&resp, "hot swap")?;
+        if body.len() != 8 {
+            crate::bail!("hot swap response body of {} bytes", body.len());
+        }
+        let mut b = [0u8; 8];
+        b.copy_from_slice(body);
+        Ok(u64::from_le_bytes(b) as usize)
+    }
+
+    /// Fetch the session counters.
+    pub fn stats(&mut self) -> Result<SessionStats> {
+        let resp = self.roundtrip(&[OP_STATS])?;
+        let body = self.expect_ok(&resp, "stats")?;
+        if body.len() != 8 * 8 {
+            crate::bail!("stats response body of {} bytes", body.len());
+        }
+        let word = |i: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&body[i * 8..(i + 1) * 8]);
+            u64::from_le_bytes(b) as usize
+        };
+        Ok(SessionStats {
+            replicas: word(0),
+            in_flight: word(1),
+            submitted: word(2),
+            served: word(3),
+            shed_queue: word(4),
+            shed_expired: word(5),
+            failed: word(6),
+            swaps_applied: word(7),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_codec_round_trips() {
+        let vals = [0.0f32, -1.5, 3.25, f32::MAX, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&vals)), vals);
+    }
+
+    #[test]
+    fn frame_codec_round_trips_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let p = read_frame(&mut s, None).unwrap().unwrap();
+            write_frame(&mut s, &p).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, b"hello frames").unwrap();
+        assert_eq!(read_frame(&mut c, None).unwrap().unwrap(), b"hello frames");
+        echo.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_frame(&mut s, None)
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+        let err = server.join().unwrap().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn clean_eof_reads_as_none() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_frame(&mut s, None)
+        });
+        drop(TcpStream::connect(addr).unwrap());
+        assert!(server.join().unwrap().unwrap().is_none());
+    }
+
+    #[test]
+    fn mid_frame_eof_is_an_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_frame(&mut s, None)
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(&8u32.to_le_bytes()).unwrap();
+        c.write_all(&[1, 2, 3]).unwrap(); // promise 8, deliver 3
+        drop(c);
+        let err = server.join().unwrap().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+}

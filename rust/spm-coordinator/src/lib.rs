@@ -14,13 +14,17 @@
 //! truth.
 
 pub mod allocs;
+pub mod bench_args;
 pub mod config;
 pub mod error;
 pub mod experiments;
+pub mod gateway;
 pub mod metrics;
 pub mod serve;
 pub mod train;
 
-pub use config::{ModelConfig, OpConfig, RunConfig, TrainConfig};
+pub use config::{ModelConfig, OpConfig, RunConfig, ServeConfig, TrainConfig};
 pub use error::Result;
+pub use gateway::{Gateway, GatewayClient};
+pub use serve::{ServeEngine, ServeSession, SubmitHandle};
 pub use train::{TrainBatch, TrainEngine, TrainReport, TrainTarget};

@@ -145,9 +145,56 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(1, n) - 1]
 }
 
+/// Latency digest over a set of samples (ms): count, mean, and the
+/// nearest-rank tail the serving gates check.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Digest `samples` (sorted in place; order on entry does not matter).
+pub fn summarize(samples: &mut [f64]) -> Summary {
+    if samples.is_empty() {
+        return Summary::default();
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        count: samples.len(),
+        mean: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50: percentile(samples, 0.50),
+        p95: percentile(samples, 0.95),
+        p99: percentile(samples, 0.99),
+        max: *samples.last().unwrap(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn summarize_orders_and_digests() {
+        let mut xs = [3.0, 1.0, 2.0, 10.0];
+        let s = summarize(&mut xs);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.mean, 4.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p99, 10.0);
+        assert_eq!(s.max, 10.0);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn summarize_empty_is_zero() {
+        let s = summarize(&mut []);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0.0);
+    }
 
     #[test]
     fn timer_excludes_warmup() {

@@ -1,23 +1,43 @@
-//! The serving engine (DESIGN.md §13): a deadline-batched request router
-//! in front of N executor replicas — the §7 "projection layers dominate
-//! serving cost" story, for EVERY model in the zoo.
+//! The serving engine (DESIGN.md §13, §16): a deadline-batched request
+//! router in front of N executor replicas — the §7 "projection layers
+//! dominate serving cost" story, for EVERY model in the zoo.
 //!
-//! Client threads submit single-row requests through an mpsc channel.
-//! The router opens a micro-batch at the first request and keeps
-//! collecting until the batch is full OR `max_wait_us` has elapsed
-//! (deadline flush — the old router flushed on an empty `try_recv`, so
-//! under a trickle of traffic every batch had fill 1). Batches are
-//! dispatched round-robin to worker threads, one per [`Executor`]
-//! replica, and ragged tails are forwarded at their TRUE fill: the
-//! native models take any row count down to the fused stage kernels, so
-//! the router never zero-pads (executors that need fixed shapes — AOT
-//! XLA executables — pad privately inside [`Executor::forward`]).
+//! PR 7 turned the closed-batch `run(&Workload)` driver into a
+//! long-lived **session**: [`ServeEngine::start`] moves the replicas
+//! onto their own worker threads and returns a [`ServeSession`] whose
+//! cloneable [`SubmitHandle`] feeds requests in from anywhere (the TCP
+//! gateway, bench load generators, tests). `run(&Workload)` survives as
+//! a thin wrapper over the session API.
+//!
+//! Request flow: a handle submits a single row into one of two
+//! **lanes** — [`Lane::Interactive`] (short batching window, tight SLO)
+//! or [`Lane::Batch`] (long window, throughput-oriented). `try_submit`
+//! is the admission-control hook: it sheds [`Shed::QueueFull`] when the
+//! lane's in-flight depth is at its configured cap and
+//! [`Shed::DeadlineExpired`] when the request's deadline budget is
+//! already spent; `submit` is the trusted path that only counts. The
+//! router opens a micro-batch per lane at its first request and keeps
+//! collecting until the batch is full OR the lane's wait has elapsed,
+//! shedding queued requests whose deadline (or the engine-wide
+//! `shed_deadline` budget) expired BEFORE dispatch. Batches go
+//! round-robin to worker threads, one per [`Executor`] replica, and
+//! ragged tails are forwarded at their TRUE fill.
+//!
+//! The worker pool is **elastic** when a spawner is configured: a
+//! scaler thread watches the in-flight depth signal, hot-adds replicas
+//! past `scale_up_depth`, and retires surplus ones after an idle
+//! streak — the serving analogue of `TrainEngine` absorbing freed
+//! cores. And checkpoints **hot-swap** without a restart:
+//! [`ServeSession::hot_swap_file`] parses an `SPMCKPT1` image once,
+//! validates kind/widths/arch-fingerprint against the live model, then
+//! enqueues the swap on every worker's job queue — each replica applies
+//! it *between* batches, so no in-flight request is ever dropped, and
+//! batches dispatched after the call always see the new params.
 //!
 //! Replica workers split one core budget: each runs its forwards under
-//! `parallel::with_thread_budget(floor(threads / R))`, so R replicas
-//! never fan out to R x `available_parallelism()` worker threads
-//! between them (`ServeEngine::with_threads` overrides the global
-//! budget they divide).
+//! `parallel::with_thread_budget(floor(threads / R))`, with R the
+//! elastic maximum, so replicas never fan out to R x
+//! `available_parallelism()` between them.
 //!
 //! [`ServeEngine::native`] wraps any [`Model`] (mlp, gru, charlm,
 //! attention) as an executor; [`ServeEngine::run_inline`] runs the same
@@ -26,34 +46,89 @@
 //! `spm-runtime::drivers::serve_demo`).
 //!
 //! The [`ServeReport`] splits request latency into queue wait (submit ->
-//! forward start) and exec time (the forward itself), on top of the
-//! nearest-rank latency percentiles and throughput.
-//!
-//! Requests are split across clients by [`client_shares`], which spreads
-//! the remainder of `num_requests / num_clients` over the first clients
-//! so every request is issued (no silent drop).
+//! forward start) and exec time (the forward itself), and accounts for
+//! every submission: `submitted == requests + shed_queue + shed_expired
+//! + failed` once a session has been shut down.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use spm_core::models::api::Model;
+use spm_core::models::api::{arch_fingerprint, CkptData, Model};
 use spm_core::parallel;
 use spm_core::rng::Rng;
 use spm_core::tensor::Mat;
 
 use crate::error::Result;
-use crate::metrics::percentile;
+use crate::metrics::summarize;
 
 /// Default micro-batch cap for native executors.
 pub const DEFAULT_BATCH: usize = 32;
 
-/// Default deadline before a partial batch is flushed.
+/// Default deadline before a partial interactive batch is flushed.
 pub const DEFAULT_MAX_WAIT_US: u64 = 200;
+
+/// Default deadline before a partial batch-lane batch is flushed.
+pub const DEFAULT_BATCH_WAIT_US: u64 = 2000;
+
+/// Request class: which queue, which batching window, which SLO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Latency-sensitive: short batching window, shed early.
+    Interactive,
+    /// Throughput-oriented: long batching window, deep queue.
+    Batch,
+}
+
+impl Lane {
+    pub const ALL: [Lane; 2] = [Lane::Interactive, Lane::Batch];
+
+    fn idx(self) -> usize {
+        match self {
+            Lane::Interactive => 0,
+            Lane::Batch => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Batch => "batch",
+        }
+    }
+}
+
+/// Why a request was not served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    /// The lane's in-flight depth was at its cap at admission.
+    QueueFull,
+    /// The request's deadline (or the engine shed budget) expired before
+    /// its batch was dispatched.
+    DeadlineExpired,
+    /// The engine failed or shut down before the request could be served.
+    EngineDown,
+}
+
+impl std::fmt::Display for Shed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Shed::QueueFull => write!(f, "queue full"),
+            Shed::DeadlineExpired => write!(f, "deadline expired"),
+            Shed::EngineDown => write!(f, "engine down"),
+        }
+    }
+}
+
+/// What a client gets back: the output row, or the shed reason.
+pub type Reply = std::result::Result<Vec<f32>, Shed>;
 
 pub struct Request {
     pub features: Vec<f32>,
-    pub reply: mpsc::Sender<Vec<f32>>,
+    pub reply: mpsc::Sender<Reply>,
     pub submitted: Instant,
+    pub deadline: Option<Instant>,
+    pub lane: Lane,
 }
 
 /// One forward engine the router can dispatch micro-batches to.
@@ -69,6 +144,11 @@ pub trait Executor {
     /// true fill: if the underlying engine needs a fixed shape, padding
     /// (and un-padding) is this executor's private business.
     fn forward(&mut self, rows: usize, flat: Vec<f32>) -> Result<Vec<f32>>;
+    /// The live model, for executors that can hot-swap parameters in
+    /// place (`None` — the default — opts out of checkpoint hot-swap).
+    fn model_mut(&mut self) -> Option<&mut dyn Model> {
+        None
+    }
 }
 
 /// Any [`Model`] as an executor: one `Mat` forward per micro-batch, at
@@ -106,6 +186,10 @@ impl Executor for NativeExecutor {
         // call's output scratch (`forward_into` reshapes it)
         Ok(std::mem::replace(&mut self.y.data, x.data))
     }
+
+    fn model_mut(&mut self) -> Option<&mut dyn Model> {
+        Some(self.model.as_mut())
+    }
 }
 
 /// Synthetic serving workload: how many requests, from how many
@@ -119,6 +203,7 @@ pub struct Workload {
 
 #[derive(Debug, Clone, Default)]
 pub struct ServeReport {
+    /// Requests actually served (rows forwarded through an executor).
     pub requests: usize,
     pub batches: usize,
     pub mean_batch_fill: f64,
@@ -132,16 +217,53 @@ pub struct ServeReport {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub throughput_rps: f64,
-    /// Batches each replica executed, in replica order.
+    /// Batches each replica executed, in replica order (elastic replicas
+    /// appear after the initial ones).
     pub replica_batches: Vec<usize>,
+    /// Every submit/try_submit this session saw, served or not.
+    pub submitted: usize,
+    /// Requests shed at admission because the lane queue was full.
+    pub shed_queue: usize,
+    /// Requests shed because their deadline budget expired first.
+    pub shed_expired: usize,
+    /// Requests that hit a failed or shut-down engine.
+    pub failed: usize,
+    /// Replica param applications from checkpoint hot-swaps.
+    pub swaps_applied: usize,
+}
+
+impl ServeReport {
+    /// Total load-shed requests (admission + deadline).
+    pub fn shed(&self) -> usize {
+        self.shed_queue + self.shed_expired
+    }
+
+    /// Shed fraction of everything submitted.
+    pub fn shed_rate(&self) -> f64 {
+        self.shed() as f64 / self.submitted.max(1) as f64
+    }
 }
 
 impl std::fmt::Display for ServeReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "requests      : {}", self.requests)?;
+        if self.shed() > 0 || self.failed > 0 {
+            writeln!(
+                f,
+                "admission     : {} submitted, shed {} (queue {}, deadline {}), failed {}",
+                self.submitted,
+                self.shed(),
+                self.shed_queue,
+                self.shed_expired,
+                self.failed
+            )?;
+        }
         writeln!(f, "batches       : {} (mean fill {:.1})", self.batches, self.mean_batch_fill)?;
         if self.replica_batches.len() > 1 {
             writeln!(f, "replicas      : {:?} batches", self.replica_batches)?;
+        }
+        if self.swaps_applied > 0 {
+            writeln!(f, "hot swaps     : {} replica applications", self.swaps_applied)?;
         }
         writeln!(f, "queue wait    : {:.2} ms mean", self.mean_queue_wait_ms)?;
         writeln!(f, "exec          : {:.2} ms mean", self.mean_exec_ms)?;
@@ -161,19 +283,175 @@ pub fn client_shares(num_requests: usize, num_clients: usize) -> Vec<usize> {
     (0..num_clients).map(|c| base + usize::from(c < rem)).collect()
 }
 
-/// Per-replica accounting, accumulated where the forwards run.
+// ---------------------------------------------------------------------------
+// Admission accounting: one set of atomics shared by every handle, the
+// router, and the workers. `depth` counts admitted-but-unreplied
+// requests per lane — incremented when a handle admits, decremented in
+// `finish_request` when the reply (served OR shed) goes out — so the
+// queue-full check sees exactly the in-flight population and burst shed
+// counts are deterministic under a pinned config.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Admission {
+    depth: [AtomicUsize; 2],
+    submitted: AtomicUsize,
+    served: AtomicUsize,
+    shed_queue: AtomicUsize,
+    shed_expired: AtomicUsize,
+    failed: AtomicUsize,
+}
+
+/// Send the terminal reply for `req` and settle its accounting. Every
+/// admitted request funnels through here exactly once.
+fn finish_request(adm: &Admission, req: Request, result: Reply) {
+    adm.depth[req.lane.idx()].fetch_sub(1, Ordering::SeqCst);
+    match &result {
+        Ok(_) => adm.served.fetch_add(1, Ordering::SeqCst),
+        Err(Shed::QueueFull) => adm.shed_queue.fetch_add(1, Ordering::SeqCst),
+        Err(Shed::DeadlineExpired) => adm.shed_expired.fetch_add(1, Ordering::SeqCst),
+        Err(Shed::EngineDown) => adm.failed.fetch_add(1, Ordering::SeqCst),
+    };
+    let _ = req.reply.send(result);
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// A reply in flight: blocks on [`PendingReply::wait`] until the engine
+/// serves or sheds the request.
+pub struct PendingReply {
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl PendingReply {
+    /// Block until the terminal reply. A session that died without
+    /// replying reads as [`Shed::EngineDown`].
+    pub fn wait(self) -> Reply {
+        self.rx.recv().unwrap_or(Err(Shed::EngineDown))
+    }
+}
+
+/// Cloneable submission side of a [`ServeSession`]. Cheap to clone; each
+/// clone is an independent producer (one per client thread/connection).
+#[derive(Clone)]
+pub struct SubmitHandle {
+    tx: mpsc::Sender<Msg>,
+    width: usize,
+    caps: [usize; 2],
+    adm: Arc<Admission>,
+}
+
+impl SubmitHandle {
+    /// Feature width every request row must have.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Trusted interactive submit: counts toward depth but never sheds
+    /// at admission (the `run(&Workload)` wrapper and tests use this).
+    pub fn submit(&self, features: Vec<f32>) -> std::result::Result<PendingReply, Shed> {
+        self.submit_to(Lane::Interactive, features, None)
+    }
+
+    /// Trusted submit into a specific lane with an optional deadline
+    /// budget (relative to now). Skips the queue-depth and expiry checks;
+    /// the router still sheds if the deadline passes before dispatch.
+    pub fn submit_to(
+        &self,
+        lane: Lane,
+        features: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<PendingReply, Shed> {
+        self.adm.submitted.fetch_add(1, Ordering::SeqCst);
+        let now = Instant::now();
+        self.adm.depth[lane.idx()].fetch_add(1, Ordering::SeqCst);
+        self.send(lane, features, deadline.map(|d| now + d), now)
+    }
+
+    /// The admission-control hook: sheds [`Shed::QueueFull`] when the
+    /// lane's in-flight depth is at its cap, [`Shed::DeadlineExpired`]
+    /// when the budget is already spent — BEFORE the request costs the
+    /// router anything. The gateway routes every wire request through
+    /// here.
+    pub fn try_submit(
+        &self,
+        lane: Lane,
+        features: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<PendingReply, Shed> {
+        self.adm.submitted.fetch_add(1, Ordering::SeqCst);
+        let now = Instant::now();
+        let deadline = deadline.map(|d| now + d);
+        if let Some(dl) = deadline {
+            if dl <= Instant::now() {
+                self.adm.shed_expired.fetch_add(1, Ordering::SeqCst);
+                return Err(Shed::DeadlineExpired);
+            }
+        }
+        let l = lane.idx();
+        // reserve an in-flight slot, or shed: compare-exchange so two
+        // racing submits can never both squeeze past the cap
+        let mut cur = self.adm.depth[l].load(Ordering::SeqCst);
+        loop {
+            if cur >= self.caps[l] {
+                self.adm.shed_queue.fetch_add(1, Ordering::SeqCst);
+                return Err(Shed::QueueFull);
+            }
+            match self.adm.depth[l].compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+        self.send(lane, features, deadline, now)
+    }
+
+    fn send(
+        &self,
+        lane: Lane,
+        features: Vec<f32>,
+        deadline: Option<Instant>,
+        submitted: Instant,
+    ) -> std::result::Result<PendingReply, Shed> {
+        assert_eq!(features.len(), self.width, "request feature width");
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request { features, reply: rtx, submitted, deadline, lane };
+        if self.tx.send(Msg::Req(req)).is_err() {
+            self.adm.depth[lane.idx()].fetch_sub(1, Ordering::SeqCst);
+            self.adm.failed.fetch_add(1, Ordering::SeqCst);
+            return Err(Shed::EngineDown);
+        }
+        Ok(PendingReply { rx: rrx })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-replica accounting + batch execution, accumulated where the
+// forwards run.
+// ---------------------------------------------------------------------------
+
 #[derive(Default)]
 struct ExecStats {
     batches: usize,
     rows: usize,
     queue_wait_ms: f64,
     exec_ms: f64,
+    /// Served-request latencies (submit -> reply), ms.
+    latencies: Vec<f64>,
     error: Option<crate::error::Error>,
 }
 
 /// Run one micro-batch through `exec` at its true fill and fan the rows
-/// back out. On executor failure the replies are dropped, which unblocks
-/// the waiting clients; the error is surfaced through the stats.
+/// back out. On executor failure every row is shed as
+/// [`Shed::EngineDown`] (clients unblock with the reason) and the error
+/// is surfaced through the stats.
 ///
 /// `pool` is the worker's reusable batch-assembly buffer (DESIGN.md §15):
 /// it is moved into [`Executor::forward`] and refilled from the returned
@@ -184,6 +462,7 @@ fn exec_batch(
     pending: Vec<Request>,
     stats: &mut ExecStats,
     pool: &mut Vec<f32>,
+    adm: &Admission,
 ) {
     let width = exec.width();
     let fill = pending.len();
@@ -199,163 +478,460 @@ fn exec_batch(
         Ok(out) => out,
         Err(e) => {
             stats.error = Some(e);
+            for r in pending {
+                finish_request(adm, r, Err(Shed::EngineDown));
+            }
             return;
         }
     };
-    let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let done = Instant::now();
+    let exec_ms = done.duration_since(t0).as_secs_f64() * 1e3;
     let per_row = out.len() / fill.max(1);
     for (i, r) in pending.into_iter().enumerate() {
         stats.queue_wait_ms += t0.duration_since(r.submitted).as_secs_f64() * 1e3;
         stats.exec_ms += exec_ms;
-        let _ = r.reply.send(out[i * per_row..(i + 1) * per_row].to_vec());
+        stats.latencies.push(done.duration_since(r.submitted).as_secs_f64() * 1e3);
+        let row = out[i * per_row..(i + 1) * per_row].to_vec();
+        finish_request(adm, r, Ok(row));
     }
     *pool = out;
     stats.batches += 1;
     stats.rows += fill;
 }
 
-/// Spawn the synthetic client threads: each submits its share of
-/// single-row requests, waits for every reply, and returns its observed
-/// latencies (ms). A closed channel means the engine failed — the client
-/// aborts quietly and the engine surfaces the executor error instead.
-fn spawn_clients(
-    w: &Workload,
-    width: usize,
-    tx: mpsc::Sender<Request>,
-) -> Vec<std::thread::JoinHandle<Vec<f64>>> {
-    let handles = client_shares(w.num_requests, w.num_clients)
-        .into_iter()
-        .enumerate()
-        .map(|(c, per_client)| {
-            let tx = tx.clone();
-            let seed = w.seed;
-            std::thread::spawn(move || {
-                let mut rng = Rng::new(seed ^ (c as u64 + 1).wrapping_mul(0xABCD));
-                let mut latencies = Vec::with_capacity(per_client);
-                for _ in 0..per_client {
-                    let features = rng.normal_vec(width, 1.0);
-                    let (rtx, rrx) = mpsc::channel();
-                    let started = Instant::now();
-                    if tx.send(Request { features, reply: rtx, submitted: started }).is_err() {
-                        break;
-                    }
-                    if rrx.recv().is_err() {
-                        break;
-                    }
-                    latencies.push(started.elapsed().as_secs_f64() * 1e3);
-                }
-                latencies
-            })
-        })
-        .collect();
-    drop(tx);
-    handles
+// ---------------------------------------------------------------------------
+// Worker pool: one thread per replica, fed through a job queue so the
+// router, the hot-swap path, and the elastic scaler all speak the same
+// ordered language — a swap enqueued before a batch is applied before
+// that batch executes, and never in the middle of one.
+// ---------------------------------------------------------------------------
+
+enum Job {
+    Batch(Vec<Request>),
+    /// Apply a validated checkpoint between batches; bump the counter on
+    /// success so the session can confirm full propagation.
+    Swap(Arc<CkptData>, Arc<AtomicUsize>),
+    /// Elastic scale-down: finish what is queued, then exit.
+    Retire,
 }
 
-/// The deadline-batching core: open a micro-batch at the first request,
-/// then keep collecting until it is full or `max_wait` has elapsed since
-/// it opened. `max_wait = 0` degenerates to greedy draining (flush
-/// whatever is already queued). Returns when every client has hung up.
-fn route(
-    rx: &mpsc::Receiver<Request>,
-    batch: usize,
-    max_wait: Duration,
-    mut dispatch: impl FnMut(Vec<Request>),
-) {
-    loop {
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
-        };
-        let mut pending = vec![first];
-        if max_wait.is_zero() {
-            while pending.len() < batch {
-                match rx.try_recv() {
-                    Ok(r) => pending.push(r),
-                    Err(_) => break,
+struct WorkerDone {
+    index: usize,
+    exec: Box<dyn Executor + Send>,
+    stats: ExecStats,
+}
+
+/// Senders to the live workers, shared so the elastic scaler can grow
+/// and shrink the pool while the router round-robins over it.
+#[derive(Default)]
+struct Pool {
+    jobs: Mutex<Vec<mpsc::Sender<Job>>>,
+}
+
+fn spawn_worker(
+    index: usize,
+    mut exec: Box<dyn Executor + Send>,
+    jrx: mpsc::Receiver<Job>,
+    threads: usize,
+    adm: Arc<Admission>,
+    done: Arc<Mutex<Vec<WorkerDone>>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let stats = parallel::with_thread_budget(threads, || {
+            let mut st = ExecStats::default();
+            // per-worker batch buffer, recycled across batches
+            let mut pool = Vec::new();
+            while let Ok(job) = jrx.recv() {
+                match job {
+                    Job::Batch(pending) => {
+                        if st.error.is_some() {
+                            // a failed replica sheds instead of serving
+                            // stale work; clients unblock with the reason
+                            for r in pending {
+                                finish_request(&adm, r, Err(Shed::EngineDown));
+                            }
+                            continue;
+                        }
+                        exec_batch(exec.as_mut(), pending, &mut st, &mut pool, &adm);
+                    }
+                    Job::Swap(data, applied) => {
+                        if let Some(model) = exec.model_mut() {
+                            match data.apply_to(model) {
+                                Ok(()) => {
+                                    applied.fetch_add(1, Ordering::SeqCst);
+                                }
+                                Err(e) => st.error = Some(e.into()),
+                            }
+                        }
+                    }
+                    Job::Retire => break,
                 }
             }
+            st
+        });
+        done.lock().unwrap().push(WorkerDone { index, exec, stats });
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The lane-aware deadline router.
+// ---------------------------------------------------------------------------
+
+struct RouterCfg {
+    batch: usize,
+    waits: [Duration; 2],
+    shed_deadline: Option<Duration>,
+}
+
+/// Has this queued request outlived its own deadline or the engine-wide
+/// shed budget?
+fn request_expired(r: &Request, now: Instant, shed_deadline: Option<Duration>) -> bool {
+    if r.deadline.map_or(false, |dl| dl <= now) {
+        return true;
+    }
+    shed_deadline.map_or(false, |budget| now.duration_since(r.submitted) > budget)
+}
+
+/// Close a lane's batching window: shed what expired while queued, then
+/// dispatch the survivors as one micro-batch.
+fn flush_lane(
+    lane: usize,
+    lanes: &mut [Vec<Request>; 2],
+    deadlines: &mut [Option<Instant>; 2],
+    shed_deadline: Option<Duration>,
+    adm: &Admission,
+    dispatch: &mut dyn FnMut(Vec<Request>),
+) {
+    deadlines[lane] = None;
+    if lanes[lane].is_empty() {
+        return;
+    }
+    let pending = std::mem::take(&mut lanes[lane]);
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(pending.len());
+    for r in pending {
+        if request_expired(&r, now, shed_deadline) {
+            finish_request(adm, r, Err(Shed::DeadlineExpired));
         } else {
-            let deadline = Instant::now() + max_wait;
-            while pending.len() < batch {
+            live.push(r);
+        }
+    }
+    if !live.is_empty() {
+        dispatch(live);
+    }
+}
+
+/// Put one request into its lane's open micro-batch (opening the window
+/// if it is the first), shedding up front if it is already expired.
+fn admit_into(
+    r: Request,
+    cfg: &RouterCfg,
+    lanes: &mut [Vec<Request>; 2],
+    deadlines: &mut [Option<Instant>; 2],
+    adm: &Admission,
+    dispatch: &mut dyn FnMut(Vec<Request>),
+) {
+    let now = Instant::now();
+    if request_expired(&r, now, cfg.shed_deadline) {
+        finish_request(adm, r, Err(Shed::DeadlineExpired));
+        return;
+    }
+    let l = r.lane.idx();
+    if lanes[l].is_empty() && !cfg.waits[l].is_zero() {
+        deadlines[l] = Some(now + cfg.waits[l]);
+    }
+    lanes[l].push(r);
+    if lanes[l].len() >= cfg.batch {
+        flush_lane(l, lanes, deadlines, cfg.shed_deadline, adm, dispatch);
+    }
+}
+
+/// The deadline-batching core, one open micro-batch per lane: collect
+/// until a lane's batch is full or its wait has elapsed since it opened
+/// (wait 0 degenerates to greedy draining). Returns when a shutdown
+/// sentinel arrives or every producer has hung up; either way the tail
+/// is flushed — interactive first — so shutdown drains in-flight work.
+fn route(
+    rx: &mpsc::Receiver<Msg>,
+    cfg: &RouterCfg,
+    adm: &Admission,
+    mut dispatch: impl FnMut(Vec<Request>),
+) {
+    let mut lanes: [Vec<Request>; 2] = [Vec::new(), Vec::new()];
+    let mut deadlines: [Option<Instant>; 2] = [None, None];
+    let mut shutdown = false;
+    while !shutdown {
+        let next_deadline = deadlines.iter().flatten().copied().min();
+        let msg = match next_deadline {
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            },
+            Some(dl) => {
                 let now = Instant::now();
-                if now >= deadline {
-                    break;
+                if dl <= now {
+                    for l in 0..2 {
+                        if deadlines[l].map_or(false, |d| d <= now) {
+                            flush_lane(
+                                l,
+                                &mut lanes,
+                                &mut deadlines,
+                                cfg.shed_deadline,
+                                adm,
+                                &mut dispatch,
+                            );
+                        }
+                    }
+                    continue;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => pending.push(r),
-                    // Timeout: the deadline expired on a partial batch.
-                    // Disconnected: the workload is over — flush the tail
-                    // immediately instead of sleeping out the deadline.
-                    Err(_) => break,
+                match rx.recv_timeout(dl - now) {
+                    Ok(m) => Some(m),
+                    // Timeout: a lane's window closed on a partial batch.
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        };
+        match msg {
+            Some(Msg::Req(r)) => {
+                admit_into(r, cfg, &mut lanes, &mut deadlines, adm, &mut dispatch);
+                // greedy lanes (wait 0): drain the backlog, then flush
+                // whatever is already queued — the old router's behavior
+                if (0..2).any(|l| cfg.waits[l].is_zero() && !lanes[l].is_empty()) {
+                    loop {
+                        match rx.try_recv() {
+                            Ok(Msg::Req(r)) => {
+                                admit_into(r, cfg, &mut lanes, &mut deadlines, adm, &mut dispatch);
+                            }
+                            Ok(Msg::Shutdown) => {
+                                shutdown = true;
+                                break;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    for l in 0..2 {
+                        if cfg.waits[l].is_zero() {
+                            flush_lane(
+                                l,
+                                &mut lanes,
+                                &mut deadlines,
+                                cfg.shed_deadline,
+                                adm,
+                                &mut dispatch,
+                            );
+                        }
+                    }
+                }
+            }
+            Some(Msg::Shutdown) => shutdown = true,
+            None => {
+                let now = Instant::now();
+                for l in 0..2 {
+                    if deadlines[l].map_or(false, |d| d <= now) {
+                        flush_lane(
+                            l,
+                            &mut lanes,
+                            &mut deadlines,
+                            cfg.shed_deadline,
+                            adm,
+                            &mut dispatch,
+                        );
+                    }
                 }
             }
         }
-        dispatch(pending);
+    }
+    // drain the tail: everything submitted before shutdown still ships
+    for l in 0..2 {
+        flush_lane(l, &mut lanes, &mut deadlines, cfg.shed_deadline, adm, &mut dispatch);
     }
 }
 
 fn assemble(
     mut stats: Vec<ExecStats>,
-    mut latencies: Vec<f64>,
+    adm: &Admission,
+    swaps_applied: usize,
     wall_secs: f64,
-) -> Result<ServeReport> {
+) -> (Result<ServeReport>, Vec<ExecStats>) {
     for st in stats.iter_mut() {
         if let Some(e) = st.error.take() {
-            return Err(e);
+            return (Err(e), stats);
         }
     }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut latencies: Vec<f64> =
+        stats.iter().flat_map(|s| s.latencies.iter().copied()).collect();
+    let digest = summarize(&mut latencies);
     let served: usize = stats.iter().map(|s| s.rows).sum();
     let batches: usize = stats.iter().map(|s| s.batches).sum();
     let per_req = 1.0 / served.max(1) as f64;
-    Ok(ServeReport {
+    let report = ServeReport {
         requests: served,
         batches,
         mean_batch_fill: served as f64 / batches.max(1) as f64,
         mean_queue_wait_ms: stats.iter().map(|s| s.queue_wait_ms).sum::<f64>() * per_req,
         mean_exec_ms: stats.iter().map(|s| s.exec_ms).sum::<f64>() * per_req,
-        p50_ms: percentile(&latencies, 0.50),
-        p95_ms: percentile(&latencies, 0.95),
-        p99_ms: percentile(&latencies, 0.99),
+        p50_ms: digest.p50,
+        p95_ms: digest.p95,
+        p99_ms: digest.p99,
         throughput_rps: served as f64 / wall_secs.max(1e-9),
         replica_batches: stats.iter().map(|s| s.batches).collect(),
-    })
+        submitted: adm.submitted.load(Ordering::SeqCst),
+        shed_queue: adm.shed_queue.load(Ordering::SeqCst),
+        shed_expired: adm.shed_expired.load(Ordering::SeqCst),
+        failed: adm.failed.load(Ordering::SeqCst),
+        swaps_applied,
+    };
+    (Ok(report), stats)
 }
 
-/// Builder + driver for a serving run: executor replicas, the batching
-/// policy, then [`ServeEngine::run`] against a [`Workload`].
+/// Spawn the synthetic client threads for `run(&Workload)`: each submits
+/// its share of single-row requests through the handle and waits for
+/// every reply (latencies are recorded engine-side at reply time).
+fn spawn_clients(w: &Workload, handle: &SubmitHandle) -> Vec<std::thread::JoinHandle<()>> {
+    client_shares(w.num_requests, w.num_clients)
+        .into_iter()
+        .enumerate()
+        .map(|(c, per_client)| {
+            let h = handle.clone();
+            let seed = w.seed;
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed ^ (c as u64 + 1).wrapping_mul(0xABCD));
+                for _ in 0..per_client {
+                    let features = rng.normal_vec(h.width(), 1.0);
+                    match h.submit(features) {
+                        Ok(pending) => {
+                            let _ = pending.wait();
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+        })
+        .collect()
+}
+
+/// How a live session spawns a fresh replica (elastic scale-up). Gets
+/// the new replica's index; must produce an executor with the same
+/// feature width as the initial ones.
+pub type Spawner = Box<dyn FnMut(usize) -> Box<dyn Executor + Send> + Send>;
+
+/// The live model's identity, captured at session start so hot-swap can
+/// validate a checkpoint ONCE before fanning it to the replicas.
+struct ArchSnapshot {
+    kind: String,
+    d_in: usize,
+    d_out: usize,
+    arch: u64,
+    bufs: Vec<(String, usize)>,
+}
+
+impl ArchSnapshot {
+    fn of(model: &dyn Model) -> ArchSnapshot {
+        let mut bufs = Vec::new();
+        model.visit_params(&mut |n, p| bufs.push((n.to_string(), p.len())));
+        ArchSnapshot {
+            kind: model.kind().name().to_string(),
+            d_in: model.d_in(),
+            d_out: model.d_out(),
+            arch: arch_fingerprint(model),
+            bufs,
+        }
+    }
+
+    fn check(&self, data: &CkptData) -> Result<()> {
+        if data.kind != self.kind {
+            crate::bail!("checkpoint holds a '{}' model but the session serves '{}'", data.kind, self.kind);
+        }
+        if (data.d_in, data.d_out) != (self.d_in, self.d_out) {
+            crate::bail!(
+                "checkpoint shape ({} -> {}) does not match the live model ({} -> {})",
+                data.d_in,
+                data.d_out,
+                self.d_in,
+                self.d_out
+            );
+        }
+        if data.arch != self.arch {
+            crate::bail!(
+                "checkpoint arch fingerprint mismatch: the file binds its stage params to a \
+                 different op config or pairing than the live model — refusing to swap"
+            );
+        }
+        if data.bufs.len() != self.bufs.len() {
+            crate::bail!(
+                "checkpoint has {} buffers, live model has {}",
+                data.bufs.len(),
+                self.bufs.len()
+            );
+        }
+        for ((name, vals), (want_name, want_len)) in data.bufs.iter().zip(&self.bufs) {
+            if name != want_name || vals.len() != *want_len {
+                crate::bail!(
+                    "checkpoint buffer '{name}' ({}) does not line up with live '{want_name}' \
+                     ({want_len})",
+                    vals.len()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builder for a serving deployment: executor replicas, the batching and
+/// admission policy, then either [`ServeEngine::start`] for a long-lived
+/// session or [`ServeEngine::run`] against a closed [`Workload`].
 pub struct ServeEngine {
     executors: Vec<Box<dyn Executor + Send>>,
-    max_wait: Duration,
+    waits: [Duration; 2],
     max_batch: Option<usize>,
     threads: usize,
+    queue_depth: [usize; 2],
+    shed_deadline: Option<Duration>,
+    elastic_max: usize,
+    scale_up_depth: usize,
+    scale_idle_polls: usize,
+    scale_interval: Duration,
+    spawner: Option<Spawner>,
 }
 
 impl Default for ServeEngine {
     fn default() -> Self {
         ServeEngine {
             executors: Vec::new(),
-            max_wait: Duration::from_micros(DEFAULT_MAX_WAIT_US),
+            waits: [
+                Duration::from_micros(DEFAULT_MAX_WAIT_US),
+                Duration::from_micros(DEFAULT_BATCH_WAIT_US),
+            ],
             max_batch: None,
             threads: 0,
+            queue_depth: [usize::MAX, usize::MAX],
+            shed_deadline: None,
+            elastic_max: 0,
+            scale_up_depth: 0,
+            scale_idle_polls: 50,
+            scale_interval: Duration::from_millis(1),
+            spawner: None,
         }
     }
 }
 
 impl ServeEngine {
+    #[must_use]
     pub fn new() -> Self {
         Self::default()
     }
 
     /// One native replica serving `model` — works for every `ModelKind`
     /// (this replaces the old closure-bound `serve_native`).
+    #[must_use]
     pub fn native(model: Box<dyn Model>) -> Self {
         Self::new().with_executor(Box::new(NativeExecutor::new(model, DEFAULT_BATCH)))
     }
 
     /// Add an executor replica. All replicas must agree on the feature
     /// width (they serve the same request stream).
+    #[must_use]
     pub fn with_executor(mut self, exec: Box<dyn Executor + Send>) -> Self {
         if let Some(first) = self.executors.first() {
             assert_eq!(first.width(), exec.width(), "replica feature width");
@@ -366,18 +942,30 @@ impl ServeEngine {
 
     /// Add another native replica (its own model copy, its own worker
     /// thread) — shard the request stream for multi-worker throughput.
+    #[must_use]
     pub fn with_replica(self, model: Box<dyn Model>) -> Self {
         let batch = self.executors.first().map_or(DEFAULT_BATCH, |e| e.max_batch());
         self.with_executor(Box::new(NativeExecutor::new(model, batch)))
     }
 
-    /// Deadline before a partial micro-batch is flushed (0 = greedy).
+    /// Interactive-lane deadline before a partial micro-batch is flushed
+    /// (0 = greedy).
+    #[must_use]
     pub fn with_max_wait_us(mut self, us: u64) -> Self {
-        self.max_wait = Duration::from_micros(us);
+        self.waits[Lane::Interactive.idx()] = Duration::from_micros(us);
+        self
+    }
+
+    /// Batch-lane deadline before a partial micro-batch is flushed
+    /// (0 = greedy). Defaults to [`DEFAULT_BATCH_WAIT_US`].
+    #[must_use]
+    pub fn with_batch_wait_us(mut self, us: u64) -> Self {
+        self.waits[Lane::Batch.idx()] = Duration::from_micros(us);
         self
     }
 
     /// Cap the micro-batch size below the executors' own maximum.
+    #[must_use]
     pub fn with_max_batch(mut self, batch: usize) -> Self {
         assert!(batch >= 1, "max_batch must be >= 1");
         self.max_batch = Some(batch);
@@ -390,8 +978,54 @@ impl ServeEngine {
     /// threads, min 1 — without the split every replica's kernels
     /// default to `available_parallelism()` and R replicas contend for
     /// R x the machine.
+    #[must_use]
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Cap a lane's in-flight depth: `try_submit` sheds
+    /// [`Shed::QueueFull`] past it (0 = shed everything, the drain
+    /// valve; the default is unbounded).
+    #[must_use]
+    pub fn with_queue_depth(mut self, lane: Lane, depth: usize) -> Self {
+        self.queue_depth[lane.idx()] = depth;
+        self
+    }
+
+    /// Engine-wide deadline budget: a queued request older than this is
+    /// shed instead of dispatched (0 disables — the default).
+    #[must_use]
+    pub fn with_shed_deadline_us(mut self, us: u64) -> Self {
+        self.shed_deadline = (us > 0).then(|| Duration::from_micros(us));
+        self
+    }
+
+    /// How a live session builds a fresh replica for elastic scale-up.
+    #[must_use]
+    pub fn with_spawner(mut self, spawner: Spawner) -> Self {
+        self.spawner = Some(spawner);
+        self
+    }
+
+    /// Allow the session to grow the pool up to `max_replicas` against
+    /// the queue-depth signal (requires [`ServeEngine::with_spawner`];
+    /// the initial replica count is the floor it retires back to).
+    #[must_use]
+    pub fn with_elastic(mut self, max_replicas: usize) -> Self {
+        self.elastic_max = max_replicas;
+        self
+    }
+
+    /// Tune the elastic signal: scale up when in-flight depth exceeds
+    /// `up_depth` (0 = auto: 2x the effective batch), retire one replica
+    /// after `idle_polls` consecutive empty polls, polling every
+    /// `interval_us` microseconds.
+    #[must_use]
+    pub fn with_scale_policy(mut self, up_depth: usize, idle_polls: usize, interval_us: u64) -> Self {
+        self.scale_up_depth = up_depth;
+        self.scale_idle_polls = idle_polls.max(1);
+        self.scale_interval = Duration::from_micros(interval_us.max(1));
         self
     }
 
@@ -400,67 +1034,187 @@ impl ServeEngine {
         self.max_batch.map_or(hw, |b| b.min(hw))
     }
 
-    /// Worker threads each replica's kernels may use.
-    fn threads_per_replica(&self) -> usize {
-        let budget = if self.threads > 0 { self.threads } else { parallel::num_threads() };
-        (budget / self.executors.len().max(1)).max(1)
-    }
-
-    /// Drive `workload` through the replicas: one worker thread per
-    /// executor, deadline-batched dispatch round-robin across them.
-    pub fn run(&mut self, workload: &Workload) -> Result<ServeReport> {
+    /// Start the long-lived session: workers spawn, the router thread
+    /// starts batching, and the returned [`ServeSession`] hands out
+    /// [`SubmitHandle`]s until [`ServeSession::shutdown`].
+    pub fn start(mut self) -> Result<ServeSession> {
         if self.executors.is_empty() {
             crate::bail!("serve engine has no executors");
         }
         let width = self.executors[0].width();
-        let batch = self.effective_batch();
-        let max_wait = self.max_wait;
-        // partition the core budget: R replicas at the full
-        // `available_parallelism()` each would oversubscribe R-fold
-        let threads_per_replica = self.threads_per_replica();
+        let initial = self.executors.len();
+        // elastic scale-up needs a spawner; without one the pool is fixed
+        let elastic_max = if self.spawner.is_some() { self.elastic_max.max(initial) } else { initial };
+        let cfg = RouterCfg {
+            batch: self.effective_batch(),
+            waits: self.waits,
+            shed_deadline: self.shed_deadline,
+        };
+        let up_depth = if self.scale_up_depth > 0 { self.scale_up_depth } else { 2 * cfg.batch };
+        // partition the core budget by the elastic MAX so a scaled-up
+        // pool never oversubscribes
+        let budget = if self.threads > 0 { self.threads } else { parallel::num_threads() };
+        let threads_per = (budget / elastic_max.max(1)).max(1);
 
-        let (tx, rx) = mpsc::channel::<Request>();
-        let clients = spawn_clients(workload, width, tx);
+        // hot-swap validates against the first swappable replica; pools
+        // of swap-opaque executors simply reject hot_swap
+        let arch = self.executors.iter_mut().find_map(|e| e.model_mut().map(|m| ArchSnapshot::of(&*m)));
 
-        let t0 = Instant::now();
-        let mut stats: Vec<ExecStats> = Vec::new();
-        std::thread::scope(|s| {
-            let mut jobs = Vec::new();
-            let mut workers = Vec::new();
-            for exec in self.executors.iter_mut() {
-                let (jtx, jrx) = mpsc::channel::<Vec<Request>>();
-                jobs.push(jtx);
-                workers.push(s.spawn(move || {
-                    parallel::with_thread_budget(threads_per_replica, || {
-                        let mut st = ExecStats::default();
-                        // per-worker batch buffer, recycled across batches
-                        let mut pool = Vec::new();
-                        while let Ok(pending) = jrx.recv() {
-                            if st.error.is_some() {
-                                // dropping the batch closes its reply
-                                // channels, so clients unblock instead
-                                // of hanging
-                                continue;
-                            }
-                            exec_batch(exec.as_mut(), pending, &mut st, &mut pool);
+        let adm = Arc::new(Admission::default());
+        let pool = Arc::new(Pool::default());
+        let done = Arc::new(Mutex::new(Vec::new()));
+        let joins = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let swap: Arc<Mutex<Option<SwapState>>> = Arc::new(Mutex::new(None));
+        let (tx, rx) = mpsc::channel::<Msg>();
+
+        for (i, exec) in self.executors.drain(..).enumerate() {
+            let (jtx, jrx) = mpsc::channel::<Job>();
+            pool.jobs.lock().unwrap().push(jtx);
+            joins
+                .lock()
+                .unwrap()
+                .push(spawn_worker(i, exec, jrx, threads_per, adm.clone(), done.clone()));
+        }
+
+        let router = {
+            let pool = pool.clone();
+            let adm = adm.clone();
+            std::thread::spawn(move || {
+                let mut next = 0usize;
+                let dispatch = |pending: Vec<Request>| {
+                    let jobs = pool.jobs.lock().unwrap();
+                    if jobs.is_empty() {
+                        for r in pending {
+                            finish_request(&adm, r, Err(Shed::EngineDown));
                         }
-                        st
-                    })
-                }));
-            }
-            let mut next = 0usize;
-            route(&rx, batch, max_wait, |pending| {
-                let _ = jobs[next].send(pending);
-                next = (next + 1) % jobs.len();
-            });
-            drop(jobs);
-            stats = workers.into_iter().map(|w| w.join().expect("serve worker panicked")).collect();
-        });
-        let wall = t0.elapsed().as_secs_f64();
+                        return;
+                    }
+                    let i = next % jobs.len();
+                    next = next.wrapping_add(1);
+                    if let Err(mpsc::SendError(Job::Batch(pending))) =
+                        jobs[i].send(Job::Batch(pending))
+                    {
+                        for r in pending {
+                            finish_request(&adm, r, Err(Shed::EngineDown));
+                        }
+                    }
+                };
+                route(&rx, &cfg, &adm, dispatch);
+                // hang up the worker queues: each drains what is already
+                // enqueued, deposits its stats, and exits
+                pool.jobs.lock().unwrap().clear();
+            })
+        };
 
-        let latencies: Vec<f64> =
-            clients.into_iter().flat_map(|h| h.join().expect("client panicked")).collect();
-        assemble(stats, latencies, wall)
+        let scaler = if elastic_max > initial {
+            let mut spawner = self.spawner.take().expect("elastic pool requires a spawner");
+            let (pool, adm, done, joins, stop, swap) = (
+                pool.clone(),
+                adm.clone(),
+                done.clone(),
+                joins.clone(),
+                stop.clone(),
+                swap.clone(),
+            );
+            let (idle_polls, interval) = (self.scale_idle_polls, self.scale_interval);
+            Some(std::thread::spawn(move || {
+                let mut idle = 0usize;
+                let mut next_index = initial;
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(interval);
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let depth = adm.depth[0].load(Ordering::SeqCst)
+                        + adm.depth[1].load(Ordering::SeqCst);
+                    let active = pool.jobs.lock().unwrap().len();
+                    if depth > up_depth && active < elastic_max {
+                        let mut exec = spawner(next_index);
+                        // a replica born after a hot-swap starts on the
+                        // swapped params, not the spawner's init
+                        if let Some(sw) = swap.lock().unwrap().as_ref() {
+                            if let Some(m) = exec.model_mut() {
+                                let _ = sw.data.apply_to(m);
+                            }
+                        }
+                        let (jtx, jrx) = mpsc::channel::<Job>();
+                        joins.lock().unwrap().push(spawn_worker(
+                            next_index,
+                            exec,
+                            jrx,
+                            threads_per,
+                            adm.clone(),
+                            done.clone(),
+                        ));
+                        pool.jobs.lock().unwrap().push(jtx);
+                        next_index += 1;
+                        idle = 0;
+                    } else if depth == 0 && active > initial {
+                        idle += 1;
+                        if idle >= idle_polls {
+                            // retire the most recently added replica
+                            let retired = pool.jobs.lock().unwrap().pop();
+                            if let Some(jtx) = retired {
+                                let _ = jtx.send(Job::Retire);
+                            }
+                            idle = 0;
+                        }
+                    } else {
+                        idle = 0;
+                    }
+                }
+            }))
+        } else {
+            None
+        };
+
+        Ok(ServeSession {
+            master: Mutex::new(tx),
+            width,
+            caps: self.queue_depth,
+            adm,
+            pool,
+            done,
+            joins,
+            router: Some(router),
+            scaler,
+            stop,
+            swap,
+            arch,
+            t0: Instant::now(),
+        })
+    }
+
+    /// Drive a closed `workload` through the replicas: start a session,
+    /// fan the synthetic clients over it, shut down, and give the
+    /// executors back to the engine for the next run. (A spawner does
+    /// not survive the round trip — elastic pools should use
+    /// [`ServeEngine::start`] directly.)
+    pub fn run(&mut self, workload: &Workload) -> Result<ServeReport> {
+        if self.executors.is_empty() {
+            crate::bail!("serve engine has no executors");
+        }
+        let engine = std::mem::take(self);
+        // remember the policy knobs; the session returns the executors
+        self.waits = engine.waits;
+        self.max_batch = engine.max_batch;
+        self.threads = engine.threads;
+        self.queue_depth = engine.queue_depth;
+        self.shed_deadline = engine.shed_deadline;
+        self.elastic_max = engine.elastic_max;
+        self.scale_up_depth = engine.scale_up_depth;
+        self.scale_idle_polls = engine.scale_idle_polls;
+        self.scale_interval = engine.scale_interval;
+        let session = engine.start()?;
+        let handle = session.handle();
+        for c in spawn_clients(workload, &handle) {
+            c.join().expect("client panicked");
+        }
+        drop(handle);
+        let (report, executors) = session.finish();
+        self.executors = executors;
+        report
     }
 
     /// The same deadline-batched loop with ONE executor on the calling
@@ -472,24 +1226,204 @@ impl ServeEngine {
         exec: &mut dyn Executor,
         max_wait_us: u64,
     ) -> Result<ServeReport> {
-        let width = exec.width();
-        let batch = exec.max_batch();
-        let (tx, rx) = mpsc::channel::<Request>();
-        let clients = spawn_clients(workload, width, tx);
+        let adm = Arc::new(Admission::default());
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = SubmitHandle {
+            tx,
+            width: exec.width(),
+            caps: [usize::MAX, usize::MAX],
+            adm: adm.clone(),
+        };
+        let clients = spawn_clients(workload, &handle);
+        drop(handle);
 
         let t0 = Instant::now();
         let mut st = ExecStats::default();
         let mut pool = Vec::new();
-        route(&rx, batch, Duration::from_micros(max_wait_us), |pending| {
+        let cfg = RouterCfg {
+            batch: exec.max_batch(),
+            waits: [Duration::from_micros(max_wait_us); 2],
+            shed_deadline: None,
+        };
+        route(&rx, &cfg, &adm, |pending| {
             if st.error.is_none() {
-                exec_batch(exec, pending, &mut st, &mut pool);
+                exec_batch(exec, pending, &mut st, &mut pool, &adm);
+            } else {
+                for r in pending {
+                    finish_request(&adm, r, Err(Shed::EngineDown));
+                }
             }
         });
         let wall = t0.elapsed().as_secs_f64();
 
-        let latencies: Vec<f64> =
-            clients.into_iter().flat_map(|h| h.join().expect("client panicked")).collect();
-        assemble(vec![st], latencies, wall)
+        for c in clients {
+            c.join().expect("client panicked");
+        }
+        assemble(vec![st], &adm, 0, wall).0
+    }
+}
+
+struct SwapState {
+    data: Arc<CkptData>,
+    applied: Arc<AtomicUsize>,
+}
+
+/// Point-in-time counters for a live session (the gateway's `stats`
+/// opcode serializes exactly this).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionStats {
+    pub replicas: usize,
+    pub in_flight: usize,
+    pub submitted: usize,
+    pub served: usize,
+    pub shed_queue: usize,
+    pub shed_expired: usize,
+    pub failed: usize,
+    pub swaps_applied: usize,
+}
+
+/// A live serving deployment: worker threads per replica, the router,
+/// and (when configured) the elastic scaler. Hand out [`SubmitHandle`]s
+/// with [`ServeSession::handle`]; finish with [`ServeSession::shutdown`],
+/// which drains everything already submitted before reporting.
+pub struct ServeSession {
+    // mpsc senders are not Sync, so the master lives behind a lock and
+    // every producer thread clones its own handle off it
+    master: Mutex<mpsc::Sender<Msg>>,
+    width: usize,
+    caps: [usize; 2],
+    adm: Arc<Admission>,
+    pool: Arc<Pool>,
+    done: Arc<Mutex<Vec<WorkerDone>>>,
+    joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    router: Option<std::thread::JoinHandle<()>>,
+    scaler: Option<std::thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    swap: Arc<Mutex<Option<SwapState>>>,
+    arch: Option<ArchSnapshot>,
+    t0: Instant,
+}
+
+impl ServeSession {
+    /// A fresh submission handle (cheap; clone freely per thread).
+    pub fn handle(&self) -> SubmitHandle {
+        SubmitHandle {
+            tx: self.master.lock().unwrap().clone(),
+            width: self.width,
+            caps: self.caps,
+            adm: self.adm.clone(),
+        }
+    }
+
+    /// Feature width every request row must have.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Live replicas (initial + elastic - retired).
+    pub fn replica_count(&self) -> usize {
+        self.pool.jobs.lock().unwrap().len()
+    }
+
+    /// Admitted-but-unreplied requests across both lanes — the elastic
+    /// scaling signal.
+    pub fn in_flight(&self) -> usize {
+        self.adm.depth[0].load(Ordering::SeqCst) + self.adm.depth[1].load(Ordering::SeqCst)
+    }
+
+    /// Replica param applications from the most recent hot-swap.
+    pub fn swaps_applied(&self) -> usize {
+        self.swap.lock().unwrap().as_ref().map_or(0, |s| s.applied.load(Ordering::SeqCst))
+    }
+
+    /// Snapshot of the admission counters.
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            replicas: self.replica_count(),
+            in_flight: self.in_flight(),
+            submitted: self.adm.submitted.load(Ordering::SeqCst),
+            served: self.adm.served.load(Ordering::SeqCst),
+            shed_queue: self.adm.shed_queue.load(Ordering::SeqCst),
+            shed_expired: self.adm.shed_expired.load(Ordering::SeqCst),
+            failed: self.adm.failed.load(Ordering::SeqCst),
+            swaps_applied: self.swaps_applied(),
+        }
+    }
+
+    /// Validate `data` against the live model, then enqueue the swap on
+    /// every worker. Each replica applies it BETWEEN batches (never
+    /// mid-forward), so no in-flight request is dropped; batches
+    /// dispatched after this call execute on the new params. Returns how
+    /// many replicas were notified; poll [`ServeSession::swaps_applied`]
+    /// for confirmation.
+    pub fn hot_swap(&self, data: CkptData) -> Result<usize> {
+        let arch = match &self.arch {
+            Some(a) => a,
+            None => crate::bail!("no hot-swappable (native) replica in this session"),
+        };
+        arch.check(&data)?;
+        let state =
+            SwapState { data: Arc::new(data), applied: Arc::new(AtomicUsize::new(0)) };
+        let (data, applied) = (state.data.clone(), state.applied.clone());
+        // publish first so elastic replicas spawned from now on catch up
+        *self.swap.lock().unwrap() = Some(state);
+        let jobs = self.pool.jobs.lock().unwrap();
+        for jtx in jobs.iter() {
+            let _ = jtx.send(Job::Swap(data.clone(), applied.clone()));
+        }
+        Ok(jobs.len())
+    }
+
+    /// [`ServeSession::hot_swap`] from an `SPMCKPT1` file on disk — the
+    /// watcher entry point: parse once, validate once, fan out.
+    pub fn hot_swap_file(&self, path: impl AsRef<std::path::Path>) -> Result<usize> {
+        let data = CkptData::load(path.as_ref()).map_err(|e| {
+            crate::error::Error::from(format!(
+                "loading checkpoint {}: {e}",
+                path.as_ref().display()
+            ))
+        })?;
+        self.hot_swap(data)
+    }
+
+    /// Stop accepting, drain everything already submitted, join every
+    /// thread, and report.
+    pub fn shutdown(self) -> Result<ServeReport> {
+        self.finish().0
+    }
+
+    /// [`ServeSession::shutdown`], also handing the executors back (in
+    /// replica-index order) so `run(&Workload)` can restore its engine.
+    fn finish(mut self) -> (Result<ServeReport>, Vec<Box<dyn Executor + Send>>) {
+        // the sentinel drains the router FIFO: everything submitted
+        // before this call is batched (or shed by policy) first
+        let _ = self.master.lock().unwrap().send(Msg::Shutdown);
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        if let Some(s) = self.scaler.take() {
+            let _ = s.join();
+        }
+        // a scaler mid-poll may have added a worker after the router
+        // cleared the pool — hang up any straggler queue
+        self.pool.jobs.lock().unwrap().clear();
+        let joins = std::mem::take(&mut *self.joins.lock().unwrap());
+        for j in joins {
+            j.join().expect("serve worker panicked");
+        }
+        let wall = self.t0.elapsed().as_secs_f64();
+        let mut done = std::mem::take(&mut *self.done.lock().unwrap());
+        done.sort_by_key(|d| d.index);
+        let swaps = self.swaps_applied();
+        let mut stats = Vec::with_capacity(done.len());
+        let mut execs = Vec::with_capacity(done.len());
+        for d in done {
+            stats.push(d.stats);
+            execs.push(d.exec);
+        }
+        let (report, _stats) = assemble(stats, &self.adm, swaps, wall);
+        (report, execs)
     }
 }
 
@@ -498,6 +1432,11 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
+
+    use spm_core::models::api::{build_model, save_checkpoint, ModelCfg, ModelKind};
+    use spm_core::ops::LinearCfg;
+    use spm_core::pairing::Schedule;
+    use spm_core::spm::Variant;
 
     /// Echoes its input rows back; counts what the engine forwarded so
     /// tests can assert on the TRUE fill contract.
@@ -599,6 +1538,40 @@ mod tests {
         }
     }
 
+    /// Blocks every forward until `open` flips — pins the in-flight
+    /// population so overload tests are deterministic.
+    struct GateExecutor {
+        width: usize,
+        open: Arc<AtomicBool>,
+        rows_seen: Arc<AtomicUsize>,
+    }
+
+    impl Executor for GateExecutor {
+        fn width(&self) -> usize {
+            self.width
+        }
+
+        fn max_batch(&self) -> usize {
+            8
+        }
+
+        fn forward(&mut self, rows: usize, flat: Vec<f32>) -> Result<Vec<f32>> {
+            while !self.open.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            self.rows_seen.fetch_add(rows, Ordering::SeqCst);
+            Ok(flat)
+        }
+    }
+
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let t0 = Instant::now();
+        while !cond() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
     #[test]
     fn shares_cover_every_request() {
         for (reqs, clients) in [(96, 3), (97, 4), (100, 7), (5, 8), (0, 3), (1, 1)] {
@@ -623,6 +1596,8 @@ mod tests {
             .with_max_wait_us(500);
         let report = engine.run(&Workload { num_requests: 11, num_clients: 3, seed: 1 }).unwrap();
         assert_eq!(report.requests, 11);
+        assert_eq!(report.submitted, 11);
+        assert_eq!(report.shed(), 0);
         assert!(report.batches >= 3, "11 requests cannot fit two 4-batches");
         assert!(report.p99_ms >= report.p50_ms);
         assert!(report.throughput_rps > 0.0);
@@ -748,8 +1723,8 @@ mod tests {
         // one synchronous client: every batch waits out the 10ms window
         assert!(report.mean_queue_wait_ms >= 8.0, "{}", report.mean_queue_wait_ms);
         assert!(report.mean_exec_ms >= 4.0, "{}", report.mean_exec_ms);
-        // the client-observed latency covers both components: the max
-        // latency dominates the mean of (queue + exec) by construction
+        // the recorded latency covers both components: the max latency
+        // dominates the mean of (queue + exec) by construction
         assert!(
             report.p99_ms + 0.5 >= report.mean_queue_wait_ms + report.mean_exec_ms,
             "p99 {} vs wait {} + exec {}",
@@ -791,5 +1766,279 @@ mod tests {
         assert_eq!(report.requests, 0);
         assert_eq!(report.batches, 0);
         assert_eq!(report.p99_ms, 0.0);
+    }
+
+    // -- session API ------------------------------------------------------
+
+    #[test]
+    fn session_serves_both_lanes_with_exact_accounting() {
+        let exec = EchoExecutor::new(3, 4);
+        let rows = exec.rows_seen.clone();
+        let session = ServeEngine::new()
+            .with_executor(Box::new(exec))
+            .with_max_wait_us(0)
+            .with_batch_wait_us(0)
+            .start()
+            .unwrap();
+        let h = session.handle();
+        let mut pending = Vec::new();
+        for i in 0..4 {
+            pending.push(h.submit(vec![i as f32, 0.0, 1.0]).unwrap());
+        }
+        for i in 0..2 {
+            pending.push(h.submit_to(Lane::Batch, vec![i as f32, 5.0, 1.0], None).unwrap());
+        }
+        for p in pending {
+            let out = p.wait().unwrap();
+            assert_eq!(out.len(), 3);
+        }
+        assert_eq!(rows.load(Ordering::SeqCst), 6);
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.requests, 6);
+        assert_eq!(report.submitted, 6);
+        assert_eq!(report.shed(), 0);
+        assert_eq!(report.failed, 0);
+    }
+
+    #[test]
+    fn zero_capacity_queue_sheds_immediately() {
+        let exec = EchoExecutor::new(2, 4);
+        let rows = exec.rows_seen.clone();
+        let session = ServeEngine::new()
+            .with_executor(Box::new(exec))
+            .with_queue_depth(Lane::Interactive, 0)
+            .start()
+            .unwrap();
+        let h = session.handle();
+        for _ in 0..3 {
+            assert_eq!(
+                h.try_submit(Lane::Interactive, vec![1.0, 2.0], None).unwrap_err(),
+                Shed::QueueFull
+            );
+        }
+        // the trusted path bypasses the cap, so the engine still serves
+        assert!(h.submit(vec![3.0, 4.0]).unwrap().wait().is_ok());
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.shed_queue, 3);
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.submitted, 4);
+        assert_eq!(rows.load(Ordering::SeqCst), 1, "shed requests must never reach the executor");
+    }
+
+    #[test]
+    fn expired_deadline_rejected_at_admission() {
+        let exec = EchoExecutor::new(2, 4);
+        let rows = exec.rows_seen.clone();
+        let session = ServeEngine::new().with_executor(Box::new(exec)).start().unwrap();
+        let h = session.handle();
+        assert_eq!(
+            h.try_submit(Lane::Interactive, vec![1.0, 2.0], Some(Duration::ZERO)).unwrap_err(),
+            Shed::DeadlineExpired
+        );
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.shed_expired, 1);
+        assert_eq!(rows.load(Ordering::SeqCst), 0);
+    }
+
+    /// A request whose deadline is spent by the time the router sees it
+    /// must be shed BEFORE dispatch — the executor never sees the row and
+    /// the client gets the reason, not a stale answer.
+    #[test]
+    fn expired_deadline_shed_before_dispatch() {
+        let exec = EchoExecutor::new(2, 4);
+        let rows = exec.rows_seen.clone();
+        let session = ServeEngine::new()
+            .with_executor(Box::new(exec))
+            .with_max_wait_us(0)
+            .start()
+            .unwrap();
+        let h = session.handle();
+        // the trusted path skips the admission expiry check, so the
+        // router is the first to see the dead deadline
+        let pending = h.submit_to(Lane::Interactive, vec![1.0, 2.0], Some(Duration::ZERO)).unwrap();
+        assert_eq!(pending.wait().unwrap_err(), Shed::DeadlineExpired);
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.shed_expired, 1);
+        assert_eq!(report.requests, 0);
+        assert_eq!(rows.load(Ordering::SeqCst), 0, "expired request must never dispatch");
+    }
+
+    /// Burst overload: with the executor gated shut and a depth cap of 3,
+    /// exactly 3 of 10 submits are admitted and exactly 7 shed — the
+    /// count is deterministic because depth only falls at reply time.
+    #[test]
+    fn burst_overload_shed_count_is_deterministic() {
+        let open = Arc::new(AtomicBool::new(false));
+        let rows = Arc::new(AtomicUsize::new(0));
+        let session = ServeEngine::new()
+            .with_executor(Box::new(GateExecutor {
+                width: 2,
+                open: open.clone(),
+                rows_seen: rows.clone(),
+            }))
+            .with_max_wait_us(0)
+            .with_queue_depth(Lane::Interactive, 3)
+            .start()
+            .unwrap();
+        let h = session.handle();
+        let mut admitted = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..10 {
+            match h.try_submit(Lane::Interactive, vec![i as f32, 0.0], None) {
+                Ok(p) => admitted.push(p),
+                Err(Shed::QueueFull) => shed += 1,
+                Err(other) => panic!("unexpected shed reason {other:?}"),
+            }
+        }
+        assert_eq!(admitted.len(), 3);
+        assert_eq!(shed, 7);
+        open.store(true, Ordering::SeqCst);
+        for p in admitted {
+            assert!(p.wait().is_ok());
+        }
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.shed_queue, 7);
+        assert_eq!(report.submitted, 10);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        let open = Arc::new(AtomicBool::new(false));
+        let rows = Arc::new(AtomicUsize::new(0));
+        let session = ServeEngine::new()
+            .with_executor(Box::new(GateExecutor {
+                width: 2,
+                open: open.clone(),
+                rows_seen: rows.clone(),
+            }))
+            .with_max_wait_us(0)
+            .start()
+            .unwrap();
+        let h = session.handle();
+        let pending: Vec<_> = (0..5).map(|i| h.submit(vec![i as f32, 1.0]).unwrap()).collect();
+        let opener = {
+            let open = open.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                open.store(true, Ordering::SeqCst);
+            })
+        };
+        // shutdown must block until the gated batches drain, then report
+        // every submitted request as served — zero drops
+        let report = session.shutdown().unwrap();
+        opener.join().unwrap();
+        assert_eq!(report.requests, 5);
+        assert_eq!(report.submitted, 5);
+        assert_eq!(report.failed, 0);
+        for p in pending {
+            assert!(p.wait().is_ok(), "drained replies must reach their clients");
+        }
+        assert_eq!(rows.load(Ordering::SeqCst), 5);
+    }
+
+    // -- checkpoint hot-swap ----------------------------------------------
+
+    fn mlp_cfg(seed: u64) -> ModelCfg {
+        ModelCfg::new(ModelKind::Mlp, LinearCfg::spm(8, Variant::General))
+            .with_classes(4)
+            .with_seed(seed)
+    }
+
+    #[test]
+    fn hot_swap_replaces_params_on_every_replica_without_drops() {
+        let session = ServeEngine::new()
+            .with_executor(Box::new(NativeExecutor::new(build_model(&mlp_cfg(7)), 8)))
+            .with_replica(build_model(&mlp_cfg(7)))
+            .with_max_wait_us(0)
+            .start()
+            .unwrap();
+        let h = session.handle();
+        let x: Vec<f32> = (0..8).map(|i| 0.1 * i as f32 - 0.3).collect();
+        let before = h.submit(x.clone()).unwrap().wait().unwrap();
+
+        // same arch (butterfly pairing is seed-independent), new params
+        let src = build_model(&mlp_cfg(13));
+        let path = std::env::temp_dir().join("spm_test_serve_hotswap.ckpt");
+        save_checkpoint(src.as_ref(), &path).unwrap();
+        let notified = session.hot_swap_file(&path).unwrap();
+        assert_eq!(notified, 2);
+        wait_until("both replicas to apply the swap", || session.swaps_applied() == 2);
+        let _ = std::fs::remove_file(&path);
+
+        let want = src.forward(&Mat::from_vec(1, 8, x.clone())).data;
+        // hit both replicas (round-robin): every post-swap forward must
+        // run on the NEW params, bit-identical to the source model
+        for _ in 0..4 {
+            let got = h.submit(x.clone()).unwrap().wait().unwrap();
+            assert_eq!(got, want, "post-swap output must match the checkpoint source");
+        }
+        assert_ne!(before, want, "swap must actually change the params");
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.swaps_applied, 2);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.requests, report.submitted, "hot swap must not drop a request");
+    }
+
+    #[test]
+    fn hot_swap_rejects_fingerprint_mismatch_while_serving_continues() {
+        // random-schedule pairings differ across op seeds: every buffer
+        // shape matches, only the fingerprint catches the mismatch
+        let cfg_a = ModelCfg::new(
+            ModelKind::Mlp,
+            LinearCfg::spm(8, Variant::General).with_schedule(Schedule::Random).with_seed(1),
+        )
+        .with_classes(4);
+        let cfg_b = ModelCfg {
+            op: LinearCfg::spm(8, Variant::General).with_schedule(Schedule::Random).with_seed(2),
+            ..cfg_a
+        };
+        let session = ServeEngine::native(build_model(&cfg_a)).start().unwrap();
+        let path = std::env::temp_dir().join("spm_test_serve_hotswap_bad.ckpt");
+        save_checkpoint(build_model(&cfg_b).as_ref(), &path).unwrap();
+        let err = session.hot_swap_file(&path).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(session.swaps_applied(), 0);
+        // the rejected swap must not take the session down
+        let h = session.handle();
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.01).collect();
+        assert!(h.submit(x).unwrap().wait().is_ok());
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.swaps_applied, 0);
+    }
+
+    // -- elastic scaling ---------------------------------------------------
+
+    #[test]
+    fn elastic_pool_grows_under_load_and_retires_when_idle() {
+        let session = ServeEngine::new()
+            .with_executor(Box::new(SleepExecutor { width: 2, sleep: Duration::from_millis(2) }))
+            .with_max_wait_us(0)
+            .with_threads(2)
+            .with_spawner(Box::new(|_i| {
+                Box::new(SleepExecutor { width: 2, sleep: Duration::from_millis(2) })
+            }))
+            .with_elastic(3)
+            .with_scale_policy(2, 5, 500)
+            .start()
+            .unwrap();
+        let h = session.handle();
+        let pending: Vec<_> =
+            (0..48).map(|i| h.submit(vec![i as f32, 1.0]).unwrap()).collect();
+        wait_until("the queue-depth signal to add a replica", || session.replica_count() >= 2);
+        for p in pending {
+            assert!(p.wait().is_ok());
+        }
+        wait_until("idle streak to retire back to the floor", || session.replica_count() == 1);
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.requests, 48);
+        assert!(
+            report.replica_batches.len() >= 2,
+            "an elastic replica must have joined: {:?}",
+            report.replica_batches
+        );
+        assert_eq!(report.failed, 0);
     }
 }

@@ -1,0 +1,165 @@
+//! Gateway integration tests: the full wire path — `GatewayClient` over
+//! loopback TCP into `Gateway` -> admission -> deadline-batched replicas
+//! -> framed replies — plus the wire hot-swap and stats opcodes. The
+//! in-process admission/swap edge cases live in `serve.rs` unit tests;
+//! these cover what only the socket layer can: framing, request
+//! validation at the trust boundary, and connection survival after a
+//! bad request.
+
+use spm_coordinator::gateway::{Gateway, GatewayClient, InferOutcome};
+use spm_coordinator::serve::{Lane, ServeEngine, Shed};
+use spm_core::models::api::{build_model, save_checkpoint, ModelCfg, ModelKind};
+use spm_core::ops::LinearCfg;
+use spm_core::spm::Variant;
+use spm_core::tensor::Mat;
+
+const N: usize = 16;
+
+fn mlp_cfg(seed: u64) -> ModelCfg {
+    ModelCfg::new(ModelKind::Mlp, LinearCfg::spm(N, Variant::General))
+        .with_classes(4)
+        .with_seed(seed)
+}
+
+fn start_gateway(replicas: usize) -> Gateway {
+    let mut engine = ServeEngine::new();
+    for _ in 0..replicas {
+        engine = engine.with_replica(build_model(&mlp_cfg(7)));
+    }
+    let session = engine.with_max_wait_us(100).start().expect("engine start");
+    Gateway::start(session, "127.0.0.1:0").expect("gateway start")
+}
+
+fn features(tag: f32) -> Vec<f32> {
+    (0..N).map(|i| (i as f32) * 0.05 + tag).collect()
+}
+
+#[test]
+fn both_lanes_round_trip_over_loopback() {
+    let gw = start_gateway(1);
+    let mut c = GatewayClient::connect(gw.addr()).expect("connect");
+    // reference logits straight from an identical model, no sockets
+    let reference = build_model(&mlp_cfg(7));
+    for (i, lane) in [Lane::Interactive, Lane::Batch, Lane::Interactive].iter().enumerate() {
+        let x = features(i as f32 * 0.3);
+        let out = match c.infer(*lane, &x, 0).expect("infer") {
+            InferOutcome::Ok(out) => out,
+            InferOutcome::Shed(s) => panic!("unbounded lane shed a request: {s}"),
+        };
+        let want = reference.forward(&Mat::from_vec(1, N, x));
+        assert_eq!(out, want.data, "wire logits must match the in-process model ({lane:?})");
+    }
+    let report = gw.stop().expect("stop");
+    assert_eq!(report.requests, 3);
+    assert_eq!(report.submitted, 3);
+    assert_eq!(report.shed(), 0);
+}
+
+#[test]
+fn wire_hot_swap_lands_on_every_replica() {
+    let gw = start_gateway(2);
+    let mut c = GatewayClient::connect(gw.addr()).expect("connect");
+    let x = features(0.1);
+    let before = match c.infer(Lane::Interactive, &x, 0).expect("infer") {
+        InferOutcome::Ok(out) => out,
+        InferOutcome::Shed(s) => panic!("shed: {s}"),
+    };
+
+    // same architecture, different seed -> same fingerprint, new params
+    let path = std::env::temp_dir().join("spm_test_gateway_swap.ckpt");
+    save_checkpoint(build_model(&mlp_cfg(13)).as_ref(), &path).expect("save ckpt");
+    let image = std::fs::read(&path).expect("read ckpt");
+    let _ = std::fs::remove_file(&path);
+    let notified = c.hot_swap(&image).expect("wire hot swap");
+    assert_eq!(notified, 2, "swap must be queued on every live replica");
+
+    // every reply after the swap ack must come from the new params
+    let after = match c.infer(Lane::Interactive, &x, 0).expect("infer") {
+        InferOutcome::Ok(out) => out,
+        InferOutcome::Shed(s) => panic!("shed: {s}"),
+    };
+    let want = build_model(&mlp_cfg(13)).forward(&Mat::from_vec(1, N, x));
+    assert_ne!(before, after, "params must actually change");
+    assert_eq!(after, want.data, "post-swap logits must match the seed-13 model");
+
+    let report = gw.stop().expect("stop");
+    assert_eq!(report.swaps_applied, 2);
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.failed, 0);
+}
+
+#[test]
+fn stats_opcode_reports_live_admission_counters() {
+    let gw = start_gateway(1);
+    let mut c = GatewayClient::connect(gw.addr()).expect("connect");
+    for i in 0..5 {
+        match c.infer(Lane::Batch, &features(i as f32), 0).expect("infer") {
+            InferOutcome::Ok(_) => {}
+            InferOutcome::Shed(s) => panic!("shed: {s}"),
+        }
+    }
+    let stats = c.stats().expect("stats");
+    assert_eq!(stats.submitted, 5);
+    assert_eq!(stats.served, 5);
+    assert_eq!(stats.shed_queue, 0);
+    assert_eq!(stats.shed_expired, 0);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.in_flight, 0);
+    assert_eq!(stats.replicas, 1);
+    gw.stop().expect("stop");
+}
+
+#[test]
+fn bad_width_request_errors_without_killing_the_connection() {
+    let gw = start_gateway(1);
+    let mut c = GatewayClient::connect(gw.addr()).expect("connect");
+    // wrong feature width: the gateway must reply ST_BAD_REQUEST (an Err
+    // from the client's perspective), not crash or hang
+    let err = c.infer(Lane::Interactive, &features(0.0)[..N - 3], 0).unwrap_err();
+    assert!(err.to_string().contains("feature floats"), "unexpected error: {err}");
+    // the same connection keeps serving well-formed requests
+    match c.infer(Lane::Interactive, &features(0.2), 0).expect("infer after bad request") {
+        InferOutcome::Ok(out) => assert_eq!(out.len(), 4),
+        InferOutcome::Shed(s) => panic!("shed: {s}"),
+    }
+    let report = gw.stop().expect("stop");
+    assert_eq!(report.requests, 1, "the malformed frame must never reach admission");
+}
+
+#[test]
+fn malformed_hot_swap_is_rejected_and_serving_continues() {
+    let gw = start_gateway(1);
+    let mut c = GatewayClient::connect(gw.addr()).expect("connect");
+    let err = c.hot_swap(b"not a checkpoint").unwrap_err();
+    assert!(!err.to_string().is_empty());
+    match c.infer(Lane::Interactive, &features(0.4), 0).expect("infer after bad swap") {
+        InferOutcome::Ok(out) => assert_eq!(out.len(), 4),
+        InferOutcome::Shed(s) => panic!("shed: {s}"),
+    }
+    let report = gw.stop().expect("stop");
+    assert_eq!(report.swaps_applied, 0);
+    assert_eq!(report.requests, 1);
+}
+
+#[test]
+fn zero_capacity_lane_sheds_over_the_wire() {
+    let session = ServeEngine::native(build_model(&mlp_cfg(7)))
+        .with_max_wait_us(100)
+        .with_queue_depth(Lane::Batch, 0)
+        .start()
+        .expect("engine start");
+    let gw = Gateway::start(session, "127.0.0.1:0").expect("gateway start");
+    let mut c = GatewayClient::connect(gw.addr()).expect("connect");
+    match c.infer(Lane::Batch, &features(0.0), 0).expect("infer") {
+        InferOutcome::Ok(_) => panic!("zero-capacity lane must shed"),
+        InferOutcome::Shed(s) => assert_eq!(s, Shed::QueueFull),
+    }
+    // the interactive lane is untouched by the batch lane's cap
+    match c.infer(Lane::Interactive, &features(0.0), 0).expect("infer") {
+        InferOutcome::Ok(out) => assert_eq!(out.len(), 4),
+        InferOutcome::Shed(s) => panic!("interactive lane shed: {s}"),
+    }
+    let report = gw.stop().expect("stop");
+    assert_eq!(report.shed_queue, 1);
+    assert_eq!(report.requests, 1);
+}

@@ -4,7 +4,7 @@
 
 use spm_coordinator::config::{parse_toml, RunConfig};
 use spm_coordinator::experiments::{self, DataSource};
-use spm_coordinator::serve::{client_shares, ServeEngine, Workload};
+use spm_coordinator::serve::{client_shares, Lane, ServeEngine, Workload};
 use spm_core::models::api::{build_model, save_checkpoint, ModelCfg, ModelKind};
 use spm_core::ops::{LinearCfg, LinearKind};
 use spm_core::pairing::Schedule;
@@ -88,18 +88,43 @@ fn serving_engine_serves_remainder_workload() {
 }
 
 #[test]
-fn serving_engine_serves_every_model_kind() {
+fn serving_session_serves_every_model_kind() {
     // the acceptance bar: all four architectures through the SAME
-    // `ServeEngine::native(model)` entry point
+    // session API — start(), per-thread SubmitHandles, drained shutdown
     for kind in ModelKind::ALL {
         let cfg = ModelCfg::new(kind, LinearCfg::spm(8, Variant::General))
             .with_classes(3)
             .with_heads(2)
             .with_seq_len(2)
             .with_seed(7);
-        let mut engine = ServeEngine::native(build_model(&cfg)).with_max_wait_us(300);
-        let report = engine.run(&Workload { num_requests: 23, num_clients: 3, seed: 4 }).unwrap();
-        assert_eq!(report.requests, 23, "{kind:?}");
+        let session =
+            ServeEngine::native(build_model(&cfg)).with_max_wait_us(300).start().unwrap();
+        let width = session.width();
+        let clients: Vec<_> = (0..3)
+            .map(|c| {
+                let handle = session.handle();
+                std::thread::spawn(move || {
+                    for i in 0..8usize {
+                        let lane = if i % 2 == 0 { Lane::Interactive } else { Lane::Batch };
+                        let features =
+                            (0..width).map(|j| (c * 8 + i + j) as f32 * 0.1).collect();
+                        let row = handle
+                            .submit_to(lane, features, None)
+                            .expect("submit")
+                            .wait()
+                            .expect("serve");
+                        assert!(!row.is_empty());
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        let report = session.shutdown().unwrap();
+        assert_eq!(report.requests, 24, "{kind:?}");
+        assert_eq!(report.submitted, 24, "{kind:?}");
+        assert_eq!(report.shed(), 0, "{kind:?}");
         assert!(report.batches >= 1, "{kind:?}");
         assert!(report.throughput_rps > 0.0, "{kind:?}");
         assert!(report.p99_ms >= report.p50_ms, "{kind:?}");
@@ -107,17 +132,31 @@ fn serving_engine_serves_every_model_kind() {
 }
 
 #[test]
-fn serving_engine_replicates_any_model_kind() {
-    // two gru replicas sharding one request stream
+fn serving_session_replicates_any_model_kind() {
+    // two gru replicas sharding one request stream through the session API
     let cfg = ModelCfg::new(ModelKind::Gru, LinearCfg::spm(8, Variant::Rotation))
         .with_classes(3)
         .with_seq_len(2)
         .with_seed(9);
-    let mut engine = ServeEngine::native(build_model(&cfg))
+    let session = ServeEngine::native(build_model(&cfg))
         .with_replica(build_model(&cfg))
         .with_max_batch(2)
-        .with_max_wait_us(0);
-    let report = engine.run(&Workload { num_requests: 12, num_clients: 3, seed: 6 }).unwrap();
+        .with_max_wait_us(0)
+        .start()
+        .unwrap();
+    assert_eq!(session.replica_count(), 2);
+    let handle = session.handle();
+    let width = session.width();
+    let pending: Vec<_> = (0..12)
+        .map(|i| {
+            let features = (0..width).map(|j| (i + j) as f32 * 0.05).collect();
+            handle.submit(features).expect("submit")
+        })
+        .collect();
+    for p in pending {
+        p.wait().expect("serve");
+    }
+    let report = session.shutdown().unwrap();
     assert_eq!(report.requests, 12);
     assert_eq!(report.replica_batches.len(), 2);
     assert!(report.replica_batches.iter().all(|&b| b > 0), "{:?}", report.replica_batches);
@@ -138,6 +177,40 @@ fn model_config_serves_from_toml() {
     let mut engine = ServeEngine::native(model);
     let report = engine.run(&Workload { num_requests: 9, num_clients: 2, seed: 3 }).unwrap();
     assert_eq!(report.requests, 9);
+}
+
+#[test]
+fn serve_config_drives_a_gateway_session_from_toml() {
+    // [serve] all the way to a live TCP gateway: replicas, lane caps, and
+    // the listen address come from config, requests go over loopback
+    use spm_coordinator::gateway::{Gateway, GatewayClient, InferOutcome};
+    let doc = parse_toml(
+        "[serve]\nreplicas = 2\nmax_batch = 4\nmax_wait_us = 100\nqueue_depth = 64\n\
+         listen_addr = \"127.0.0.1:0\"\n",
+    )
+    .unwrap();
+    let mut cfg = quick_cfg();
+    cfg.apply_toml(&doc).unwrap();
+    assert_eq!(cfg.serve.replicas, 2);
+    assert_eq!(cfg.serve.listen_addr, "127.0.0.1:0");
+
+    let mcfg = ModelCfg::new(ModelKind::Mlp, LinearCfg::spm(8, Variant::General))
+        .with_classes(3)
+        .with_seed(11);
+    let session = cfg.serve.to_engine(|_i| build_model(&mcfg)).start().unwrap();
+    assert_eq!(session.replica_count(), 2);
+    let gw = Gateway::start(session, &cfg.serve.listen_addr).unwrap();
+    let mut client = GatewayClient::connect(gw.addr()).unwrap();
+    for i in 0..6 {
+        let x: Vec<f32> = (0..8).map(|j| (i + j) as f32 * 0.1).collect();
+        match client.infer(Lane::Interactive, &x, 0).unwrap() {
+            InferOutcome::Ok(row) => assert_eq!(row.len(), 3),
+            InferOutcome::Shed(s) => panic!("shed under no load: {s}"),
+        }
+    }
+    let report = gw.stop().unwrap();
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.shed(), 0);
 }
 
 #[test]

@@ -456,6 +456,144 @@ pub fn load_checkpoint(model: &mut dyn Model, path: impl AsRef<Path>) -> io::Res
     read_checkpoint(model, &mut r)
 }
 
+/// A checkpoint parsed off disk but not yet bound to a model — the
+/// hot-swap currency: the serving session parses and validates ONCE,
+/// then every replica applies the same [`CkptData`] between batches.
+///
+/// Unlike [`read_checkpoint`] (which validates against a live model
+/// while streaming), parsing here happens without a model in hand, so
+/// allocation is bounded by the byte slice itself: a corrupt count
+/// field can never claim more data than the slice holds.
+#[derive(Debug, Clone)]
+pub struct CkptData {
+    pub kind: String,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub arch: u64,
+    pub bufs: Vec<(String, Vec<f32>)>,
+}
+
+impl CkptData {
+    /// Parse a complete `SPMCKPT1` image. Rejects bad magic, implausible
+    /// buffer counts/lengths (anything the remaining bytes cannot hold),
+    /// and trailing garbage after the last buffer.
+    pub fn from_bytes(bytes: &[u8]) -> io::Result<CkptData> {
+        let mut r: &[u8] = bytes;
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if magic != CKPT_MAGIC {
+            return Err(bad("not an SPM checkpoint (bad magic)"));
+        }
+        let kind = read_name(&mut r, "model kind")?;
+        let d_in = read_u64(&mut r)? as usize;
+        let d_out = read_u64(&mut r)? as usize;
+        let arch = read_u64(&mut r)?;
+        let nbufs = read_u64(&mut r)? as usize;
+        // every buffer costs at least 12 header bytes (name len + count),
+        // so a corrupt count cannot provoke a giant reservation
+        if nbufs > r.len() / 12 {
+            return Err(bad(format!(
+                "checkpoint claims {nbufs} buffers but only {} bytes remain",
+                r.len()
+            )));
+        }
+        let mut bufs = Vec::with_capacity(nbufs);
+        for _ in 0..nbufs {
+            let name = read_name(&mut r, "buffer")?;
+            let count = read_u64(&mut r)? as usize;
+            if count.checked_mul(4).map_or(true, |b| b > r.len()) {
+                return Err(bad(format!(
+                    "checkpoint buffer '{name}' claims {count} params but only {} bytes remain",
+                    r.len()
+                )));
+            }
+            let (raw, rest) = r.split_at(count * 4);
+            r = rest;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            bufs.push((name, data));
+        }
+        if !r.is_empty() {
+            return Err(bad(format!("{} trailing bytes after the last checkpoint buffer", r.len())));
+        }
+        Ok(CkptData { kind, d_in, d_out, arch, bufs })
+    }
+
+    /// [`CkptData::from_bytes`] over a whole file.
+    pub fn load(path: impl AsRef<Path>) -> io::Result<CkptData> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+
+    /// Validate against a live model without touching a parameter: kind,
+    /// widths, arch fingerprint, and every buffer's name + length (by
+    /// position, exactly as [`read_checkpoint`] does).
+    pub fn check_model(&self, model: &dyn Model) -> io::Result<()> {
+        if self.kind != model.kind().name() {
+            return Err(bad(format!(
+                "checkpoint holds a '{}' model but the target is '{}'",
+                self.kind,
+                model.kind().name()
+            )));
+        }
+        if (self.d_in, self.d_out) != (model.d_in(), model.d_out()) {
+            return Err(bad(format!(
+                "checkpoint shape ({} -> {}) does not match the target model ({} -> {})",
+                self.d_in,
+                self.d_out,
+                model.d_in(),
+                model.d_out()
+            )));
+        }
+        if self.arch != arch_fingerprint(model) {
+            return Err(bad(
+                "checkpoint arch fingerprint does not match the target model (same shapes, \
+                 different op config or pairing — e.g. a random schedule under a different seed)",
+            ));
+        }
+        let expected: Vec<(String, usize)> =
+            collect_params(model).into_iter().map(|(n, d)| (n, d.len())).collect();
+        if self.bufs.len() != expected.len() {
+            return Err(bad(format!(
+                "checkpoint has {} buffers, model has {}",
+                self.bufs.len(),
+                expected.len()
+            )));
+        }
+        for (i, ((name, data), (want_name, want_len))) in
+            self.bufs.iter().zip(&expected).enumerate()
+        {
+            if name != want_name {
+                return Err(bad(format!(
+                    "checkpoint buffer {i} is '{name}', expected '{want_name}'"
+                )));
+            }
+            if data.len() != *want_len {
+                return Err(bad(format!(
+                    "checkpoint buffer '{name}' has {} params, model has {want_len}",
+                    data.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// [`CkptData::check_model`], then copy every buffer into `model` —
+    /// all-or-nothing: nothing is written unless the whole image lines
+    /// up. Goes through `visit_params_mut`, so prepared-coefficient
+    /// caches are invalidated exactly as for a streamed load.
+    pub fn apply_to(&self, model: &mut dyn Model) -> io::Result<()> {
+        self.check_model(&*model)?;
+        let mut cursor = 0usize;
+        model.visit_params_mut(&mut |_name, p| {
+            p.copy_from_slice(&self.bufs[cursor].1);
+            cursor += 1;
+        });
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -770,6 +908,85 @@ mod tests {
         let mut wide = build_model(&wide_cfg);
         let err = read_checkpoint(wide.as_mut(), &mut bytes.as_slice()).unwrap_err();
         assert!(err.to_string().contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn ckpt_data_round_trip_matches_streamed_load() {
+        for kind in ModelKind::ALL {
+            let cfg = small_cfg(kind);
+            let mut src = build_model(&cfg);
+            let mut rng = Rng::new(83);
+            src.visit_params_mut(&mut |_n, p| {
+                for v in p.iter_mut() {
+                    *v += 0.05 * rng.normal();
+                }
+            });
+            let mut bytes = Vec::new();
+            write_checkpoint(src.as_ref(), &mut bytes).unwrap();
+
+            let data = CkptData::from_bytes(&bytes).unwrap();
+            assert_eq!(data.kind, kind.name(), "{kind:?}");
+            assert_eq!((data.d_in, data.d_out), (src.d_in(), src.d_out()), "{kind:?}");
+            assert_eq!(data.arch, arch_fingerprint(src.as_ref()), "{kind:?}");
+
+            let mut dst = build_model(&cfg);
+            data.check_model(dst.as_ref()).unwrap();
+            data.apply_to(dst.as_mut()).unwrap();
+            assert_eq!(
+                collect_params(src.as_ref()),
+                collect_params(dst.as_ref()),
+                "{kind:?}: applied params must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn ckpt_data_rejects_corrupt_and_trailing_bytes() {
+        let cfg = small_cfg(ModelKind::Mlp);
+        let src = build_model(&cfg);
+        let mut bytes = Vec::new();
+        write_checkpoint(src.as_ref(), &mut bytes).unwrap();
+
+        // bad magic
+        let mut broken = bytes.clone();
+        broken[0] ^= 0xFF;
+        assert!(CkptData::from_bytes(&broken).unwrap_err().to_string().contains("magic"));
+
+        // truncated mid-buffer
+        assert!(CkptData::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+
+        // trailing garbage after the last buffer
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0u8; 3]);
+        assert!(CkptData::from_bytes(&padded).unwrap_err().to_string().contains("trailing"));
+
+        // a corrupt buffer count cannot claim more than the bytes hold
+        let mut huge = bytes.clone();
+        let nbufs_at = 8 + 4 + 3 + 8 + 8 + 8; // magic, kind len, "mlp", d_in, d_out, arch
+        huge[nbufs_at..nbufs_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(CkptData::from_bytes(&huge).unwrap_err().to_string().contains("buffers"));
+    }
+
+    #[test]
+    fn ckpt_data_rejects_fingerprint_mismatch_without_writing() {
+        let cfg_a = ModelCfg::new(
+            ModelKind::Mlp,
+            LinearCfg::spm(8, Variant::General).with_schedule(Schedule::Random).with_seed(1),
+        )
+        .with_classes(4);
+        let cfg_b = ModelCfg {
+            op: LinearCfg::spm(8, Variant::General).with_schedule(Schedule::Random).with_seed(2),
+            ..cfg_a
+        };
+        let src = build_model(&cfg_a);
+        let mut bytes = Vec::new();
+        write_checkpoint(src.as_ref(), &mut bytes).unwrap();
+        let data = CkptData::from_bytes(&bytes).unwrap();
+        let mut dst = build_model(&cfg_b);
+        let before = collect_params(dst.as_ref());
+        let err = data.apply_to(dst.as_mut()).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        assert_eq!(collect_params(dst.as_ref()), before, "reject must not mutate params");
     }
 
     #[test]
