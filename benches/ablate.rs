@@ -1,0 +1,168 @@
+//! Bench: the deterministic ablation harness (DESIGN.md §17) — expand a
+//! committed `ablate/*.toml` plan into its cell grid, train every cell
+//! through the native `TrainEngine` under pinned seeds and a pinned
+//! single-thread budget, and report the KPI vector per cell (loss, acc,
+//! param count, FLOPs/row, steady-state allocs/step, ns/row, rows/s).
+//!
+//! Replaces the old XLA-only `ablations` bench (which silently required
+//! the excluded spm-runtime crate); the PJRT driver wrapper now lives in
+//! `rust/spm-runtime/examples/ablations_xla.rs`.
+//!
+//! Also buildable as an example (same file, see spm-coordinator's
+//! Cargo.toml) so CI can drive it with plain `cargo run`:
+//!
+//! ```text
+//! cargo run --release -p spm-coordinator --example ablate -- \
+//!     --plan ablate/smoke.toml --json ABLATE_smoke.json --check
+//! ```
+//!
+//! Flags: `--plan <path>` the plan to run (default
+//! `ablate/smoke.toml` at the repo root), `--registry <dir>` the
+//! registry directory (default `registry/` at the repo root), `--json
+//! <path>` writes the stable-schema report, `--update` appends this
+//! run's rows to `registry/<plan>.csv` (append-only; commit the result
+//! to move the baseline), `--check` the CI gate: runs the plan TWICE
+//! and fails unless the exact KPIs are bit-identical, then compares the
+//! fresh run against the latest matching registry rows per (plan hash,
+//! exec, cell), failing on any out-of-tolerance KPI. Cells with no
+//! committed baseline yet bootstrap (pass + warn).
+
+use std::path::PathBuf;
+
+use spm_coordinator::ablate::{
+    self, check_against_registry, exact_rows, registry_append, registry_load, registry_path,
+    report_json, run_plan, KpiClass, Plan, PlanReport, KPIS,
+};
+use spm_coordinator::allocs::CountingAlloc;
+use spm_coordinator::bench_args::BenchArgs;
+use spm_coordinator::metrics::{fmt_f, Table};
+
+// Count every allocator call so allocs_per_step is a measured number
+// (DESIGN.md §15). Only the bench binary installs this: the library and
+// the integration tests stay on the system allocator.
+#[global_allocator]
+static ALLOC_COUNTER: CountingAlloc = CountingAlloc;
+
+struct Args {
+    plan: PathBuf,
+    registry: PathBuf,
+    json: Option<String>,
+    check: bool,
+    update: bool,
+}
+
+fn parse_args() -> Args {
+    let a = BenchArgs::parse();
+    let root = ablate::repo_root();
+    Args {
+        plan: a
+            .str_opt("--plan")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| root.join("ablate").join("smoke.toml")),
+        registry: a
+            .str_opt("--registry")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| root.join("registry")),
+        json: a.json_path(),
+        check: a.check(),
+        update: a.has("--update"),
+    }
+}
+
+fn print_report(report: &PlanReport) {
+    let mut headers = vec!["cell", "exec"];
+    headers.extend(KPIS.iter().map(|k| k.name));
+    let mut t = Table::new(&headers);
+    for c in &report.cells {
+        let mut row = vec![c.cell.id(), c.cell.exec.name().to_string()];
+        for (spec, v) in KPIS.iter().zip(&c.kpis) {
+            row.push(match spec.class {
+                // exact values print in full — they are the bit-identity
+                // contract, truncating them would hide drift
+                KpiClass::Exact => format!("{v}"),
+                KpiClass::Measured => fmt_f(*v, 1),
+            });
+        }
+        t.row(row);
+    }
+    t.print();
+    for s in &report.skipped {
+        println!("skipped (backend unavailable here): {s}");
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("ablate FAILED: {msg}");
+    std::process::exit(1);
+}
+
+fn main() {
+    let args = parse_args();
+    let plan = Plan::load(&args.plan).unwrap_or_else(|e| die(&e.to_string()));
+    println!(
+        "ablation plan '{}' (hash {}): n={}, {} steps x {} rows, seed {}\n",
+        plan.name,
+        plan.hash(),
+        plan.n,
+        plan.steps,
+        plan.rows,
+        plan.seed
+    );
+
+    let report = run_plan(&plan).unwrap_or_else(|e| die(&e.to_string()));
+    print_report(&report);
+
+    if let Some(path) = &args.json {
+        std::fs::write(path, report_json(&plan, &report))
+            .unwrap_or_else(|e| die(&format!("writing {path}: {e}")));
+        println!("\nwrote {path}");
+    }
+
+    let reg_file = registry_path(&args.registry, &plan.name);
+    if args.update {
+        let appended =
+            registry_append(&reg_file, &report).unwrap_or_else(|e| die(&e.to_string()));
+        println!("\nappended {appended} row(s) to {} — commit it to move the baseline", reg_file.display());
+    }
+
+    if args.check {
+        // gate 1: determinism — the same plan run twice in this process
+        // must produce bit-identical exact KPIs (pinned seeds + pinned
+        // single-thread budget make anything else a real bug)
+        let second = run_plan(&plan).unwrap_or_else(|e| die(&e.to_string()));
+        let (a, b) = (exact_rows(&report), exact_rows(&second));
+        if a != b {
+            for (x, y) in a.iter().zip(&b) {
+                if x != y {
+                    eprintln!("  first:  {x}\n  second: {y}");
+                }
+            }
+            die("exact KPIs changed between two runs of the same plan — determinism broke");
+        }
+        println!("\ncheck: two runs bit-identical across {} cells", report.cells.len());
+
+        // gate 2: regression vs the committed registry
+        let rows = registry_load(&reg_file).unwrap_or_else(|e| die(&e.to_string()));
+        let outcome = check_against_registry(&plan, &report, &rows);
+        if outcome.bootstrapped > 0 {
+            println!(
+                "check: {} cell(s) have no baseline in {} yet (run --update and commit to arm the gate)",
+                outcome.bootstrapped,
+                reg_file.display()
+            );
+        }
+        if !outcome.passed() {
+            for f in &outcome.failures {
+                eprintln!("  {f}");
+            }
+            die(&format!(
+                "{} KPI regression(s) vs the registry baseline",
+                outcome.failures.len()
+            ));
+        }
+        println!(
+            "check: {} cell(s) within tolerance of their registry baselines — OK",
+            outcome.compared
+        );
+    }
+}

@@ -22,10 +22,11 @@
 //! interactive-lane deadline (default 200), `--replicas R` (default 2),
 //! `--json <path>` machine-readable output (stamped with
 //! `schema_version`), `--check` the CI gate. Gateway mode adds
-//! `--p99-ms MS` (default 250): the steady-phase p99 budget the gate
-//! enforces, alongside zero steady sheds, a hot-swap with zero dropped
-//! in-flight requests, and an overload phase that MUST shed without a
-//! single engine failure.
+//! `--p99-ms MS` (deprecated alias; the budget's declarative home is
+//! `[serve] p99_ms` in `ablate/gates.toml`, DESIGN.md §17): the
+//! steady-phase p99 budget the gate enforces, alongside zero steady
+//! sheds, a hot-swap with zero dropped in-flight requests, and an
+//! overload phase that MUST shed without a single engine failure.
 
 use std::time::{Duration, Instant};
 
@@ -34,6 +35,7 @@ use spm_core::ops::{backend, LinearCfg, SpmExec};
 use spm_core::parallel;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
+use spm_coordinator::ablate::Gates;
 use spm_coordinator::allocs::{self, CountingAlloc};
 use spm_coordinator::bench_args::{env_exec, json_header, json_num, BenchArgs};
 use spm_coordinator::gateway::{Gateway, GatewayClient, InferOutcome};
@@ -54,13 +56,27 @@ struct Args {
     wait_us: u64,
     replicas: usize,
     gateway: bool,
+    /// Effective steady-phase p99 budget: `[serve] p99_ms` from the
+    /// gates schema, unless the deprecated `--p99-ms` alias overrides.
     p99_ms: f64,
     json: Option<String>,
     check: bool,
 }
 
-fn parse_args() -> Args {
+fn parse_args(gates: &Gates) -> Args {
     let a = BenchArgs::parse();
+    let p99_ms = match a.str_opt("--p99-ms") {
+        Some(s) => {
+            // kept as a deprecated alias for one release; the declarative
+            // home is ablate/gates.toml (DESIGN.md §17)
+            eprintln!(
+                "note: --p99-ms is deprecated — set [serve] p99_ms in ablate/gates.toml \
+                 (flag honored this release)"
+            );
+            s.parse().unwrap_or_else(|_| panic!("--p99-ms: bad value '{s}'"))
+        }
+        None => gates.serve.p99_ms,
+    };
     Args {
         requests: a.usize_flag("--requests", 256),
         clients: a.usize_flag("--clients", 8),
@@ -68,7 +84,7 @@ fn parse_args() -> Args {
         wait_us: a.u64_flag("--wait-us", 200),
         replicas: a.usize_flag("--replicas", 2).max(1),
         gateway: a.has("--gateway"),
-        p99_ms: a.u64_flag("--p99-ms", 250) as f64,
+        p99_ms,
         json: a.json_path(),
         check: a.check(),
     }
@@ -238,7 +254,7 @@ fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec) -> String {
 /// backend must actually be active: a detection or feature-wiring
 /// regression fails the gate instead of silently serving through the
 /// scalar fused path.
-fn check_rows(rows: &[BenchRow], args: &Args) -> Result<(), String> {
+fn check_rows(rows: &[BenchRow], args: &Args, gates: &Gates) -> Result<(), String> {
     if std::env::var("SPM_EXEC").as_deref() == Ok("simd") && !backend::simd_available() {
         return Err(
             "SPM_EXEC=simd but the simd backend did not activate (feature off or AVX2/FMA \
@@ -279,12 +295,13 @@ fn check_rows(rows: &[BenchRow], args: &Args) -> Result<(), String> {
                 r.report.batches, r.report.replica_batches
             ));
         }
-        // the zero-allocation steady-state gate (DESIGN.md §15): a warm
-        // executor micro-batch must not touch the allocator
-        if r.allocs_per_iter != 0.0 {
+        // the zero-allocation steady-state gate (DESIGN.md §15, cap from
+        // the gates schema): a warm executor micro-batch must not touch
+        // the allocator
+        if r.allocs_per_iter > gates.serve.allocs_max {
             return Err(format!(
-                "{name}: steady-state serve iteration allocated ({:.1} allocs/iter, want 0)",
-                r.allocs_per_iter
+                "{name}: steady-state serve iteration allocated ({:.1} allocs/iter, cap {})",
+                r.allocs_per_iter, gates.serve.allocs_max
             ));
         }
     }
@@ -621,8 +638,15 @@ fn check_gateway(rows: &[PhaseRow], args: &Args) -> Result<(), String> {
 }
 
 fn main() {
-    let args = parse_args();
+    let gates = Gates::load_default().unwrap_or_else(|e| {
+        eprintln!("FAILED loading gates: {e}");
+        std::process::exit(1);
+    });
+    let args = parse_args(&gates);
     let exec = env_exec();
+    if args.check {
+        println!("check thresholds: {}\n", gates.source);
+    }
 
     if args.gateway {
         println!(
@@ -671,7 +695,7 @@ fn main() {
     }
 
     if args.check {
-        match check_rows(&rows, &args) {
+        match check_rows(&rows, &args, &gates) {
             Ok(()) => println!(
                 "\ncheck: all {} models served {}/{} requests with live replicas — OK",
                 rows.len(),

@@ -21,13 +21,15 @@
 //! per-replica threads (the deterministic-reduction gate), the R=1
 //! steady-state step stays at its documented allocation floor (the
 //! DESIGN.md §15 gate, reported as `allocs_per_iter` in the table and
-//! JSON), and — at n >= 1024 — the largest replica count clears 1.5x
-//! the single-replica epoch throughput.
+//! JSON), and — at bench scale — the largest replica count clears the
+//! speedup floor. All three caps come from the declarative gates schema
+//! (`[train]` in `ablate/gates.toml`, DESIGN.md §17).
 
 use spm_core::models::api::{Model, ModelCfg, ModelKind};
 use spm_core::ops::{backend, LinearCfg, SpmExec};
 use spm_core::parallel;
 use spm_core::spm::Variant;
+use spm_coordinator::ablate::Gates;
 use spm_coordinator::allocs::{self, CountingAlloc};
 use spm_coordinator::bench_args::{env_exec, json_header, json_num, BenchArgs};
 use spm_coordinator::experiments::DataSource;
@@ -231,7 +233,7 @@ fn to_json(rows: &[BenchRow], args: &Args, exec: SpmExec, invariant: bool) -> St
 /// the trajectory must be replica-count invariant, the simd leg must
 /// actually train vectorized, and at bench scale (n >= 1024) the
 /// largest replica count must clear 1.5x single-replica throughput.
-fn check_rows(rows: &[BenchRow], args: &Args, invariant: bool) -> Result<(), String> {
+fn check_rows(rows: &[BenchRow], args: &Args, invariant: bool, gates: &Gates) -> Result<(), String> {
     if std::env::var("SPM_EXEC").as_deref() == Ok("simd") && !backend::simd_available() {
         return Err(
             "SPM_EXEC=simd but the simd backend did not activate (feature off or AVX2/FMA \
@@ -250,16 +252,16 @@ fn check_rows(rows: &[BenchRow], args: &Args, invariant: bool) -> Result<(), Str
             return Err(format!("R={}: zero throughput", r.replicas));
         }
     }
-    // the zero-allocation steady-state gate (DESIGN.md §15): the
-    // single-replica in-place reduce step must stay at its documented
-    // floor — 1 trace-handle Vec per SPM General forward_train per
-    // microbatch, with small headroom
+    // the zero-allocation steady-state gate (DESIGN.md §15, cap from the
+    // gates schema): the single-replica in-place reduce step must stay
+    // at its documented floor — 1 trace-handle Vec per SPM General
+    // forward_train per microbatch, with small headroom
     let r1 = &rows[0];
-    if r1.replicas == 1 && r1.allocs_per_step > 8.0 {
+    if r1.replicas == 1 && r1.allocs_per_step > gates.train.r1_allocs_max {
         return Err(format!(
-            "R=1 steady-state step allocated {:.1} times (cap 8: one trace-handle Vec per \
+            "R=1 steady-state step allocated {:.1} times (cap {}: one trace-handle Vec per \
              microbatch plus headroom)",
-            r1.allocs_per_step
+            r1.allocs_per_step, gates.train.r1_allocs_max
         ));
     }
     if !invariant {
@@ -269,12 +271,12 @@ fn check_rows(rows: &[BenchRow], args: &Args, invariant: bool) -> Result<(), Str
             args.replicas
         ));
     }
-    if args.n >= 1024 && args.replicas > 1 {
+    if args.n >= gates.train.speedup_min_n && args.replicas > 1 {
         let last = rows.last().unwrap();
-        if last.speedup < 1.5 {
+        if last.speedup < gates.train.min_speedup {
             return Err(format!(
-                "R={} epoch throughput is only {:.2}x single-replica (need >= 1.5x at n={})",
-                last.replicas, last.speedup, args.n
+                "R={} epoch throughput is only {:.2}x single-replica (need >= {}x at n={})",
+                last.replicas, last.speedup, gates.train.min_speedup, args.n
             ));
         }
     }
@@ -324,7 +326,12 @@ fn main() {
     }
 
     if args.check {
-        match check_rows(&rows, &args, invariant) {
+        let gates = Gates::load_default().unwrap_or_else(|e| {
+            eprintln!("check FAILED: {e}");
+            std::process::exit(1);
+        });
+        println!("check thresholds: {}", gates.source);
+        match check_rows(&rows, &args, invariant, &gates) {
             Ok(()) => println!(
                 "check: loss decreased at every replica count and the reduction is \
                  deterministic — OK"

@@ -60,6 +60,15 @@ cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example serve_bench
 cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example train_bench -- \
     --n 32 --rows 16 --steps 4 --replicas 2 --check
 
+# Ablation-harness smoke (DESIGN.md §17): the committed smoke plan
+# through the native TrainEngine; --check gates bit-identical exact KPIs
+# across a double run (pinned seeds/threads) and compares against any
+# committed registry/smoke.csv baselines for this exec backend. The CI
+# ablate-smoke job runs the same pass per matrix leg and records the
+# ABLATE_smoke.json artifact.
+cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example ablate -- \
+    --plan ablate/smoke.toml --check
+
 # Format check. Non-fatal unless SPM_FMT_STRICT=1: rustfmt output can
 # drift across toolchain versions and must not mask real build/test
 # failures on machines with a different rustfmt.

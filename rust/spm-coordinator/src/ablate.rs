@@ -1,0 +1,1439 @@
+//! Deterministic ablation harness + committed perf registry (DESIGN.md
+//! §17): the repo's answer to "perf trajectories evaporate between CI
+//! runs".
+//!
+//! A declarative plan (`ablate/*.toml`) pins a cartesian grid of
+//! op kind x variant x schedule x stage depth x exec path x model kind
+//! plus the seeds/steps/rows every cell trains with. [`run_plan`] expands
+//! the grid, runs each cell through the native [`TrainEngine`] under a
+//! pinned single-thread budget, and extracts two classes of KPI:
+//!
+//! - **exact** KPIs (`loss`, `acc`, `param_count`, `flops_per_row`,
+//!   `allocs_per_step`): bit-reproducible under pinned seeds/threads —
+//!   the same plan run twice must produce byte-identical values
+//!   ([`exact_rows`]), and `--check` compares them against the registry
+//!   at zero tolerance unless the plan declares a band.
+//! - **measured** KPIs (`ns_per_row`, `rows_per_sec`): wall-clock
+//!   figures, reported for the record but only gated when the plan
+//!   declares an explicit `[tolerance.<kpi>]` band (machines differ;
+//!   bands are one-sided in the regression direction).
+//!
+//! Results append to a committed `registry/<plan>.csv` — append-only,
+//! schema-versioned, each row stamped with git SHA, exec backend, and
+//! the FNV-64 hash of the plan's canonical text, so a tolerance edit or
+//! axis change can never be confused with the run it gated.
+//!
+//! The module also owns [`Gates`]: the declarative home of every bench
+//! `--check` threshold (`ablate/gates.toml`). The bench binaries load it
+//! instead of carrying hardcoded constants, so the whole perf contract
+//! is reviewable in one file.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use spm_core::models::api::{build_model, Model, ModelCfg, ModelKind};
+use spm_core::ops::{backend, LinearCfg, LinearKind, SpmExec};
+use spm_core::pairing::Schedule;
+use spm_core::rng::Rng;
+use spm_core::spm::Variant;
+use spm_core::tensor::Mat;
+
+use crate::allocs;
+use crate::bail;
+use crate::bench_args::{env_exec, json_header, json_num};
+use crate::config::{parse_toml, Value};
+use crate::error::{Context, Result};
+use crate::train::{TrainBatch, TrainEngine};
+
+/// Version of the `registry/*.csv` layout, stamped both in the file's
+/// magic first line and in every row. Bump when columns change.
+pub const REGISTRY_SCHEMA_VERSION: u32 = 1;
+
+/// First line of every registry file; the loader refuses anything else.
+pub const REGISTRY_MAGIC: &str = "# spm-ablate-registry v1";
+
+// ---------------------------------------------------------------------------
+// KPI schema
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KpiClass {
+    /// Bit-reproducible under pinned seeds/threads; gated at zero
+    /// tolerance by default.
+    Exact,
+    /// Wall-clock; report-only unless the plan declares a band.
+    Measured,
+}
+
+/// One column of the KPI vector.
+pub struct KpiSpec {
+    pub name: &'static str,
+    pub class: KpiClass,
+    /// Which drift direction is a regression: `1` = larger is worse,
+    /// `-1` = smaller is worse, `0` = any drift beyond the band fails
+    /// (identity KPIs like param counts).
+    pub worse: i8,
+}
+
+/// The KPI columns, in registry/JSON order.
+pub const KPIS: [KpiSpec; 7] = [
+    KpiSpec { name: "loss", class: KpiClass::Exact, worse: 1 },
+    KpiSpec { name: "acc", class: KpiClass::Exact, worse: -1 },
+    KpiSpec { name: "param_count", class: KpiClass::Exact, worse: 0 },
+    KpiSpec { name: "flops_per_row", class: KpiClass::Exact, worse: 0 },
+    KpiSpec { name: "allocs_per_step", class: KpiClass::Exact, worse: 1 },
+    KpiSpec { name: "ns_per_row", class: KpiClass::Measured, worse: 1 },
+    KpiSpec { name: "rows_per_sec", class: KpiClass::Measured, worse: -1 },
+];
+
+fn kpi_index(name: &str) -> Option<usize> {
+    KPIS.iter().position(|k| k.name == name)
+}
+
+// ---------------------------------------------------------------------------
+// Plan
+// ---------------------------------------------------------------------------
+
+/// Per-KPI tolerance band: a fresh value may drift past the registry
+/// baseline by at most `abs + rel * |baseline|` in the KPI's regression
+/// direction before `--check` fails.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tolerance {
+    pub abs: f64,
+    pub rel: f64,
+}
+
+/// One value of the `exec` axis: a pinned path, or "env" — resolved from
+/// `SPM_EXEC` at run time so the same committed plan exercises each CI
+/// matrix leg.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ExecAxis {
+    Env,
+    Fixed(SpmExec),
+}
+
+impl ExecAxis {
+    fn parse(s: &str) -> Option<ExecAxis> {
+        if s == "env" {
+            Some(ExecAxis::Env)
+        } else {
+            SpmExec::parse(s).map(ExecAxis::Fixed)
+        }
+    }
+
+    fn name(&self) -> &str {
+        match self {
+            ExecAxis::Env => "env",
+            ExecAxis::Fixed(e) => e.name(),
+        }
+    }
+}
+
+/// A parsed `ablate/*.toml` plan: the pinned experiment shape plus the
+/// axes the driver cartesian-expands. See DESIGN.md §17 for the format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub name: String,
+    pub seed: u64,
+    /// Microbatches per cell (one optimizer step each; R=1, accum=1).
+    pub steps: usize,
+    /// Rows per microbatch.
+    pub rows: usize,
+    /// Mixing width every cell's model is built at.
+    pub n: usize,
+    pub classes: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub ops: Vec<LinearKind>,
+    pub variants: Vec<Variant>,
+    pub schedules: Vec<Schedule>,
+    /// Explicit stage depths; empty = the paper default `log2(n)` only.
+    pub stages: Vec<usize>,
+    pub execs: Vec<ExecAxis>,
+    pub models: Vec<ModelKind>,
+    /// Declared `[tolerance.<kpi>]` bands, by KPI name.
+    pub tolerances: BTreeMap<String, Tolerance>,
+}
+
+/// 1-based source line of `key` inside `[section]` (0 when not found) —
+/// `parse_toml` only carries line numbers for syntax errors, so semantic
+/// validation recovers them by rescanning the raw text.
+fn line_of(text: &str, section: &str, key: &str) -> usize {
+    let mut cur = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            cur = name.trim().to_string();
+        } else if cur == section {
+            if let Some((k, _)) = line.split_once('=') {
+                if k.trim() == key {
+                    return i + 1;
+                }
+            }
+        }
+    }
+    0
+}
+
+/// 1-based source line of the `[section]` header itself (0 when absent).
+fn line_of_section(text: &str, section: &str) -> usize {
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            if name.trim() == section {
+                return i + 1;
+            }
+        }
+    }
+    0
+}
+
+impl Default for Plan {
+    fn default() -> Self {
+        Plan {
+            name: String::new(),
+            seed: 7,
+            steps: 0,
+            rows: 0,
+            n: 0,
+            classes: 4,
+            heads: 2,
+            seq_len: 2,
+            ops: vec![LinearKind::Spm],
+            variants: vec![Variant::General],
+            schedules: vec![Schedule::Butterfly],
+            stages: Vec::new(),
+            execs: vec![ExecAxis::Env],
+            models: vec![ModelKind::Mlp],
+            tolerances: BTreeMap::new(),
+        }
+    }
+}
+
+impl Plan {
+    /// Parse + validate a plan document. Every semantic error carries the
+    /// 1-based source line of the offending key.
+    pub fn parse(text: &str) -> Result<Plan> {
+        let doc = parse_toml(text)?;
+        if let Some(map) = doc.get("") {
+            if let Some(key) = map.keys().next() {
+                bail!(
+                    "line {}: top-level key '{key}' — plan keys live under [plan], \
+                     [axes], or [tolerance.<kpi>]",
+                    line_of(text, "", key)
+                );
+            }
+        }
+        for section in doc.keys() {
+            match section.as_str() {
+                "" | "plan" | "axes" => {}
+                s => {
+                    let kpi = s.strip_prefix("tolerance.").unwrap_or("");
+                    if kpi.is_empty() || kpi_index(kpi).is_none() {
+                        bail!(
+                            "line {}: unknown section [{s}] (expected [plan], [axes], \
+                             or [tolerance.<kpi>] with a KPI from {:?})",
+                            line_of_section(text, s),
+                            KPIS.map(|k| k.name)
+                        );
+                    }
+                }
+            }
+        }
+
+        let mut plan = Plan::default();
+
+        let pmap = doc.get("plan").context("plan is missing its [plan] section")?;
+        for key in pmap.keys() {
+            if !["name", "seed", "steps", "rows", "n", "classes", "heads", "seq_len"]
+                .contains(&key.as_str())
+            {
+                bail!("line {}: unknown [plan] key '{key}'", line_of(text, "plan", key));
+            }
+        }
+        let name = pmap
+            .get("name")
+            .and_then(Value::as_str)
+            .context("[plan] name (a string) is required")?;
+        if name.is_empty()
+            || !name.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_' || b == b'-')
+        {
+            bail!(
+                "line {}: [plan] name '{name}' must be non-empty [a-z0-9_-] (it names \
+                 the registry file)",
+                line_of(text, "plan", "name")
+            );
+        }
+        plan.name = name.to_string();
+        for (key, dst, min) in [
+            ("steps", &mut plan.steps, 1usize),
+            ("rows", &mut plan.rows, 1),
+            ("n", &mut plan.n, 2),
+            ("classes", &mut plan.classes, 2),
+            ("heads", &mut plan.heads, 1),
+            ("seq_len", &mut plan.seq_len, 1),
+        ] {
+            if let Some(v) = pmap.get(key) {
+                let u = v.as_usize().with_context(|| {
+                    format!(
+                        "line {}: [plan] {key} must be a non-negative int",
+                        line_of(text, "plan", key)
+                    )
+                })?;
+                if u < min {
+                    bail!("line {}: [plan] {key} must be >= {min}", line_of(text, "plan", key));
+                }
+                *dst = u;
+            }
+        }
+        for key in ["steps", "rows", "n"] {
+            if pmap.get(key).is_none() {
+                bail!("[plan] {key} (an int) is required — plans pin their workload");
+            }
+        }
+        if let Some(v) = pmap.get("seed") {
+            plan.seed = v.as_usize().with_context(|| {
+                format!(
+                    "line {}: [plan] seed must be a non-negative int",
+                    line_of(text, "plan", "seed")
+                )
+            })? as u64;
+        }
+
+        if let Some(amap) = doc.get("axes") {
+            for key in amap.keys() {
+                if !["op", "variant", "schedule", "stages", "exec", "model"].contains(&key.as_str())
+                {
+                    bail!("line {}: unknown [axes] key '{key}'", line_of(text, "axes", key));
+                }
+            }
+            let strings = |key: &str| -> Result<Option<Vec<String>>> {
+                let Some(v) = amap.get(key) else { return Ok(None) };
+                let items = v.as_list().with_context(|| {
+                    format!(
+                        "line {}: [axes] {key} must be a [\"..\"] list",
+                        line_of(text, "axes", key)
+                    )
+                })?;
+                if items.is_empty() {
+                    bail!("line {}: [axes] {key} must not be empty", line_of(text, "axes", key));
+                }
+                let mut out = Vec::with_capacity(items.len());
+                for item in items {
+                    out.push(
+                        item.as_str()
+                            .with_context(|| {
+                                format!(
+                                    "line {}: [axes] {key} elements must be strings",
+                                    line_of(text, "axes", key)
+                                )
+                            })?
+                            .to_string(),
+                    );
+                }
+                Ok(Some(out))
+            };
+            if let Some(names) = strings("op")? {
+                plan.ops = Vec::new();
+                for s in names {
+                    plan.ops.push(LinearKind::parse(&s).with_context(|| {
+                        format!(
+                            "line {}: [axes] op '{s}' is not an op kind",
+                            line_of(text, "axes", "op")
+                        )
+                    })?);
+                }
+            }
+            if let Some(names) = strings("variant")? {
+                plan.variants = Vec::new();
+                for s in names {
+                    plan.variants.push(Variant::parse(&s).with_context(|| {
+                        format!(
+                            "line {}: [axes] variant '{s}' is not a variant",
+                            line_of(text, "axes", "variant")
+                        )
+                    })?);
+                }
+            }
+            if let Some(names) = strings("schedule")? {
+                plan.schedules = Vec::new();
+                for s in names {
+                    plan.schedules.push(Schedule::parse(&s).with_context(|| {
+                        format!(
+                            "line {}: [axes] schedule '{s}' is not a pairing schedule",
+                            line_of(text, "axes", "schedule")
+                        )
+                    })?);
+                }
+            }
+            if let Some(names) = strings("exec")? {
+                plan.execs = Vec::new();
+                for s in names {
+                    plan.execs.push(ExecAxis::parse(&s).with_context(|| {
+                        format!(
+                            "line {}: [axes] exec '{s}' is not an exec path \
+                             (rowwise/fused/simd/env)",
+                            line_of(text, "axes", "exec")
+                        )
+                    })?);
+                }
+            }
+            if let Some(names) = strings("model")? {
+                plan.models = Vec::new();
+                for s in names {
+                    plan.models.push(ModelKind::parse(&s).with_context(|| {
+                        format!(
+                            "line {}: [axes] model '{s}' is not a model kind",
+                            line_of(text, "axes", "model")
+                        )
+                    })?);
+                }
+            }
+            if let Some(v) = amap.get("stages") {
+                let items = v.as_list().with_context(|| {
+                    format!(
+                        "line {}: [axes] stages must be an int list",
+                        line_of(text, "axes", "stages")
+                    )
+                })?;
+                if items.is_empty() {
+                    bail!(
+                        "line {}: [axes] stages must not be empty (omit the key for \
+                         the log2(n) default)",
+                        line_of(text, "axes", "stages")
+                    );
+                }
+                plan.stages = Vec::new();
+                for item in items {
+                    let l = item.as_usize().with_context(|| {
+                        format!(
+                            "line {}: [axes] stages elements must be non-negative ints",
+                            line_of(text, "axes", "stages")
+                        )
+                    })?;
+                    if l == 0 {
+                        bail!(
+                            "line {}: [axes] stages must be >= 1",
+                            line_of(text, "axes", "stages")
+                        );
+                    }
+                    plan.stages.push(l);
+                }
+            }
+        }
+
+        for (section, map) in &doc {
+            let Some(kpi) = section.strip_prefix("tolerance.") else { continue };
+            let mut tol = Tolerance { abs: 0.0, rel: 0.0 };
+            for (key, dst) in [("abs", &mut tol.abs), ("rel", &mut tol.rel)] {
+                if let Some(v) = map.get(key) {
+                    let f = v.as_f64().with_context(|| {
+                        format!(
+                            "line {}: [tolerance.{kpi}] {key} must be a number",
+                            line_of(text, section, key)
+                        )
+                    })?;
+                    if !(f.is_finite() && f >= 0.0) {
+                        bail!(
+                            "line {}: [tolerance.{kpi}] {key} must be a finite \
+                             non-negative number",
+                            line_of(text, section, key)
+                        );
+                    }
+                    *dst = f;
+                }
+            }
+            for key in map.keys() {
+                if key != "abs" && key != "rel" {
+                    bail!(
+                        "line {}: unknown [tolerance.{kpi}] key '{key}' (abs/rel only)",
+                        line_of(text, section, key)
+                    );
+                }
+            }
+            plan.tolerances.insert(kpi.to_string(), tol);
+        }
+
+        if plan.models.contains(&ModelKind::Attention) && plan.n % plan.heads != 0 {
+            bail!(
+                "line {}: [plan] heads = {} must divide n = {} (the model axis \
+                 includes attention)",
+                line_of(text, "plan", "heads").max(line_of(text, "plan", "n")),
+                plan.heads,
+                plan.n
+            );
+        }
+        Ok(plan)
+    }
+
+    pub fn load(path: &Path) -> Result<Plan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan {}", path.display()))?;
+        Plan::parse(&text).with_context(|| format!("plan {}", path.display()))
+    }
+
+    /// Canonical re-rendering: parseable, key-ordered, default axes made
+    /// explicit. [`Plan::hash`] is the FNV-64 of exactly this text, so a
+    /// reformatted-but-equivalent plan file keeps its registry rows.
+    pub fn canonical(&self) -> String {
+        let join = |names: Vec<String>| -> String {
+            let quoted: Vec<String> = names.into_iter().map(|s| format!("\"{s}\"")).collect();
+            format!("[{}]", quoted.join(", "))
+        };
+        let mut s = String::new();
+        s.push_str("[plan]\n");
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str(&format!("steps = {}\n", self.steps));
+        s.push_str(&format!("rows = {}\n", self.rows));
+        s.push_str(&format!("n = {}\n", self.n));
+        s.push_str(&format!("classes = {}\n", self.classes));
+        s.push_str(&format!("heads = {}\n", self.heads));
+        s.push_str(&format!("seq_len = {}\n", self.seq_len));
+        s.push_str("\n[axes]\n");
+        s.push_str(&format!(
+            "op = {}\n",
+            join(self.ops.iter().map(|k| k.name().to_string()).collect())
+        ));
+        s.push_str(&format!(
+            "variant = {}\n",
+            join(self.variants.iter().map(|v| v.name().to_string()).collect())
+        ));
+        s.push_str(&format!(
+            "schedule = {}\n",
+            join(self.schedules.iter().map(|v| v.name().to_string()).collect())
+        ));
+        if !self.stages.is_empty() {
+            let stages: Vec<String> = self.stages.iter().map(|l| l.to_string()).collect();
+            s.push_str(&format!("stages = [{}]\n", stages.join(", ")));
+        }
+        s.push_str(&format!(
+            "exec = {}\n",
+            join(self.execs.iter().map(|e| e.name().to_string()).collect())
+        ));
+        s.push_str(&format!(
+            "model = {}\n",
+            join(self.models.iter().map(|m| m.name().to_string()).collect())
+        ));
+        for (kpi, tol) in &self.tolerances {
+            s.push_str(&format!("\n[tolerance.{kpi}]\nabs = {}\nrel = {}\n", tol.abs, tol.rel));
+        }
+        s
+    }
+
+    /// 16-hex-digit FNV-64 of [`Plan::canonical`]; stamps every registry
+    /// row so baselines never survive a plan change unnoticed.
+    pub fn hash(&self) -> String {
+        format!("{:016x}", fnv1a64(self.canonical().as_bytes()))
+    }
+
+    /// The effective band for a KPI: the declared one, zero for exact
+    /// KPIs, `None` (ungated) for undeclared measured KPIs.
+    fn tolerance_for(&self, spec: &KpiSpec) -> Option<Tolerance> {
+        match self.tolerances.get(spec.name) {
+            Some(t) => Some(*t),
+            None => match spec.class {
+                KpiClass::Exact => Some(Tolerance { abs: 0.0, rel: 0.0 }),
+                KpiClass::Measured => None,
+            },
+        }
+    }
+}
+
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Cells
+// ---------------------------------------------------------------------------
+
+/// One point of the expanded grid. Dense cells normalize the SPM-only
+/// axes (variant/schedule/stages) so the grid dedupes to one dense cell
+/// per (model, exec).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    pub model: ModelKind,
+    pub op: LinearKind,
+    pub variant: Variant,
+    pub schedule: Schedule,
+    /// None = the paper default log2(n).
+    pub stages: Option<usize>,
+    pub exec: SpmExec,
+}
+
+impl Cell {
+    /// Stable identity WITHOUT the exec backend (the registry keeps exec
+    /// in its own column). Space-separated: cells embed into CSV rows.
+    pub fn id(&self) -> String {
+        match self.op {
+            LinearKind::Dense => format!("model={} op=dense", self.model.name()),
+            LinearKind::Spm => format!(
+                "model={} op=spm variant={} schedule={} stages={}",
+                self.model.name(),
+                self.variant.name(),
+                self.schedule.name(),
+                self.stages.map_or_else(|| "default".to_string(), |l| l.to_string()),
+            ),
+        }
+    }
+
+    /// Identity including the exec backend (progress lines, skip notes).
+    pub fn key(&self) -> String {
+        format!("{} exec={}", self.id(), self.exec.name())
+    }
+
+    fn to_model_cfg(&self, plan: &Plan) -> ModelCfg {
+        let mut op = match self.op {
+            LinearKind::Dense => LinearCfg::dense(plan.n),
+            LinearKind::Spm => LinearCfg::spm(plan.n, self.variant).with_schedule(self.schedule),
+        };
+        if let Some(l) = self.stages {
+            op = op.with_stages(l);
+        }
+        ModelCfg::new(self.model, op.with_seed(plan.seed))
+            .with_classes(plan.classes)
+            .with_heads(plan.heads)
+            .with_seq_len(plan.seq_len)
+            .with_seed(plan.seed ^ 0xC1A55)
+            .with_exec(self.exec)
+    }
+}
+
+/// Cartesian-expand the plan's axes, resolving `exec = "env"` against
+/// `env_exec` and deduping cells the grid collapses (dense ops ignore
+/// variant/schedule/stages; duplicate axis values fold away).
+pub fn expand(plan: &Plan, env_exec: SpmExec) -> Vec<Cell> {
+    let mut out: Vec<Cell> = Vec::new();
+    let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    let stages: Vec<Option<usize>> = if plan.stages.is_empty() {
+        vec![None]
+    } else {
+        plan.stages.iter().map(|&l| Some(l)).collect()
+    };
+    for &model in &plan.models {
+        for &op in &plan.ops {
+            for &variant in &plan.variants {
+                for &schedule in &plan.schedules {
+                    for &stage in &stages {
+                        for &exec_axis in &plan.execs {
+                            let exec = match exec_axis {
+                                ExecAxis::Env => env_exec,
+                                ExecAxis::Fixed(e) => e,
+                            };
+                            let cell = match op {
+                                LinearKind::Dense => Cell {
+                                    model,
+                                    op,
+                                    variant: Variant::General,
+                                    schedule: Schedule::Butterfly,
+                                    stages: None,
+                                    exec,
+                                },
+                                LinearKind::Spm => {
+                                    Cell { model, op, variant, schedule, stages: stage, exec }
+                                }
+                            };
+                            if seen.insert(cell.key()) {
+                                out.push(cell);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Running
+// ---------------------------------------------------------------------------
+
+/// One cell's KPI vector, in [`KPIS`] order.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: Cell,
+    pub kpis: [f64; KPIS.len()],
+}
+
+/// What a full plan run produced.
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    pub plan_name: String,
+    pub plan_hash: String,
+    pub git_sha: String,
+    pub cells: Vec<CellResult>,
+    /// Cells that could not run on this machine (an explicit `"simd"`
+    /// axis value without the backend) — named, never silent.
+    pub skipped: Vec<String>,
+}
+
+/// A deterministic kind-aware microbatch stream (the same recipe as the
+/// TrainEngine integration tests): learnable labels derived from the
+/// features; attention trains on value targets.
+pub fn cell_batches(model: &dyn Model, count: usize, rows: usize, seed: u64) -> Vec<TrainBatch> {
+    let d = model.d_in();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| match model.kind() {
+            ModelKind::Attention => {
+                let x = Mat::from_vec(rows, d, rng.normal_vec(rows * d, 1.0));
+                let t = x.clone();
+                TrainBatch::values(x, t)
+            }
+            ModelKind::CharLm => {
+                let x = Mat::from_vec(
+                    rows,
+                    d,
+                    (0..rows * d).map(|i| 97.0 + (i % 3) as f32).collect(),
+                );
+                let y: Vec<u32> = (0..rows).map(|r| 97 + (x.at(r, 0) as u32) % 2).collect();
+                TrainBatch::labels(x, y)
+            }
+            _ => {
+                let x = Mat::from_vec(rows, d, rng.normal_vec(rows * d, 1.0));
+                let y: Vec<u32> =
+                    (0..rows).map(|r| u32::from(x.at(r, 0) > x.at(r, 1))).collect();
+                TrainBatch::labels(x, y)
+            }
+        })
+        .collect()
+}
+
+/// Train + measure one cell: `plan.steps` single-microbatch optimizer
+/// steps on an R=1 engine under a pinned 1-thread budget, held-out
+/// evaluation, then a warmed steady-state allocation probe. Fully
+/// deterministic in the exact KPIs.
+pub fn run_cell(plan: &Plan, cell: &Cell) -> Result<CellResult> {
+    let cfg = cell.to_model_cfg(plan);
+    let probe = build_model(&cfg);
+    let train = cell_batches(probe.as_ref(), plan.steps, plan.rows, plan.seed ^ 0xDA7A);
+    let eval = cell_batches(probe.as_ref(), 1, plan.rows, plan.seed ^ 0xEAA1);
+    drop(probe);
+
+    let mut engine = TrainEngine::from_cfg(&cfg, 1).with_threads_per_replica(1);
+    let report = engine.train_epoch(&train);
+    let (loss, acc) = {
+        let model = engine.model();
+        model.evaluate(&eval[0].x, &eval[0].target.as_target())
+    };
+    if !loss.is_finite() {
+        bail!("cell {} diverged: eval loss = {loss}", cell.key());
+    }
+    let param_count = engine.model().param_count();
+    let flops = engine.model().flops_per_row();
+
+    // steady-state allocations per optimizer step: warm the step path
+    // (growth allocations happen once), then count. Meaningful only in
+    // binaries that install `CountingAlloc`; 0 elsewhere — either way
+    // deterministic, which is what the exact-KPI contract needs.
+    let probe_group = &train[..1];
+    engine.step(probe_group);
+    engine.step(probe_group);
+    let allocs_per_step = allocs::allocs_per_iter(2, || {
+        engine.step(probe_group);
+    });
+
+    let ns_per_row =
+        if report.rows_per_sec > 0.0 { 1e9 / report.rows_per_sec } else { f64::INFINITY };
+    Ok(CellResult {
+        cell: cell.clone(),
+        kpis: [
+            loss as f64,
+            acc as f64,
+            param_count as f64,
+            flops as f64,
+            allocs_per_step,
+            ns_per_row,
+            report.rows_per_sec,
+        ],
+    })
+}
+
+/// Expand + run every cell of the plan on this machine. `SPM_EXEC=simd`
+/// without the backend is a hard error (the CI matrix contract — a
+/// silent downgrade would stamp wrong-backend rows); an explicit
+/// `"simd"` axis value merely skips, so committed plans stay portable.
+pub fn run_plan(plan: &Plan) -> Result<PlanReport> {
+    let env = env_exec();
+    if std::env::var("SPM_EXEC").as_deref() == Ok("simd") && !backend::simd_available() {
+        bail!("SPM_EXEC=simd but the vectorized backend is unavailable on this build/machine");
+    }
+    let mut report = PlanReport {
+        plan_name: plan.name.clone(),
+        plan_hash: plan.hash(),
+        git_sha: git_sha(),
+        cells: Vec::new(),
+        skipped: Vec::new(),
+    };
+    for cell in expand(plan, env) {
+        if cell.exec == SpmExec::Simd && !backend::simd_available() {
+            report.skipped.push(cell.key());
+            continue;
+        }
+        report.cells.push(run_cell(plan, &cell)?);
+    }
+    Ok(report)
+}
+
+/// One line per cell holding its identity and EXACT KPIs, serialized via
+/// Rust's shortest-round-trip float `Display` — two runs of the same
+/// plan must produce byte-identical vectors (the `--check` determinism
+/// gate and the pinned-seed tests compare exactly these).
+pub fn exact_rows(report: &PlanReport) -> Vec<String> {
+    report
+        .cells
+        .iter()
+        .map(|c| {
+            let mut s = format!("{} exec={}", c.cell.id(), c.cell.exec.name());
+            for (spec, v) in KPIS.iter().zip(&c.kpis) {
+                if spec.class == KpiClass::Exact {
+                    s.push_str(&format!(" {}={v}", spec.name));
+                }
+            }
+            s
+        })
+        .collect()
+}
+
+/// The stable-schema JSON artifact (`ABLATE_<plan>.json`).
+pub fn report_json(plan: &Plan, report: &PlanReport) -> String {
+    let mut s = json_header("ablate");
+    s.push_str(&format!("  \"plan\": \"{}\",\n", plan.name));
+    s.push_str(&format!("  \"plan_hash\": \"{}\",\n", report.plan_hash));
+    s.push_str(&format!("  \"git_sha\": \"{}\",\n", report.git_sha));
+    s.push_str(&format!("  \"registry_schema_version\": {REGISTRY_SCHEMA_VERSION},\n"));
+    let skipped: Vec<String> = report.skipped.iter().map(|c| format!("\"{c}\"")).collect();
+    s.push_str(&format!("  \"skipped\": [{}],\n", skipped.join(", ")));
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in report.cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"cell\": \"{}\", \"exec\": \"{}\"",
+            c.cell.id(),
+            c.cell.exec.name()
+        ));
+        for (spec, v) in KPIS.iter().zip(&c.kpis) {
+            s.push_str(&format!(", \"{}\": {}", spec.name, json_num(*v)));
+        }
+        s.push_str(if i + 1 < report.cells.len() { "},\n" } else { "}\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// One committed baseline row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegistryRow {
+    pub git_sha: String,
+    pub exec: String,
+    pub schema_version: u32,
+    pub plan_hash: String,
+    pub cell: String,
+    /// In [`KPIS`] order.
+    pub kpis: Vec<f64>,
+}
+
+/// `registry/<plan>.csv` under `dir`.
+pub fn registry_path(dir: &Path, plan_name: &str) -> PathBuf {
+    dir.join(format!("{plan_name}.csv"))
+}
+
+/// The magic line + CSV header every registry file starts with.
+pub fn registry_header() -> String {
+    let kpi_names: Vec<&str> = KPIS.iter().map(|k| k.name).collect();
+    format!(
+        "{REGISTRY_MAGIC}\ngit_sha,exec,schema_version,plan_hash,cell,{}\n",
+        kpi_names.join(",")
+    )
+}
+
+fn registry_row_line(report: &PlanReport, cell: &CellResult) -> String {
+    let kpis: Vec<String> = cell.kpis.iter().map(|v| format!("{v}")).collect();
+    format!(
+        "{},{},{REGISTRY_SCHEMA_VERSION},{},{},{}\n",
+        report.git_sha,
+        cell.cell.exec.name(),
+        report.plan_hash,
+        cell.cell.id(),
+        kpis.join(",")
+    )
+}
+
+/// Append the report's rows. STRICTLY append-only: an existing file is
+/// validated (magic + header) and extended, never truncated or
+/// reordered; a fresh file is created with the header. Returns the rows
+/// written.
+pub fn registry_append(path: &Path, report: &PlanReport) -> Result<usize> {
+    let header = registry_header();
+    let existing = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            if !text.starts_with(&header) {
+                bail!(
+                    "{} does not start with the v{REGISTRY_SCHEMA_VERSION} registry \
+                     header — refusing to append (delete or migrate it explicitly)",
+                    path.display()
+                );
+            }
+            true
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => false,
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    if !existing {
+        f.write_all(header.as_bytes())
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    for cell in &report.cells {
+        f.write_all(registry_row_line(report, cell).as_bytes())
+            .with_context(|| format!("appending to {}", path.display()))?;
+    }
+    Ok(report.cells.len())
+}
+
+/// Load every row (empty when the file does not exist yet — the
+/// bootstrap state). Malformed rows are loud errors with line numbers.
+pub fn registry_load(path: &Path) -> Result<Vec<RegistryRow>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let header = registry_header();
+    if !text.starts_with(&header) {
+        bail!(
+            "{} does not start with the v{REGISTRY_SCHEMA_VERSION} registry header",
+            path.display()
+        );
+    }
+    let mut rows = Vec::new();
+    for (i, line) in text.lines().enumerate().skip(2) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != 5 + KPIS.len() {
+            bail!(
+                "{}:{}: expected {} fields, found {}",
+                path.display(),
+                i + 1,
+                5 + KPIS.len(),
+                fields.len()
+            );
+        }
+        let schema_version: u32 = fields[2]
+            .parse()
+            .with_context(|| format!("{}:{}: bad schema_version", path.display(), i + 1))?;
+        let mut kpis = Vec::with_capacity(KPIS.len());
+        for (spec, raw) in KPIS.iter().zip(&fields[5..]) {
+            kpis.push(raw.parse::<f64>().with_context(|| {
+                format!("{}:{}: bad {} value '{raw}'", path.display(), i + 1, spec.name)
+            })?);
+        }
+        rows.push(RegistryRow {
+            git_sha: fields[0].to_string(),
+            exec: fields[1].to_string(),
+            schema_version,
+            plan_hash: fields[3].to_string(),
+            cell: fields[4].to_string(),
+            kpis,
+        });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Checking
+// ---------------------------------------------------------------------------
+
+/// What a `--check` comparison found.
+#[derive(Clone, Debug, Default)]
+pub struct CheckOutcome {
+    /// Cells compared against a registry baseline.
+    pub compared: usize,
+    /// Cells with no matching baseline yet (bootstrap: pass + warn).
+    pub bootstrapped: usize,
+    pub failures: Vec<String>,
+}
+
+impl CheckOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Does `fresh` regress past `base` by more than the band in the KPI's
+/// worse direction? Non-finite values always fail (NaN must not slip
+/// through a `>` comparison).
+fn kpi_failure(spec: &KpiSpec, tol: Tolerance, base: f64, fresh: f64) -> Option<String> {
+    if !fresh.is_finite() || !base.is_finite() {
+        return Some(format!("{}: non-finite value (base {base}, fresh {fresh})", spec.name));
+    }
+    let band = tol.abs + tol.rel * base.abs();
+    let delta = match spec.worse {
+        1 => fresh - base,
+        -1 => base - fresh,
+        _ => (fresh - base).abs(),
+    };
+    if delta > band {
+        Some(format!(
+            "{}: {fresh} vs baseline {base} (drift {delta:.6e} > band {band:.6e})",
+            spec.name
+        ))
+    } else {
+        None
+    }
+}
+
+/// Compare a fresh report against the registry: each cell checks against
+/// the LATEST row matching (plan_hash, exec, cell id). Cells without a
+/// baseline bootstrap (pass + counted) — a freshly committed plan cannot
+/// gate until someone runs `--update` on a real machine and commits the
+/// rows.
+pub fn check_against_registry(
+    plan: &Plan,
+    report: &PlanReport,
+    rows: &[RegistryRow],
+) -> CheckOutcome {
+    let mut out = CheckOutcome::default();
+    for cell in &report.cells {
+        let id = cell.cell.id();
+        let exec = cell.cell.exec.name();
+        let base = rows.iter().rev().find(|r| {
+            r.plan_hash == report.plan_hash
+                && r.exec == exec
+                && r.cell == id
+                && r.schema_version == REGISTRY_SCHEMA_VERSION
+        });
+        let Some(base) = base else {
+            out.bootstrapped += 1;
+            continue;
+        };
+        out.compared += 1;
+        for (i, spec) in KPIS.iter().enumerate() {
+            let Some(tol) = plan.tolerance_for(spec) else { continue };
+            if let Some(msg) = kpi_failure(spec, tol, base.kpis[i], cell.kpis[i]) {
+                out.failures.push(format!("{id} exec={exec}: {msg}"));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Provenance
+// ---------------------------------------------------------------------------
+
+/// The repository root: the cwd when it looks like the repo, else two
+/// levels above this crate's manifest (benches run from crate dirs).
+pub fn repo_root() -> PathBuf {
+    if let Ok(cwd) = std::env::current_dir() {
+        if cwd.join("ablate").is_dir() || cwd.join(".git").exists() {
+            return cwd;
+        }
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}
+
+/// The commit to stamp registry rows with: `.git/HEAD` (following one
+/// ref indirection, packed or loose), then `GITHUB_SHA`, then
+/// `"unknown"` — provenance must never block a run.
+pub fn git_sha() -> String {
+    fn from_dot_git(root: &Path) -> Option<String> {
+        let head = std::fs::read_to_string(root.join(".git/HEAD")).ok()?;
+        let head = head.trim();
+        let Some(refname) = head.strip_prefix("ref: ") else {
+            return (!head.is_empty()).then(|| head.to_string());
+        };
+        let refname = refname.trim();
+        if let Ok(sha) = std::fs::read_to_string(root.join(".git").join(refname)) {
+            let sha = sha.trim();
+            if !sha.is_empty() {
+                return Some(sha.to_string());
+            }
+        }
+        let packed = std::fs::read_to_string(root.join(".git/packed-refs")).ok()?;
+        for line in packed.lines() {
+            if let Some((sha, name)) = line.split_once(' ') {
+                if name.trim() == refname {
+                    return Some(sha.trim().to_string());
+                }
+            }
+        }
+        None
+    }
+    from_dot_git(&repo_root())
+        .or_else(|| std::env::var("GITHUB_SHA").ok().filter(|s| !s.is_empty()))
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Gates: the declarative home of the bench --check thresholds
+// ---------------------------------------------------------------------------
+
+/// `[core_ops]` thresholds (`benches/core_ops.rs --check`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CoreOpsGates {
+    /// Fused forward may be at most `(1 + rel)` x the reference forward
+    /// (the old hardcoded 1.10 noise margin).
+    pub fused_vs_ref_rel: f64,
+    /// Simd forward may be at most `(1 + rel)` x the scalar-fused one.
+    pub simd_vs_fused_rel: f64,
+    /// Forward parity |fused - reference| ceiling.
+    pub parity_abs: f64,
+    pub fused_allocs_max: f64,
+    pub simd_allocs_max: f64,
+}
+
+/// `[serve]` thresholds (`benches/serve_bench.rs --check`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeGates {
+    /// Gateway steady-phase p99 budget (ms).
+    pub p99_ms: f64,
+    pub allocs_max: f64,
+}
+
+/// `[train]` thresholds (`benches/train_bench.rs --check`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainGates {
+    /// R=1 steady-state allocations-per-step ceiling.
+    pub r1_allocs_max: f64,
+    /// Multi-replica speedup floor, enforced at `n >= speedup_min_n`.
+    pub min_speedup: f64,
+    pub speedup_min_n: usize,
+}
+
+/// Every bench `--check` threshold, loaded from `ablate/gates.toml` (one
+/// reviewable file) with compiled-in identical defaults as the fallback.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Gates {
+    pub core_ops: CoreOpsGates,
+    pub serve: ServeGates,
+    pub train: TrainGates,
+    /// Where these values came from (printed by the benches).
+    pub source: String,
+}
+
+impl Default for Gates {
+    fn default() -> Self {
+        Gates {
+            core_ops: CoreOpsGates {
+                fused_vs_ref_rel: 0.10,
+                simd_vs_fused_rel: 0.10,
+                parity_abs: 1e-3,
+                fused_allocs_max: 0.0,
+                simd_allocs_max: 0.0,
+            },
+            serve: ServeGates { p99_ms: 250.0, allocs_max: 0.0 },
+            train: TrainGates { r1_allocs_max: 8.0, min_speedup: 1.5, speedup_min_n: 1024 },
+            source: "builtin defaults".to_string(),
+        }
+    }
+}
+
+impl Gates {
+    /// Parse a gates document; unknown sections/keys and malformed
+    /// values are hard errors (a typo must not silently un-gate CI).
+    pub fn parse(text: &str) -> Result<Gates> {
+        let doc = parse_toml(text)?;
+        let mut g = Gates::default();
+        for (section, map) in &doc {
+            match section.as_str() {
+                "core_ops" => {
+                    for (key, v) in map {
+                        let dst = match key.as_str() {
+                            "fused_vs_ref_rel" => &mut g.core_ops.fused_vs_ref_rel,
+                            "simd_vs_fused_rel" => &mut g.core_ops.simd_vs_fused_rel,
+                            "parity_abs" => &mut g.core_ops.parity_abs,
+                            "fused_allocs_max" => &mut g.core_ops.fused_allocs_max,
+                            "simd_allocs_max" => &mut g.core_ops.simd_allocs_max,
+                            _ => bail!("unknown [core_ops] gate '{key}'"),
+                        };
+                        *dst = gate_f64("core_ops", key, v)?;
+                    }
+                }
+                "serve" => {
+                    for (key, v) in map {
+                        let dst = match key.as_str() {
+                            "p99_ms" => &mut g.serve.p99_ms,
+                            "allocs_max" => &mut g.serve.allocs_max,
+                            _ => bail!("unknown [serve] gate '{key}'"),
+                        };
+                        *dst = gate_f64("serve", key, v)?;
+                    }
+                }
+                "train" => {
+                    for (key, v) in map {
+                        match key.as_str() {
+                            "r1_allocs_max" => g.train.r1_allocs_max = gate_f64("train", key, v)?,
+                            "min_speedup" => g.train.min_speedup = gate_f64("train", key, v)?,
+                            "speedup_min_n" => {
+                                g.train.speedup_min_n = v
+                                    .as_usize()
+                                    .context("[train] speedup_min_n must be a non-negative int")?
+                            }
+                            _ => bail!("unknown [train] gate '{key}'"),
+                        }
+                    }
+                }
+                "" => {
+                    if let Some(key) = map.keys().next() {
+                        bail!("top-level gate key '{key}' — gates live under a section");
+                    }
+                }
+                s => bail!("unknown gates section [{s}] (core_ops/serve/train)"),
+            }
+        }
+        Ok(g)
+    }
+
+    pub fn load(path: &Path) -> Result<Gates> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading gates {}", path.display()))?;
+        let mut g = Gates::parse(&text).with_context(|| format!("gates {}", path.display()))?;
+        g.source = path.display().to_string();
+        Ok(g)
+    }
+
+    /// The benches' loading order: `SPM_GATES=<path>` (must parse — a
+    /// broken override is an error, not a fallback), else the committed
+    /// `ablate/gates.toml` at the repo root, else the identical builtin
+    /// defaults (a bare crate checkout stays runnable).
+    pub fn load_default() -> Result<Gates> {
+        if let Ok(path) = std::env::var("SPM_GATES") {
+            return Gates::load(Path::new(&path));
+        }
+        let committed = repo_root().join("ablate").join("gates.toml");
+        if committed.exists() {
+            return Gates::load(&committed);
+        }
+        Ok(Gates::default())
+    }
+}
+
+fn gate_f64(section: &str, key: &str, v: &Value) -> Result<f64> {
+    let f = v.as_f64().with_context(|| format!("[{section}] {key} must be a number"))?;
+    if !(f.is_finite() && f >= 0.0) {
+        bail!("[{section}] {key} must be finite and non-negative");
+    }
+    Ok(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "\
+[plan]
+name = \"tiny\"
+seed = 5
+steps = 2
+rows = 3
+n = 8
+
+[axes]
+op = [\"spm\", \"dense\"]
+variant = [\"rotation\", \"general\"]
+schedule = [\"butterfly\"]
+stages = [2]
+exec = [\"fused\"]
+model = [\"mlp\"]
+
+[tolerance.ns_per_row]
+rel = 0.5
+";
+
+    #[test]
+    fn plan_parses_and_round_trips_canonically() {
+        let plan = Plan::parse(TINY).unwrap();
+        assert_eq!(plan.name, "tiny");
+        assert_eq!((plan.steps, plan.rows, plan.n, plan.seed), (2, 3, 8, 5));
+        assert_eq!(plan.ops, vec![LinearKind::Spm, LinearKind::Dense]);
+        assert_eq!(plan.stages, vec![2]);
+        assert_eq!(plan.tolerances["ns_per_row"], Tolerance { abs: 0.0, rel: 0.5 });
+        let reparsed = Plan::parse(&plan.canonical()).unwrap();
+        assert_eq!(plan, reparsed, "canonical text must parse back to the same plan");
+        assert_eq!(plan.hash(), reparsed.hash());
+        assert_eq!(plan.hash().len(), 16);
+    }
+
+    #[test]
+    fn plan_hash_tracks_content_not_formatting() {
+        let plan = Plan::parse(TINY).unwrap();
+        // reformatting (comments, spacing) does not move the hash
+        let reformatted = TINY.replace("steps = 2", "steps =   2   # two");
+        assert_eq!(plan.hash(), Plan::parse(&reformatted).unwrap().hash());
+        // a real change does
+        let changed = TINY.replace("steps = 2", "steps = 3");
+        assert_ne!(plan.hash(), Plan::parse(&changed).unwrap().hash());
+    }
+
+    #[test]
+    fn bad_values_are_rejected_with_line_context() {
+        for (bad, needle) in [
+            (TINY.replace("op = [\"spm\", \"dense\"]", "op = [\"conv\"]"), "op 'conv'"),
+            (TINY.replace("variant = [\"rotation\", \"general\"]", "variant = [\"diag\"]"), "variant 'diag'"),
+            (TINY.replace("schedule = [\"butterfly\"]", "schedule = [\"zigzag\"]"), "schedule 'zigzag'"),
+            (TINY.replace("exec = [\"fused\"]", "exec = [\"gpu\"]"), "exec 'gpu'"),
+            (TINY.replace("model = [\"mlp\"]", "model = [\"cnn\"]"), "model 'cnn'"),
+            (TINY.replace("stages = [2]", "stages = [0]"), "stages"),
+            (TINY.replace("stages = [2]", "stages = []"), "stages"),
+            (TINY.replace("[tolerance.ns_per_row]", "[tolerance.bogus_kpi]"), "bogus_kpi"),
+            (TINY.replace("rel = 0.5", "rel = -0.5"), "rel"),
+            (TINY.replace("rel = 0.5", "frac = 0.5"), "frac"),
+            (TINY.replace("n = 8", "n = 1"), "n"),
+            (TINY.replace("seed = 5", "wibble = 5"), "wibble"),
+        ] {
+            let err = Plan::parse(&bad).unwrap_err().to_string();
+            assert!(err.contains(needle), "expected '{needle}' in: {err}");
+            assert!(err.contains("line "), "expected line context in: {err}");
+        }
+        // missing required keys fail loudly (no line to point at)
+        let err = Plan::parse("[plan]\nname = \"x\"\n").unwrap_err().to_string();
+        assert!(err.contains("steps"), "{err}");
+    }
+
+    #[test]
+    fn expand_dedupes_dense_and_resolves_env_exec() {
+        let plan = Plan::parse(TINY).unwrap();
+        let cells = expand(&plan, SpmExec::BatchFused);
+        // spm: 2 variants x 1 schedule x 1 stages = 2; dense collapses to 1
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells.iter().filter(|c| c.op == LinearKind::Dense).count(), 1);
+        // "env" resolves against the ambient exec
+        let envp = Plan::parse(&TINY.replace("exec = [\"fused\"]", "exec = [\"env\"]")).unwrap();
+        let cells = expand(&envp, SpmExec::RowWise);
+        assert!(cells.iter().all(|c| c.exec == SpmExec::RowWise));
+        // duplicate axis values fold away
+        let dup =
+            Plan::parse(&TINY.replace("exec = [\"fused\"]", "exec = [\"fused\", \"fused\"]"))
+                .unwrap();
+        assert_eq!(expand(&dup, SpmExec::BatchFused).len(), 3);
+    }
+
+    #[test]
+    fn cell_ids_are_stable_and_csv_safe() {
+        let plan = Plan::parse(TINY).unwrap();
+        let cells = expand(&plan, SpmExec::BatchFused);
+        assert_eq!(cells[0].id(), "model=mlp op=spm variant=rotation schedule=butterfly stages=2");
+        assert!(cells.iter().all(|c| !c.id().contains(',')), "ids embed into CSV rows");
+        let dense = cells.iter().find(|c| c.op == LinearKind::Dense).unwrap();
+        assert_eq!(dense.id(), "model=mlp op=dense");
+    }
+
+    #[test]
+    fn tolerance_defaults_by_kpi_class() {
+        let plan = Plan::parse(TINY).unwrap();
+        let loss = &KPIS[kpi_index("loss").unwrap()];
+        assert_eq!(plan.tolerance_for(loss), Some(Tolerance { abs: 0.0, rel: 0.0 }));
+        let ns = &KPIS[kpi_index("ns_per_row").unwrap()];
+        assert_eq!(plan.tolerance_for(ns), Some(Tolerance { abs: 0.0, rel: 0.5 }));
+        let rps = &KPIS[kpi_index("rows_per_sec").unwrap()];
+        assert_eq!(plan.tolerance_for(rps), None, "undeclared measured KPIs are ungated");
+    }
+
+    #[test]
+    fn kpi_failure_is_one_sided_and_nan_safe() {
+        let loss = &KPIS[kpi_index("loss").unwrap()];
+        let zero = Tolerance { abs: 0.0, rel: 0.0 };
+        assert!(kpi_failure(loss, zero, 1.0, 1.0).is_none());
+        assert!(kpi_failure(loss, zero, 1.0, 1.0000001).is_some(), "higher loss fails");
+        assert!(kpi_failure(loss, zero, 1.0, 0.5).is_none(), "improvement passes");
+        let acc = &KPIS[kpi_index("acc").unwrap()];
+        assert!(kpi_failure(acc, zero, 0.9, 0.8).is_some(), "lower acc fails");
+        assert!(kpi_failure(acc, zero, 0.8, 0.9).is_none());
+        let params = &KPIS[kpi_index("param_count").unwrap()];
+        assert!(kpi_failure(params, zero, 100.0, 101.0).is_some(), "identity drift fails");
+        assert!(kpi_failure(params, zero, 100.0, 99.0).is_some(), "either direction");
+        let band = Tolerance { abs: 0.0, rel: 0.10 };
+        assert!(kpi_failure(loss, band, 1.0, 1.09).is_none(), "inside the band");
+        assert!(kpi_failure(loss, band, 1.0, 1.11).is_some(), "outside the band");
+        assert!(kpi_failure(loss, zero, 1.0, f64::NAN).is_some(), "NaN must not pass");
+        assert!(kpi_failure(loss, zero, f64::NAN, 1.0).is_some());
+    }
+
+    #[test]
+    fn registry_lines_round_trip_exactly() {
+        let report = PlanReport {
+            plan_name: "tiny".into(),
+            plan_hash: "0123456789abcdef".into(),
+            git_sha: "deadbeef".into(),
+            cells: vec![CellResult {
+                cell: Cell {
+                    model: ModelKind::Mlp,
+                    op: LinearKind::Spm,
+                    variant: Variant::General,
+                    schedule: Schedule::Butterfly,
+                    stages: Some(3),
+                    exec: SpmExec::BatchFused,
+                },
+                kpis: [0.6931471805599453, 0.5, 123.0, 456.0, 0.0, 1234.5678, 810000.25],
+            }],
+            skipped: Vec::new(),
+        };
+        let line = registry_row_line(&report, &report.cells[0]);
+        let text = format!("{}{line}", registry_header());
+        // parse back through the loader's field logic via a temp-free path:
+        // write/load goes through files in tests/ablate.rs; here check the
+        // f64 Display round-trip that exactness rests on
+        let fields: Vec<&str> = line.trim().split(',').collect();
+        assert_eq!(fields.len(), 5 + KPIS.len());
+        for (raw, v) in fields[5..].iter().zip(&report.cells[0].kpis) {
+            assert_eq!(raw.parse::<f64>().unwrap().to_bits(), v.to_bits());
+        }
+        assert!(text.starts_with(REGISTRY_MAGIC));
+    }
+
+    #[test]
+    fn gates_parse_strictly_and_default_sanely() {
+        let g = Gates::default();
+        assert_eq!(g.core_ops.fused_vs_ref_rel, 0.10);
+        assert_eq!(g.serve.p99_ms, 250.0);
+        assert_eq!(g.train.speedup_min_n, 1024);
+        let parsed =
+            Gates::parse("[serve]\np99_ms = 300\n[train]\nmin_speedup = 1.2\n").unwrap();
+        assert_eq!(parsed.serve.p99_ms, 300.0);
+        assert_eq!(parsed.train.min_speedup, 1.2);
+        assert_eq!(parsed.core_ops, g.core_ops, "untouched sections keep defaults");
+        assert!(Gates::parse("[serve]\np99 = 300\n").is_err(), "unknown key");
+        assert!(Gates::parse("[webserve]\np99_ms = 300\n").is_err(), "unknown section");
+        assert!(Gates::parse("[serve]\np99_ms = -1\n").is_err(), "negative gate");
+    }
+
+    #[test]
+    fn fnv_is_the_reference_function() {
+        // FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn line_context_helpers_find_keys() {
+        assert_eq!(line_of(TINY, "plan", "steps"), 4);
+        assert_eq!(line_of(TINY, "axes", "model"), 14);
+        assert_eq!(line_of_section(TINY, "tolerance.ns_per_row"), 16);
+        assert_eq!(line_of(TINY, "plan", "nope"), 0);
+    }
+}

@@ -13,7 +13,11 @@ use spm_core::ops::SpmExec;
 /// - 1: the implicit pre-stamp layout (no `schema_version` field)
 /// - 2: `schema_version` added everywhere; serve rows gained the
 ///   admission counters and BENCH_gateway.json exists
-pub const SCHEMA_VERSION: u32 = 2;
+/// - 3: ABLATE_<plan>.json exists (the ablation harness artifact, with
+///   its own `registry_schema_version` stamp for the committed
+///   registry/*.csv layout); bench thresholds moved into the
+///   declarative `ablate/gates.toml` schema
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// A parsed argv: positional lookups over `--key value` pairs and bare
 /// `--switch` flags, shared by every bench binary.

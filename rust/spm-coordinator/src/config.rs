@@ -3,7 +3,8 @@
 //!
 //! Supported TOML subset — exactly what experiment configs need:
 //! `[section]` headers, `key = value` with string/int/float/bool values,
-//! `#` comments, blank lines.
+//! single-line `[a, b, c]` arrays of those scalars (no commas inside
+//! quoted elements), `#` comments, blank lines.
 //!
 //! The `[op]` section configures the student's planned `LinearOp` (kind,
 //! variant, pairing schedule, stage depth); [`OpConfig::to_linear_cfg`]
@@ -40,6 +41,8 @@ pub enum Value {
     Int(i64),
     Float(f64),
     Bool(bool),
+    /// Single-line `[a, b, c]` array of scalars (never nested).
+    List(Vec<Value>),
 }
 
 impl Value {
@@ -71,6 +74,31 @@ impl Value {
             _ => None,
         }
     }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one scalar literal (no arrays); shared by `parse_toml` for both
+/// bare values and array elements.
+fn parse_scalar(val: &str) -> Option<Value> {
+    if let Some(s) = val.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        Some(Value::Str(s.to_string()))
+    } else if val == "true" {
+        Some(Value::Bool(true))
+    } else if val == "false" {
+        Some(Value::Bool(false))
+    } else if let Ok(i) = val.parse::<i64>() {
+        Some(Value::Int(i))
+    } else if let Ok(f) = val.parse::<f64>() {
+        Some(Value::Float(f))
+    } else {
+        None
+    }
 }
 
 /// section -> key -> value ("" = top level section)
@@ -94,24 +122,36 @@ pub fn parse_toml(text: &str) -> Result<Toml> {
             .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
         let key = key.trim().to_string();
         let val = val.trim();
-        // strip trailing comment outside quotes
+        // strip trailing comment outside quotes/brackets (quoted strings
+        // and array elements must not themselves contain '#')
         let val = if val.starts_with('"') {
             val
+        } else if val.starts_with('[') {
+            match val.rfind(']') {
+                Some(end) => val[..=end].trim(),
+                None => bail!("line {}: unterminated array value", lineno + 1),
+            }
         } else {
             val.split('#').next().unwrap().trim()
         };
-        let parsed = if let Some(s) = val.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
-            Value::Str(s.to_string())
-        } else if val == "true" {
-            Value::Bool(true)
-        } else if val == "false" {
-            Value::Bool(false)
-        } else if let Ok(i) = val.parse::<i64>() {
-            Value::Int(i)
-        } else if let Ok(f) = val.parse::<f64>() {
-            Value::Float(f)
+        let parsed = if let Some(inner) =
+            val.strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+        {
+            let inner = inner.trim();
+            let mut items = Vec::new();
+            if !inner.is_empty() {
+                for part in inner.split(',') {
+                    let part = part.trim();
+                    let item = parse_scalar(part).with_context(|| {
+                        format!("line {}: cannot parse array element '{part}'", lineno + 1)
+                    })?;
+                    items.push(item);
+                }
+            }
+            Value::List(items)
         } else {
-            bail!("line {}: cannot parse value '{val}'", lineno + 1);
+            parse_scalar(val)
+                .with_context(|| format!("line {}: cannot parse value '{val}'", lineno + 1))?
         };
         out.entry(section.clone()).or_default().insert(key, parsed);
     }
@@ -794,6 +834,31 @@ fast = true
     fn rejects_bad_lines() {
         assert!(parse_toml("this is not toml").is_err());
         assert!(parse_toml("x = @@@").is_err());
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse_toml(
+            "[axes]\nop = [\"spm\", \"dense\"]\nstages = [2, 4]   # comment\nempty = []\n",
+        )
+        .unwrap();
+        assert_eq!(
+            doc["axes"]["op"],
+            Value::List(vec![Value::Str("spm".into()), Value::Str("dense".into())])
+        );
+        assert_eq!(doc["axes"]["stages"], Value::List(vec![Value::Int(2), Value::Int(4)]));
+        assert_eq!(doc["axes"]["empty"], Value::List(vec![]));
+        assert_eq!(doc["axes"]["stages"].as_list().map(<[Value]>::len), Some(2));
+        assert_eq!(doc["axes"]["op"].as_str(), None);
+    }
+
+    #[test]
+    fn rejects_bad_arrays() {
+        let err = parse_toml("x = [1, 2").unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("unterminated"), "{err}");
+        let err = parse_toml("a = 1\nx = [1, @]\n").unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("array element"), "{err}");
+        assert!(parse_toml("x = [1, ]").is_err());
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! back into this crate so every reported number has a single source of
 //! truth.
 
+pub mod ablate;
 pub mod allocs;
 pub mod bench_args;
 pub mod config;
@@ -23,6 +24,7 @@ pub mod metrics;
 pub mod serve;
 pub mod train;
 
+pub use ablate::{Gates, Plan, PlanReport};
 pub use config::{ModelConfig, OpConfig, RunConfig, ServeConfig, TrainConfig};
 pub use error::Result;
 pub use gateway::{Gateway, GatewayClient};

@@ -1,0 +1,212 @@
+//! Integration tests for the ablation harness (DESIGN.md §17): plan
+//! round-trips, the append-only registry contract, the regression
+//! check, and — the core promise — pinned-seed determinism: the same
+//! plan run twice produces bit-identical exact KPIs, per exec backend.
+//!
+//! Deliberately NO `#[global_allocator]` here: the counting allocator
+//! is process-global, and parallel test threads allocating inside a
+//! measurement window would make `allocs_per_step` flaky. In this
+//! binary the KPI reads 0 everywhere — trivially deterministic — and
+//! the real measurement lives in the single-threaded bench binary.
+
+use std::path::PathBuf;
+
+use spm_core::ops::backend;
+use spm_coordinator::ablate::{
+    check_against_registry, exact_rows, registry_append, registry_load, registry_path,
+    report_json, run_plan, Gates, Plan,
+};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("spm_ablate_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    dir
+}
+
+/// A plan small enough to train in milliseconds, pinned like a real one.
+fn tiny_plan(execs: &str) -> Plan {
+    Plan::parse(&format!(
+        "[plan]\n\
+         name = \"tiny\"\n\
+         seed = 11\n\
+         steps = 2\n\
+         rows = 4\n\
+         n = 8\n\
+         \n\
+         [axes]\n\
+         op = [\"spm\", \"dense\"]\n\
+         variant = [\"general\"]\n\
+         schedule = [\"butterfly\"]\n\
+         stages = [2]\n\
+         exec = [{execs}]\n\
+         model = [\"mlp\"]\n"
+    ))
+    .expect("tiny plan parses")
+}
+
+#[test]
+fn pinned_seeds_are_deterministic_per_exec_backend() {
+    // both scalar backends always exist; the simd backend joins the
+    // matrix only where it actually runs (never silently downgraded)
+    let mut execs = vec!["\"fused\", \"rowwise\""];
+    if backend::simd_available() {
+        execs.push("\"fused\", \"rowwise\", \"simd\"");
+    }
+    for execs in execs {
+        let plan = tiny_plan(execs);
+        let a = run_plan(&plan).expect("first run");
+        let b = run_plan(&plan).expect("second run");
+        assert!(a.skipped.is_empty(), "no cell may skip here: {:?}", a.skipped);
+        assert_eq!(
+            exact_rows(&a),
+            exact_rows(&b),
+            "same plan, same process, different exact KPIs ({execs})"
+        );
+        // loss/acc really trained (not a stub): finite, and every
+        // exec backend of the same cell agrees bit-for-bit too, since
+        // the stage kernels are deterministic reorderings
+        assert!(a.cells.iter().all(|c| c.kpis[0].is_finite()));
+    }
+}
+
+#[test]
+fn registry_is_append_only_with_a_validated_header() {
+    let dir = temp_dir("registry");
+    let path = registry_path(&dir, "tiny");
+    let plan = tiny_plan("\"fused\"");
+    let report = run_plan(&plan).expect("run");
+
+    assert_eq!(registry_load(&path).expect("missing file is bootstrap"), vec![]);
+    let wrote = registry_append(&path, &report).expect("first append");
+    assert_eq!(wrote, report.cells.len());
+    let after_first = std::fs::read_to_string(&path).expect("read");
+    assert!(after_first.starts_with("# spm-ablate-registry v1\n"), "magic line");
+    assert!(after_first.lines().nth(1).unwrap().starts_with("git_sha,exec,schema_version,"));
+
+    registry_append(&path, &report).expect("second append");
+    let after_second = std::fs::read_to_string(&path).expect("read");
+    assert!(
+        after_second.starts_with(&after_first),
+        "append must extend the file, never rewrite history"
+    );
+
+    let rows = registry_load(&path).expect("load");
+    assert_eq!(rows.len(), 2 * report.cells.len());
+    assert!(rows.iter().all(|r| r.plan_hash == report.plan_hash));
+    assert!(rows.iter().all(|r| r.schema_version == 1));
+
+    // a foreign or tampered header is refused outright, both ways
+    let bogus = dir.join("bogus.csv");
+    std::fs::write(&bogus, "just,some,csv\n1,2,3\n").expect("write");
+    assert!(registry_append(&bogus, &report).is_err(), "append must not adopt foreign files");
+    assert!(registry_load(&bogus).is_err(), "load must not trust foreign files");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn check_gates_regressions_and_bootstraps_new_cells() {
+    let dir = temp_dir("check");
+    let path = registry_path(&dir, "tiny");
+    let plan = tiny_plan("\"fused\"");
+    let report = run_plan(&plan).expect("run");
+
+    // no baseline yet: every cell bootstraps, the gate passes
+    let empty = check_against_registry(&plan, &report, &[]);
+    assert!(empty.passed());
+    assert_eq!(empty.bootstrapped, report.cells.len());
+    assert_eq!(empty.compared, 0);
+
+    // a committed baseline from the same run: compared, in tolerance
+    registry_append(&path, &report).expect("append");
+    let rows = registry_load(&path).expect("load");
+    let clean = check_against_registry(&plan, &report, &rows);
+    assert!(clean.passed(), "identical run must pass: {:?}", clean.failures);
+    assert_eq!(clean.compared, report.cells.len());
+    assert_eq!(clean.bootstrapped, 0);
+
+    // tamper with the baseline loss: the fresh run now reads as a
+    // regression (fresh > base is the worse direction for loss)
+    let mut tampered = rows.clone();
+    tampered[0].kpis[0] -= 0.25;
+    let caught = check_against_registry(&plan, &report, &tampered);
+    assert!(!caught.passed(), "a worse loss must trip the zero-tolerance exact gate");
+    assert!(caught.failures[0].contains("loss"), "{:?}", caught.failures);
+
+    // ...but drift in the IMPROVING direction passes the one-sided gate
+    let mut improved = rows.clone();
+    improved[0].kpis[0] += 0.25;
+    assert!(check_against_registry(&plan, &report, &improved).passed());
+
+    // a different plan hash never matches: everything bootstraps again
+    let mut foreign = rows;
+    for r in &mut foreign {
+        r.plan_hash = "ffffffffffffffff".into();
+    }
+    let unmatched = check_against_registry(&plan, &report, &foreign);
+    assert_eq!(unmatched.bootstrapped, report.cells.len());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_model_kind_runs_through_the_harness() {
+    let plan = Plan::parse(
+        "[plan]\n\
+         name = \"zoo\"\n\
+         seed = 3\n\
+         steps = 1\n\
+         rows = 2\n\
+         n = 8\n\
+         heads = 2\n\
+         seq_len = 2\n\
+         \n\
+         [axes]\n\
+         op = [\"spm\"]\n\
+         exec = [\"fused\"]\n\
+         model = [\"mlp\", \"gru\", \"charlm\", \"attention\"]\n",
+    )
+    .expect("zoo plan");
+    let report = run_plan(&plan).expect("run");
+    assert_eq!(report.cells.len(), 4);
+    for c in &report.cells {
+        assert!(c.kpis[0].is_finite(), "{}: loss", c.cell.id());
+        assert!(c.kpis[2] > 0.0, "{}: param_count", c.cell.id());
+        assert!(c.kpis[3] > 0.0, "{}: flops_per_row", c.cell.id());
+    }
+    // the JSON artifact carries the full schema
+    let json = report_json(&plan, &report);
+    for needle in
+        ["\"bench\": \"ablate\"", "\"plan\": \"zoo\"", "\"plan_hash\"", "\"registry_schema_version\": 1", "\"flops_per_row\""]
+    {
+        assert!(json.contains(needle), "missing {needle} in:\n{json}");
+    }
+}
+
+#[test]
+fn committed_gates_file_matches_the_compiled_defaults() {
+    // the committed ablate/gates.toml is documentation-as-config: it
+    // must stay in lockstep with the builtin fallback so a checkout
+    // without the file gates identically
+    let committed = spm_coordinator::ablate::repo_root().join("ablate").join("gates.toml");
+    assert!(committed.exists(), "ablate/gates.toml must be committed at the repo root");
+    let loaded = Gates::load(&committed).expect("parse committed gates");
+    let defaults = Gates::default();
+    assert_eq!(loaded.core_ops, defaults.core_ops);
+    assert_eq!(loaded.serve, defaults.serve);
+    assert_eq!(loaded.train, defaults.train);
+    assert_ne!(loaded.source, defaults.source, "source must say where values came from");
+}
+
+#[test]
+fn committed_smoke_plan_parses_and_registry_header_is_valid() {
+    let root = spm_coordinator::ablate::repo_root();
+    let plan = Plan::load(&root.join("ablate").join("smoke.toml")).expect("smoke plan");
+    assert_eq!(plan.name, "smoke");
+    let design9 = Plan::load(&root.join("ablate").join("design9.toml")).expect("design9 plan");
+    assert_eq!(design9.stages, vec![1, 2, 5, 10, 20]);
+    // the shipped header-only registry must satisfy the loader
+    let rows = registry_load(&root.join("registry").join("smoke.csv")).expect("smoke registry");
+    assert!(rows.is_empty(), "smoke.csv ships header-only; baselines are appended per machine class");
+}

@@ -167,6 +167,19 @@ pub trait Model: Send {
     /// architecture fingerprint ([`arch_fingerprint`]) and any future
     /// op-level tooling are built on this enumeration.
     fn visit_ops(&self, f: &mut dyn FnMut(&LinearOp));
+    /// Estimated forward FLOPs per request row — the equal-FLOP axis the
+    /// ablation harness reports next to `param_count` (DESIGN.md §17).
+    /// The default sums [`LinearOp::flops_per_row`] over
+    /// [`Model::visit_ops`] (each op applied once per row); sequence
+    /// models override it to scale their per-timestep ops by `seq_len`.
+    /// Non-linear glue (activations, softmax, attention scores, embedding
+    /// lookups) is not counted: this is the structured-vs-dense operator
+    /// comparison, not a cycle model.
+    fn flops_per_row(&self) -> u64 {
+        let mut total = 0u64;
+        self.visit_ops(&mut |op| total += op.flops_per_row());
+        total
+    }
 }
 
 /// Construction-time description of a model: the architecture, the

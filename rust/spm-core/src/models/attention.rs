@@ -440,6 +440,16 @@ impl Model for AttnSeq {
             f(m);
         }
     }
+
+    fn flops_per_row(&self) -> u64 {
+        // q/k/v/o projections run once per token; the O(T^2 d) score
+        // matmul is op-free and excluded per the trait contract
+        let mut per_token = 0u64;
+        for m in &self.attn.maps {
+            per_token += m.flops_per_row();
+        }
+        self.seq_len as u64 * per_token
+    }
 }
 
 #[cfg(test)]

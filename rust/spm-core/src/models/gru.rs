@@ -487,6 +487,16 @@ impl Model for GruSeq {
         }
         f(&self.gru.head);
     }
+
+    fn flops_per_row(&self) -> u64 {
+        // the six gate maps run once per timestep; the head reads out the
+        // final hidden state once per row
+        let mut gates = 0u64;
+        for m in &self.gru.maps {
+            gates += m.flops_per_row();
+        }
+        self.seq_len as u64 * gates + self.gru.head.flops_per_row()
+    }
 }
 
 #[cfg(test)]

@@ -290,6 +290,27 @@ impl LinearOp {
         }
     }
 
+    /// Estimated forward FLOPs one input row costs through this op — the
+    /// paper's equal-FLOP comparison axis, reported as an exact KPI by
+    /// the ablation harness (DESIGN.md §17). Dense: the full
+    /// `2 * d_in * d_out` multiply-add matmul plus the bias add. SPM:
+    /// the d_in/d_out diagonal scalings and the bias (`3n`) plus, per
+    /// stage, 6 FLOPs per pair (a 2x2 mix: 4 mults + 2 adds) and 1 for
+    /// the odd-`n` leftover scaling. A counting model, not a cycle
+    /// model: it is exec-path-independent by construction (rowwise /
+    /// fused / simd schedule the same arithmetic).
+    pub fn flops_per_row(&self) -> u64 {
+        match &self.imp {
+            OpImpl::Dense => (2 * self.d_in * self.d_out + self.d_out) as u64,
+            OpImpl::Spm(plan) => {
+                let n = self.d_in as u64;
+                let pairs = n / 2;
+                let lone = n % 2;
+                3 * n + plan.num_stages as u64 * (6 * pairs + lone)
+            }
+        }
+    }
+
     pub fn param_count(&self) -> usize {
         self.params.len()
     }
@@ -1295,6 +1316,22 @@ mod tests {
         let mut rng = Rng::new(seed + 100);
         let mut adam = Adam::new(1e-3);
         LinearOp::new(cfg, &mut rng, &mut adam)
+    }
+
+    #[test]
+    fn flops_per_row_counts_the_structured_saving() {
+        let mut rng = Rng::new(3);
+        let mut adam = Adam::new(1e-3);
+        let n = 64;
+        let dense = LinearOp::new(LinearCfg::dense(n), &mut rng, &mut adam);
+        assert_eq!(dense.flops_per_row(), (2 * n * n + n) as u64);
+        // L = log2(n) stages: 3n + L * 3n, far below the dense 2n^2
+        let spm = mk_planned(n, Variant::General, Schedule::Butterfly, 6, 5);
+        assert_eq!(spm.flops_per_row(), (3 * n + 6 * (6 * (n / 2))) as u64);
+        assert!(spm.flops_per_row() < dense.flops_per_row());
+        // odd n: each stage pays 1 extra flop for the leftover scaling
+        let odd = mk_planned(9, Variant::Rotation, Schedule::Shift, 2, 5);
+        assert_eq!(odd.flops_per_row(), 27 + 2 * (6 * 4 + 1));
     }
 
     /// scalar loss L = sum(tanh(y)) for gradient checks

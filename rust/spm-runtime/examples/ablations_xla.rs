@@ -1,6 +1,15 @@
-//! Bench: the DESIGN.md ablations — stage depth L, pairing schedule, and
-//! block variant at n=1024 on the teacher task.
+//! The XLA/PJRT half of the ablation story: the DESIGN.md §9 sweeps —
+//! stage depth L, pairing schedule, and block variant at n=1024 on the
+//! teacher task — through the `spm-runtime` drivers.
 //! Results -> results/abl_{depth,pairing,variant}.csv.
+//!
+//! The CI-gated, dependency-free ablation harness is `benches/ablate.rs`
+//! in the default workspace (DESIGN.md §17); this wrapper only runs
+//! where the XLA vendor set is installed:
+//!
+//! ```text
+//! cd rust/spm-runtime && cargo run --release --example ablations_xla
+//! ```
 
 use spm_coordinator::RunConfig;
 use spm_runtime::{drivers, Engine, Manifest};
@@ -8,7 +17,6 @@ use spm_runtime::{drivers, Engine, Manifest};
 fn repo_path(rel: &str) -> String {
     format!("{}/../../{}", env!("CARGO_MANIFEST_DIR"), rel)
 }
-
 
 fn env_steps(default: usize) -> usize {
     std::env::var("SPM_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
