@@ -21,12 +21,11 @@
 //! (default 8), `--batch B` micro-batch cap (default 16), `--wait-us W`
 //! interactive-lane deadline (default 200), `--replicas R` (default 2),
 //! `--json <path>` machine-readable output (stamped with
-//! `schema_version`), `--check` the CI gate. Gateway mode adds
-//! `--p99-ms MS` (deprecated alias; the budget's declarative home is
-//! `[serve] p99_ms` in `ablate/gates.toml`, DESIGN.md §17): the
-//! steady-phase p99 budget the gate enforces, alongside zero steady
-//! sheds, a hot-swap with zero dropped in-flight requests, and an
-//! overload phase that MUST shed without a single engine failure.
+//! `schema_version`), `--check` the CI gate. The gate's steady-phase
+//! p99 budget comes from `[serve] p99_ms` in `ablate/gates.toml`
+//! (DESIGN.md §17) and is enforced alongside zero steady sheds, a
+//! hot-swap with zero dropped in-flight requests, and an overload
+//! phase that MUST shed without a single engine failure.
 
 use std::time::{Duration, Instant};
 
@@ -40,6 +39,7 @@ use spm_coordinator::allocs::{self, CountingAlloc};
 use spm_coordinator::bench_args::{env_exec, json_header, json_num, BenchArgs};
 use spm_coordinator::gateway::{Gateway, GatewayClient, InferOutcome};
 use spm_coordinator::metrics::{fmt_f, summarize, Summary, Table};
+// lint: allow(hygiene): Executor is imported for method resolution (`exec.forward`)
 use spm_coordinator::serve::{
     Executor, Lane, NativeExecutor, ServeEngine, ServeReport, Shed, Workload,
 };
@@ -56,8 +56,7 @@ struct Args {
     wait_us: u64,
     replicas: usize,
     gateway: bool,
-    /// Effective steady-phase p99 budget: `[serve] p99_ms` from the
-    /// gates schema, unless the deprecated `--p99-ms` alias overrides.
+    /// Steady-phase p99 budget: `[serve] p99_ms` from the gates schema.
     p99_ms: f64,
     json: Option<String>,
     check: bool,
@@ -65,18 +64,6 @@ struct Args {
 
 fn parse_args(gates: &Gates) -> Args {
     let a = BenchArgs::parse();
-    let p99_ms = match a.str_opt("--p99-ms") {
-        Some(s) => {
-            // kept as a deprecated alias for one release; the declarative
-            // home is ablate/gates.toml (DESIGN.md §17)
-            eprintln!(
-                "note: --p99-ms is deprecated — set [serve] p99_ms in ablate/gates.toml \
-                 (flag honored this release)"
-            );
-            s.parse().unwrap_or_else(|_| panic!("--p99-ms: bad value '{s}'"))
-        }
-        None => gates.serve.p99_ms,
-    };
     Args {
         requests: a.usize_flag("--requests", 256),
         clients: a.usize_flag("--clients", 8),
@@ -84,7 +71,7 @@ fn parse_args(gates: &Gates) -> Args {
         wait_us: a.u64_flag("--wait-us", 200),
         replicas: a.usize_flag("--replicas", 2).max(1),
         gateway: a.has("--gateway"),
-        p99_ms,
+        p99_ms: gates.serve.p99_ms,
         json: a.json_path(),
         check: a.check(),
     }
@@ -571,7 +558,7 @@ fn gateway_to_json(rows: &[PhaseRow], args: &Args, exec: SpmExec) -> String {
 }
 
 /// The gateway CI gate (the ISSUE-7 acceptance bar):
-/// - steady: zero sheds, zero failures, p99 within the `--p99-ms` budget
+/// - steady: zero sheds, zero failures, p99 within the `[serve] p99_ms` budget
 /// - hotswap: every replica applied the swap and NOT ONE in-flight
 ///   request was dropped (served == submitted, failed == 0)
 /// - overload: the gateway MUST shed (the admission queue works) while

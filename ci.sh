@@ -6,11 +6,31 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# Repo-contract lint (spm-lint, DESIGN.md §18): prefers the Rust binary,
+# falls back to the line-for-line Python mirror so the same checks run
+# in containers with no Rust toolchain. `./ci.sh --lint` runs ONLY this
+# (the toolchain-less entry point); the full flow runs it first below so
+# contract drift fails before the expensive build+test passes.
+run_spm_lint() {
+    if command -v cargo >/dev/null 2>&1; then
+        cargo run --release -q -p spm-lint -- --root .
+    else
+        echo "ci.sh: no cargo; linting via the Python mirror (tools/spm_lint.py)"
+        python3 tools/spm_lint.py --root .
+    fi
+}
+if [ "${1:-}" = "--lint" ]; then
+    run_spm_lint
+    exit 0
+fi
+
 # Extra cargo flags for the main build+test pass. The CI matrix simd leg
 # passes "--features simd" here (with RUSTFLAGS pinning x86-64-v3) so the
 # AVX2 stage backend is what the suite exercises; unquoted on purpose so
 # the flags word-split.
 SPM_CARGO_FEATURES="${SPM_CARGO_FEATURES:-}"
+
+run_spm_lint
 
 cargo build --release $SPM_CARGO_FEATURES
 cargo test -q $SPM_CARGO_FEATURES

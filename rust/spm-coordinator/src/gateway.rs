@@ -312,7 +312,7 @@ impl Gateway {
                     let Ok(stream) = stream else { continue };
                     let handle = session.handle();
                     let (session, stop) = (session.clone(), stop.clone());
-                    conns.lock().unwrap().push(std::thread::spawn(move || {
+                    crate::serve::plock(&conns).push(std::thread::spawn(move || {
                         serve_connection(stream, handle, session, stop);
                     }));
                 }
@@ -339,7 +339,7 @@ impl Gateway {
         if let Some(a) = self.accept.take() {
             let _ = a.join();
         }
-        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        let conns = std::mem::take(&mut *crate::serve::plock(&self.conns));
         for c in conns {
             let _ = c.join();
         }

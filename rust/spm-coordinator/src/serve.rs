@@ -62,6 +62,15 @@ use spm_core::tensor::Mat;
 use crate::error::Result;
 use crate::metrics::summarize;
 
+/// Poison-recovering mutex lock for the serving threads (DESIGN.md §16):
+/// a panicking holder poisons the mutex, but every guarded structure here
+/// (job rosters, join handles, worker-done lists, the master sender) is
+/// valid after any partial update, so waiters recover the guard instead
+/// of propagating the panic and wedging the session.
+pub(crate) fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Default micro-batch cap for native executors.
 pub const DEFAULT_BATCH: usize = 32;
 
@@ -569,7 +578,7 @@ fn spawn_worker(
             }
             st
         });
-        done.lock().unwrap().push(WorkerDone { index, exec, stats });
+        plock(&done).push(WorkerDone { index, exec, stats });
     })
 }
 
@@ -1070,10 +1079,8 @@ impl ServeEngine {
 
         for (i, exec) in self.executors.drain(..).enumerate() {
             let (jtx, jrx) = mpsc::channel::<Job>();
-            pool.jobs.lock().unwrap().push(jtx);
-            joins
-                .lock()
-                .unwrap()
+            plock(&pool.jobs).push(jtx);
+            plock(&joins)
                 .push(spawn_worker(i, exec, jrx, threads_per, adm.clone(), done.clone()));
         }
 
@@ -1083,7 +1090,7 @@ impl ServeEngine {
             std::thread::spawn(move || {
                 let mut next = 0usize;
                 let dispatch = |pending: Vec<Request>| {
-                    let jobs = pool.jobs.lock().unwrap();
+                    let jobs = plock(&pool.jobs);
                     if jobs.is_empty() {
                         for r in pending {
                             finish_request(&adm, r, Err(Shed::EngineDown));
@@ -1103,12 +1110,14 @@ impl ServeEngine {
                 route(&rx, &cfg, &adm, dispatch);
                 // hang up the worker queues: each drains what is already
                 // enqueued, deposits its stats, and exits
-                pool.jobs.lock().unwrap().clear();
+                plock(&pool.jobs).clear();
             })
         };
 
         let scaler = if elastic_max > initial {
-            let mut spawner = self.spawner.take().expect("elastic pool requires a spawner");
+            let Some(mut spawner) = self.spawner.take() else {
+                crate::bail!("elastic pool requires a spawner (with_spawner)");
+            };
             let (pool, adm, done, joins, stop, swap) = (
                 pool.clone(),
                 adm.clone(),
@@ -1128,18 +1137,18 @@ impl ServeEngine {
                     }
                     let depth = adm.depth[0].load(Ordering::SeqCst)
                         + adm.depth[1].load(Ordering::SeqCst);
-                    let active = pool.jobs.lock().unwrap().len();
+                    let active = plock(&pool.jobs).len();
                     if depth > up_depth && active < elastic_max {
                         let mut exec = spawner(next_index);
                         // a replica born after a hot-swap starts on the
                         // swapped params, not the spawner's init
-                        if let Some(sw) = swap.lock().unwrap().as_ref() {
+                        if let Some(sw) = plock(&swap).as_ref() {
                             if let Some(m) = exec.model_mut() {
                                 let _ = sw.data.apply_to(m);
                             }
                         }
                         let (jtx, jrx) = mpsc::channel::<Job>();
-                        joins.lock().unwrap().push(spawn_worker(
+                        plock(&joins).push(spawn_worker(
                             next_index,
                             exec,
                             jrx,
@@ -1147,14 +1156,14 @@ impl ServeEngine {
                             adm.clone(),
                             done.clone(),
                         ));
-                        pool.jobs.lock().unwrap().push(jtx);
+                        plock(&pool.jobs).push(jtx);
                         next_index += 1;
                         idle = 0;
                     } else if depth == 0 && active > initial {
                         idle += 1;
                         if idle >= idle_polls {
                             // retire the most recently added replica
-                            let retired = pool.jobs.lock().unwrap().pop();
+                            let retired = plock(&pool.jobs).pop();
                             if let Some(jtx) = retired {
                                 let _ = jtx.send(Job::Retire);
                             }
@@ -1208,12 +1217,16 @@ impl ServeEngine {
         self.scale_interval = engine.scale_interval;
         let session = engine.start()?;
         let handle = session.handle();
+        let mut client_panic = false;
         for c in spawn_clients(workload, &handle) {
-            c.join().expect("client panicked");
+            client_panic |= c.join().is_err();
         }
         drop(handle);
         let (report, executors) = session.finish();
         self.executors = executors;
+        if client_panic {
+            crate::bail!("serve client thread panicked");
+        }
         report
     }
 
@@ -1256,8 +1269,12 @@ impl ServeEngine {
         });
         let wall = t0.elapsed().as_secs_f64();
 
+        let mut client_panic = false;
         for c in clients {
-            c.join().expect("client panicked");
+            client_panic |= c.join().is_err();
+        }
+        if client_panic {
+            crate::bail!("serve client thread panicked");
         }
         assemble(vec![st], &adm, 0, wall).0
     }
@@ -1308,7 +1325,7 @@ impl ServeSession {
     /// A fresh submission handle (cheap; clone freely per thread).
     pub fn handle(&self) -> SubmitHandle {
         SubmitHandle {
-            tx: self.master.lock().unwrap().clone(),
+            tx: plock(&self.master).clone(),
             width: self.width,
             caps: self.caps,
             adm: self.adm.clone(),
@@ -1322,7 +1339,7 @@ impl ServeSession {
 
     /// Live replicas (initial + elastic - retired).
     pub fn replica_count(&self) -> usize {
-        self.pool.jobs.lock().unwrap().len()
+        plock(&self.pool.jobs).len()
     }
 
     /// Admitted-but-unreplied requests across both lanes — the elastic
@@ -1333,7 +1350,7 @@ impl ServeSession {
 
     /// Replica param applications from the most recent hot-swap.
     pub fn swaps_applied(&self) -> usize {
-        self.swap.lock().unwrap().as_ref().map_or(0, |s| s.applied.load(Ordering::SeqCst))
+        plock(&self.swap).as_ref().map_or(0, |s| s.applied.load(Ordering::SeqCst))
     }
 
     /// Snapshot of the admission counters.
@@ -1366,8 +1383,8 @@ impl ServeSession {
             SwapState { data: Arc::new(data), applied: Arc::new(AtomicUsize::new(0)) };
         let (data, applied) = (state.data.clone(), state.applied.clone());
         // publish first so elastic replicas spawned from now on catch up
-        *self.swap.lock().unwrap() = Some(state);
-        let jobs = self.pool.jobs.lock().unwrap();
+        *plock(&self.swap) = Some(state);
+        let jobs = plock(&self.pool.jobs);
         for jtx in jobs.iter() {
             let _ = jtx.send(Job::Swap(data.clone(), applied.clone()));
         }
@@ -1397,7 +1414,7 @@ impl ServeSession {
     fn finish(mut self) -> (Result<ServeReport>, Vec<Box<dyn Executor + Send>>) {
         // the sentinel drains the router FIFO: everything submitted
         // before this call is batched (or shed by policy) first
-        let _ = self.master.lock().unwrap().send(Msg::Shutdown);
+        let _ = plock(&self.master).send(Msg::Shutdown);
         self.stop.store(true, Ordering::SeqCst);
         if let Some(r) = self.router.take() {
             let _ = r.join();
@@ -1407,13 +1424,14 @@ impl ServeSession {
         }
         // a scaler mid-poll may have added a worker after the router
         // cleared the pool — hang up any straggler queue
-        self.pool.jobs.lock().unwrap().clear();
-        let joins = std::mem::take(&mut *self.joins.lock().unwrap());
+        plock(&self.pool.jobs).clear();
+        let joins = std::mem::take(&mut *plock(&self.joins));
+        let mut worker_panic = false;
         for j in joins {
-            j.join().expect("serve worker panicked");
+            worker_panic |= j.join().is_err();
         }
         let wall = self.t0.elapsed().as_secs_f64();
-        let mut done = std::mem::take(&mut *self.done.lock().unwrap());
+        let mut done = std::mem::take(&mut *plock(&self.done));
         done.sort_by_key(|d| d.index);
         let swaps = self.swaps_applied();
         let mut stats = Vec::with_capacity(done.len());
@@ -1423,6 +1441,13 @@ impl ServeSession {
             execs.push(d.exec);
         }
         let (report, _stats) = assemble(stats, &self.adm, swaps, wall);
+        // a panicked worker forfeits its stats slot; surface that instead
+        // of reporting a partial run as clean
+        let report = if worker_panic {
+            Err("serve worker thread panicked (partial stats discarded)".into())
+        } else {
+            report
+        };
         (report, execs)
     }
 }

@@ -389,7 +389,11 @@ impl TrainEngine {
                     }));
                 }
                 for h in handles {
-                    h.join().expect("train worker panicked");
+                    // propagate a worker panic verbatim instead of minting
+                    // a second panic site at the join (DESIGN.md §16)
+                    if let Err(p) = h.join() {
+                        std::panic::resume_unwind(p);
+                    }
                 }
             });
 

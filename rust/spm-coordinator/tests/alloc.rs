@@ -20,6 +20,7 @@ use spm_core::parallel;
 use spm_core::rng::Rng;
 use spm_core::spm::Variant;
 use spm_core::tensor::Mat;
+// lint: allow(hygiene): Executor is imported for method resolution (`exec.forward`)
 use spm_coordinator::serve::{Executor, NativeExecutor};
 use spm_coordinator::train::{TrainBatch, TrainEngine};
 
@@ -29,22 +30,31 @@ thread_local! {
 
 struct CountingAlloc;
 
+// SAFETY: every method forwards verbatim to `System`; the only extra
+// work is bumping a const-initialized `Cell<u64>` thread-local, which
+// never allocates, has no destructor, and cannot unwind — safe to touch
+// from inside the allocator (see the module doc).
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds `GlobalAlloc::alloc`'s contract; forwarded
+    // unchanged to `System.alloc`.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOC_CALLS.with(|c| c.set(c.get() + 1));
         System.alloc(layout)
     }
 
+    // SAFETY: forwarded unchanged to `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOC_CALLS.with(|c| c.set(c.get() + 1));
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: forwarded unchanged to `System.realloc`.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOC_CALLS.with(|c| c.set(c.get() + 1));
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: forwarded unchanged to `System.dealloc`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

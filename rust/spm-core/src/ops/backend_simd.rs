@@ -105,10 +105,24 @@ impl StageBackend for Avx2Backend {
         let p = plan.num_pairs();
         let (li, lj) = plan.stage_lane_ij(l);
         match plan.variant {
+            // SAFETY: reachable only through `backend::backend_for`, which
+            // gates on runtime AVX2+FMA detection. Bounds: `block` holds
+            // whole rows of width `plan.n` (StageBackend contract), and
+            // every lane of `li`/`lj` is < n — real pairs index a plan
+            // permutation of 0..n, and `SpmPlan::build_lane_tables` pads
+            // the ragged tail with index 0 (n >= 2), so every
+            // `vgatherdps` lane, padded or not, reads inside the row.
+            // `scratch` was sized by `prepare_into` to
+            // `num_stages * 2 * lp` (trig SoA), so the per-stage slice
+            // holds the `2 * lp` coefficients the kernel loads.
             Variant::Rotation => unsafe {
                 fwd_rotation(plan.n, p, li, lj, &scratch[l * 2 * lp..], lp, block);
             },
             Variant::General => {
+                // SAFETY: same dispatch gate and lane-table bounds
+                // argument as the Rotation arm above; `scratch` was sized
+                // to `num_stages * 4 * lp` ([a|b|c|d] SoA), so the
+                // per-stage slice holds the `4 * lp` coefficients read.
                 unsafe {
                     fwd_general(plan.n, p, li, lj, &scratch[l * 4 * lp..], lp, block);
                 }
@@ -130,6 +144,13 @@ impl StageBackend for Avx2Backend {
         let lp = plan.lane_pairs;
         let (li, lj) = plan.stage_lane_ij(l);
         let o_mix = plan.layout.mix(l).start;
+        // SAFETY: same dispatch gate and lane-table bounds argument as
+        // `stage_fwd_batch`: `g` and `zin` are same-shape row blocks of
+        // width `plan.n`, every `li`/`lj` lane (zero-padded tail
+        // included) is < n, and the `4 * lp` coefficient slice exists by
+        // `prepare_into`'s sizing. The `gm` slice starts at this stage's
+        // mix offset and the layout guarantees `4 * num_pairs` grad
+        // slots there; the fold loop only writes `valid` real lanes.
         unsafe {
             bwd_general(
                 plan.n,
@@ -158,6 +179,12 @@ impl StageBackend for Avx2Backend {
         let lp = plan.lane_pairs;
         let (li, lj) = plan.stage_lane_ij(l);
         let o_mix = plan.layout.mix(l).start;
+        // SAFETY: same dispatch gate and lane-table bounds argument as
+        // `stage_fwd_batch`; `g` and `z` are same-shape row blocks of
+        // width `plan.n`, the `2 * lp` trig slice exists by
+        // `prepare_into`'s sizing, and `gm` holds `num_pairs` theta-grad
+        // slots at this stage's mix offset — the fold writes only the
+        // group's `valid` real lanes.
         unsafe {
             bwd_rotation(
                 plan.n,

@@ -781,6 +781,7 @@ fn spm_forward_trace_fused_into(
         Variant::Rotation => {
             if !matches!(trace, LinearTrace::Rotation { .. }) {
                 *trace =
+                    // lint: allow(alloc): one-time trace-variant switch, not steady state (DESIGN.md §15)
                     LinearTrace::Rotation { z_last: Mat { rows: 0, cols: 0, data: Vec::new() } };
             }
             let LinearTrace::Rotation { z_last } = trace else { unreachable!() };
@@ -809,10 +810,12 @@ fn spm_forward_trace_fused_into(
             // scale/finish passes. The per-stage trace kernel captures
             // the stage output as part of the stage sweep.
             if !matches!(trace, LinearTrace::General { .. }) {
+                // lint: allow(alloc): one-time trace-variant switch, not steady state (DESIGN.md §15)
                 *trace = LinearTrace::General { zs: Vec::new() };
             }
             let LinearTrace::General { zs } = trace else { unreachable!() };
             if zs.len() != plan.num_stages + 1 {
+                // lint: allow(alloc): first-call trace growth; reshape_mat reuses it afterwards (DESIGN.md §15)
                 zs.resize_with(plan.num_stages + 1, || Mat { rows: 0, cols: 0, data: Vec::new() });
             }
             for m in zs.iter_mut() {
@@ -822,6 +825,7 @@ fn spm_forward_trace_fused_into(
                 // the only remaining per-call allocation on this path: a
                 // Vec of L+1 slice handles (documented in DESIGN.md §15)
                 let mut extras: Vec<&mut [f32]> =
+                    // lint: allow(alloc): the documented per-call trace-handle Vec (DESIGN.md §15)
                     zs.iter_mut().map(|m| m.data.as_mut_slice()).collect();
                 parallel::for_each_chunk_with(&mut out.data, &mut extras, n, |_f, chunk, snaps| {
                     let mut off = 0;

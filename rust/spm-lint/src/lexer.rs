@@ -1,0 +1,212 @@
+//! Comment/string/char-literal aware masking of Rust source — the whole
+//! trick that lets the rules run on plain text without rustc. The mask
+//! is the source with comment bodies and string/char-literal contents
+//! blanked to spaces (newlines kept, so byte offsets and line numbers
+//! survive); what was blanked is recorded so the comment-driven rules
+//! (R1 SAFETY, suppressions, DESIGN-§ refs) and the string-driven ones
+//! (R5 schema stamps) still see it. Kept in lockstep with the Python
+//! mirror `tools/spm_lint.py` (DESIGN.md §18).
+
+/// One lexed source file: `mask` is byte-for-byte the same length as the
+/// input; `comments` / `strings` carry `(1-based start line, contents)`.
+pub struct Lexed {
+    pub mask: Vec<u8>,
+    pub comments: Vec<(usize, String)>,
+    pub strings: Vec<(usize, String)>,
+}
+
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    for slot in out[a..b].iter_mut() {
+        if *slot != b'\n' {
+            *slot = b' ';
+        }
+    }
+}
+
+fn count_newlines(b: &[u8], a: usize, z: usize) -> usize {
+    b[a..z].iter().filter(|&&c| c == b'\n').count()
+}
+
+fn lossy(b: &[u8]) -> String {
+    String::from_utf8_lossy(b).into_owned()
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let j = src[i..].find('\n').map_or(n, |k| i + k);
+            comments.push((line, lossy(&b[i + 2..j])));
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            let text_end = if i >= start + 4 { i - 2 } else { start + 2 };
+            comments.push((start_line, lossy(&b[start + 2..text_end])));
+            blank(&mut out, start, i);
+            continue;
+        }
+        // raw (byte) string r"..." / r#"..."# / br#"..."#
+        if c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r') {
+            let mut j = i + if c == b'r' { 1 } else { 2 };
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            let two = &b[i..n.min(i + 2)];
+            if j < n && b[j] == b'"' && (hashes > 0 || two == b"r\"" || two == b"br") {
+                let mut close = Vec::with_capacity(hashes + 1);
+                close.push(b'"');
+                close.extend(std::iter::repeat(b'#').take(hashes));
+                let mut k = j + 1;
+                while k < n && !b[k..].starts_with(&close) {
+                    k += 1;
+                }
+                let start_line = line;
+                line += count_newlines(b, i, k);
+                strings.push((start_line, lossy(&b[j + 1..k])));
+                blank(&mut out, j + 1, k);
+                i = k + close.len();
+                continue;
+            }
+        }
+        let mut i2 = i;
+        let mut c2 = c;
+        if c == b'b' && i + 1 < n && b[i + 1] == b'"' {
+            i2 = i + 1;
+            c2 = b'"';
+        }
+        // plain (byte) string, backslash escapes honored
+        if c2 == b'"' {
+            let mut j = i2 + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    break;
+                }
+                j += 1;
+            }
+            let end = j.min(n);
+            let start_line = line;
+            line += count_newlines(b, i2, end);
+            strings.push((start_line, lossy(&b[i2 + 1..end])));
+            blank(&mut out, i2 + 1, end);
+            i = end + 1;
+            continue;
+        }
+        // char literal vs lifetime: 'x' or '\..' is a literal, 'ident
+        // (no closing quote right after) is a lifetime
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i + 1, j);
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' {
+                blank(&mut out, i + 1, i + 2);
+                i += 3;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    Lexed { mask: out, comments, strings }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_of(s: &str) -> String {
+        String::from_utf8(lex(s).mask).expect("ascii mask")
+    }
+
+    #[test]
+    fn line_comment_is_blanked_and_recorded() {
+        let lx = lex("let x = 1; // SAFETY: fine\nlet y = 2;\n");
+        assert!(!String::from_utf8_lossy(&lx.mask).contains("SAFETY"));
+        assert_eq!(lx.comments.len(), 1);
+        assert_eq!(lx.comments[0].0, 1);
+        assert!(lx.comments[0].1.contains("SAFETY: fine"));
+    }
+
+    #[test]
+    fn nested_block_comment_keeps_line_numbers() {
+        let src = "a\n/* x /* y */ z\nmore */\nb\n";
+        let m = mask_of(src);
+        assert_eq!(m.matches('\n').count(), src.matches('\n').count());
+        assert!(m.contains('b'));
+        assert!(!m.contains("more"));
+    }
+
+    #[test]
+    fn strings_hide_code_lookalikes() {
+        let m = mask_of("let s = \"unsafe { panic!() }\";\n");
+        assert!(!m.contains("unsafe"));
+        assert!(!m.contains("panic"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes_and_quote() {
+        let lx = lex("let s = r#\"say \"hi\" // not a comment\"#; fn f() {}\n");
+        let m = String::from_utf8_lossy(&lx.mask).into_owned();
+        assert!(m.contains("fn f"));
+        assert!(!m.contains("not a comment"));
+        assert_eq!(lx.comments.len(), 0);
+    }
+
+    #[test]
+    fn char_literal_brace_does_not_unbalance() {
+        let m = mask_of("let c = '{'; let d = '\\n';\n");
+        assert!(!m.contains('{'));
+    }
+
+    #[test]
+    fn lifetimes_are_left_alone() {
+        let m = mask_of("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(m.contains("'a"));
+    }
+}

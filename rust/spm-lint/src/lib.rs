@@ -1,0 +1,98 @@
+//! `spm-lint`: the repo-invariant static analysis pass (DESIGN.md §18).
+//!
+//! Dependency-free by design — a hand-rolled comment/string/char-literal
+//! aware lexer (lexer.rs) plus byte-level scanning (scan.rs) stand in
+//! for rustc, so the rules run anywhere, including containers with no
+//! toolchain at all (there `./ci.sh --lint` falls back to the lockstep
+//! Python mirror `tools/spm_lint.py`). The rules mechanize the
+//! invariants every PR note used to check by hand:
+//!
+//! * R1 `safety` — every `unsafe` site carries a `// SAFETY:` comment.
+//! * R2 `alloc` — no allocation constructs in the §15 hot paths.
+//! * R3 `panic` — no unwrap/expect/panic in serving/training threads.
+//! * R4 `version` — `&mut` params doors bump `params_version`.
+//! * R5 `consistency` — gateway wire constants, schema stamps, the
+//!   registry CSV magic, and `DESIGN.md §N` references all line up.
+//! * R6 `hygiene` — bracket balance and unused `use` imports.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod scan;
+pub mod suppress;
+pub mod tree;
+
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+
+pub use report::{rule_id, to_json, Finding};
+pub use tree::Tree;
+
+/// Lint the tree rooted at `root`. Returns the active findings (sorted
+/// by path, line, rule) and how many raw findings were suppressed by
+/// inline comments or the baseline.
+pub fn lint_tree(root: &Path) -> (Vec<Finding>, usize) {
+    let tree = Tree::new(root);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut baseline = suppress::load_baseline(root, &mut findings);
+    let mut supp_by_file: HashMap<String, HashMap<&'static str, HashSet<usize>>> = HashMap::new();
+    for sf in &tree.files {
+        let supp = suppress::suppressions(sf, &mut findings);
+        rules::rule_safety(sf, &mut findings);
+        rules::rule_alloc(sf, &tree, &mut findings, &supp);
+        rules::rule_panic(sf, &mut findings);
+        rules::rule_version(sf, &mut findings);
+        rules::rule_consistency_gateway(sf, &mut findings);
+        rules::rule_consistency_schema(sf, &mut findings);
+        rules::rule_consistency_design(sf, &tree, &mut findings);
+        rules::rule_hygiene_balance(sf, &mut findings);
+        rules::rule_hygiene_unused_use(sf, &mut findings);
+        supp_by_file.insert(sf.path.clone(), supp);
+    }
+    rules::rule_consistency_registry(&tree, &mut findings);
+    let raw = findings.len();
+
+    // inline suppressions: a `lint: allow(<rule>)` covers its own line
+    // and the next one, in its own file (R2's DESIGN-§15 cross-check ran
+    // inside rule_alloc and is deliberately not re-suppressible here)
+    let active: Vec<Finding> = findings
+        .into_iter()
+        .filter(|f| {
+            !supp_by_file
+                .get(&f.path)
+                .and_then(|by_rule| by_rule.get(f.rule))
+                .is_some_and(|lines| lines.contains(&f.line))
+        })
+        .collect();
+
+    // baseline pass: a (rule, path) entry eats every matching finding;
+    // an entry that eats nothing is stale and is itself a finding
+    let mut remaining = Vec::new();
+    for f in active {
+        let mut eaten = false;
+        for e in baseline.iter_mut() {
+            if e.rule == f.rule && e.path == f.path {
+                e.hits += 1;
+                eaten = true;
+            }
+        }
+        if !eaten {
+            remaining.push(f);
+        }
+    }
+    for e in &baseline {
+        if e.hits == 0 {
+            remaining.push(Finding::new(
+                "lint.baseline",
+                e.lineno,
+                "suppress",
+                format!("stale baseline entry: {} {}", e.rule, e.path),
+            ));
+        }
+    }
+    remaining.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    let suppressed = raw - remaining.len().min(raw);
+    (remaining, suppressed)
+}

@@ -1,0 +1,46 @@
+//! `spm-lint [--root DIR] [--json PATH]` — lint the repo tree, print
+//! findings as `file:line: rule-id message`, optionally write LINT.json.
+//! Exit status: 0 = clean, 1 = findings, 2 = usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json_path: Option<PathBuf> = None;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        match (args[i].as_str(), args.get(i + 1)) {
+            ("--root", Some(v)) => {
+                root = PathBuf::from(v);
+                i += 2;
+            }
+            ("--json", Some(v)) => {
+                json_path = Some(PathBuf::from(v));
+                i += 2;
+            }
+            _ => {
+                eprintln!("usage: spm-lint [--root DIR] [--json PATH]");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let (active, _suppressed) = spm_lint::lint_tree(&root);
+    for f in &active {
+        println!("{}", f.render());
+    }
+    if let Some(p) = json_path {
+        if let Err(e) = std::fs::write(&p, spm_lint::to_json(&active)) {
+            eprintln!("spm-lint: writing {}: {e}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+    if active.is_empty() {
+        println!("spm-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("spm-lint: {} finding(s)", active.len());
+        ExitCode::from(1)
+    }
+}

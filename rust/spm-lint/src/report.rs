@@ -1,0 +1,95 @@
+//! Findings and their two output shapes: the human `file:line: id(rule)
+//! message` line and the machine LINT.json document.
+
+/// Short rule names. `R1..R6` render from these; the meta-rule
+/// `suppress` (bad suppression/baseline syntax) renders as `LINT`.
+pub const RULES: [&str; 6] = ["safety", "alloc", "panic", "version", "consistency", "hygiene"];
+
+pub fn rule_id(rule: &str) -> &'static str {
+    match rule {
+        "safety" => "R1",
+        "alloc" => "R2",
+        "panic" => "R3",
+        "version" => "R4",
+        "consistency" => "R5",
+        "hygiene" => "R6",
+        _ => "LINT",
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    /// Short rule name (`panic`), not the `R3` id.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(path: &str, line: usize, rule: &'static str, message: String) -> Finding {
+        Finding { path: path.to_owned(), line, rule, message }
+    }
+
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}({}) {}", self.path, self.line, rule_id(self.rule), self.rule, self.message)
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The LINT.json document (same shape as the Python mirror's `--json`).
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"tool\": \"spm-lint\",\n  \"schema_version\": 1,\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\n      \"file\": \"{}\",\n      \"line\": {},\n      \"rule\": \"{}\",\n      \"message\": \"{}\"\n    }}",
+            json_escape(&f.path),
+            f.line,
+            json_escape(f.rule),
+            json_escape(&f.message)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_shape() {
+        let f = Finding::new("a/b.rs", 7, "panic", "boom".to_owned());
+        assert_eq!(f.render(), "a/b.rs:7: R3(panic) boom");
+    }
+
+    #[test]
+    fn json_escapes_quotes() {
+        let f = Finding::new("x.rs", 1, "hygiene", "unused import `\"q\"`".to_owned());
+        let doc = to_json(&[f]);
+        assert!(doc.contains("\\\"q\\\""));
+        assert!(doc.contains("\"schema_version\": 1"));
+    }
+}

@@ -1,0 +1,643 @@
+//! The rule set R1–R6 (DESIGN.md §18). Each rule pushes `Finding`s; the
+//! driver in lib.rs applies inline suppressions and the baseline
+//! afterwards. Kept in lockstep with `tools/spm_lint.py` — when editing
+//! a rule, edit BOTH.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::report::Finding;
+use crate::scan::{
+    brace_span, find_tokens, find_word, fn_spans, impl_header_of, in_spans, line_of,
+    match_tokens, read_ident, skip_ws, test_regions,
+};
+use crate::tree::{SourceFile, Tree};
+
+// -------------------------------------------------------------------------
+// R1 safety: every unsafe site carries a SAFETY comment
+// -------------------------------------------------------------------------
+
+fn is_attr(line: &str) -> bool {
+    let t = line.trim();
+    !t.is_empty() && (t.starts_with("#[") || t.starts_with("#!"))
+}
+
+pub fn rule_safety(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    let mask = &sf.lex.mask;
+    // comment text by line: a block comment maps every line it covers
+    let mut comment_lines: HashMap<usize, Vec<&str>> = HashMap::new();
+    for (line, text) in &sf.lex.comments {
+        comment_lines.entry(*line).or_default().push(text);
+        for extra in 0..text.matches('\n').count() {
+            comment_lines.entry(line + 1 + extra).or_default().push(text);
+        }
+    }
+    let documented = |line: usize| -> bool {
+        let says_safety =
+            |t: &str| t.contains("SAFETY:") || t.contains("# Safety");
+        if comment_lines.get(&line).is_some_and(|v| v.iter().any(|t| says_safety(t))) {
+            return true;
+        }
+        // walk up through the contiguous block of comments and
+        // attributes directly above
+        let mut l = line.saturating_sub(1);
+        while l >= 1 {
+            if let Some(texts) = comment_lines.get(&l) {
+                if texts.iter().any(|t| says_safety(t)) {
+                    return true;
+                }
+                l -= 1;
+                continue;
+            }
+            if l <= sf.lines.len() && is_attr(&sf.lines[l - 1]) {
+                l -= 1;
+                continue;
+            }
+            break;
+        }
+        false
+    };
+    for at in find_word(mask, "unsafe") {
+        let line = line_of(mask, at);
+        if !documented(line) {
+            findings.push(Finding::new(
+                &sf.path,
+                line,
+                "safety",
+                "`unsafe` without an adjacent `// SAFETY:` (or `/// # Safety`) comment".to_owned(),
+            ));
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// R2 alloc: no allocation constructs in hot-path functions
+// -------------------------------------------------------------------------
+
+const ALLOC_PATTERNS: [(&[&str], &str); 8] = [
+    (&["Vec", "::", "new"], "Vec::new"),
+    (&["vec", "!"], "vec!"),
+    (&[".", "to_vec", "("], ".to_vec()"),
+    (&[".", "clone", "(", ")"], ".clone()"),
+    (&[".", "collect"], ".collect()"),
+    (&["Box", "::", "new"], "Box::new"),
+    (&["format", "!"], "format!"),
+    (&["String", "::", "from"], "String::from"),
+];
+
+const KERNEL_PREFIXES: [&str; 4] = ["stage_", "fwd_", "bwd_", "lone_"];
+
+/// `(fn name, body span)` for the DESIGN.md §15 hot paths: `*_into`
+/// entry points everywhere, stage kernels in ops/backend*.rs, and
+/// `NativeExecutor::forward` in serve.rs.
+fn hot_functions(sf: &SourceFile) -> Vec<(String, (usize, usize))> {
+    let mask = &sf.lex.mask;
+    let base = sf.base();
+    let tests = test_regions(mask);
+    let mut out = Vec::new();
+    for (name, sig_start, body) in fn_spans(mask) {
+        if in_spans(sig_start, &tests) {
+            continue;
+        }
+        let mut hot = name.ends_with("_into");
+        if !hot && base.starts_with("backend") && KERNEL_PREFIXES.iter().any(|p| name.starts_with(p))
+        {
+            hot = true;
+        }
+        if !hot && base == "serve.rs" && name == "forward" {
+            hot = impl_header_of(mask, sig_start).is_some_and(|h| h.contains("NativeExecutor"));
+        }
+        if hot {
+            out.push((name, body));
+        }
+    }
+    out
+}
+
+/// Suppressed hits are cross-checked against DESIGN.md §15: the
+/// suppression is only honored when the hot function is named in the
+/// §15 exception list (keeps the two in lockstep) — that secondary
+/// finding is NOT itself suppressible.
+pub fn rule_alloc(
+    sf: &SourceFile,
+    tree: &Tree,
+    findings: &mut Vec<Finding>,
+    supp: &HashMap<&'static str, HashSet<usize>>,
+) {
+    let mask = &sf.lex.mask;
+    let design15 = tree.design.as_deref().map_or(String::new(), design_section_15);
+    let empty = HashSet::new();
+    let covered = supp.get("alloc").unwrap_or(&empty);
+    for (name, (a, b)) in hot_functions(sf) {
+        let body = &mask[a..b];
+        for (toks, label) in ALLOC_PATTERNS {
+            for hit in find_tokens(body, toks) {
+                let line = line_of(mask, a + hit);
+                if covered.contains(&line) {
+                    if !design15.is_empty() && !design15.contains(&name) {
+                        findings.push(Finding::new(
+                            &sf.path,
+                            line,
+                            "consistency",
+                            format!(
+                                "alloc suppression in `{name}` not backed by the DESIGN.md §15 exception list"
+                            ),
+                        ));
+                    }
+                    continue;
+                }
+                findings.push(Finding::new(
+                    &sf.path,
+                    line,
+                    "alloc",
+                    format!("{label} in hot-path fn `{name}` (zero-allocation contract, DESIGN.md §15)"),
+                ));
+            }
+        }
+    }
+}
+
+/// The `## §15 ...` section of DESIGN.md, up to the next `## §` heading.
+fn design_section_15(design: &str) -> String {
+    let mut out = String::new();
+    let mut inside = false;
+    for line in design.split('\n') {
+        if let Some(rest) = line.strip_prefix("## §") {
+            if inside {
+                break;
+            }
+            inside = rest.strip_prefix("15").is_some_and(|r| !r.starts_with(|c: char| c.is_ascii_digit()));
+            if !inside {
+                continue;
+            }
+        }
+        if inside {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------------------------
+// R3 panic: serving/gateway/train worker threads must be panic-free
+// -------------------------------------------------------------------------
+
+const PANIC_FILES: [&str; 3] = ["serve.rs", "gateway.rs", "train.rs"];
+const PANIC_PATTERNS: [(&[&str], &str); 3] = [
+    (&[".", "unwrap", "(", ")"], ".unwrap()"),
+    (&[".", "expect", "("], ".expect("),
+    (&["panic", "!"], "panic!"),
+];
+
+pub fn rule_panic(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    if !PANIC_FILES.contains(&sf.base()) {
+        return;
+    }
+    if sf.path.contains("/tests/") {
+        return; // integration-test crates may panic freely
+    }
+    let mask = &sf.lex.mask;
+    let tests = test_regions(mask);
+    for (toks, label) in PANIC_PATTERNS {
+        for hit in find_tokens(mask, toks) {
+            if in_spans(hit, &tests) {
+                continue;
+            }
+            findings.push(Finding::new(
+                &sf.path,
+                line_of(mask, hit),
+                "panic",
+                format!(
+                    "{label} in non-test serving/training code (a worker panic wedges the session, DESIGN.md §16)"
+                ),
+            ));
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// R4 version: &mut params doors must bump params_version
+// -------------------------------------------------------------------------
+
+pub fn rule_version(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    if !sf.path.ends_with("ops/linear.rs") {
+        return;
+    }
+    let mask = &sf.lex.mask;
+    let Some(&at) = find_tokens(mask, &["impl", "LinearOp"]).first() else { return };
+    let end = match_tokens(mask, at, &["impl", "LinearOp"]).unwrap_or(at);
+    let Some(j) = mask[end..].iter().position(|&c| c == b'{').map(|p| end + p) else { return };
+    let (ia, ib) = brace_span(mask, j);
+    let impl_body = &mask[ia..ib];
+    for (name, sig_start, (a, b)) in fn_spans(impl_body) {
+        let body = &impl_body[a..b];
+        let hands_out = find_tokens(body, &["&", "mut", "self", ".", "params"]);
+        let bumps = find_tokens(body, &["self", ".", "params_version", "+="]);
+        if !hands_out.is_empty() && bumps.is_empty() {
+            findings.push(Finding::new(
+                &sf.path,
+                line_of(mask, ia + sig_start),
+                "version",
+                format!(
+                    "`{name}` hands out &mut params without bumping params_version (cache-invalidation contract, DESIGN.md §15)"
+                ),
+            ));
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// R5 consistency: cross-file contracts
+// -------------------------------------------------------------------------
+
+pub fn rule_consistency_gateway(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    if sf.base() != "gateway.rs" {
+        return;
+    }
+    let mask = &sf.lex.mask;
+    // const OP_* / ST_* : u8 definitions
+    let mut consts: Vec<(String, usize)> = Vec::new();
+    for at in find_word(mask, "const") {
+        let i = skip_ws(mask, at + 5);
+        let (name, end) = read_ident(mask, i);
+        if !(name.starts_with("OP_") || name.starts_with("ST_")) {
+            continue;
+        }
+        let i = skip_ws(mask, end);
+        if mask.get(i) != Some(&b':') {
+            continue;
+        }
+        let i = skip_ws(mask, i + 1);
+        if match_tokens(mask, i, &["u8"]).is_none() {
+            continue;
+        }
+        consts.push((name, at));
+    }
+    if consts.is_empty() {
+        return;
+    }
+    let client = find_tokens(mask, &["impl", "GatewayClient"]).first().map(|&at| {
+        let end = match_tokens(mask, at, &["impl", "GatewayClient"]).unwrap_or(at);
+        let j = mask[end..].iter().position(|&c| c == b'{').map_or(mask.len(), |p| end + p);
+        brace_span(mask, j)
+    });
+    let tests = test_regions(mask);
+    for (name, def_at) in consts {
+        let refs: Vec<usize> = find_word(mask, &name)
+            .into_iter()
+            .filter(|&o| !(def_at <= o && o <= def_at + 60) && !in_spans(o, &tests))
+            .collect();
+        let line = line_of(mask, def_at);
+        if let Some(span) = client {
+            if !refs.iter().any(|&o| in_spans(o, &[span])) {
+                findings.push(Finding::new(
+                    &sf.path,
+                    line,
+                    "consistency",
+                    format!(
+                        "wire constant `{name}` is not referenced by GatewayClient (server/client protocol drift)"
+                    ),
+                ));
+            }
+        }
+        let in_server = refs.iter().any(|&o| match client {
+            Some(span) => !in_spans(o, &[span]),
+            None => true,
+        });
+        if !in_server {
+            findings.push(Finding::new(
+                &sf.path,
+                line,
+                "consistency",
+                format!("wire constant `{name}` is not referenced by the gateway server side"),
+            ));
+        }
+    }
+}
+
+pub fn rule_consistency_schema(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    if !sf.path.starts_with("benches/") {
+        return;
+    }
+    for (line, contents) in &sf.lex.strings {
+        if !find_word(contents.as_bytes(), "schema_version").is_empty() {
+            findings.push(Finding::new(
+                &sf.path,
+                *line,
+                "consistency",
+                "hand-rolled schema_version stamp; go through bench_args::json_header".to_owned(),
+            ));
+        }
+    }
+}
+
+pub fn rule_consistency_registry(tree: &Tree, findings: &mut Vec<Finding>) {
+    let mut magic: Option<(String, String, usize)> = None; // (value, path, line)
+    for sf in &tree.files {
+        if !sf.path.ends_with("src/ablate.rs") {
+            continue;
+        }
+        let text = sf.text.as_bytes();
+        for at in find_word(text, "const") {
+            let Some(end) =
+                match_tokens(text, at, &["const", "REGISTRY_MAGIC", ":", "&", "str", "="])
+            else {
+                continue;
+            };
+            let i = skip_ws(text, end);
+            if text.get(i) != Some(&b'"') {
+                continue;
+            }
+            let Some(close) = text[i + 1..].iter().position(|&c| c == b'"').map(|p| i + 1 + p)
+            else {
+                continue;
+            };
+            let value = String::from_utf8_lossy(&text[i + 1..close]).into_owned();
+            magic = Some((value, sf.path.clone(), line_of(text, at)));
+            break;
+        }
+    }
+    let Some((value, mpath, mline)) = magic else { return };
+    for (path, first) in &tree.registry {
+        if first != &value {
+            findings.push(Finding::new(
+                path,
+                1,
+                "consistency",
+                format!(
+                    "registry header {first:?} is not byte-equal to REGISTRY_MAGIC {value:?} ({mpath}:{mline})"
+                ),
+            ));
+        }
+    }
+}
+
+/// `DESIGN.md §N` (or `§§N`, or `§N-§M` ranges) references in comments
+/// must resolve to real `## §N` sections.
+pub fn rule_consistency_design(sf: &SourceFile, tree: &Tree, findings: &mut Vec<Finding>) {
+    let Some(design) = tree.design.as_deref() else { return };
+    let sections: HashSet<u32> = design
+        .split('\n')
+        .filter_map(|l| l.strip_prefix("## §"))
+        .filter_map(|rest| {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            digits.parse().ok()
+        })
+        .collect();
+    for (line, text) in &sf.lex.comments {
+        for n in section_refs(text) {
+            if !sections.contains(&n) {
+                findings.push(Finding::new(
+                    &sf.path,
+                    *line,
+                    "consistency",
+                    format!("comment references DESIGN.md §{n}, which does not exist"),
+                ));
+            }
+        }
+    }
+}
+
+/// Section numbers referenced as `DESIGN.md §N[-§M]` in a comment.
+fn section_refs(text: &str) -> Vec<u32> {
+    let cs: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let needle: Vec<char> = "DESIGN.md".chars().collect();
+    let mut i = 0usize;
+    while i + needle.len() <= cs.len() {
+        if cs[i..i + needle.len()] != needle[..] {
+            i += 1;
+            continue;
+        }
+        let mut j = i + needle.len();
+        let start = j;
+        while j < cs.len() && cs[j].is_whitespace() {
+            j += 1;
+        }
+        if j == start || j >= cs.len() || cs[j] != '§' {
+            i += 1;
+            continue;
+        }
+        j += 1;
+        if j < cs.len() && cs[j] == '§' {
+            j += 1;
+        }
+        let (first, after) = read_num(&cs, j);
+        let Some(first) = first else {
+            i += 1;
+            continue;
+        };
+        out.push(first);
+        j = after;
+        // optional range tail: `- §M` / `–§M` / `-M`
+        let mut k = j;
+        while k < cs.len() && cs[k].is_whitespace() {
+            k += 1;
+        }
+        if k < cs.len() && (cs[k] == '-' || cs[k] == '–') {
+            k += 1;
+            while k < cs.len() && cs[k].is_whitespace() {
+                k += 1;
+            }
+            if k < cs.len() && cs[k] == '§' {
+                k += 1;
+            }
+            let (second, after2) = read_num(&cs, k);
+            if let Some(second) = second {
+                out.push(second);
+                j = after2;
+            }
+        }
+        i = j;
+    }
+    out
+}
+
+fn read_num(cs: &[char], mut j: usize) -> (Option<u32>, usize) {
+    let start = j;
+    while j < cs.len() && cs[j].is_ascii_digit() {
+        j += 1;
+    }
+    if j == start {
+        return (None, j);
+    }
+    let s: String = cs[start..j].iter().collect();
+    (s.parse().ok(), j)
+}
+
+// -------------------------------------------------------------------------
+// R6 hygiene: bracket balance + unused `use`
+// -------------------------------------------------------------------------
+
+pub fn rule_hygiene_balance(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    let mask = &sf.lex.mask;
+    let mut stack: Vec<(u8, usize)> = Vec::new();
+    for (idx, &ch) in mask.iter().enumerate() {
+        let open = matches!(ch, b'(' | b'[' | b'{');
+        let close = matches!(ch, b')' | b']' | b'}');
+        if open {
+            stack.push((ch, idx));
+        } else if close {
+            let want = match ch {
+                b')' => b'(',
+                b']' => b'[',
+                _ => b'{',
+            };
+            if stack.last().map(|&(c, _)| c) != Some(want) {
+                findings.push(Finding::new(
+                    &sf.path,
+                    line_of(mask, idx),
+                    "hygiene",
+                    format!("unbalanced `{}`", ch as char),
+                ));
+                return;
+            }
+            stack.pop();
+        }
+    }
+    if let Some(&(ch, idx)) = stack.last() {
+        findings.push(Finding::new(
+            &sf.path,
+            line_of(mask, idx),
+            "hygiene",
+            format!("unclosed `{}`", ch as char),
+        ));
+    }
+}
+
+/// Traits routinely imported only for their methods / names the text
+/// search cannot see a bare identifier for (documented, DESIGN.md §18).
+/// Kept deliberately short — repo-local trait imports use an inline
+/// hygiene suppression instead of growing this list.
+const TRAIT_METHOD_ALLOW: [&str; 7] =
+    ["Read", "Write", "BufRead", "Seek", "FromStr", "Context", "Display"];
+
+/// One `use` statement found in the mask.
+struct UseStmt {
+    clause_start: usize,
+    span_end: usize, // past the `;`
+    is_pub: bool,
+    clause: String,
+}
+
+fn use_statements(mask: &[u8]) -> Vec<UseStmt> {
+    let mut out = Vec::new();
+    for at in find_word(mask, "use") {
+        let line_start = mask[..at].iter().rposition(|&c| c == b'\n').map_or(0, |p| p + 1);
+        let prefix = String::from_utf8_lossy(&mask[line_start..at]).into_owned();
+        let t = prefix.trim();
+        let is_pub = if t.is_empty() {
+            false
+        } else if t == "pub" {
+            true
+        } else if let Some(rest) = t.strip_prefix("pub") {
+            let r = rest.trim();
+            if r.starts_with('(') && r.ends_with(')') {
+                true
+            } else {
+                continue;
+            }
+        } else {
+            continue;
+        };
+        let clause_start = skip_ws(mask, at + 3);
+        let Some(semi) =
+            mask[clause_start..].iter().position(|&c| c == b';').map(|p| clause_start + p)
+        else {
+            continue;
+        };
+        out.push(UseStmt {
+            clause_start,
+            span_end: semi + 1,
+            is_pub,
+            clause: String::from_utf8_lossy(&mask[clause_start..semi]).into_owned(),
+        });
+    }
+    out
+}
+
+/// Leaf identifiers a `use` clause binds: the last path segment, the
+/// `as` alias, every member of a `{...}` group (recursively); `*` globs
+/// and `as _` bind nothing checkable.
+fn use_leaves(clause: &str) -> Vec<String> {
+    let clause = clause.trim();
+    if clause.ends_with('}') {
+        let Some(b) = clause.find('{') else { return Vec::new() };
+        let inner = &clause[b + 1..clause.len() - 1];
+        let prefix = clause[..b].trim_end_matches([':', ' ', '\t', '\n']);
+        let mut parts: Vec<String> = Vec::new();
+        let mut depth = 0i64;
+        let mut cur = String::new();
+        for ch in inner.chars() {
+            if ch == '{' {
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+            if ch == ',' && depth == 0 {
+                parts.push(std::mem::take(&mut cur));
+            } else {
+                cur.push(ch);
+            }
+        }
+        parts.push(cur);
+        let mut out = Vec::new();
+        for p in parts {
+            let pt = p.trim();
+            if pt.is_empty() {
+                continue;
+            }
+            if pt == "self" {
+                let seg = prefix.rsplit("::").next().unwrap_or("").trim();
+                if !seg.is_empty() {
+                    out.push(seg.to_owned());
+                }
+            } else {
+                out.extend(use_leaves(pt));
+            }
+        }
+        return out;
+    }
+    if let Some(at) = clause.rfind(" as ") {
+        let alias = clause[at + 4..].trim();
+        return if alias == "_" { Vec::new() } else { vec![alias.to_owned()] };
+    }
+    let leaf = clause.rsplit("::").next().unwrap_or("").trim();
+    if leaf == "*" || leaf == "self" || leaf.is_empty() {
+        return Vec::new();
+    }
+    vec![leaf.to_owned()]
+}
+
+pub fn rule_hygiene_unused_use(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    let mask = &sf.lex.mask;
+    let stmts = use_statements(mask);
+    // the search corpus is the mask with every use clause blanked
+    let mut rest = mask.clone();
+    for st in &stmts {
+        for slot in rest[st.clause_start..st.span_end].iter_mut() {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+    }
+    for st in &stmts {
+        if st.is_pub {
+            continue; // pub use re-exports bind the public surface
+        }
+        let line = line_of(mask, st.clause_start);
+        for name in use_leaves(&st.clause) {
+            if TRAIT_METHOD_ALLOW.contains(&name.as_str()) {
+                continue;
+            }
+            if find_word(&rest, &name).is_empty() {
+                findings.push(Finding::new(
+                    &sf.path,
+                    line,
+                    "hygiene",
+                    format!("unused import `{name}`"),
+                ));
+            }
+        }
+    }
+}

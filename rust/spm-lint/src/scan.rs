@@ -1,0 +1,199 @@
+//! Byte-level scanning helpers shared by the rules: word-boundary
+//! search, whitespace-tolerant token-sequence matching (the stand-in for
+//! the Python mirror's regexes), brace spans, fn/test/impl discovery.
+
+pub fn is_word(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// 1-based line number of byte `offset`.
+pub fn line_of(mask: &[u8], offset: usize) -> usize {
+    mask[..offset.min(mask.len())].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// Every occurrence of `word` with non-word bytes (or the buffer edge)
+/// on both sides.
+pub fn find_word(mask: &[u8], word: &str) -> Vec<usize> {
+    let w = word.as_bytes();
+    let mut out = Vec::new();
+    if w.is_empty() || mask.len() < w.len() {
+        return out;
+    }
+    for i in 0..=mask.len() - w.len() {
+        if &mask[i..i + w.len()] != w {
+            continue;
+        }
+        if i > 0 && is_word(mask[i - 1]) {
+            continue;
+        }
+        let after = i + w.len();
+        if after < mask.len() && is_word(mask[after]) {
+            continue;
+        }
+        out.push(i);
+    }
+    out
+}
+
+pub fn skip_ws(mask: &[u8], mut i: usize) -> usize {
+    while i < mask.len() && mask[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Identifier starting at `i` (possibly empty) and the offset past it.
+pub fn read_ident(mask: &[u8], i: usize) -> (String, usize) {
+    let mut j = i;
+    while j < mask.len() && is_word(mask[j]) {
+        j += 1;
+    }
+    (String::from_utf8_lossy(&mask[i..j]).into_owned(), j)
+}
+
+/// Match a token sequence starting at `at`, any whitespace between
+/// tokens. Identifier tokens (first byte a word byte) are matched with
+/// word boundaries on both sides; punctuation tokens byte-for-byte.
+/// Returns the offset just past the last token.
+pub fn match_tokens(mask: &[u8], at: usize, toks: &[&str]) -> Option<usize> {
+    let mut i = at;
+    for (k, tok) in toks.iter().enumerate() {
+        if k > 0 {
+            i = skip_ws(mask, i);
+        }
+        let t = tok.as_bytes();
+        if i + t.len() > mask.len() || &mask[i..i + t.len()] != t {
+            return None;
+        }
+        if is_word(t[0]) {
+            if i > 0 && is_word(mask[i - 1]) {
+                return None;
+            }
+            let after = i + t.len();
+            if after < mask.len() && is_word(mask[after]) {
+                return None;
+            }
+        }
+        i += t.len();
+    }
+    Some(i)
+}
+
+/// Start offsets of every match of the token sequence.
+pub fn find_tokens(mask: &[u8], toks: &[&str]) -> Vec<usize> {
+    let first = toks[0];
+    let starts: Vec<usize> = if is_word(first.as_bytes()[0]) {
+        find_word(mask, first)
+    } else {
+        let f = first.as_bytes();
+        (0..mask.len().saturating_sub(f.len() - 1))
+            .filter(|&i| &mask[i..i + f.len()] == f)
+            .collect()
+    };
+    starts.into_iter().filter(|&i| match_tokens(mask, i, toks).is_some()).collect()
+}
+
+/// Byte span of a `{...}` block whose `{` sits at `open_idx`.
+pub fn brace_span(mask: &[u8], open_idx: usize) -> (usize, usize) {
+    let mut depth = 0i64;
+    for (k, &c) in mask.iter().enumerate().skip(open_idx) {
+        if c == b'{' {
+            depth += 1;
+        } else if c == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return (open_idx, k + 1);
+            }
+        }
+    }
+    (open_idx, mask.len())
+}
+
+fn find_byte(mask: &[u8], from: usize, what: u8) -> Option<usize> {
+    mask.iter().skip(from).position(|&c| c == what).map(|p| from + p)
+}
+
+/// `(name, sig_start, body_span)` for every `fn` with a body.
+pub fn fn_spans(mask: &[u8]) -> Vec<(String, usize, (usize, usize))> {
+    let mut out = Vec::new();
+    for start in find_word(mask, "fn") {
+        let at = skip_ws(mask, start + 2);
+        let (name, end) = read_ident(mask, at);
+        if name.is_empty() {
+            continue;
+        }
+        let open = find_byte(mask, end, b'{');
+        let semi = find_byte(mask, end, b';');
+        let Some(j) = open else { continue };
+        if let Some(s) = semi {
+            if s < j {
+                continue; // trait method declaration without a body
+            }
+        }
+        out.push((name, start, brace_span(mask, j)));
+    }
+    out
+}
+
+/// Spans of `#[cfg(test)]`-gated items and `#[test]` fns.
+pub fn test_regions(mask: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for toks in [
+        &["#", "[", "cfg", "(", "test", ")", "]"] as &[&str],
+        &["#", "[", "test", "]"],
+    ] {
+        for at in find_tokens(mask, toks) {
+            let end = match_tokens(mask, at, toks).unwrap_or(at);
+            if let Some(j) = find_byte(mask, end, b'{') {
+                spans.push(brace_span(mask, j));
+            }
+        }
+    }
+    spans
+}
+
+pub fn in_spans(offset: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= offset && offset < b)
+}
+
+/// Header text of the innermost `impl` block containing `offset`.
+pub fn impl_header_of(mask: &[u8], offset: usize) -> Option<String> {
+    let mut best = None;
+    for start in find_word(mask, "impl") {
+        if start > offset {
+            break;
+        }
+        let Some(j) = find_byte(mask, start + 4, b'{') else { continue };
+        let (a, b) = brace_span(mask, j);
+        if a <= offset && offset < b {
+            best = Some(String::from_utf8_lossy(&mask[start..j]).into_owned());
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_boundaries_hold() {
+        let m = b"unsafety unsafe funsafe";
+        assert_eq!(find_word(m, "unsafe"), vec![9]);
+    }
+
+    #[test]
+    fn token_sequences_span_whitespace() {
+        let m = b"x.lock()  .  unwrap ( ) ;";
+        assert_eq!(find_tokens(m, &[".", "unwrap", "(", ")"]).len(), 1);
+        assert!(find_tokens(m, &["Vec", "::", "new"]).is_empty());
+    }
+
+    #[test]
+    fn fn_spans_skip_bodyless_decls() {
+        let src = b"trait T { fn a(&self); }\nfn b() { 1 + 1; }\n";
+        let fns = fn_spans(src);
+        assert_eq!(fns.len(), 1, "the bodyless trait decl is skipped");
+        assert_eq!(fns[0].0, "b");
+    }
+}

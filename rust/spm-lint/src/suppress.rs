@@ -1,0 +1,105 @@
+//! The two suppression channels (DESIGN.md §18): inline
+//! `lint: allow(<rule>): <reason>` comments covering their own line and
+//! the next, and the repo-root `lint.baseline` file of
+//! `<rule> <path> :: <reason>` entries. Reason-less or unknown-rule
+//! suppressions are themselves findings (meta-rule `suppress`), and a
+//! baseline entry that eats nothing is reported as stale.
+
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+
+use crate::report::{Finding, RULES};
+use crate::tree::SourceFile;
+
+/// Inline suppression table for one file: rule -> covered lines.
+pub fn suppressions(sf: &SourceFile, findings: &mut Vec<Finding>) -> HashMap<&'static str, HashSet<usize>> {
+    let mut table: HashMap<&'static str, HashSet<usize>> = HashMap::new();
+    for (line, text) in &sf.lex.comments {
+        let Some(at) = text.find("lint:") else { continue };
+        let rest = text[at + 5..].trim_start();
+        let Some(body) = rest.strip_prefix("allow(") else { continue };
+        let Some(close) = body.find(')') else { continue };
+        let rule = &body[..close];
+        if rule.is_empty() || !rule.bytes().all(|b| crate::scan::is_word(b)) {
+            continue;
+        }
+        let mut reason = body[close + 1..].trim_start();
+        reason = reason.strip_prefix(':').unwrap_or(reason);
+        let reason = reason.split('\n').next().unwrap_or("").trim();
+        let Some(known) = RULES.iter().copied().find(|r| *r == rule) else {
+            findings.push(Finding::new(
+                &sf.path,
+                *line,
+                "suppress",
+                format!("unknown rule '{rule}' in suppression"),
+            ));
+            continue;
+        };
+        if reason.is_empty() {
+            findings.push(Finding::new(
+                &sf.path,
+                *line,
+                "suppress",
+                format!("suppression for '{rule}' carries no reason"),
+            ));
+            continue;
+        }
+        let set = table.entry(known).or_default();
+        set.insert(*line);
+        set.insert(line + 1);
+    }
+    table
+}
+
+/// One parsed baseline entry.
+pub struct BaselineEntry {
+    pub rule: String,
+    pub path: String,
+    pub hits: usize,
+    pub lineno: usize,
+}
+
+/// Parse `<root>/lint.baseline`. Malformed lines become findings.
+pub fn load_baseline(root: &Path, findings: &mut Vec<Finding>) -> Vec<BaselineEntry> {
+    let mut entries = Vec::new();
+    let Ok(text) = std::fs::read_to_string(root.join("lint.baseline")) else {
+        return entries;
+    };
+    for (i, raw) in text.split('\n').enumerate() {
+        let s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let lineno = i + 1;
+        let (head, reason) = match s.split_once("::") {
+            Some((h, r)) => (h, r.trim()),
+            None => ("", ""),
+        };
+        let parts: Vec<&str> = head.split_whitespace().collect();
+        if parts.len() != 2 || reason.is_empty() {
+            findings.push(Finding::new(
+                "lint.baseline",
+                lineno,
+                "suppress",
+                "malformed baseline entry (want `<rule> <path> :: <reason>`)".to_owned(),
+            ));
+            continue;
+        }
+        if !RULES.contains(&parts[0]) {
+            findings.push(Finding::new(
+                "lint.baseline",
+                lineno,
+                "suppress",
+                format!("unknown rule '{}'", parts[0]),
+            ));
+            continue;
+        }
+        entries.push(BaselineEntry {
+            rule: parts[0].to_owned(),
+            path: parts[1].to_owned(),
+            hits: 0,
+            lineno,
+        });
+    }
+    entries
+}

@@ -1,0 +1,103 @@
+//! File discovery plus the repo-level artifacts R5 cross-checks
+//! (DESIGN.md, registry/*.csv). Walk order is sorted so finding order —
+//! and therefore LINT.json — is deterministic across machines.
+
+use std::fs;
+use std::path::Path;
+
+use crate::lexer::{lex, Lexed};
+
+/// Directories never descended into: build output, the Python tree,
+/// bench artifacts, and the linter's own fixture corpus (fixtures are
+/// violations on purpose; the fixture tests lint them with their own
+/// roots).
+pub const SKIP_DIRS: [&str; 6] =
+    [".git", "target", "python", "artifacts", "fixtures", "node_modules"];
+
+pub struct SourceFile {
+    /// Root-relative path, forward slashes on every platform.
+    pub path: String,
+    pub text: String,
+    pub lex: Lexed,
+    pub lines: Vec<String>,
+}
+
+impl SourceFile {
+    pub fn new(path: String, text: String) -> SourceFile {
+        let lex = lex(&text);
+        let lines = text.split('\n').map(str::to_owned).collect();
+        SourceFile { path, text, lex, lines }
+    }
+
+    /// Final path component (`serve.rs` for `rust/.../serve.rs`).
+    pub fn base(&self) -> &str {
+        self.path.rsplit('/').next().unwrap_or(&self.path)
+    }
+}
+
+/// Everything a rule may consult.
+pub struct Tree {
+    pub files: Vec<SourceFile>,
+    pub design: Option<String>,
+    /// `(rel path, first line)` per committed registry CSV.
+    pub registry: Vec<(String, String)>,
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let r = p.strip_prefix(root).unwrap_or(p);
+    let parts: Vec<String> =
+        r.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+fn walk(root: &Path, dir: &Path, files: &mut Vec<SourceFile>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut entries: Vec<_> = rd.flatten().collect();
+    entries.sort_by_key(|e| e.file_name());
+    let mut subdirs = Vec::new();
+    for e in &entries {
+        let p = e.path();
+        let name = e.file_name().to_string_lossy().into_owned();
+        if p.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_str()) {
+                subdirs.push(p);
+            }
+        } else if name.ends_with(".rs") {
+            if let Ok(text) = fs::read_to_string(&p) {
+                files.push(SourceFile::new(rel_path(root, &p), text));
+            }
+        }
+    }
+    for d in subdirs {
+        walk(root, &d, files);
+    }
+}
+
+impl Tree {
+    pub fn new(root: &Path) -> Tree {
+        let mut files = Vec::new();
+        walk(root, root, &mut files);
+        // match the Python mirror's os.walk order: parent dir's files
+        // first, then subdirectories, everything name-sorted — the walk
+        // above already does exactly that, but sort by path for a
+        // stable global order regardless of traversal shape
+        files.sort_by(|a, b| a.path.cmp(&b.path));
+        let design = fs::read_to_string(root.join("DESIGN.md")).ok();
+        let mut registry = Vec::new();
+        if let Ok(rd) = fs::read_dir(root.join("registry")) {
+            let mut names: Vec<_> = rd.flatten().map(|e| e.file_name()).collect();
+            names.sort();
+            for name in names {
+                let n = name.to_string_lossy().into_owned();
+                if !n.ends_with(".csv") {
+                    continue;
+                }
+                if let Ok(text) = fs::read_to_string(root.join("registry").join(&name)) {
+                    let first = text.split('\n').next().unwrap_or("").to_owned();
+                    registry.push((format!("registry/{n}"), first));
+                }
+            }
+        }
+        Tree { files, design, registry }
+    }
+}

@@ -1,0 +1,6 @@
+pub fn scale_into(out: &mut [f32], k: f32) {
+    let tmp: Vec<f32> = Vec::new();
+    for v in out.iter_mut() {
+        *v *= k + tmp.len() as f32;
+    }
+}

@@ -1,0 +1,10 @@
+pub fn scale_into(out: &mut [f32], k: f32) {
+    for v in out.iter_mut() {
+        *v *= k;
+    }
+}
+
+pub fn gather(xs: &[f32]) -> Vec<f32> {
+    // not a hot path: allocation is fine outside `*_into` entry points
+    xs.iter().map(|v| v * 2.0).collect()
+}

@@ -1,0 +1,7 @@
+pub fn scale_into(out: &mut [f32], k: f32) {
+    // lint: allow(alloc): fixture — suppression with no DESIGN.md backing (DESIGN.md §15)
+    let tmp: Vec<f32> = Vec::new();
+    for v in out.iter_mut() {
+        *v *= k + tmp.len() as f32;
+    }
+}

@@ -1,0 +1,5 @@
+pub const REGISTRY_MAGIC: &str = "# fixture-registry v1";
+
+pub fn magic() -> &'static str {
+    REGISTRY_MAGIC
+}

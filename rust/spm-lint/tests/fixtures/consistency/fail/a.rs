@@ -1,0 +1,5 @@
+//! Buffer sizing rationale lives in DESIGN.md §9.
+
+pub fn answer() -> u32 {
+    42
+}

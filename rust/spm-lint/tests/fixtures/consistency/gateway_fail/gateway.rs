@@ -1,0 +1,14 @@
+pub const OP_PING: u8 = 1;
+pub const OP_DROP: u8 = 2;
+
+pub struct GatewayClient;
+
+impl GatewayClient {
+    pub fn ping(&self) -> u8 {
+        OP_PING
+    }
+}
+
+pub fn serve_one(op: u8) -> bool {
+    op == OP_PING
+}

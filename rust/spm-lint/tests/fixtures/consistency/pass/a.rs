@@ -1,0 +1,5 @@
+//! Buffer sizing rationale lives in DESIGN.md §1.
+
+pub fn answer() -> u32 {
+    42
+}

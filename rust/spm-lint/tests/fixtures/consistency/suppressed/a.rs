@@ -1,0 +1,6 @@
+// lint: allow(consistency): fixture — section lands with the next PR
+// Buffer sizing rationale will live in DESIGN.md §9.
+
+pub fn answer() -> u32 {
+    42
+}

@@ -1,0 +1,5 @@
+use std::collections::HashMap;
+
+pub fn answer() -> u32 {
+    41 + 1
+}

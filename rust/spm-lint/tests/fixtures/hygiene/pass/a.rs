@@ -1,0 +1,6 @@
+use std::collections::HashMap;
+
+pub fn count() -> usize {
+    let m: HashMap<u32, u32> = HashMap::new();
+    m.len()
+}

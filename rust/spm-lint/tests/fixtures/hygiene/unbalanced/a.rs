@@ -1,0 +1,4 @@
+pub fn answer() -> u32 {
+    let x = (41 + 1;
+    x
+}

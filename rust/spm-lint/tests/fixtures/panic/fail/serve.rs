@@ -1,0 +1,10 @@
+pub fn run(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn must(v: Option<u32>) -> u32 {
+    if v.is_none() {
+        panic!("no value");
+    }
+    v.expect("checked above")
+}

@@ -1,0 +1,5 @@
+pub fn run() -> u32 {
+    let v: Option<u32> = Some(3);
+    // lint: allow(panic): fixture — value constructed two lines up
+    v.unwrap()
+}

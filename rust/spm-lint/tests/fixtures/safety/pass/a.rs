@@ -1,0 +1,15 @@
+pub fn read_first(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees `p` points at a live, aligned f32.
+    unsafe { *p }
+}
+
+/// # Safety
+/// `p` must point at `len` initialized f32s.
+pub unsafe fn sum(p: *const f32, len: usize) -> f32 {
+    let mut acc = 0.0;
+    for i in 0..len {
+        // SAFETY: i < len, and the fn contract covers 0..len.
+        acc += unsafe { *p.add(i) };
+    }
+    acc
+}

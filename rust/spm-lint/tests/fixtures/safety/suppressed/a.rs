@@ -1,0 +1,4 @@
+pub fn read_first(p: *const f32) -> f32 {
+    // lint: allow(safety): fixture — bounds argued at the call site
+    unsafe { *p }
+}

@@ -1,0 +1,5 @@
+// lint: allow(bogus): not a rule at all
+pub fn seven() -> u32 {
+    // lint: allow(alloc)
+    7
+}

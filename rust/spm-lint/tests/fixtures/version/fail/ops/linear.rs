@@ -1,0 +1,14 @@
+pub struct LinearOp {
+    params: Vec<f32>,
+    params_version: u64,
+}
+
+impl LinearOp {
+    pub fn params_mut(&mut self) -> &mut [f32] {
+        &mut self.params
+    }
+
+    pub fn version(&self) -> u64 {
+        self.params_version
+    }
+}

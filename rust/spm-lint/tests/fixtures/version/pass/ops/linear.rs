@@ -1,0 +1,15 @@
+pub struct LinearOp {
+    params: Vec<f32>,
+    params_version: u64,
+}
+
+impl LinearOp {
+    pub fn params_mut(&mut self) -> &mut [f32] {
+        self.params_version += 1;
+        &mut self.params
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+}

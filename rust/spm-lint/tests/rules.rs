@@ -1,0 +1,149 @@
+//! Fixture corpus tests: every rule R1–R6 has a passing, a violating,
+//! and a suppressed case (plus the meta-rule cases for bad suppressions
+//! and the R2 DESIGN-§15 cross-check). The expected outputs here are
+//! kept byte-aligned with `tools/spm_lint.py` run over the same
+//! fixtures — the two implementations must never drift (DESIGN.md §18).
+
+use std::path::PathBuf;
+
+use spm_lint::{lint_tree, Finding};
+
+fn lint(rel: &str) -> Vec<Finding> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(rel);
+    lint_tree(&root).0
+}
+
+fn assert_clean(rel: &str) {
+    let f = lint(rel);
+    assert!(
+        f.is_empty(),
+        "{rel} should be clean, got:\n{}",
+        f.iter().map(|x| x.render()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+fn assert_fires(rel: &str, rule: &str, expect: &[(&str, usize)]) {
+    let f = lint(rel);
+    assert_eq!(
+        f.len(),
+        expect.len(),
+        "{rel}: expected {} finding(s), got:\n{}",
+        expect.len(),
+        f.iter().map(|x| x.render()).collect::<Vec<_>>().join("\n")
+    );
+    for (found, (path, line)) in f.iter().zip(expect) {
+        assert_eq!(found.rule, rule, "{rel}: wrong rule in {}", found.render());
+        assert_eq!(&found.path, path, "{rel}: wrong path in {}", found.render());
+        assert_eq!(found.line, *line, "{rel}: wrong line in {}", found.render());
+    }
+}
+
+// R1 safety -----------------------------------------------------------------
+
+#[test]
+fn r1_safety_pass_fail_suppressed() {
+    assert_clean("safety/pass");
+    assert_fires("safety/fail", "safety", &[("a.rs", 2)]);
+    assert_clean("safety/suppressed");
+}
+
+// R2 alloc ------------------------------------------------------------------
+
+#[test]
+fn r2_alloc_pass_fail_suppressed() {
+    assert_clean("alloc/pass");
+    assert_fires("alloc/fail", "alloc", &[("a.rs", 2)]);
+    assert_clean("alloc/suppressed");
+}
+
+#[test]
+fn r2_alloc_suppression_must_be_backed_by_design_15() {
+    // suppressed but the fn is absent from §15's exception list: the
+    // cross-check fires as a (non-suppressible) consistency finding
+    assert_fires("alloc/unlisted", "consistency", &[("a.rs", 3)]);
+}
+
+// R3 panic ------------------------------------------------------------------
+
+#[test]
+fn r3_panic_pass_fail_suppressed() {
+    assert_clean("panic/pass");
+    assert_fires(
+        "panic/fail",
+        "panic",
+        &[("serve.rs", 2), ("serve.rs", 7), ("serve.rs", 9)],
+    );
+    assert_clean("panic/suppressed");
+}
+
+// R4 version ----------------------------------------------------------------
+
+#[test]
+fn r4_version_pass_fail_suppressed() {
+    assert_clean("version/pass");
+    assert_fires("version/fail", "version", &[("ops/linear.rs", 7)]);
+    assert_clean("version/suppressed");
+}
+
+// R5 consistency ------------------------------------------------------------
+
+#[test]
+fn r5_design_ref_pass_fail_suppressed() {
+    assert_clean("consistency/pass");
+    assert_fires("consistency/fail", "consistency", &[("a.rs", 1)]);
+    assert_clean("consistency/suppressed");
+}
+
+#[test]
+fn r5_registry_magic_mismatch_fires_and_baselines() {
+    assert_fires("consistency/registry_fail", "consistency", &[("registry/x.csv", 1)]);
+    // the same drift parked behind a lint.baseline entry is clean, and
+    // counts as suppressed rather than vanishing silently
+    let (findings, suppressed) = lint_tree(
+        &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/consistency/baseline"),
+    );
+    assert!(findings.is_empty(), "baselined fixture should be clean");
+    assert!(suppressed >= 1, "the baseline should have eaten the finding");
+}
+
+#[test]
+fn r5_gateway_wire_constants_must_be_used_on_both_sides() {
+    assert_fires(
+        "consistency/gateway_fail",
+        "consistency",
+        &[("gateway.rs", 2), ("gateway.rs", 2)],
+    );
+    let f = lint("consistency/gateway_fail");
+    assert!(f[0].message.contains("OP_DROP"));
+    assert!(f.iter().any(|x| x.message.contains("GatewayClient")));
+    assert!(f.iter().any(|x| x.message.contains("server side")));
+}
+
+// R6 hygiene ----------------------------------------------------------------
+
+#[test]
+fn r6_hygiene_pass_fail_suppressed() {
+    assert_clean("hygiene/pass");
+    assert_fires("hygiene/fail", "hygiene", &[("a.rs", 1)]);
+    assert_clean("hygiene/suppressed");
+}
+
+#[test]
+fn r6_unbalanced_brackets_fire() {
+    assert_fires("hygiene/unbalanced", "hygiene", &[("a.rs", 4)]);
+    let f = lint("hygiene/unbalanced");
+    assert!(f[0].message.contains("unbalanced"));
+}
+
+// suppression grammar -------------------------------------------------------
+
+#[test]
+fn bad_suppressions_are_findings_themselves() {
+    let f = lint("suppress/fail");
+    assert_eq!(f.len(), 2, "unknown rule + missing reason");
+    assert!(f.iter().all(|x| x.rule == "suppress"));
+    assert!(f.iter().any(|x| x.message.contains("unknown rule 'bogus'")));
+    assert!(f.iter().any(|x| x.message.contains("carries no reason")));
+    // meta-findings render under the LINT id, not an R number
+    assert!(f[0].render().contains("LINT(suppress)"));
+}

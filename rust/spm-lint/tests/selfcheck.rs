@@ -1,0 +1,30 @@
+//! The committed tree must be lint-clean: the same assertion CI's lint
+//! job makes with the binary, and the same one `./ci.sh --lint` makes
+//! through the Python mirror in toolchain-less containers. Every
+//! suppression the repo relies on is therefore exercised on every
+//! `cargo test` run.
+
+use std::path::PathBuf;
+
+#[test]
+fn committed_tree_is_lint_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let (findings, _suppressed) = spm_lint::lint_tree(&root);
+    assert!(
+        findings.is_empty(),
+        "the committed tree must be lint-clean; run `cargo run -p spm-lint` (or \
+         `python3 tools/spm_lint.py`) and fix or suppress:\n{}",
+        findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn repo_has_sources_to_lint() {
+    // guards against a silently-empty walk (wrong root, overzealous
+    // skip list) making the selfcheck vacuous
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let tree = spm_lint::Tree::new(&root);
+    assert!(tree.files.len() > 20, "walk found only {} .rs files", tree.files.len());
+    assert!(tree.design.is_some(), "DESIGN.md should be discovered");
+    assert!(!tree.registry.is_empty(), "registry/*.csv should be discovered");
+}

@@ -1,0 +1,835 @@
+#!/usr/bin/env python3
+"""Toolchain-less mirror of `spm-lint` (rust/spm-lint, DESIGN.md §18).
+
+The canonical implementation of the repo-invariant rule set R1-R6 is the
+dependency-free Rust crate `rust/spm-lint`; this file re-implements the
+same lexer + rules in stdlib Python so `./ci.sh --lint` still runs in
+containers without a Rust toolchain (the environment every PR note in
+CHANGES.md complains about). Rule IDs, messages, file discovery,
+suppression grammar, and the baseline format are kept in lockstep with
+the crate — `rust/spm-lint/tests/selfcheck.rs` and this script must
+agree that the committed tree is clean. When editing a rule, edit BOTH.
+
+Usage: python3 tools/spm_lint.py [--root DIR] [--json PATH]
+Exit status: 0 = clean, 1 = findings, 2 = usage/IO error.
+"""
+
+import json
+import os
+import re
+import sys
+
+# --------------------------------------------------------------------------
+# Lexer: comment/string/char-literal aware masking (mirror of lexer.rs)
+# --------------------------------------------------------------------------
+
+
+class Lexed:
+    """`mask` is the source with comment bodies and string/char literal
+    contents blanked to spaces (newlines kept, so byte offsets and line
+    numbers survive); `comments` / `strings` record what was blanked."""
+
+    def __init__(self, mask, comments, strings):
+        self.mask = mask
+        self.comments = comments  # list of (line, text) — text w/o // or /* */
+        self.strings = strings  # list of (line, contents)
+
+
+def lex(src):
+    n = len(src)
+    out = list(src)
+    comments = []
+    strings = []
+    i = 0
+    line = 1
+
+    def blank(a, b):
+        for k in range(a, b):
+            if out[k] != "\n":
+                out[k] = " "
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = src.find("\n", i)
+            if j == -1:
+                j = n
+            comments.append((line, src[i + 2 : j]))
+            blank(i, j)
+            i = j
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "*":
+            start, start_line = i, line
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if src.startswith("/*", i):
+                    depth += 1
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    i += 2
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            comments.append((start_line, src[start + 2 : max(start + 2, i - 2)]))
+            blank(start, i)
+            continue
+        if c == "r" or (c == "b" and i + 1 < n and src[i + 1] == "r"):
+            # raw (byte) string r"..." / r#"..."# / br#"..."#
+            j = i + (1 if c == "r" else 2)
+            hashes = 0
+            while j < n and src[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and src[j] == '"' and (hashes > 0 or src[i : i + 2] in ('r"', "br") ):
+                close = '"' + "#" * hashes
+                k = src.find(close, j + 1)
+                if k == -1:
+                    k = n
+                start_line = line
+                line += src.count("\n", i, k)
+                strings.append((start_line, src[j + 1 : k]))
+                blank(j + 1, k)
+                i = k + len(close)
+                continue
+        if c == "b" and i + 1 < n and src[i + 1] == '"':
+            i += 1
+            c = '"'
+        if c == '"':
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                    continue
+                if src[j] == '"':
+                    break
+                j += 1
+            start_line = line
+            line += src.count("\n", i, j)
+            strings.append((start_line, src[i + 1 : min(j, n)]))
+            blank(i + 1, min(j, n))
+            i = min(j, n) + 1
+            continue
+        if c == "'":
+            # char literal vs lifetime: 'x' or '\..' is a literal,
+            # 'ident (no closing quote right after) is a lifetime
+            if i + 1 < n and src[i + 1] == "\\":
+                j = i + 2
+                while j < n and src[j] != "'":
+                    j += 1
+                blank(i + 1, j)
+                i = j + 1
+                continue
+            if i + 2 < n and src[i + 2] == "'":
+                blank(i + 1, i + 2)
+                i = i + 3
+                continue
+            i += 1
+            continue
+        i += 1
+    return Lexed("".join(out), comments, strings)
+
+
+# --------------------------------------------------------------------------
+# File model + discovery (mirror of tree.rs)
+# --------------------------------------------------------------------------
+
+SKIP_DIRS = {".git", "target", "python", "artifacts", "fixtures", "node_modules"}
+
+
+class SourceFile:
+    def __init__(self, path, text):
+        self.path = path  # root-relative, forward slashes
+        self.text = text
+        self.lex = lex(text)
+        self.lines = text.split("\n")
+
+
+class Tree:
+    """Everything a rule may consult: the .rs files plus the repo-level
+    artifacts R5 cross-checks (DESIGN.md, registry/*.csv)."""
+
+    def __init__(self, root):
+        self.root = root
+        self.files = []
+        self.design = None  # DESIGN.md text or None
+        self.registry = []  # list of (rel path, first line)
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames if d not in SKIP_DIRS)
+            for f in sorted(filenames):
+                if f.endswith(".rs"):
+                    p = os.path.join(dirpath, f)
+                    rel = os.path.relpath(p, root).replace(os.sep, "/")
+                    with open(p, encoding="utf-8") as fh:
+                        self.files.append(SourceFile(rel, fh.read()))
+        dpath = os.path.join(root, "DESIGN.md")
+        if os.path.isfile(dpath):
+            with open(dpath, encoding="utf-8") as fh:
+                self.design = fh.read()
+        regdir = os.path.join(root, "registry")
+        if os.path.isdir(regdir):
+            for f in sorted(os.listdir(regdir)):
+                if f.endswith(".csv"):
+                    with open(os.path.join(regdir, f), encoding="utf-8") as fh:
+                        first = fh.readline().rstrip("\n")
+                    self.registry.append(("registry/" + f, first))
+
+
+# --------------------------------------------------------------------------
+# Shared scanning helpers (mirror of rules/mod.rs)
+# --------------------------------------------------------------------------
+
+
+def line_of(mask, offset):
+    return mask.count("\n", 0, offset) + 1
+
+
+def brace_span(mask, open_idx):
+    """Byte span of a {...} block starting at the `{` at open_idx."""
+    depth = 0
+    for k in range(open_idx, len(mask)):
+        if mask[k] == "{":
+            depth += 1
+        elif mask[k] == "}":
+            depth -= 1
+            if depth == 0:
+                return (open_idx, k + 1)
+    return (open_idx, len(mask))
+
+
+FN_RE = re.compile(r"\bfn\s+(\w+)")
+
+
+def fn_spans(mask):
+    """(name, sig_start, body_span) for every fn with a body."""
+    out = []
+    for m in FN_RE.finditer(mask):
+        j = mask.find("{", m.end())
+        semi = mask.find(";", m.end())
+        if j == -1 or (semi != -1 and semi < j):
+            continue  # trait method declaration without a body
+        out.append((m.group(1), m.start(), brace_span(mask, j)))
+    return out
+
+
+def test_regions(mask):
+    """Spans of #[cfg(test)]-gated items and #[test] fns."""
+    spans = []
+    for m in re.finditer(r"#\[\s*cfg\s*\(\s*test\s*\)\s*\]|#\[\s*test\s*\]", mask):
+        j = mask.find("{", m.end())
+        if j != -1:
+            spans.append(brace_span(mask, j))
+    return spans
+
+
+def in_spans(offset, spans):
+    return any(a <= offset < b for a, b in spans)
+
+
+def impl_header_of(mask, offset):
+    """Header text of the innermost `impl` block containing offset."""
+    best = None
+    for m in re.finditer(r"\bimpl\b", mask):
+        if m.start() > offset:
+            break
+        j = mask.find("{", m.end())
+        if j == -1:
+            continue
+        a, b = brace_span(mask, j)
+        if a <= offset < b:
+            best = mask[m.start() : j]
+    return best
+
+
+# --------------------------------------------------------------------------
+# Findings + suppressions (mirror of suppress.rs / report.rs)
+# --------------------------------------------------------------------------
+
+RULES = {
+    "R1": "safety",
+    "R2": "alloc",
+    "R3": "panic",
+    "R4": "version",
+    "R5": "consistency",
+    "R6": "hygiene",
+}
+NAMES = {v: k for k, v in RULES.items()}
+
+SUPPRESS_RE = re.compile(r"lint:\s*allow\((\w+)\)\s*:?\s*(.*)")
+
+
+class Finding:
+    def __init__(self, path, line, rule, message):
+        self.path = path
+        self.line = line
+        self.rule = rule  # short name, e.g. "panic"
+        self.message = message
+
+    def render(self):
+        return "%s:%d: %s(%s) %s" % (
+            self.path,
+            self.line,
+            NAMES.get(self.rule, "LINT"),
+            self.rule,
+            self.message,
+        )
+
+
+def suppressions(sf, findings):
+    """Inline suppression table for one file: rule -> set of covered
+    lines. A `// lint: allow(<rule>): <reason>` covers its own line and
+    the next one. Missing/empty reason or an unknown rule is itself a
+    finding (under the meta-rule name `suppress`)."""
+    table = {}
+    for (line, text) in sf.lex.comments:
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rule, reason = m.group(1), m.group(2).strip()
+        if rule not in NAMES:
+            findings.append(
+                Finding(sf.path, line, "suppress", "unknown rule '%s' in suppression" % rule)
+            )
+            continue
+        if not reason:
+            findings.append(
+                Finding(sf.path, line, "suppress", "suppression for '%s' carries no reason" % rule)
+            )
+            continue
+        table.setdefault(rule, set()).update((line, line + 1))
+    return table
+
+
+def load_baseline(root, findings):
+    """`lint.baseline` at the repo root: `<rule> <path> :: <reason>` per
+    line suppresses every finding of <rule> in <path>. Returns list of
+    [rule, path, reason, hits]."""
+    path = os.path.join(root, "lint.baseline")
+    entries = []
+    if not os.path.isfile(path):
+        return entries
+    with open(path, encoding="utf-8") as fh:
+        for i, raw in enumerate(fh, 1):
+            s = raw.strip()
+            if not s or s.startswith("#"):
+                continue
+            head, sep, reason = s.partition("::")
+            parts = head.split()
+            if len(parts) != 2 or not sep or not reason.strip():
+                findings.append(
+                    Finding(
+                        "lint.baseline",
+                        i,
+                        "suppress",
+                        "malformed baseline entry (want `<rule> <path> :: <reason>`)",
+                    )
+                )
+                continue
+            rule, fpath = parts
+            if rule not in NAMES:
+                findings.append(
+                    Finding("lint.baseline", i, "suppress", "unknown rule '%s'" % rule)
+                )
+                continue
+            entries.append([rule, fpath, reason.strip(), 0, i])
+    return entries
+
+
+# --------------------------------------------------------------------------
+# R1 safety: every unsafe site carries a SAFETY comment
+# --------------------------------------------------------------------------
+
+
+def is_attr_or_empty(line):
+    t = line.strip()
+    return t == "" or t.startswith("#[") or t.startswith("#!")
+
+
+def rule_safety(sf, findings):
+    mask = sf.lex.mask
+    comment_lines = {}
+    for (line, text) in sf.lex.comments:
+        comment_lines.setdefault(line, []).append(text)
+        for extra in range(text.count("\n")):
+            comment_lines.setdefault(line + 1 + extra, []).append(text)
+
+    def documented(line):
+        # same-line trailing/leading comment, else walk up through the
+        # contiguous block of comments and attributes directly above
+        for probe in comment_lines.get(line, []):
+            if "SAFETY:" in probe or "# Safety" in probe:
+                return True
+        l = line - 1
+        while l >= 1:
+            if l in comment_lines:
+                if any("SAFETY:" in t or "# Safety" in t for t in comment_lines[l]):
+                    return True
+                l -= 1
+                continue
+            if l - 1 < len(sf.lines) and is_attr_or_empty(sf.lines[l - 1]) and sf.lines[l - 1].strip() != "":
+                l -= 1
+                continue
+            break
+        return False
+
+    for m in re.finditer(r"\bunsafe\b", mask):
+        line = line_of(mask, m.start())
+        if not documented(line):
+            findings.append(
+                Finding(
+                    sf.path,
+                    line,
+                    "safety",
+                    "`unsafe` without an adjacent `// SAFETY:` (or `/// # Safety`) comment",
+                )
+            )
+
+
+# --------------------------------------------------------------------------
+# R2 alloc: no allocation constructs in hot-path functions
+# --------------------------------------------------------------------------
+
+ALLOC_PATTERNS = [
+    (re.compile(r"\bVec\s*::\s*new\b"), "Vec::new"),
+    (re.compile(r"\bvec\s*!"), "vec!"),
+    (re.compile(r"\.\s*to_vec\s*\("), ".to_vec()"),
+    (re.compile(r"\.\s*clone\s*\(\s*\)"), ".clone()"),
+    (re.compile(r"\.\s*collect\b"), ".collect()"),
+    (re.compile(r"\bBox\s*::\s*new\b"), "Box::new"),
+    (re.compile(r"\bformat\s*!"), "format!"),
+    (re.compile(r"\bString\s*::\s*from\b"), "String::from"),
+]
+
+KERNEL_FN = re.compile(r"^(stage_|fwd_|bwd_|lone_)")
+
+
+def hot_functions(sf):
+    """(fn name, body span) for the DESIGN.md §15 hot paths: `*_into`
+    entry points everywhere, stage kernels in ops/backend*.rs, and
+    `NativeExecutor::forward` in serve.rs."""
+    mask = sf.lex.mask
+    base = sf.path.rsplit("/", 1)[-1]
+    tests = test_regions(mask)
+    out = []
+    for (name, sig_start, body) in fn_spans(mask):
+        if in_spans(sig_start, tests):
+            continue
+        hot = name.endswith("_into")
+        if not hot and base.startswith("backend") and KERNEL_FN.search(name):
+            hot = True
+        if not hot and base == "serve.rs" and name == "forward":
+            hdr = impl_header_of(mask, sig_start)
+            hot = hdr is not None and "NativeExecutor" in hdr
+        if hot:
+            out.append((name, body))
+    return out
+
+
+def rule_alloc(sf, tree, findings, supp):
+    """Suppressed hits are cross-checked against DESIGN.md §15: the
+    suppression is only honored when the hot function is named in the
+    §15 exception list (keeps the two in lockstep) — that secondary
+    finding is NOT itself suppressible."""
+    mask = sf.lex.mask
+    design15 = ""
+    if tree.design is not None:
+        m = re.search(r"^## §15\b.*?(?=^## §|\Z)", tree.design, re.S | re.M)
+        if m:
+            design15 = m.group(0)
+    covered = supp.get("alloc", set())
+    for (name, (a, b)) in hot_functions(sf):
+        body = mask[a:b]
+        for (pat, label) in ALLOC_PATTERNS:
+            for hit in pat.finditer(body):
+                line = line_of(mask, a + hit.start())
+                if line in covered:
+                    if design15 and name not in design15:
+                        findings.append(
+                            Finding(
+                                sf.path,
+                                line,
+                                "consistency",
+                                "alloc suppression in `%s` not backed by the DESIGN.md §15 exception list" % name,
+                            )
+                        )
+                    continue
+                findings.append(
+                    Finding(
+                        sf.path,
+                        line,
+                        "alloc",
+                        "%s in hot-path fn `%s` (zero-allocation contract, DESIGN.md §15)" % (label, name),
+                    )
+                )
+
+
+# --------------------------------------------------------------------------
+# R3 panic: serving/gateway/train worker threads must be panic-free
+# --------------------------------------------------------------------------
+
+PANIC_FILES = ("serve.rs", "gateway.rs", "train.rs")
+PANIC_PATTERNS = [
+    (re.compile(r"\.\s*unwrap\s*\(\s*\)"), ".unwrap()"),
+    (re.compile(r"\.\s*expect\s*\("), ".expect("),
+    (re.compile(r"\bpanic\s*!"), "panic!"),
+]
+
+
+def rule_panic(sf, findings):
+    if sf.path.rsplit("/", 1)[-1] not in PANIC_FILES:
+        return
+    if "/tests/" in sf.path:  # integration-test crates may panic freely
+        return
+    mask = sf.lex.mask
+    tests = test_regions(mask)
+    for (pat, label) in PANIC_PATTERNS:
+        for hit in pat.finditer(mask):
+            if in_spans(hit.start(), tests):
+                continue
+            line = line_of(mask, hit.start())
+            findings.append(
+                Finding(
+                    sf.path,
+                    line,
+                    "panic",
+                    "%s in non-test serving/training code (a worker panic wedges the session, DESIGN.md §16)" % label,
+                )
+            )
+
+
+# --------------------------------------------------------------------------
+# R4 version: &mut params doors must bump params_version
+# --------------------------------------------------------------------------
+
+MUT_PARAMS = re.compile(r"&\s*mut\s+self\s*\.\s*params\b(?!_version)")
+BUMP = re.compile(r"\bself\s*\.\s*params_version\s*\+=")
+
+
+def rule_version(sf, findings):
+    if not sf.path.endswith("ops/linear.rs"):
+        return
+    mask = sf.lex.mask
+    m = re.search(r"\bimpl\s+LinearOp\b", mask)
+    if not m:
+        return
+    j = mask.find("{", m.end())
+    ia, ib = brace_span(mask, j)
+    impl_body = mask[ia:ib]
+    for (name, sig_start, (a, b)) in fn_spans(impl_body):
+        body = impl_body[a:b]
+        if MUT_PARAMS.search(body) and not BUMP.search(body):
+            findings.append(
+                Finding(
+                    sf.path,
+                    line_of(mask, ia + sig_start),
+                    "version",
+                    "`%s` hands out &mut params without bumping params_version (cache-invalidation contract, DESIGN.md §15)" % name,
+                )
+            )
+
+
+# --------------------------------------------------------------------------
+# R5 consistency: cross-file contracts
+# --------------------------------------------------------------------------
+
+CONST_DEF = re.compile(r"\bconst\s+((?:OP|ST)_\w+)\s*:\s*u8")
+
+
+def rule_consistency_gateway(sf, findings):
+    if sf.path.rsplit("/", 1)[-1] != "gateway.rs":
+        return
+    mask = sf.lex.mask
+    consts = [(m.group(1), m.start()) for m in CONST_DEF.finditer(mask)]
+    if not consts:
+        return
+    client = None
+    m = re.search(r"\bimpl\s+GatewayClient\b", mask)
+    if m:
+        j = mask.find("{", m.end())
+        client = brace_span(mask, j)
+    tests = test_regions(mask)
+    for (name, def_at) in consts:
+        refs = [
+            o
+            for o in re.finditer(r"\b%s\b" % re.escape(name), mask)
+            if not (def_at <= o.start() <= def_at + 60) and not in_spans(o.start(), tests)
+        ]
+        in_client = [o for o in refs if client and in_spans(o.start(), [client])]
+        in_server = [o for o in refs if not client or not in_spans(o.start(), [client])]
+        line = line_of(mask, def_at)
+        if client and not in_client:
+            findings.append(
+                Finding(
+                    sf.path,
+                    line,
+                    "consistency",
+                    "wire constant `%s` is not referenced by GatewayClient (server/client protocol drift)" % name,
+                )
+            )
+        if not in_server:
+            findings.append(
+                Finding(
+                    sf.path,
+                    line,
+                    "consistency",
+                    "wire constant `%s` is not referenced by the gateway server side" % name,
+                )
+            )
+
+
+def rule_consistency_schema(sf, findings):
+    if not sf.path.startswith("benches/"):
+        return
+    for (line, contents) in sf.lex.strings:
+        if re.search(r"\bschema_version\b", contents):
+            findings.append(
+                Finding(
+                    sf.path,
+                    line,
+                    "consistency",
+                    "hand-rolled schema_version stamp; go through bench_args::json_header",
+                )
+            )
+
+
+def rule_consistency_registry(tree, findings):
+    magic = None
+    magic_at = ("", 0)
+    for sf in tree.files:
+        if sf.path.endswith("src/ablate.rs"):
+            m = re.search(r'const\s+REGISTRY_MAGIC\s*:\s*&str\s*=\s*"([^"]*)"', sf.text)
+            if m:
+                magic = m.group(1)
+                magic_at = (sf.path, line_of(sf.text, m.start()))
+    if magic is None:
+        return
+    for (path, first) in tree.registry:
+        if first != magic:
+            findings.append(
+                Finding(
+                    path,
+                    1,
+                    "consistency",
+                    "registry header %r is not byte-equal to REGISTRY_MAGIC %r (%s:%d)"
+                    % (first, magic, magic_at[0], magic_at[1]),
+                )
+            )
+
+
+SECTION_REF = re.compile(r"DESIGN\.md\s+§§?(\d+)(?:\s*[-–]\s*§?(\d+))?")
+
+
+def rule_consistency_design(sf, tree, findings):
+    if tree.design is None:
+        return
+    sections = set(int(m.group(1)) for m in re.finditer(r"^## §(\d+)", tree.design, re.M))
+    for (line, text) in sf.lex.comments:
+        for m in SECTION_REF.finditer(text):
+            for g in (m.group(1), m.group(2)):
+                if g is not None and int(g) not in sections:
+                    findings.append(
+                        Finding(
+                            sf.path,
+                            line,
+                            "consistency",
+                            "comment references DESIGN.md §%s, which does not exist" % g,
+                        )
+                    )
+
+
+# --------------------------------------------------------------------------
+# R6 hygiene: bracket balance + unused `use`
+# --------------------------------------------------------------------------
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {v: k for k, v in OPEN.items()}
+
+# Traits routinely imported only for their methods / macro names the
+# text search cannot see a bare identifier for (documented, DESIGN.md
+# §18). Kept deliberately short.
+TRAIT_METHOD_ALLOW = {"Read", "Write", "BufRead", "Seek", "FromStr", "Context", "Display"}
+
+
+def rule_hygiene_balance(sf, findings):
+    mask = sf.lex.mask
+    stack = []
+    for idx, ch in enumerate(mask):
+        if ch in OPEN:
+            stack.append((ch, idx))
+        elif ch in CLOSE:
+            if not stack or stack[-1][0] != CLOSE[ch]:
+                findings.append(
+                    Finding(sf.path, line_of(mask, idx), "hygiene", "unbalanced `%s`" % ch)
+                )
+                return
+            stack.pop()
+    if stack:
+        ch, idx = stack[-1]
+        findings.append(
+            Finding(sf.path, line_of(mask, idx), "hygiene", "unclosed `%s`" % ch)
+        )
+
+
+USE_RE = re.compile(r"(?:^|\n)(\s*)(pub\s*(?:\([^)]*\)\s*)?)?use\s+([^;]+);", re.S)
+
+
+def use_leaves(clause):
+    """Leaf identifiers a `use` clause binds: the last path segment, the
+    `as` alias, every member of a `{...}` group (recursively); `*` globs
+    and `as _` bind nothing checkable."""
+    clause = clause.strip()
+    if clause.endswith("}"):
+        b = clause.index("{")
+        inner = clause[b + 1 : -1]
+        prefix = clause[:b].rstrip(": \t\n")
+        parts, depth, cur = [], 0, ""
+        for ch in inner:
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append(cur)
+                cur = ""
+            else:
+                cur += ch
+        parts.append(cur)
+        out = []
+        for p in parts:
+            if not p.strip():
+                continue
+            if p.strip() == "self":
+                seg = prefix.rsplit("::", 1)[-1].strip()
+                if seg:
+                    out.append(seg)
+            else:
+                out.extend(use_leaves(p))
+        return out
+    if " as " in clause:
+        alias = clause.rsplit(" as ", 1)[1].strip()
+        return [] if alias == "_" else [alias]
+    leaf = clause.rsplit("::", 1)[-1].strip()
+    if leaf in ("*", "self") or not leaf:
+        return []
+    return [leaf]
+
+
+def rule_hygiene_unused_use(sf, findings):
+    mask = sf.lex.mask
+    spans = [(m.start(3), m.end()) for m in USE_RE.finditer(mask)]
+    rest = list(mask)
+    for a, b in spans:
+        for k in range(a, b):
+            if rest[k] != "\n":
+                rest[k] = " "
+    rest = "".join(rest)
+    for m in USE_RE.finditer(mask):
+        if m.group(2):  # pub use re-exports bind the public surface
+            continue
+        line = line_of(mask, m.start(3))
+        for name in use_leaves(m.group(3)):
+            if name in TRAIT_METHOD_ALLOW:
+                continue
+            if not re.search(r"\b%s\b" % re.escape(name), rest):
+                findings.append(
+                    Finding(sf.path, line, "hygiene", "unused import `%s`" % name)
+                )
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def lint_tree(root):
+    tree = Tree(root)
+    findings = []
+    baseline = load_baseline(root, findings)
+    supp_by_file = {}
+    for sf in tree.files:
+        supp = suppressions(sf, findings)
+        supp_by_file[sf.path] = supp
+        rule_safety(sf, findings)
+        rule_alloc(sf, tree, findings, supp)
+        rule_panic(sf, findings)
+        rule_version(sf, findings)
+        rule_consistency_gateway(sf, findings)
+        rule_consistency_schema(sf, findings)
+        rule_consistency_design(sf, tree, findings)
+        rule_hygiene_balance(sf, findings)
+        rule_hygiene_unused_use(sf, findings)
+    rule_consistency_registry(tree, findings)
+    # inline suppressions: a `lint: allow(<rule>)` covers its own line
+    # and the next one, in its own file (R2's DESIGN-§15 cross-check ran
+    # inside rule_alloc and is deliberately not re-suppressible here)
+    active = []
+    for f in findings:
+        covered = supp_by_file.get(f.path, {}).get(f.rule, set())
+        if f.line in covered:
+            continue
+        active.append(f)
+    # baseline pass: a (rule, path) entry eats every matching finding;
+    # an entry that eats nothing is stale and is itself a finding
+    remaining = []
+    for f in active:
+        eaten = False
+        for e in baseline:
+            if e[0] == f.rule and e[1] == f.path:
+                e[3] += 1
+                eaten = True
+        if not eaten:
+            remaining.append(f)
+    for e in baseline:
+        if e[3] == 0:
+            remaining.append(
+                Finding("lint.baseline", e[4], "suppress", "stale baseline entry: %s %s" % (e[0], e[1]))
+            )
+    remaining.sort(key=lambda f: (f.path, f.line, f.rule))
+    return remaining, len(findings) - len(remaining)
+
+
+def main(argv):
+    root = "."
+    json_path = None
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--root" and i + 1 < len(argv):
+            root = argv[i + 1]
+            i += 2
+        elif a == "--json" and i + 1 < len(argv):
+            json_path = argv[i + 1]
+            i += 2
+        else:
+            sys.stderr.write("usage: spm_lint.py [--root DIR] [--json PATH]\n")
+            return 2
+    active, _ = lint_tree(root)
+    for f in active:
+        print(f.render())
+    if json_path:
+        doc = {
+            "tool": "spm-lint",
+            "schema_version": 1,
+            "findings": [
+                {"file": f.path, "line": f.line, "rule": f.rule, "message": f.message}
+                for f in active
+            ],
+        }
+        with open(json_path, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=2)
+            fh.write("\n")
+    if active:
+        print("spm-lint: %d finding(s)" % len(active))
+        return 1
+    print("spm-lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
