@@ -27,7 +27,7 @@
 //! allocator in steady state (DESIGN.md §15; every path's measured
 //! `allocs_per_iter` is reported in the table and JSON).
 
-use spm_core::ops::{LinearCfg, LinearOp, SpmExec};
+use spm_core::ops::{LinearCfg, LinearKind, LinearOp, SpmExec};
 use spm_core::optim::Adam;
 use spm_core::rng::Rng;
 use spm_core::spm::{Spm, SpmSpec, Variant};
@@ -82,6 +82,23 @@ struct SpmRow {
     row_allocs: f64,
     fused_allocs: f64,
     simd_allocs: Option<f64>,
+}
+
+/// One operator-zoo row (DESIGN.md §19): a `LinearKind` benched at the
+/// equal-budget defaults against SPM at the same width.
+struct ZooRow {
+    kind: &'static str,
+    n: usize,
+    params: usize,
+    flops: usize,
+    fwd: f64,
+    /// steady-state allocator calls per `forward_into` (must be 0).
+    allocs: f64,
+    /// forward max-abs-diff vs an exact reference: the materialized
+    /// dense map for lowrank/blockshuffle, the equivalent general-SPM
+    /// op for butterfly; None for the kinds the SPM path table already
+    /// cross-checks (dense, spm).
+    diff: Option<f32>,
 }
 
 struct Args {
@@ -268,9 +285,135 @@ fn print_spm_table(rows: &[SpmRow], batch: usize) {
     }
 }
 
+/// Naive dense reference `y = x W^T + b` over a flat row-major `W`
+/// (d_out x d_in) — the oracle the structured kinds are diffed against.
+fn dense_reference(w: &[f32], bias: &[f32], x: &Mat) -> Mat {
+    let (d_out, d_in) = (bias.len(), x.cols);
+    let mut y = Mat::zeros(x.rows, d_out);
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        for i in 0..d_out {
+            let wi = &w[i * d_in..(i + 1) * d_in];
+            let mut acc = bias[i];
+            for (wv, xv) in wi.iter().zip(xr) {
+                acc += wv * xv;
+            }
+            *y.at_mut(r, i) = acc;
+        }
+    }
+    y
+}
+
+/// Materialize a structured op's exact dense (W, b): `W = U V` for
+/// lowrank, the block-diagonal scatter through the shuffle for
+/// blockshuffle. Returns None for kinds without a closed dense form
+/// here (spm/butterfly verify through the SPM reference path instead).
+fn materialize_dense(op: &LinearOp) -> Option<(Vec<f32>, Vec<f32>)> {
+    let (d_in, d_out) = (op.d_in(), op.d_out());
+    let p = op.params();
+    match op.kind() {
+        LinearKind::LowRank => {
+            let r = op.rank().expect("lowrank op has a rank");
+            let (u, rest) = p.split_at(d_out * r);
+            let (v, bias) = rest.split_at(r * d_in);
+            let mut w = vec![0.0f32; d_out * d_in];
+            for i in 0..d_out {
+                for k in 0..r {
+                    let uv = u[i * r + k];
+                    for j in 0..d_in {
+                        w[i * d_in + j] += uv * v[k * d_in + j];
+                    }
+                }
+            }
+            Some((w, bias.to_vec()))
+        }
+        LinearKind::BlockShuffle => {
+            let bs = op.block_size().expect("blockshuffle op has a block size");
+            let perm = op.shuffle().expect("blockshuffle op has a shuffle");
+            let (blocks, bias) = p.split_at(d_in * bs);
+            let mut w = vec![0.0f32; d_out * d_in];
+            for base in (0..d_in).step_by(bs) {
+                for i in 0..bs {
+                    for j in 0..bs {
+                        w[(base + i) * d_in + perm[base + j] as usize] =
+                            blocks[(base + i) * bs + j];
+                    }
+                }
+            }
+            Some((w, bias.to_vec()))
+        }
+        _ => None,
+    }
+}
+
+/// Bench one zoo kind at width `n`: forward_into timing, steady-state
+/// allocations, and exact-reference parity (DESIGN.md §19).
+fn bench_zoo_row(kind: LinearKind, n: usize, batch: usize) -> ZooRow {
+    let mut rng = Rng::new(1);
+    let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+    let cfg = LinearCfg { kind, ..LinearCfg::dense(n) }.with_seed(9);
+    let mut adam = Adam::new(1e-3);
+    let op = LinearOp::new(cfg, &mut Rng::new(7), &mut adam);
+    let reps = (60_000_000 / (batch * op.flops_per_row()).max(1)).clamp(3, 40);
+
+    let mut y = Mat { rows: 0, cols: 0, data: Vec::new() };
+    op.forward_into(&x, &mut y); // warm the reused buffer
+    let fwd = time_ms(reps, || {
+        op.forward_into(&x, &mut y);
+    });
+    let allocs = allocs::allocs_per_iter(8, || {
+        op.forward_into(&x, &mut y);
+    });
+
+    op.forward_into(&x, &mut y);
+    let diff = match kind {
+        LinearKind::Butterfly => {
+            // bit-equal to a general SPM op pinned to the butterfly
+            // schedule at the same seed
+            let spm_cfg = LinearCfg::spm(n, Variant::General)
+                .with_schedule(spm_core::pairing::Schedule::Butterfly)
+                .with_seed(9);
+            let twin = LinearOp::new(spm_cfg, &mut Rng::new(7), &mut adam);
+            Some(twin.forward(&x).max_abs_diff(&y))
+        }
+        _ => materialize_dense(&op)
+            .map(|(w, bias)| dense_reference(&w, &bias, &x).max_abs_diff(&y)),
+    };
+
+    ZooRow {
+        kind: kind.name(),
+        n,
+        params: op.param_count(),
+        flops: op.flops_per_row(),
+        fwd,
+        allocs,
+        diff,
+    }
+}
+
+fn print_zoo_table(rows: &[ZooRow], batch: usize) {
+    let n = rows.first().map_or(0, |r| r.n);
+    println!("\noperator zoo (n={n}, batch={batch}, single thread; lowrank/blockshuffle at the equal-budget defaults, diff vs exact reference, '-' = covered by the SPM path table)");
+    println!(
+        "{:<14} {:>9} {:>11} {:>11} {:>8} {:>12}",
+        "kind", "params", "flops/row", "fwd ms", "allocs", "max|diff|"
+    );
+    for r in rows {
+        println!(
+            "{:<14} {:>9} {:>11} {:>11.3} {:>8.1} {:>12}",
+            r.kind,
+            r.params,
+            r.flops,
+            r.fwd,
+            r.allocs,
+            r.diff.map_or("-".to_string(), |d| format!("{d:.3e}")),
+        );
+    }
+}
+
 /// Hand-rolled JSON (the default workspace is dependency-free): one object
 /// with the run setup, the §5 scaling rows, and the SPM path rows.
-fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
+fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], zoo: &[ZooRow], batch: usize) -> String {
     use std::fmt::Write as _;
     let mut s = json_header("core_ops");
     let _ = writeln!(s, "  \"batch\": {batch},");
@@ -321,7 +464,23 @@ fn to_json(scaling: &[ScalingRow], rows: &[SpmRow], batch: usize) -> String {
             );
         }
     }
-    s.push_str("\n  ]\n}\n");
+    s.push_str("\n  ],\n  \"operator_zoo\": [\n");
+    for (i, r) in zoo.iter().enumerate() {
+        let diff = r.diff.map_or("null".to_string(), |d| json_num(d as f64));
+        let _ = write!(
+            s,
+            "    {{\"kind\": \"{}\", \"n\": {}, \"param_count\": {}, \"flops_per_row\": {}, \"fwd_ms\": {:.6}, \"allocs_per_iter\": {}, \"fwd_max_abs_diff_vs_ref\": {}}}",
+            r.kind,
+            r.n,
+            r.params,
+            r.flops,
+            r.fwd,
+            json_num(r.allocs),
+            diff
+        );
+        s.push_str(if i + 1 < zoo.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
     s
 }
 
@@ -409,6 +568,31 @@ fn check_trajectory(rows: &[SpmRow], gates: &Gates) -> Result<(), String> {
     Ok(())
 }
 
+/// The zoo leg of the gate: every structured kind must hold exact-
+/// reference parity and keep its `forward_into` hot path allocation-free
+/// in steady state (DESIGN.md §19; same caps as the fused SPM path).
+fn check_zoo(zoo: &[ZooRow], gates: &Gates) -> Result<(), String> {
+    let g = &gates.core_ops;
+    for r in zoo {
+        if let Some(d) = r.diff {
+            if !(d.is_finite() && (d as f64) < g.parity_abs) {
+                return Err(format!(
+                    "{} forward parity broke at n={}: max|diff| = {d:.3e}",
+                    r.kind, r.n
+                ));
+            }
+        }
+        if r.allocs > g.fused_allocs_max {
+            return Err(format!(
+                "{} forward_into allocated in steady state at n={}: {:.1} allocs/iter (cap {})",
+                r.kind, r.n, r.allocs, g.fused_allocs_max
+            ));
+        }
+    }
+    println!("check: operator zoo parity + zero-alloc hold across {} kinds — OK", zoo.len());
+    Ok(())
+}
+
 fn main() {
     let args = parse_args();
     let scaling_sizes = args.sizes.clone().unwrap_or_else(|| vec![256, 512, 1024, 2048, 4096]);
@@ -423,6 +607,12 @@ fn main() {
     // reference (spm.rs) vs planned row-wise vs planned batch-fused
     let spm_rows: Vec<SpmRow> = spm_sizes.iter().map(|&n| bench_spm_row(n, args.batch)).collect();
     print_spm_table(&spm_rows, args.batch);
+
+    // the operator zoo at the smallest benched width (DESIGN.md §19)
+    let zoo_n = spm_sizes.iter().copied().min().unwrap_or(256);
+    let zoo_rows: Vec<ZooRow> =
+        LinearKind::ALL.iter().map(|&k| bench_zoo_row(k, zoo_n, args.batch)).collect();
+    print_zoo_table(&zoo_rows, args.batch);
 
     // per-variant stage micro-bench at the largest width (reference path)
     if let Some(&n) = spm_sizes.iter().max() {
@@ -449,23 +639,23 @@ fn main() {
     spm_core::parallel::set_threads(0);
 
     if let Some(path) = &args.json {
-        std::fs::write(path, to_json(&scaling, &spm_rows, args.batch))
+        std::fs::write(path, to_json(&scaling, &spm_rows, &zoo_rows, args.batch))
             .unwrap_or_else(|e| panic!("writing {path}: {e}"));
         println!("\nwrote {path}");
     }
 
     if args.check {
-        enforce_trajectory(&spm_rows);
+        enforce_trajectory(&spm_rows, &zoo_rows);
     }
 }
 
-fn enforce_trajectory(rows: &[SpmRow]) {
+fn enforce_trajectory(rows: &[SpmRow], zoo: &[ZooRow]) {
     let gates = Gates::load_default().unwrap_or_else(|e| {
         eprintln!("check FAILED: {e}");
         std::process::exit(1);
     });
     println!("\ncheck thresholds: {}", gates.source);
-    if let Err(msg) = check_trajectory(rows, &gates) {
+    if let Err(msg) = check_trajectory(rows, &gates).and_then(|()| check_zoo(zoo, &gates)) {
         eprintln!("check FAILED: {msg}");
         std::process::exit(1);
     }

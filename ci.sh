@@ -89,6 +89,13 @@ cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example train_bench
 cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example ablate -- \
     --plan ablate/smoke.toml --check
 
+# Operator-zoo ablation smoke (DESIGN.md §19): every LinearKind side by
+# side at equal parameter budgets through the same harness and gates.
+# The CI ablate-smoke job runs the same pass per matrix leg and records
+# the ABLATE_zoo.json artifact.
+cargo run --release -p spm-coordinator $SPM_CARGO_FEATURES --example ablate -- \
+    --plan ablate/zoo.toml --check
+
 # Format check. Non-fatal unless SPM_FMT_STRICT=1: rustfmt output can
 # drift across toolchain versions and must not mask real build/test
 # failures on machines with a different rustfmt.

@@ -42,7 +42,7 @@ use spm_core::tensor::Mat;
 use crate::allocs;
 use crate::bail;
 use crate::bench_args::{env_exec, json_header, json_num};
-use crate::config::{parse_toml, Value};
+use crate::config::{line_of, line_of_section, parse_toml, Value};
 use crate::error::{Context, Result};
 use crate::train::{TrainBatch, TrainEngine};
 
@@ -154,39 +154,6 @@ pub struct Plan {
     pub models: Vec<ModelKind>,
     /// Declared `[tolerance.<kpi>]` bands, by KPI name.
     pub tolerances: BTreeMap<String, Tolerance>,
-}
-
-/// 1-based source line of `key` inside `[section]` (0 when not found) —
-/// `parse_toml` only carries line numbers for syntax errors, so semantic
-/// validation recovers them by rescanning the raw text.
-fn line_of(text: &str, section: &str, key: &str) -> usize {
-    let mut cur = String::new();
-    for (i, raw) in text.lines().enumerate() {
-        let line = raw.trim();
-        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
-            cur = name.trim().to_string();
-        } else if cur == section {
-            if let Some((k, _)) = line.split_once('=') {
-                if k.trim() == key {
-                    return i + 1;
-                }
-            }
-        }
-    }
-    0
-}
-
-/// 1-based source line of the `[section]` header itself (0 when absent).
-fn line_of_section(text: &str, section: &str) -> usize {
-    for (i, raw) in text.lines().enumerate() {
-        let line = raw.trim();
-        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
-            if name.trim() == section {
-                return i + 1;
-            }
-        }
-    }
-    0
 }
 
 impl Default for Plan {
@@ -571,9 +538,19 @@ pub struct Cell {
 impl Cell {
     /// Stable identity WITHOUT the exec backend (the registry keeps exec
     /// in its own column). Space-separated: cells embed into CSV rows.
+    /// Kinds only mention the axes they actually consume: dense, lowrank
+    /// and blockshuffle are schedule-free; butterfly pins its schedule so
+    /// only the stage depth remains free (DESIGN.md §19).
     pub fn id(&self) -> String {
         match self.op {
-            LinearKind::Dense => format!("model={} op=dense", self.model.name()),
+            LinearKind::Dense | LinearKind::LowRank | LinearKind::BlockShuffle => {
+                format!("model={} op={}", self.model.name(), self.op.name())
+            }
+            LinearKind::Butterfly => format!(
+                "model={} op=butterfly stages={}",
+                self.model.name(),
+                self.stages.map_or_else(|| "default".to_string(), |l| l.to_string()),
+            ),
             LinearKind::Spm => format!(
                 "model={} op=spm variant={} schedule={} stages={}",
                 self.model.name(),
@@ -590,9 +567,14 @@ impl Cell {
     }
 
     fn to_model_cfg(&self, plan: &Plan) -> ModelCfg {
+        // lowrank/blockshuffle knobs stay at their equal-budget defaults:
+        // the zoo plan compares STRUCTURE at matched parameter spend
         let mut op = match self.op {
             LinearKind::Dense => LinearCfg::dense(plan.n),
             LinearKind::Spm => LinearCfg::spm(plan.n, self.variant).with_schedule(self.schedule),
+            LinearKind::LowRank => LinearCfg::lowrank(plan.n),
+            LinearKind::BlockShuffle => LinearCfg::blockshuffle(plan.n),
+            LinearKind::Butterfly => LinearCfg::butterfly(plan.n),
         };
         if let Some(l) = self.stages {
             op = op.with_stages(l);
@@ -607,8 +589,9 @@ impl Cell {
 }
 
 /// Cartesian-expand the plan's axes, resolving `exec = "env"` against
-/// `env_exec` and deduping cells the grid collapses (dense ops ignore
-/// variant/schedule/stages; duplicate axis values fold away).
+/// `env_exec` and deduping cells the grid collapses (dense/lowrank/
+/// blockshuffle ops ignore variant/schedule/stages, butterfly ignores
+/// variant/schedule; duplicate axis values fold away).
 pub fn expand(plan: &Plan, env_exec: SpmExec) -> Vec<Cell> {
     let mut out: Vec<Cell> = Vec::new();
     let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
@@ -628,12 +611,27 @@ pub fn expand(plan: &Plan, env_exec: SpmExec) -> Vec<Cell> {
                                 ExecAxis::Fixed(e) => e,
                             };
                             let cell = match op {
-                                LinearKind::Dense => Cell {
+                                // schedule-free kinds normalize every SPM-only
+                                // axis so the grid dedupes to one cell per
+                                // (model, exec)
+                                LinearKind::Dense
+                                | LinearKind::LowRank
+                                | LinearKind::BlockShuffle => Cell {
                                     model,
                                     op,
                                     variant: Variant::General,
                                     schedule: Schedule::Butterfly,
                                     stages: None,
+                                    exec,
+                                },
+                                // butterfly pins variant/schedule; only the
+                                // stage depth stays a live axis
+                                LinearKind::Butterfly => Cell {
+                                    model,
+                                    op,
+                                    variant: Variant::General,
+                                    schedule: Schedule::Butterfly,
+                                    stages: stage,
                                     exec,
                                 },
                                 LinearKind::Spm => {
@@ -1340,6 +1338,32 @@ rel = 0.5
         assert!(cells.iter().all(|c| !c.id().contains(',')), "ids embed into CSV rows");
         let dense = cells.iter().find(|c| c.op == LinearKind::Dense).unwrap();
         assert_eq!(dense.id(), "model=mlp op=dense");
+    }
+
+    /// The zoo kinds collapse the axes they do not consume: one cell per
+    /// (model, exec) for lowrank/blockshuffle, one per (model, stages,
+    /// exec) for butterfly — and their ids only mention live axes.
+    #[test]
+    fn zoo_kinds_expand_normalized_and_build() {
+        let zoo = TINY.replace(
+            "op = [\"spm\", \"dense\"]",
+            "op = [\"lowrank\", \"blockshuffle\", \"butterfly\"]",
+        );
+        let plan = Plan::parse(&zoo).unwrap();
+        let cells = expand(&plan, SpmExec::BatchFused);
+        // 2 variants would double naive counts; normalization folds them:
+        // lowrank 1 + blockshuffle 1 + butterfly 1 (single stages value)
+        assert_eq!(cells.len(), 3);
+        let ids: Vec<String> = cells.iter().map(Cell::id).collect();
+        assert!(ids.contains(&"model=mlp op=lowrank".to_string()), "{ids:?}");
+        assert!(ids.contains(&"model=mlp op=blockshuffle".to_string()), "{ids:?}");
+        assert!(ids.contains(&"model=mlp op=butterfly stages=2".to_string()), "{ids:?}");
+        // every zoo cell lowers into a buildable model config
+        for cell in &cells {
+            let cfg = cell.to_model_cfg(&plan);
+            let model = build_model(&cfg);
+            assert!(model.param_count() > 0, "{}", cell.id());
+        }
     }
 
     #[test]

@@ -168,6 +168,12 @@ pub struct OpConfig {
     pub schedule: Schedule,
     /// None = paper default log2(n)
     pub num_stages: Option<usize>,
+    /// Low-rank factor width; None = matched to the default-SPM
+    /// parameter budget at the experiment's width (DESIGN.md §19)
+    pub rank: Option<usize>,
+    /// Block-shuffle block size (must divide the width); None = matched
+    /// to the default-SPM parameter budget
+    pub block: Option<usize>,
     /// SPM stage-loop execution path (`"fused"` default, `"rowwise"` for
     /// the PR-1 comparison path, `"simd"` for the vectorized backend);
     /// applied by the native drivers via `LinearOp::set_exec` after
@@ -184,28 +190,51 @@ impl Default for OpConfig {
             variant: Variant::General,
             schedule: Schedule::Butterfly,
             num_stages: None,
+            rank: None,
+            block: None,
             exec: SpmExec::BatchFused,
         }
     }
 }
 
 impl OpConfig {
-    /// Apply `[op]` keys; unknown values are rejected.
+    /// Apply `[op]` keys; unknown values are rejected. Prefer
+    /// [`OpConfig::apply_toml_with_text`] when the raw config text is at
+    /// hand — errors then carry the offending line number.
     pub fn apply_toml(&mut self, doc: &Toml) -> Result<()> {
+        self.apply_toml_with_text(doc, "")
+    }
+
+    /// [`OpConfig::apply_toml`] with the raw config text for strict
+    /// line-context errors, matching the ablate.rs plan-parse style: an
+    /// unknown `[op] kind` reports its line and enumerates every valid
+    /// kind instead of surfacing as a bare parse failure.
+    pub fn apply_toml_with_text(&mut self, doc: &Toml, text: &str) -> Result<()> {
         let Some(map) = doc.get("op") else {
             return Ok(());
         };
         if let Some(v) = map.get("kind") {
             let s = v.as_str().context("[op] kind must be a string")?;
-            self.kind = LinearKind::parse(s).with_context(|| format!("[op] kind '{s}'"))?;
+            self.kind = LinearKind::parse(s).with_context(|| {
+                let names: Vec<&str> = LinearKind::ALL.iter().map(|k| k.name()).collect();
+                format!(
+                    "{}[op] kind '{s}' is not an op kind (valid kinds: {})",
+                    at_line(text, "op", "kind"),
+                    names.join(", ")
+                )
+            })?;
         }
         if let Some(v) = map.get("variant") {
             let s = v.as_str().context("[op] variant must be a string")?;
-            self.variant = Variant::parse(s).with_context(|| format!("[op] variant '{s}'"))?;
+            self.variant = Variant::parse(s).with_context(|| {
+                format!("{}[op] variant '{s}'", at_line(text, "op", "variant"))
+            })?;
         }
         if let Some(v) = map.get("schedule") {
             let s = v.as_str().context("[op] schedule must be a string")?;
-            self.schedule = Schedule::parse(s).with_context(|| format!("[op] schedule '{s}'"))?;
+            self.schedule = Schedule::parse(s).with_context(|| {
+                format!("{}[op] schedule '{s}'", at_line(text, "op", "schedule"))
+            })?;
         }
         if let Some(v) = map.get("stages") {
             let l = v.as_usize().context("[op] stages must be a non-negative int")?;
@@ -214,24 +243,92 @@ impl OpConfig {
             }
             self.num_stages = Some(l);
         }
+        if let Some(v) = map.get("rank") {
+            let r = v.as_usize().context("[op] rank must be a non-negative int")?;
+            if r == 0 {
+                bail!("[op] rank must be >= 1");
+            }
+            self.rank = Some(r);
+        }
+        if let Some(v) = map.get("block") {
+            let b = v.as_usize().context("[op] block must be a non-negative int")?;
+            if b == 0 {
+                bail!("[op] block must be >= 1");
+            }
+            self.block = Some(b);
+        }
         if let Some(v) = map.get("exec") {
             let s = v.as_str().context("[op] exec must be a string")?;
-            self.exec = SpmExec::parse(s).with_context(|| format!("[op] exec '{s}'"))?;
+            self.exec = SpmExec::parse(s)
+                .with_context(|| format!("{}[op] exec '{s}'", at_line(text, "op", "exec")))?;
         }
         Ok(())
     }
 
-    /// Lower to a width-`n` `LinearCfg`.
+    /// Lower to a width-`n` `LinearCfg`. Unset rank/block fall back to
+    /// the equal-parameter-budget defaults inside `LinearOp::new`
+    /// (DESIGN.md §19); an explicit block that does not divide `n` is
+    /// rejected there at construction.
     pub fn to_linear_cfg(&self, n: usize, seed: u64) -> LinearCfg {
         let mut cfg = match self.kind {
             LinearKind::Dense => LinearCfg::dense(n),
             LinearKind::Spm => LinearCfg::spm(n, self.variant).with_schedule(self.schedule),
+            LinearKind::LowRank => LinearCfg::lowrank(n),
+            LinearKind::BlockShuffle => LinearCfg::blockshuffle(n),
+            LinearKind::Butterfly => LinearCfg::butterfly(n),
         };
+        if let Some(r) = self.rank {
+            cfg = cfg.with_rank(r);
+        }
+        if let Some(b) = self.block {
+            cfg = cfg.with_block(b);
+        }
         if let Some(l) = self.num_stages {
             cfg = cfg.with_stages(l);
         }
         cfg.with_seed(seed)
     }
+}
+
+/// `"line N: "` prefix for a key in the raw config text, or empty when
+/// the caller has no text (the doc-only [`OpConfig::apply_toml`] path).
+fn at_line(text: &str, section: &str, key: &str) -> String {
+    match line_of(text, section, key) {
+        0 => String::new(),
+        n => format!("line {n}: "),
+    }
+}
+
+/// 1-based line of `key = ...` inside `[section]`, 0 if absent — shared
+/// with the ablate.rs plan parser's strict error style.
+pub fn line_of(text: &str, section: &str, key: &str) -> usize {
+    let mut cur = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            cur = name.trim().to_string();
+        } else if cur == section {
+            if let Some((k, _)) = line.split_once('=') {
+                if k.trim() == key {
+                    return i + 1;
+                }
+            }
+        }
+    }
+    0
+}
+
+/// 1-based line of the `[section]` header, 0 if absent.
+pub fn line_of_section(text: &str, section: &str) -> usize {
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            if name.trim() == section {
+                return i + 1;
+            }
+        }
+    }
+    0
 }
 
 /// The `[model]` section: which network to build, at which width, with
@@ -549,6 +646,12 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Apply `[run]` (or top-level) and `[op]` keys from a TOML file.
     pub fn apply_toml(&mut self, doc: &Toml) -> Result<()> {
+        self.apply_toml_with_text(doc, "")
+    }
+
+    /// [`RunConfig::apply_toml`] with the raw text threaded through so
+    /// section errors (notably `[op] kind`) carry line context.
+    pub fn apply_toml_with_text(&mut self, doc: &Toml, text: &str) -> Result<()> {
         for section in ["", "run"] {
             if let Some(map) = doc.get(section) {
                 if let Some(v) = map.get("steps").and_then(Value::as_usize) {
@@ -577,7 +680,7 @@ impl RunConfig {
                 }
             }
         }
-        self.op.apply_toml(doc)?;
+        self.op.apply_toml_with_text(doc, text)?;
         self.model.apply_toml(doc)?;
         self.train.apply_toml(doc)?;
         self.serve.apply_toml(doc)
@@ -587,7 +690,7 @@ impl RunConfig {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path}"))?;
         let doc = parse_toml(&text)?;
-        self.apply_toml(&doc)
+        self.apply_toml_with_text(&doc, &text)
     }
 }
 
@@ -685,6 +788,54 @@ fast = true
         let cfg = op.to_linear_cfg(16, 1);
         assert_eq!(cfg.kind, LinearKind::Dense);
         assert_eq!((cfg.d_in, cfg.d_out), (16, 16));
+    }
+
+    /// Satellite (zoo): every kind round-trips through `[op] kind`, and
+    /// rank/block knobs lower onto the `LinearCfg`.
+    #[test]
+    fn op_config_zoo_kinds_lower() {
+        for kind in LinearKind::ALL {
+            let doc = parse_toml(&format!("[op]\nkind = \"{}\"\n", kind.name())).unwrap();
+            let mut rc = RunConfig::default();
+            rc.apply_toml(&doc).unwrap();
+            assert_eq!(rc.op.kind, kind);
+            assert_eq!(rc.op.to_linear_cfg(16, 3).kind, kind);
+        }
+        let doc =
+            parse_toml("[op]\nkind = \"lowrank\"\nrank = 6\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.op.rank, Some(6));
+        assert_eq!(rc.op.to_linear_cfg(16, 3).rank, Some(6));
+        let doc = parse_toml("[op]\nkind = \"blockshuffle\"\nblock = 4\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.op.block, Some(4));
+        assert_eq!(rc.op.to_linear_cfg(16, 3).block, Some(4));
+        // zero knobs are rejected before they can panic at construction
+        for bad in ["[op]\nrank = 0\n", "[op]\nblock = 0\n"] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(RunConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+    }
+
+    /// Satellite: an unknown `[op] kind` must name the offending line and
+    /// enumerate every valid kind — not surface as a bare parse failure.
+    #[test]
+    fn op_config_unknown_kind_reports_line_and_candidates() {
+        let text = "# experiment\n[op]\nvariant = \"general\"\nkind = \"monarch\"\n";
+        let doc = parse_toml(text).unwrap();
+        let mut rc = RunConfig::default();
+        let err = format!("{:#}", rc.apply_toml_with_text(&doc, text).unwrap_err());
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("'monarch'"), "{err}");
+        for kind in LinearKind::ALL {
+            assert!(err.contains(kind.name()), "{err} missing {}", kind.name());
+        }
+        // the doc-only path still enumerates candidates, just without a line
+        let err2 = format!("{:#}", rc.apply_toml(&doc).unwrap_err());
+        assert!(!err2.contains("line "), "{err2}");
+        assert!(err2.contains("valid kinds"), "{err2}");
     }
 
     #[test]

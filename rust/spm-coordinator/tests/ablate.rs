@@ -200,6 +200,47 @@ fn committed_gates_file_matches_the_compiled_defaults() {
 }
 
 #[test]
+fn committed_zoo_plan_covers_every_op_kind_at_matched_budgets() {
+    let root = spm_coordinator::ablate::repo_root();
+    let mut plan = Plan::load(&root.join("ablate").join("zoo.toml")).expect("zoo plan");
+    assert_eq!(plan.name, "zoo");
+    assert_eq!(plan.ops, {
+        use spm_core::ops::LinearKind;
+        LinearKind::ALL.to_vec()
+    });
+    // the shipped header-only registry must satisfy the loader
+    let rows = registry_load(&root.join("registry").join("zoo.csv")).expect("zoo registry");
+    assert!(rows.is_empty(), "zoo.csv ships header-only; baselines are appended per machine class");
+
+    // run a reduced grid (CI-smoke sized): every kind still present
+    plan.steps = 1;
+    plan.rows = 2;
+    plan.models.truncate(1);
+    let report = run_plan(&plan).expect("run");
+    assert_eq!(report.cells.len(), 5, "one cell per LinearKind on the mlp");
+    for c in &report.cells {
+        assert!(c.kpis[0].is_finite(), "{}: loss", c.cell.id());
+    }
+    // equal-parameter-budget contract (DESIGN.md §19): lowrank and
+    // blockshuffle land within 25% of the spm cell's parameter count at
+    // n = 16, while dense sits strictly above all structured kinds
+    let params = |needle: &str| -> f64 {
+        report
+            .cells
+            .iter()
+            .find(|c| c.cell.id().contains(needle))
+            .unwrap_or_else(|| panic!("no {needle} cell"))
+            .kpis[2]
+    };
+    let spm = params("op=spm");
+    for kind in ["op=lowrank", "op=blockshuffle", "op=butterfly"] {
+        let p = params(kind);
+        assert!((p - spm).abs() <= 0.25 * spm, "{kind}: {p} vs spm {spm}");
+        assert!(p < params("op=dense"), "{kind} must undercut dense");
+    }
+}
+
+#[test]
 fn committed_smoke_plan_parses_and_registry_header_is_valid() {
     let root = spm_coordinator::ablate::repo_root();
     let plan = Plan::load(&root.join("ablate").join("smoke.toml")).expect("smoke plan");

@@ -31,7 +31,7 @@
 use std::io::{self, Read, Write};
 use std::path::Path;
 
-use crate::ops::{LinearCfg, LinearOp, SpmExec};
+use crate::ops::{LinearCfg, LinearKind, LinearOp, SpmExec};
 use crate::tensor::Mat;
 
 use super::attention::AttnSeq;
@@ -308,12 +308,19 @@ fn fnv_mix(h: &mut u64, v: u64) {
     *h = h.wrapping_mul(0x100_0000_01b3);
 }
 
-/// FNV-1a over the model's op topology: widths, op kinds, and — for SPM
-/// ops — the exact pairing tables and leftover slots. Buffer shapes
-/// alone cannot tell two `schedule = "random"` pairings apart (the
-/// tables depend on the op seed while every parameter length matches),
-/// so the checkpoint stores this fingerprint and loading rejects a file
-/// whose stage parameters would bind to different coordinate pairs.
+/// FNV-1a over the model's op topology: widths, op kinds, and each
+/// kind's structural layout (DESIGN.md §19) — pairing tables and
+/// leftover slots for SPM/butterfly ops, the rank for low-rank, the
+/// block size AND shuffle permutation for block-shuffle. Buffer shapes
+/// alone cannot tell two `schedule = "random"` pairings (or two
+/// shuffles at different seeds) apart — the tables depend on the op
+/// seed while every parameter length matches — so the checkpoint
+/// stores this fingerprint and loading rejects a file whose parameters
+/// would bind to different coordinates. Kind tags: dense=1, SPM=2
+/// (byte-identical to the pre-zoo format, so old checkpoints still
+/// load), lowrank=3, blockshuffle=4, butterfly=5 — a butterfly op
+/// hashes differently from the structurally identical general-SPM op
+/// on the butterfly schedule because the tag differs.
 pub fn arch_fingerprint(model: &dyn Model) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     fnv_mix(&mut h, model.d_in() as u64);
@@ -321,17 +328,36 @@ pub fn arch_fingerprint(model: &dyn Model) -> u64 {
     model.visit_ops(&mut |op| {
         fnv_mix(&mut h, op.d_in() as u64);
         fnv_mix(&mut h, op.d_out() as u64);
-        match op.plan() {
-            None => fnv_mix(&mut h, 1), // dense: widths say it all
-            Some(plan) => {
-                fnv_mix(&mut h, 2);
-                fnv_mix(&mut h, plan.num_stages as u64);
-                for l in 0..plan.num_stages {
-                    for &ij in plan.stage_pairs(l) {
-                        fnv_mix(&mut h, ij as u64);
-                    }
-                    fnv_mix(&mut h, plan.stage_leftover(l).map_or(u64::MAX, |v| v as u64));
+        let mix_plan = |h: &mut u64| {
+            let plan = op.plan().expect("staged op has a plan");
+            fnv_mix(h, plan.num_stages as u64);
+            for l in 0..plan.num_stages {
+                for &ij in plan.stage_pairs(l) {
+                    fnv_mix(h, ij as u64);
                 }
+                fnv_mix(h, plan.stage_leftover(l).map_or(u64::MAX, |v| v as u64));
+            }
+        };
+        match op.kind() {
+            LinearKind::Dense => fnv_mix(&mut h, 1), // widths say it all
+            LinearKind::Spm => {
+                fnv_mix(&mut h, 2);
+                mix_plan(&mut h);
+            }
+            LinearKind::LowRank => {
+                fnv_mix(&mut h, 3);
+                fnv_mix(&mut h, op.rank().expect("low-rank op has a rank") as u64);
+            }
+            LinearKind::BlockShuffle => {
+                fnv_mix(&mut h, 4);
+                fnv_mix(&mut h, op.block_size().expect("block-shuffle op has a block") as u64);
+                for &p in op.shuffle().expect("block-shuffle op has a shuffle") {
+                    fnv_mix(&mut h, p as u64);
+                }
+            }
+            LinearKind::Butterfly => {
+                fnv_mix(&mut h, 5);
+                mix_plan(&mut h);
             }
         }
     });
@@ -906,6 +932,91 @@ mod tests {
         assert!(err.to_string().contains("pairing"), "{err}");
         // same config -> same fingerprint -> loads fine
         let mut same = build_model(&cfg_a);
+        read_checkpoint(same.as_mut(), &mut bytes.as_slice()).unwrap();
+    }
+
+    /// Satellite (zoo, DESIGN.md §19): every kind's structural layout is
+    /// fingerprinted, so checkpoints can never migrate across kinds —
+    /// even between a butterfly op and the general-SPM op on the
+    /// butterfly schedule, whose parameter buffers are bit-identical.
+    #[test]
+    fn fingerprint_separates_every_zoo_kind() {
+        let mut prints = Vec::new();
+        for kind in LinearKind::ALL {
+            let cfg = ModelCfg::new(
+                ModelKind::Mlp,
+                LinearCfg { kind, ..LinearCfg::spm(8, Variant::General) }.with_seed(1),
+            )
+            .with_classes(4);
+            prints.push((kind, arch_fingerprint(build_model(&cfg).as_ref())));
+        }
+        for (i, (ka, fa)) in prints.iter().enumerate() {
+            for (kb, fb) in &prints[i + 1..] {
+                assert_ne!(fa, fb, "{} vs {} must fingerprint apart", ka.name(), kb.name());
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_rejects_butterfly_into_identical_spm() {
+        // the hardest cross-kind case: same widths, same schedule, same
+        // seed, bit-identical parameter buffers — only the kind differs
+        let bfly_cfg = ModelCfg::new(ModelKind::Mlp, LinearCfg::butterfly(8).with_seed(3))
+            .with_classes(4);
+        let spm_cfg = ModelCfg {
+            op: LinearCfg::spm(8, Variant::General)
+                .with_schedule(Schedule::Butterfly)
+                .with_seed(3),
+            ..bfly_cfg
+        };
+        let src = build_model(&bfly_cfg);
+        let mut bytes = Vec::new();
+        write_checkpoint(src.as_ref(), &mut bytes).unwrap();
+        let mut dst = build_model(&spm_cfg);
+        assert_eq!(
+            collect_params(src.as_ref()),
+            collect_params(dst.as_ref()),
+            "precondition: the two models must be parameter-identical"
+        );
+        assert_ne!(arch_fingerprint(src.as_ref()), arch_fingerprint(dst.as_ref()));
+        let err = read_checkpoint(dst.as_mut(), &mut bytes.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("pairing"), "{err}");
+        // and back into a butterfly model of the same config it loads
+        let mut same = build_model(&bfly_cfg);
+        read_checkpoint(same.as_mut(), &mut bytes.as_slice()).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_rejects_cross_rank_and_cross_shuffle() {
+        // rank is fingerprinted: a rank-3 file must not bind to a rank-4 op
+        let r3 = ModelCfg::new(ModelKind::Mlp, LinearCfg::lowrank(8).with_rank(3).with_seed(1))
+            .with_classes(4);
+        let r4 = ModelCfg { op: LinearCfg::lowrank(8).with_rank(4).with_seed(1), ..r3 };
+        let src = build_model(&r3);
+        let mut bytes = Vec::new();
+        write_checkpoint(src.as_ref(), &mut bytes).unwrap();
+        let mut dst = build_model(&r4);
+        assert_ne!(arch_fingerprint(src.as_ref()), arch_fingerprint(dst.as_ref()));
+        assert!(read_checkpoint(dst.as_mut(), &mut bytes.as_slice()).is_err());
+
+        // the shuffle permutation is fingerprinted: same width, same
+        // block, every buffer shape equal — only the seeded shuffle
+        // differs, exactly the random-pairing trap for block-shuffle
+        let s1 = ModelCfg::new(ModelKind::Mlp, LinearCfg::blockshuffle(8).with_block(4).with_seed(1))
+            .with_classes(4);
+        let s2 = ModelCfg { op: LinearCfg::blockshuffle(8).with_block(4).with_seed(2), ..s1 };
+        let src = build_model(&s1);
+        let mut bytes = Vec::new();
+        write_checkpoint(src.as_ref(), &mut bytes).unwrap();
+        let mut dst = build_model(&s2);
+        assert_ne!(
+            arch_fingerprint(src.as_ref()),
+            arch_fingerprint(dst.as_ref()),
+            "shuffles under different seeds must fingerprint differently"
+        );
+        let err = read_checkpoint(dst.as_mut(), &mut bytes.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("pairing"), "{err}");
+        let mut same = build_model(&s1);
         read_checkpoint(same.as_mut(), &mut bytes.as_slice()).unwrap();
     }
 

@@ -23,7 +23,7 @@
 use std::cell::{Ref, RefCell};
 
 use crate::optim::Optimizer;
-use crate::pairing::Schedule;
+use crate::pairing::{self, Schedule};
 use crate::parallel;
 use crate::rng::Rng;
 use crate::spm::{SpmSpec, Variant};
@@ -33,18 +33,40 @@ use super::backend::{self, rotation_trig, StageBackend};
 use super::plan::SpmPlan;
 use super::workspace::{BwdScratch, Prepared, Workspace};
 
-/// Which operator family a [`LinearOp`] executes.
+/// Which operator family a [`LinearOp`] executes (the structured-operator
+/// zoo, DESIGN.md §19): the dense comparator, SPM, and the three
+/// published structured competitors the paper positions SPM against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LinearKind {
     Dense,
     Spm,
+    /// W = U·Vᵀ + b at rank r ("Compute Better Spent" low-rank baseline).
+    LowRank,
+    /// DYAD-style block-diagonal matmul composed with a fixed
+    /// deterministic shuffle permutation of the inputs.
+    BlockShuffle,
+    /// log2(n) fixed-pairing stages: the SPM general machinery pinned to
+    /// the butterfly schedule (the classic butterfly factorization).
+    Butterfly,
 }
 
 impl LinearKind {
+    /// Every kind, in parse/name order — config errors enumerate this.
+    pub const ALL: [LinearKind; 5] = [
+        LinearKind::Dense,
+        LinearKind::Spm,
+        LinearKind::LowRank,
+        LinearKind::BlockShuffle,
+        LinearKind::Butterfly,
+    ];
+
     pub fn parse(s: &str) -> Option<LinearKind> {
         match s {
             "dense" => Some(LinearKind::Dense),
             "spm" => Some(LinearKind::Spm),
+            "lowrank" => Some(LinearKind::LowRank),
+            "blockshuffle" => Some(LinearKind::BlockShuffle),
+            "butterfly" => Some(LinearKind::Butterfly),
             _ => None,
         }
     }
@@ -53,6 +75,9 @@ impl LinearKind {
         match self {
             LinearKind::Dense => "dense",
             LinearKind::Spm => "spm",
+            LinearKind::LowRank => "lowrank",
+            LinearKind::BlockShuffle => "blockshuffle",
+            LinearKind::Butterfly => "butterfly",
         }
     }
 }
@@ -98,9 +123,9 @@ impl SpmExec {
     }
 }
 
-/// Construction-time description of a linear map. Square maps may be dense
-/// or SPM; rectangular maps (heads, read-outs) are always dense — the
-/// paper's drop-in-replacement boundary (§2, §6.2, §7.2).
+/// Construction-time description of a linear map. Square maps may be any
+/// zoo kind; rectangular maps (heads, read-outs) are dense or low-rank —
+/// the paper's drop-in-replacement boundary (§2, §6.2, §7.2).
 #[derive(Clone, Copy, Debug)]
 pub struct LinearCfg {
     pub d_out: usize,
@@ -110,6 +135,12 @@ pub struct LinearCfg {
     pub schedule: Schedule,
     /// None = paper default log2(n)
     pub num_stages: Option<usize>,
+    /// Low-rank factor width; None = matched to the default-SPM
+    /// parameter budget at this width ([`rank_for_budget`]).
+    pub rank: Option<usize>,
+    /// Block-shuffle block size (must divide n); None = matched to the
+    /// default-SPM parameter budget ([`block_for_budget`]).
+    pub block: Option<usize>,
     pub seed: u64,
 }
 
@@ -126,12 +157,31 @@ impl LinearCfg {
             variant: Variant::General,
             schedule: Schedule::Butterfly,
             num_stages: None,
+            rank: None,
+            block: None,
             seed: 0,
         }
     }
 
     pub fn spm(n: usize, variant: Variant) -> Self {
         LinearCfg { kind: LinearKind::Spm, ..Self::dense(n) }.with_variant(variant)
+    }
+
+    /// Square low-rank map; rank defaults to the equal-budget pick.
+    pub fn lowrank(n: usize) -> Self {
+        LinearCfg { kind: LinearKind::LowRank, ..Self::dense(n) }
+    }
+
+    /// DYAD-style block-diagonal + shuffle; block size defaults to the
+    /// equal-budget pick.
+    pub fn blockshuffle(n: usize) -> Self {
+        LinearCfg { kind: LinearKind::BlockShuffle, ..Self::dense(n) }
+    }
+
+    /// Butterfly factorization: SPM general stages pinned to the
+    /// butterfly pairing schedule.
+    pub fn butterfly(n: usize) -> Self {
+        LinearCfg { kind: LinearKind::Butterfly, ..Self::dense(n) }
     }
 
     pub fn with_variant(mut self, v: Variant) -> Self {
@@ -146,6 +196,16 @@ impl LinearCfg {
 
     pub fn with_stages(mut self, l: usize) -> Self {
         self.num_stages = Some(l);
+        self
+    }
+
+    pub fn with_rank(mut self, r: usize) -> Self {
+        self.rank = Some(r);
+        self
+    }
+
+    pub fn with_block(mut self, bs: usize) -> Self {
+        self.block = Some(bs);
         self
     }
 
@@ -169,22 +229,105 @@ impl LinearCfg {
         }
         s
     }
+
+    /// The pinned spec a [`LinearKind::Butterfly`] op executes: general
+    /// 2x2 mixes on the butterfly pairing schedule. The configured
+    /// variant/schedule are ignored — the schedule IS the kind — while
+    /// `num_stages` (depth) and `seed` pass through.
+    pub fn butterfly_spec(&self) -> SpmSpec {
+        let mut s = SpmSpec::new(self.n(), Variant::General)
+            .with_schedule(Schedule::Butterfly)
+            .with_seed(self.seed);
+        if let Some(l) = self.num_stages {
+            s = s.with_stages(l);
+        }
+        s
+    }
+
+    /// The rank this config resolves to (LowRank kinds): explicit, else
+    /// matched to the default-SPM budget at this shape.
+    pub fn resolved_rank(&self) -> usize {
+        self.rank.unwrap_or_else(|| rank_for_budget(self.d_in, self.d_out, spm_budget(self.d_in)))
+    }
+
+    /// The block size this config resolves to (BlockShuffle kinds):
+    /// explicit, else matched to the default-SPM budget at this width.
+    pub fn resolved_block(&self) -> usize {
+        self.block.unwrap_or_else(|| block_for_budget(self.n(), spm_budget(self.n())))
+    }
+}
+
+/// Parameter count of a default SPM op (general variant, `log2(n)`
+/// stages) at width `n` — the equal-parameter budget the zoo's low-rank
+/// and block-shuffle kinds match when no explicit rank/block is given:
+/// `3n` diagonals+bias, `4*(n/2)` mix coefficients per stage, one lone
+/// scale per stage.
+pub fn spm_budget(n: usize) -> usize {
+    let l = pairing::default_num_stages(n);
+    3 * n + l * (4 * (n / 2)) + l
+}
+
+/// The low-rank factor width whose parameter count
+/// `r * (d_in + d_out) + d_out` lands closest to `budget`, clamped to
+/// `[1, min(d_in, d_out)]`.
+pub fn rank_for_budget(d_in: usize, d_out: usize, budget: usize) -> usize {
+    let per_rank = d_in + d_out;
+    let spend = budget.saturating_sub(d_out);
+    // round to nearest: (spend + per_rank/2) / per_rank
+    let r = (spend + per_rank / 2) / per_rank;
+    r.clamp(1, d_in.min(d_out))
+}
+
+/// The divisor of `n` whose block-shuffle parameter count
+/// `n * bs + n` lands closest to `budget` (ties prefer the smaller —
+/// cheaper — block). Never returns `n` itself unless `n` is prime and
+/// 1 is further away: a full-width block is just dense.
+pub fn block_for_budget(n: usize, budget: usize) -> usize {
+    let mut best = 1usize;
+    let mut best_gap = usize::MAX;
+    for bs in 1..=n {
+        if n % bs != 0 {
+            continue;
+        }
+        let params = n * bs + n;
+        let gap = params.abs_diff(budget);
+        if gap < best_gap {
+            best = bs;
+            best_gap = gap;
+        }
+    }
+    best
 }
 
 /// Residuals of one `forward_train`, consumed by `backward`.
 pub enum LinearTrace {
-    /// dense: backward only needs the layer input
+    /// dense / block-shuffle: backward only needs the layer input
     Dense,
     /// SPM rotation: final pre-`d_out` activation z_L (O(Bn));
     /// stage inputs are recomputed via the orthogonal transpose
     Rotation { z_last: Mat },
-    /// SPM general: every stage input z_0..z_L (O(BnL))
+    /// SPM general / butterfly: every stage input z_0..z_L (O(BnL))
     General { zs: Vec<Mat> },
+    /// low-rank: the (B, r) intermediate t = x·Vᵀ
+    LowRank { t: Mat },
 }
 
 enum OpImpl {
     Dense,
     Spm(SpmPlan),
+    /// W = U·Vᵀ + b. Params flat `[U (d_out x r) | V (r x d_in) | bias]`.
+    /// The `RefCell` scratches hold the (B, r) intermediates the `&self`
+    /// forward and the backward reuse across calls (DESIGN.md §15); they
+    /// are refreshed on the calling thread and never cross threads.
+    LowRank { rank: usize, t: RefCell<Mat>, gt: RefCell<Mat> },
+    /// Block-diagonal matmul over shuffled inputs. Params flat
+    /// `[blocks ((n/block) x block x block, row-major per block) | bias]`;
+    /// `perm` is the fixed input shuffle: output block k consumes inputs
+    /// `x[perm[k*block + j]]`.
+    BlockShuffle { block: usize, perm: Vec<u32> },
+    /// SPM general stages pinned to the butterfly pairing schedule —
+    /// shares every SPM kernel, exec path, and the prepared cache.
+    Butterfly(SpmPlan),
 }
 
 /// One planned linear operator with flat parameter/gradient storage.
@@ -229,6 +372,38 @@ impl LinearOp {
                 let params = plan.init_flat(rng);
                 (OpImpl::Spm(plan), params)
             }
+            LinearKind::LowRank => {
+                let r = cfg.resolved_rank();
+                assert!(r >= 1 && r <= cfg.d_in.min(cfg.d_out), "rank in [1, min(d_in, d_out)]");
+                // U preserves output variance from the r-wide intermediate;
+                // V is the usual fan-in init over d_in.
+                let mut params = rng.normal_vec(cfg.d_out * r, 1.0 / (r as f32).sqrt());
+                let v = rng.normal_vec(r * cfg.d_in, 1.0 / (cfg.d_in as f32).sqrt());
+                params.extend_from_slice(&v);
+                params.resize(cfg.d_out * r + r * cfg.d_in + cfg.d_out, 0.0);
+                let imp = OpImpl::LowRank {
+                    rank: r,
+                    t: RefCell::new(Mat { rows: 0, cols: 0, data: Vec::new() }),
+                    gt: RefCell::new(Mat { rows: 0, cols: 0, data: Vec::new() }),
+                };
+                (imp, params)
+            }
+            LinearKind::BlockShuffle => {
+                assert_eq!(cfg.d_in, cfg.d_out, "block-shuffle ops are square");
+                let n = cfg.n();
+                let bs = cfg.resolved_block();
+                assert!(bs >= 1 && n % bs == 0, "block size must divide n");
+                let mut params = rng.normal_vec(n * bs, 1.0 / (bs as f32).sqrt());
+                params.resize(n * bs + n, 0.0);
+                let perm = pairing::shuffle_permutation(n, cfg.seed);
+                (OpImpl::BlockShuffle { block: bs, perm }, params)
+            }
+            LinearKind::Butterfly => {
+                assert_eq!(cfg.d_in, cfg.d_out, "butterfly ops are square");
+                let plan = SpmPlan::new(cfg.butterfly_spec());
+                let params = plan.init_flat(rng);
+                (OpImpl::Butterfly(plan), params)
+            }
         };
         let grads = vec![0.0; params.len()];
         let slot = opt.register(params.len());
@@ -266,6 +441,9 @@ impl LinearOp {
         match self.imp {
             OpImpl::Dense => LinearKind::Dense,
             OpImpl::Spm(_) => LinearKind::Spm,
+            OpImpl::LowRank { .. } => LinearKind::LowRank,
+            OpImpl::BlockShuffle { .. } => LinearKind::BlockShuffle,
+            OpImpl::Butterfly(_) => LinearKind::Butterfly,
         }
     }
 
@@ -285,29 +463,70 @@ impl LinearOp {
 
     pub fn plan(&self) -> Option<&SpmPlan> {
         match &self.imp {
-            OpImpl::Spm(plan) => Some(plan),
-            OpImpl::Dense => None,
+            OpImpl::Spm(plan) | OpImpl::Butterfly(plan) => Some(plan),
+            _ => None,
+        }
+    }
+
+    /// Factor width of a LowRank op; `None` for every other kind. Part of
+    /// the checkpoint arch fingerprint (DESIGN.md §19).
+    pub fn rank(&self) -> Option<usize> {
+        match &self.imp {
+            OpImpl::LowRank { rank, .. } => Some(*rank),
+            _ => None,
+        }
+    }
+
+    /// Block size of a BlockShuffle op; `None` for every other kind. Part
+    /// of the checkpoint arch fingerprint (DESIGN.md §19).
+    pub fn block_size(&self) -> Option<usize> {
+        match &self.imp {
+            OpImpl::BlockShuffle { block, .. } => Some(*block),
+            _ => None,
+        }
+    }
+
+    /// The fixed input-shuffle permutation of a BlockShuffle op; `None`
+    /// for every other kind. Part of the checkpoint arch fingerprint
+    /// (DESIGN.md §19).
+    pub fn shuffle(&self) -> Option<&[u32]> {
+        match &self.imp {
+            OpImpl::BlockShuffle { perm, .. } => Some(perm),
+            _ => None,
         }
     }
 
     /// Estimated forward FLOPs one input row costs through this op — the
     /// paper's equal-FLOP comparison axis, reported as an exact KPI by
-    /// the ablation harness (DESIGN.md §17). Dense: the full
-    /// `2 * d_in * d_out` multiply-add matmul plus the bias add. SPM:
-    /// the d_in/d_out diagonal scalings and the bias (`3n`) plus, per
-    /// stage, 6 FLOPs per pair (a 2x2 mix: 4 mults + 2 adds) and 1 for
-    /// the odd-`n` leftover scaling. A counting model, not a cycle
-    /// model: it is exec-path-independent by construction (rowwise /
-    /// fused / simd schedule the same arithmetic).
+    /// the ablation harness (DESIGN.md §17). ONE convention across all
+    /// five kinds so ablate FLOP columns are directly comparable: count
+    /// every multiply and every add, INCLUDING the bias add
+    /// (DESIGN.md §19). A counting model, not a cycle model: it is
+    /// exec-path-independent by construction (rowwise / fused / simd
+    /// schedule the same arithmetic).
+    ///
+    /// - Dense: `2*d_in*d_out + d_out` (matmul multiply-adds + bias).
+    /// - SPM / Butterfly: `3n` (d_in/d_out diagonal scalings + bias)
+    ///   plus, per stage, 6 per pair (a 2x2 mix: 4 mults + 2 adds) and
+    ///   1 for the odd-`n` leftover scaling.
+    /// - LowRank: `2*r*(d_in + d_out) + d_out` (two thin matmuls +
+    ///   bias).
+    /// - BlockShuffle: `2*n*block + n` (each of the `n` outputs is a
+    ///   `block`-wide dot product; the shuffle itself is free — it is a
+    ///   gather, not arithmetic — plus bias).
     pub fn flops_per_row(&self) -> u64 {
         match &self.imp {
             OpImpl::Dense => (2 * self.d_in * self.d_out + self.d_out) as u64,
-            OpImpl::Spm(plan) => {
+            OpImpl::Spm(plan) | OpImpl::Butterfly(plan) => {
                 let n = self.d_in as u64;
                 let pairs = n / 2;
                 let lone = n % 2;
                 3 * n + plan.num_stages as u64 * (6 * pairs + lone)
             }
+            OpImpl::LowRank { rank, .. } => {
+                (2 * rank * (self.d_in + self.d_out) + self.d_out) as u64
+            }
+            OpImpl::BlockShuffle { block, .. } => (2 * self.d_in * block + self.d_out) as u64,
         }
     }
 
@@ -368,7 +587,7 @@ impl LinearOp {
                 tensor::matmul_nt_slice_into(x, &self.params[..wlen], self.d_out, out);
                 tensor::add_bias(out, &self.params[wlen..]);
             }
-            OpImpl::Spm(plan) => match self.exec {
+            OpImpl::Spm(plan) | OpImpl::Butterfly(plan) => match self.exec {
                 SpmExec::RowWise => *out = spm_forward_rowwise(plan, &self.params, x),
                 e => {
                     assert_eq!(x.cols, plan.n, "input width");
@@ -388,6 +607,13 @@ impl LinearOp {
                     spm_forward_fused_inplace(plan, be, &self.params, &prep.buf, &mut out.data);
                 }
             },
+            OpImpl::LowRank { rank, t, .. } => {
+                let mut t = t.borrow_mut();
+                lowrank_forward_into(&self.params, self.d_in, self.d_out, *rank, x, &mut t, out);
+            }
+            OpImpl::BlockShuffle { block, perm } => {
+                blockshuffle_forward_into(&self.params, self.d_in, *block, perm, x, out);
+            }
         }
     }
 
@@ -405,7 +631,20 @@ impl LinearOp {
                 tensor::add_bias(&mut y, &params[wlen..]);
                 y
             }
-            OpImpl::Spm(plan) => spm_forward(plan, self.exec, params, x),
+            OpImpl::Spm(plan) | OpImpl::Butterfly(plan) => {
+                spm_forward(plan, self.exec, params, x)
+            }
+            OpImpl::LowRank { rank, .. } => {
+                let mut t = Mat { rows: 0, cols: 0, data: Vec::new() };
+                let mut y = Mat { rows: 0, cols: 0, data: Vec::new() };
+                lowrank_forward_into(params, self.d_in, self.d_out, *rank, x, &mut t, &mut y);
+                y
+            }
+            OpImpl::BlockShuffle { block, perm } => {
+                let mut y = Mat { rows: 0, cols: 0, data: Vec::new() };
+                blockshuffle_forward_into(params, self.d_in, *block, perm, x, &mut y);
+                y
+            }
         }
     }
 
@@ -427,7 +666,7 @@ impl LinearOp {
                 self.forward_into(x, out);
                 *trace = LinearTrace::Dense;
             }
-            OpImpl::Spm(plan) => match self.exec {
+            OpImpl::Spm(plan) | OpImpl::Butterfly(plan) => match self.exec {
                 SpmExec::RowWise => {
                     let (y, tr) = spm_forward_trace_rowwise(plan, &self.params, x);
                     *out = y;
@@ -446,6 +685,21 @@ impl LinearOp {
                     spm_forward_trace_fused_into(plan, be, &self.params, &prep.buf, x, out, trace);
                 }
             },
+            OpImpl::LowRank { rank, .. } => {
+                // The (B, r) intermediate IS the residual: stash it in the
+                // trace's own Mat (reshaped in place when the variant
+                // matches) so backward reads it without recomputing.
+                if !matches!(trace, LinearTrace::LowRank { .. }) {
+                    // lint: allow(alloc): one-time trace-variant switch, not steady state (DESIGN.md §15)
+                    *trace = LinearTrace::LowRank { t: Mat { rows: 0, cols: 0, data: Vec::new() } };
+                }
+                let LinearTrace::LowRank { t } = trace else { unreachable!() };
+                lowrank_forward_into(&self.params, self.d_in, self.d_out, *rank, x, t, out);
+            }
+            OpImpl::BlockShuffle { block, perm } => {
+                blockshuffle_forward_into(&self.params, self.d_in, *block, perm, x, out);
+                *trace = LinearTrace::Dense;
+            }
         }
     }
 
@@ -467,6 +721,33 @@ impl LinearOp {
     pub fn backward_into(&mut self, x: &Mat, trace: &LinearTrace, gy: &Mat, gx: &mut Mat) {
         assert_eq!(gy.rows, x.rows, "batch size");
         match (&self.imp, trace) {
+            (OpImpl::LowRank { rank, gt, .. }, LinearTrace::LowRank { t }) => {
+                let mut gt = gt.borrow_mut();
+                lowrank_backward_into(
+                    &self.params,
+                    self.d_in,
+                    self.d_out,
+                    *rank,
+                    x,
+                    t,
+                    gy,
+                    &mut gt,
+                    &mut self.grads,
+                    gx,
+                );
+            }
+            (OpImpl::BlockShuffle { block, perm }, LinearTrace::Dense) => {
+                blockshuffle_backward_into(
+                    &self.params,
+                    self.d_in,
+                    *block,
+                    perm,
+                    x,
+                    gy,
+                    &mut self.grads,
+                    gx,
+                );
+            }
             (OpImpl::Dense, LinearTrace::Dense) => {
                 assert_eq!(x.cols, self.d_in, "input width");
                 assert_eq!(gy.cols, self.d_out, "adjoint width");
@@ -480,6 +761,8 @@ impl LinearOp {
                     }
                 }
             }
+            // (butterfly plans are always General-variant, so a Rotation
+            // trace can only come from a true SPM op)
             (OpImpl::Spm(plan), LinearTrace::Rotation { z_last }) => match self.exec {
                 SpmExec::RowWise => {
                     let (gxm, partial) =
@@ -513,7 +796,7 @@ impl LinearOp {
                     );
                 }
             },
-            (OpImpl::Spm(plan), LinearTrace::General { zs }) => match self.exec {
+            (OpImpl::Spm(plan) | OpImpl::Butterfly(plan), LinearTrace::General { zs }) => match self.exec {
                 SpmExec::RowWise => {
                     let (gxm, partial) =
                         spm_backward_general_rowwise(plan, &self.params, x, zs, gy);
@@ -746,6 +1029,140 @@ fn reshape_mat(m: &mut Mat, rows: usize, cols: usize) {
     m.cols = cols;
     m.data.clear();
     m.data.resize(rows * cols, 0.0);
+}
+
+/// Low-rank forward: y = x·Vᵀ·Uᵀ + b through the (B, r) intermediate
+/// `t` (an op-owned reusable buffer, DESIGN.md §15). Params flat
+/// `[U (d_out x r) | V (r x d_in) | bias]` as laid out by
+/// [`LinearOp::new`].
+fn lowrank_forward_into(
+    params: &[f32],
+    d_in: usize,
+    d_out: usize,
+    rank: usize,
+    x: &Mat,
+    t: &mut Mat,
+    out: &mut Mat,
+) {
+    assert_eq!(x.cols, d_in, "input width");
+    let (u, rest) = params.split_at(d_out * rank);
+    let (v, bias) = rest.split_at(rank * d_in);
+    tensor::matmul_nt_slice_into(x, v, rank, t);
+    tensor::matmul_nt_slice_into(t, u, d_out, out);
+    tensor::add_bias(out, bias);
+}
+
+/// Low-rank backward: gt = gy·U, then gU += gyᵀ·t, gV += gtᵀ·x,
+/// gb += column-sum(gy), gx = gt·V. `t` is the forward intermediate
+/// carried by the trace; `gt` is the op-owned reusable scratch
+/// (DESIGN.md §15). Parameter gradients ACCUMULATE (BPTT contract).
+fn lowrank_backward_into(
+    params: &[f32],
+    d_in: usize,
+    d_out: usize,
+    rank: usize,
+    x: &Mat,
+    t: &Mat,
+    gy: &Mat,
+    gt: &mut Mat,
+    grads: &mut [f32],
+    gx: &mut Mat,
+) {
+    assert_eq!(x.cols, d_in, "input width");
+    assert_eq!(gy.cols, d_out, "adjoint width");
+    assert_eq!(t.rows, x.rows, "trace batch");
+    let ulen = d_out * rank;
+    let vlen = rank * d_in;
+    tensor::matmul_slice_into(gy, &params[..ulen], rank, gt);
+    let (gu, rest) = grads.split_at_mut(ulen);
+    let (gv, gb) = rest.split_at_mut(vlen);
+    tensor::matmul_tn_accum(gy, t, gu);
+    tensor::matmul_tn_accum(gt, x, gv);
+    for r in 0..gy.rows {
+        for (b, v) in gb.iter_mut().zip(gy.row(r)) {
+            *b += v;
+        }
+    }
+    tensor::matmul_slice_into(gt, &params[ulen..ulen + vlen], d_in, gx);
+}
+
+/// Block-shuffle forward:
+/// `y[k*bs + i] = bias[k*bs + i] + Σ_j W_k[i][j] · x[perm[k*bs + j]]` —
+/// a block-diagonal matmul whose block k reads the shuffled input slots
+/// `perm[k*bs..(k+1)*bs]`. Params flat `[blocks | bias]`, each block
+/// row-major (bs x bs). The gather costs no arithmetic; one warm call
+/// allocates nothing (DESIGN.md §15).
+fn blockshuffle_forward_into(
+    params: &[f32],
+    n: usize,
+    block: usize,
+    perm: &[u32],
+    x: &Mat,
+    out: &mut Mat,
+) {
+    assert_eq!(x.cols, n, "input width");
+    let (blocks, bias) = params.split_at(n * block);
+    reshape_mat(out, x.rows, n);
+    for row in 0..x.rows {
+        let xr = x.row(row);
+        let yr = out.row_mut(row);
+        for k in 0..n / block {
+            let base = k * block;
+            let wk = &blocks[base * block..(base + block) * block];
+            for i in 0..block {
+                let wrow = &wk[i * block..(i + 1) * block];
+                let mut acc = bias[base + i];
+                for j in 0..block {
+                    acc += wrow[j] * xr[perm[base + j] as usize];
+                }
+                yr[base + i] = acc;
+            }
+        }
+    }
+}
+
+/// Block-shuffle backward. `perm` is a bijection, so each `gx` element
+/// belongs to exactly one (block, j) pair — `gx` is reshaped (zeroed)
+/// then scatter-filled in one pass. Parameter gradients ACCUMULATE.
+fn blockshuffle_backward_into(
+    params: &[f32],
+    n: usize,
+    block: usize,
+    perm: &[u32],
+    x: &Mat,
+    gy: &Mat,
+    grads: &mut [f32],
+    gx: &mut Mat,
+) {
+    assert_eq!(x.cols, n, "input width");
+    assert_eq!(gy.cols, n, "adjoint width");
+    let wlen = n * block;
+    let blocks = &params[..wlen];
+    let (gw, gb) = grads.split_at_mut(wlen);
+    reshape_mat(gx, x.rows, n);
+    for row in 0..x.rows {
+        let xr = x.row(row);
+        let gyr = gy.row(row);
+        let gxr = gx.row_mut(row);
+        for k in 0..n / block {
+            let base = k * block;
+            let wk = &blocks[base * block..(base + block) * block];
+            let gwk = &mut gw[base * block..(base + block) * block];
+            for i in 0..block {
+                let g = gyr[base + i];
+                let wrow = &wk[i * block..(i + 1) * block];
+                let gwrow = &mut gwk[i * block..(i + 1) * block];
+                for j in 0..block {
+                    let src = perm[base + j] as usize;
+                    gwrow[j] += g * xr[src];
+                    gxr[src] += wrow[j] * g;
+                }
+            }
+        }
+        for (b, v) in gb.iter_mut().zip(gyr) {
+            *b += v;
+        }
+    }
 }
 
 /// Batch-fused training forward into caller-owned output and trace
@@ -1743,17 +2160,18 @@ mod tests {
     }
 
     #[test]
-    fn both_kinds_round_trip_shapes() {
-        for kind in [LinearKind::Dense, LinearKind::Spm] {
+    fn all_kinds_round_trip_shapes() {
+        for kind in LinearKind::ALL {
             let cfg = LinearCfg { kind, ..LinearCfg::spm(16, Variant::General) };
             let mut adam = Adam::new(1e-3);
             let mut rng = Rng::new(1);
             let mut op = LinearOp::new(cfg, &mut rng, &mut adam);
+            assert_eq!(op.kind(), kind);
             let x = Mat::from_vec(4, 16, rng.normal_vec(64, 1.0));
             let (y, trace) = op.forward_train(&x);
-            assert_eq!((y.rows, y.cols), (4, 16));
+            assert_eq!((y.rows, y.cols), (4, 16), "{}", kind.name());
             let gx = op.backward(&x, &trace, &y);
-            assert_eq!((gx.rows, gx.cols), (4, 16));
+            assert_eq!((gx.rows, gx.cols), (4, 16), "{}", kind.name());
         }
     }
 
@@ -1762,6 +2180,312 @@ mod tests {
         let mut adam = Adam::new(1e-3);
         let mut rng = Rng::new(5);
         let mut head = LinearOp::new(LinearCfg::dense_rect(3, 10), &mut rng, &mut adam);
+        let x = Mat::from_vec(7, 10, rng.normal_vec(70, 1.0));
+        let (y, tr) = head.forward_train(&x);
+        assert_eq!((y.rows, y.cols), (7, 3));
+        let gy = Mat::from_vec(7, 3, rng.normal_vec(21, 1.0));
+        let gx = head.backward(&x, &tr, &gy);
+        assert_eq!((gx.rows, gx.cols), (7, 10));
+    }
+
+    // ---- structured-operator zoo (DESIGN.md §19) ----
+
+    fn mk_zoo(cfg: LinearCfg, seed: u64) -> LinearOp {
+        let mut rng = Rng::new(seed + 100);
+        let mut adam = Adam::new(1e-3);
+        LinearOp::new(cfg.with_seed(seed), &mut rng, &mut adam)
+    }
+
+    /// Satellite (bugfix): ONE FLOP convention — multiply-adds counted
+    /// individually, bias included — pinned per kind so ablate FLOP
+    /// columns compare like for like.
+    #[test]
+    fn zoo_flops_formulas_pinned() {
+        let n = 16;
+        assert_eq!(mk_zoo(LinearCfg::dense(n), 1).flops_per_row(), (2 * n * n + n) as u64);
+        // default depth at n=16 is log2(16) = 4 stages
+        let spm = mk_zoo(LinearCfg::spm(n, Variant::General), 1);
+        assert_eq!(spm.flops_per_row(), (3 * n + 4 * (6 * (n / 2))) as u64);
+        // butterfly = the same stage arithmetic as general SPM
+        let bfly = mk_zoo(LinearCfg::butterfly(n), 1);
+        assert_eq!(bfly.flops_per_row(), spm.flops_per_row());
+        // default budget-matched picks at n=16: rank 5, block 8
+        let lr = mk_zoo(LinearCfg::lowrank(n), 1);
+        assert_eq!(lr.rank(), Some(5));
+        assert_eq!(lr.flops_per_row(), (2 * 5 * (n + n) + n) as u64);
+        let bsh = mk_zoo(LinearCfg::blockshuffle(n), 1);
+        assert_eq!(bsh.block_size(), Some(8));
+        assert_eq!(bsh.flops_per_row(), (2 * n * 8 + n) as u64);
+    }
+
+    /// Satellite: the equal-parameter-budget helpers the zoo plans lean
+    /// on. Defaults land each kind as close to the default-SPM param
+    /// count as its structure allows.
+    #[test]
+    fn zoo_equal_budget_defaults() {
+        // spm_budget(16): 3n + L*4*(n/2) + L at L=4
+        assert_eq!(spm_budget(16), 180);
+        assert_eq!(mk_zoo(LinearCfg::spm(16, Variant::General), 7).param_count(), 180);
+        assert_eq!(rank_for_budget(16, 16, 180), 5);
+        assert_eq!(block_for_budget(16, 180), 8);
+        // rank clamps into [1, min(d_in, d_out)]
+        assert_eq!(rank_for_budget(4, 4, 1_000_000), 4);
+        assert_eq!(rank_for_budget(64, 64, 0), 1);
+        let lr = mk_zoo(LinearCfg::lowrank(16), 7);
+        assert_eq!(lr.param_count(), 5 * 16 + 5 * 16 + 16);
+        let bsh = mk_zoo(LinearCfg::blockshuffle(16), 7);
+        assert_eq!(bsh.param_count(), 16 * 8 + 16);
+        // butterfly param count is IDENTICAL to general SPM at the same
+        // width/depth — the budget match is structural, not approximate
+        let bfly = mk_zoo(LinearCfg::butterfly(16), 7);
+        assert_eq!(bfly.param_count(), 180);
+    }
+
+    /// A butterfly op IS the general-SPM machinery pinned to the
+    /// butterfly schedule: same seed -> bit-identical params and
+    /// forwards; only the kind tag (and hence config/fingerprint
+    /// identity) differs.
+    #[test]
+    fn butterfly_matches_spm_on_butterfly_schedule() {
+        let bfly = mk_zoo(LinearCfg::butterfly(12), 3);
+        let spm = mk_zoo(LinearCfg::spm(12, Variant::General).with_schedule(Schedule::Butterfly), 3);
+        assert_eq!(bfly.params(), spm.params());
+        assert_eq!(bfly.kind(), LinearKind::Butterfly);
+        assert_eq!(spm.kind(), LinearKind::Spm);
+        assert!(bfly.plan().is_some());
+        let mut rng = Rng::new(9);
+        let x = Mat::from_vec(5, 12, rng.normal_vec(60, 1.0));
+        assert_eq!(bfly.forward(&x).data, spm.forward(&x).data);
+        // a rotation-variant or shift-schedule config does not leak in:
+        // butterfly_spec pins variant/schedule regardless of the cfg
+        let pinned = mk_zoo(
+            LinearCfg::butterfly(12).with_schedule(Schedule::Shift),
+            3,
+        );
+        assert_eq!(pinned.params(), bfly.params());
+    }
+
+    /// Low-rank forward/backward against an explicitly materialized
+    /// dense W = U·V: same y, same g_x, same bias gradient.
+    #[test]
+    fn lowrank_matches_materialized_dense() {
+        let (d_out, d_in, r) = (6, 9, 3);
+        let cfg = LinearCfg {
+            kind: LinearKind::LowRank,
+            ..LinearCfg::dense_rect(d_out, d_in)
+        }
+        .with_rank(r);
+        let mut lr = mk_zoo(cfg, 11);
+        assert_eq!(lr.rank(), Some(r));
+        assert_eq!(lr.param_count(), d_out * r + r * d_in + d_out);
+        let (u, rest) = lr.params().split_at(d_out * r);
+        let (v, bias) = rest.split_at(r * d_in);
+        // W[o][i] = sum_k U[o][k] * V[k][i]
+        let mut w = vec![0.0f32; d_out * d_in];
+        for o in 0..d_out {
+            for i in 0..d_in {
+                for k in 0..r {
+                    w[o * d_in + i] += u[o * r + k] * v[k * d_in + i];
+                }
+            }
+        }
+        let bias = bias.to_vec();
+        let mut dense = mk_zoo(LinearCfg::dense_rect(d_out, d_in), 12);
+        dense.params_mut()[..d_out * d_in].copy_from_slice(&w);
+        dense.params_mut()[d_out * d_in..].copy_from_slice(&bias);
+
+        let mut rng = Rng::new(13);
+        let x = Mat::from_vec(4, d_in, rng.normal_vec(4 * d_in, 1.0));
+        let want = dense.forward(&x);
+        assert!(lr.forward(&x).max_abs_diff(&want) < 1e-5);
+
+        let gy = Mat::from_vec(4, d_out, rng.normal_vec(4 * d_out, 1.0));
+        let (_yd, dtr) = dense.forward_train(&x);
+        let gx_ref = dense.backward(&x, &dtr, &gy);
+        let (_yl, ltr) = lr.forward_train(&x);
+        lr.zero_grads();
+        let gx = lr.backward(&x, &ltr, &gy);
+        assert!(gx.max_abs_diff(&gx_ref) < 1e-4);
+        let glen = lr.param_count();
+        for (a, b) in lr.grads()[glen - d_out..]
+            .iter()
+            .zip(&dense.grads()[d_out * d_in..])
+        {
+            assert!((a - b).abs() < 1e-5, "bias grad {a} vs {b}");
+        }
+    }
+
+    /// Block-shuffle forward/backward against the dense op whose W has
+    /// each block scattered at `W[base+i][perm[base+j]]`: same y, same
+    /// g_x, and each block gradient matches its scattered dense slot.
+    #[test]
+    fn blockshuffle_matches_materialized_dense() {
+        let (n, bs) = (12, 4);
+        let mut bsh = mk_zoo(LinearCfg::blockshuffle(n).with_block(bs), 21);
+        assert_eq!(bsh.block_size(), Some(bs));
+        let perm = bsh.shuffle().unwrap().to_vec();
+        let blocks = bsh.params()[..n * bs].to_vec();
+        let bias = bsh.params()[n * bs..].to_vec();
+        let mut w = vec![0.0f32; n * n];
+        for k in 0..n / bs {
+            let base = k * bs;
+            for i in 0..bs {
+                for j in 0..bs {
+                    let src = perm[base + j] as usize;
+                    w[(base + i) * n + src] = blocks[(base * bs) + i * bs + j];
+                }
+            }
+        }
+        let mut dense = mk_zoo(LinearCfg::dense(n), 22);
+        dense.params_mut()[..n * n].copy_from_slice(&w);
+        dense.params_mut()[n * n..].copy_from_slice(&bias);
+
+        let mut rng = Rng::new(23);
+        let x = Mat::from_vec(5, n, rng.normal_vec(5 * n, 1.0));
+        let want = dense.forward(&x);
+        assert!(bsh.forward(&x).max_abs_diff(&want) < 1e-5);
+
+        let gy = Mat::from_vec(5, n, rng.normal_vec(5 * n, 1.0));
+        let (_yd, dtr) = dense.forward_train(&x);
+        let gx_ref = dense.backward(&x, &dtr, &gy);
+        let (_yb, btr) = bsh.forward_train(&x);
+        bsh.zero_grads();
+        let gx = bsh.backward(&x, &btr, &gy);
+        assert!(gx.max_abs_diff(&gx_ref) < 1e-4);
+        for k in 0..n / bs {
+            let base = k * bs;
+            for i in 0..bs {
+                for j in 0..bs {
+                    let src = perm[base + j] as usize;
+                    let a = bsh.grads()[(base * bs) + i * bs + j];
+                    let b = dense.grads()[(base + i) * n + src];
+                    assert!((a - b).abs() < 1e-5, "block grad {a} vs {b}");
+                }
+            }
+        }
+        for (a, b) in bsh.grads()[n * bs..].iter().zip(&dense.grads()[n * n..]) {
+            assert!((a - b).abs() < 1e-5, "bias grad {a} vs {b}");
+        }
+    }
+
+    /// Satellite: central-FD parameter + input gradient checks for every
+    /// new kind (dense/spm have their own suites above).
+    #[test]
+    fn zoo_param_and_input_grads_finite_difference() {
+        let n = 8;
+        let cfgs = [
+            LinearCfg::lowrank(n).with_rank(3),
+            LinearCfg::blockshuffle(n).with_block(4),
+            LinearCfg::butterfly(n).with_stages(3),
+        ];
+        for cfg in cfgs {
+            let kind = cfg.kind;
+            let mut op = mk_zoo(cfg, 17);
+            let mut rng = Rng::new(19);
+            for v in op.params_mut().iter_mut() {
+                *v += 0.1 * rng.normal();
+            }
+            let mut xv = rng.normal_vec(3 * n, 1.0);
+            let x = Mat::from_vec(3, n, xv.clone());
+            let (y, trace) = op.forward_train(&x);
+            let (_l, gy) = loss_and_gy(&y);
+            op.zero_grads();
+            let gx = op.backward(&x, &trace, &gy);
+
+            let mut pv = op.params().to_vec();
+            let total = pv.len();
+            // endpoints + interior samples cover every layout group of
+            // every kind (U/V/bias, blocks/bias, diag/mix/lone)
+            let idxs = [0, 1, total / 3, total / 2, 2 * total / 3, total - 2, total - 1];
+            for &idx in &idxs {
+                let got = op.grads()[idx];
+                let num = numerical_grad(&mut pv, idx, 1e-2, |v| {
+                    op.forward_with(v, &x).data.iter().map(|t| t.tanh()).sum()
+                });
+                assert!(
+                    (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                    "{} grad[{idx}]: {got} vs {num}",
+                    kind.name()
+                );
+            }
+            for idx in [0usize, 7, 12, 23] {
+                let got = gx.data[idx];
+                let num = numerical_grad(&mut xv, idx, 1e-2, |v| {
+                    let xm = Mat::from_vec(3, n, v.to_vec());
+                    op.forward(&xm).data.iter().map(|t| t.tanh()).sum()
+                });
+                assert!(
+                    (got - num).abs() < 3e-2 * (1.0f32.max(num.abs())),
+                    "{} gx[{idx}]: {got} vs {num}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    /// Satellite: forward/backward parity across ALL exec paths and
+    /// ragged B in {1, 3, 97} for the new kinds. Low-rank and
+    /// block-shuffle have a single kernel (exec is a no-op) — every exec
+    /// must be bit-identical; butterfly rides the SPM rowwise/fused/simd
+    /// paths and must agree within SPM's parity tolerance.
+    #[test]
+    fn zoo_exec_and_batch_parity() {
+        let _lock = exec_lock();
+        let n = 11;
+        let cfgs = [
+            LinearCfg::lowrank(n).with_rank(4),
+            LinearCfg::blockshuffle(n).with_block(11),
+            LinearCfg::butterfly(n).with_stages(4),
+        ];
+        for cfg in cfgs {
+            let kind = cfg.kind;
+            for batch in [1usize, 3, 97] {
+                let mut rng = Rng::new(2000 + batch as u64);
+                let x = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+                let gy = Mat::from_vec(batch, n, rng.normal_vec(batch * n, 1.0));
+                let mut want_y: Option<Mat> = None;
+                let mut want_gx: Option<Mat> = None;
+                let mut want_g: Option<Vec<f32>> = None;
+                for exec in ALL_EXECS {
+                    let mut op = mk_zoo(cfg, 31);
+                    op.set_exec(exec);
+                    let ctx = format!("{} B={batch} {exec:?}", kind.name());
+                    let y = op.forward(&x);
+                    let (yt, trace) = op.forward_train(&x);
+                    assert!(yt.max_abs_diff(&y) < 1e-6, "{ctx}: train fwd");
+                    let yw = op.forward_with(&op.params().to_vec(), &x);
+                    assert!(yw.max_abs_diff(&y) < 1e-6, "{ctx}: forward_with");
+                    op.zero_grads();
+                    let gx = op.backward(&x, &trace, &gy);
+                    match (&want_y, &want_gx, &want_g) {
+                        (Some(wy), Some(wgx), Some(wg)) => {
+                            assert!(y.max_abs_diff(wy) < 1e-5, "{ctx}: fwd parity");
+                            assert!(gx.max_abs_diff(wgx) < 1e-4, "{ctx}: gx parity");
+                            check_close(op.grads(), wg, 1e-3, &ctx).unwrap();
+                        }
+                        _ => {
+                            want_y = Some(y);
+                            want_gx = Some(gx);
+                            want_g = Some(op.grads().to_vec());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rectangular low-rank read-out heads work like rectangular dense
+    /// ones (the two kinds the factory allows off the square path).
+    #[test]
+    fn rectangular_lowrank_head_shapes() {
+        let cfg = LinearCfg {
+            kind: LinearKind::LowRank,
+            ..LinearCfg::dense_rect(3, 10)
+        }
+        .with_rank(2);
+        let mut head = mk_zoo(cfg, 41);
+        assert_eq!(head.param_count(), 3 * 2 + 2 * 10 + 3);
+        let mut rng = Rng::new(42);
         let x = Mat::from_vec(7, 10, rng.normal_vec(70, 1.0));
         let (y, tr) = head.forward_train(&x);
         assert_eq!((y.rows, y.cols), (7, 3));

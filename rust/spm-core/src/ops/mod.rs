@@ -10,6 +10,9 @@ pub mod plan;
 pub mod workspace;
 
 pub use backend::{ScalarBackend, StageBackend};
-pub use linear::{LinearCfg, LinearKind, LinearOp, LinearTrace, SpmExec};
+pub use linear::{
+    block_for_budget, rank_for_budget, spm_budget, LinearCfg, LinearKind, LinearOp, LinearTrace,
+    SpmExec,
+};
 pub use plan::{ParamLayout, SpmPlan, PAIR_LANES};
 pub use workspace::{BwdScratch, Prepared, Workspace};

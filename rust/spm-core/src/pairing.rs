@@ -145,6 +145,18 @@ pub fn default_num_stages(n: usize) -> usize {
     ((n as f64).log2().round() as usize).max(1)
 }
 
+/// The fixed deterministic input shuffle of the DYAD-style block-shuffle
+/// operator (DESIGN.md §19): a seeded Fisher–Yates permutation of
+/// `0..n-1`, derived exactly like [`random_stage`]'s per-stage streams
+/// but on its own stream tag so a block-shuffle op and a random-schedule
+/// SPM op at the same seed do not share draws. Part of the checkpoint
+/// arch fingerprint — same (n, seed) must reproduce the same shuffle on
+/// every build.
+pub fn shuffle_permutation(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B9).wrapping_add(0x5BD1E995));
+    rng.permutation(n)
+}
+
 /// FNV-1a-64 fingerprint, bit-identical to python's `schedule_fingerprint`.
 pub fn fingerprint(stages: &[StagePairing]) -> u64 {
     let mut h: u64 = 0xCBF29CE484222325;
@@ -232,6 +244,26 @@ mod tests {
         assert_eq!(default_num_stages(256), 8);
         assert_eq!(default_num_stages(4096), 12);
         assert_eq!(default_num_stages(2), 1);
+    }
+
+    #[test]
+    fn shuffle_permutation_is_a_seeded_bijection() {
+        for n in [2usize, 3, 8, 97, 256] {
+            for seed in [0u64, 1, 7, 0xDEAD_BEEF] {
+                let p = shuffle_permutation(n, seed);
+                assert_eq!(p.len(), n);
+                let mut seen = vec![false; n];
+                for &v in &p {
+                    assert!(!std::mem::replace(&mut seen[v as usize], true), "dup {v}");
+                }
+                // deterministic across calls...
+                assert_eq!(p, shuffle_permutation(n, seed));
+            }
+            // ...and seed-sensitive (n >= 3 leaves room to differ)
+            if n >= 3 {
+                assert_ne!(shuffle_permutation(n, 1), shuffle_permutation(n, 2), "n={n}");
+            }
+        }
     }
 
     // Golden fingerprints exported by python; regenerate with:

@@ -6,7 +6,7 @@
 //! forall(100, 7, |rng| { ... ; Ok(()) })
 //! ```
 
-use crate::ops::SpmExec;
+use crate::ops::{block_for_budget, rank_for_budget, LinearCfg, LinearKind, LinearOp, SpmExec};
 use crate::pairing::Schedule;
 use crate::rng::Rng;
 use crate::spm::Variant;
@@ -61,6 +61,25 @@ pub fn check_close(got: &[f32], want: &[f32], tol: f32, what: &str) -> Result<()
     Ok(())
 }
 
+/// Equal-parameter-budget config for comparing `kind` against an
+/// existing (square) SPM op: picks the rank / block size whose parameter
+/// count lands closest to `spm.param_count()` at the same width and
+/// seed, so zoo comparisons measure STRUCTURE, not capacity. Dense,
+/// Spm and Butterfly need no knob (dense is the upper baseline;
+/// butterfly matches general SPM structurally), so their configs pass
+/// through width + seed unchanged.
+pub fn match_param_budget(spm: &LinearOp, kind: LinearKind) -> LinearCfg {
+    let n = spm.n();
+    let budget = spm.param_count();
+    let seed = spm.plan().map_or(0, |p| p.spec.seed);
+    let cfg = LinearCfg { kind, ..LinearCfg::dense(n) }.with_seed(seed);
+    match kind {
+        LinearKind::LowRank => cfg.with_rank(rank_for_budget(n, n, budget)),
+        LinearKind::BlockShuffle => cfg.with_block(block_for_budget(n, budget)),
+        _ => cfg,
+    }
+}
+
 /// Central-difference numerical gradient of a scalar function w.r.t. one
 /// coordinate of `params` — used by the finite-difference gradient checks.
 pub fn numerical_grad(
@@ -112,5 +131,41 @@ mod tests {
         let g = numerical_grad(&mut p, 0, 1e-3, |v| v[0] * v[0]);
         assert!((g - 6.0).abs() < 1e-2);
         assert_eq!(p[0], 3.0); // restored
+    }
+
+    #[test]
+    fn match_param_budget_tracks_the_spm_count() {
+        let mut opt = crate::optim::Adam::new(1e-3);
+        let mut rng = Rng::new(4);
+        let spm = LinearOp::new(
+            LinearCfg::spm(64, Variant::General).with_seed(5),
+            &mut rng,
+            &mut opt,
+        );
+        let budget = spm.param_count();
+        for kind in [LinearKind::LowRank, LinearKind::BlockShuffle, LinearKind::Butterfly] {
+            let cfg = match_param_budget(&spm, kind);
+            assert_eq!(cfg.kind, kind);
+            assert_eq!(cfg.seed, 5);
+            let op = LinearOp::new(cfg, &mut Rng::new(4), &mut opt);
+            // no OTHER admissible knob setting lands closer to the budget
+            let gap = op.param_count().abs_diff(budget);
+            match kind {
+                LinearKind::LowRank => {
+                    for r in 1..=64usize {
+                        let alt = r * 64 + r * 64 + 64;
+                        assert!(alt.abs_diff(budget) >= gap, "rank {r} beats the pick");
+                    }
+                }
+                LinearKind::BlockShuffle => {
+                    for bs in (1..=64usize).filter(|b| 64 % b == 0) {
+                        let alt = 64 * bs + 64;
+                        assert!(alt.abs_diff(budget) >= gap, "block {bs} beats the pick");
+                    }
+                }
+                // butterfly shares general SPM's layout exactly
+                _ => assert_eq!(op.param_count(), budget),
+            }
+        }
     }
 }

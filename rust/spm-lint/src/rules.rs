@@ -86,9 +86,14 @@ const ALLOC_PATTERNS: [(&[&str], &str); 8] = [
 
 const KERNEL_PREFIXES: [&str; 4] = ["stage_", "fwd_", "bwd_", "lone_"];
 
+/// Operator-zoo kernels in ops/linear.rs (DESIGN.md §19): hot by prefix
+/// regardless of suffix, so a helper split out of a `*_into` kernel
+/// stays under the zero-allocation contract.
+const ZOO_PREFIXES: [&str; 2] = ["lowrank_", "blockshuffle_"];
+
 /// `(fn name, body span)` for the DESIGN.md §15 hot paths: `*_into`
-/// entry points everywhere, stage kernels in ops/backend*.rs, and
-/// `NativeExecutor::forward` in serve.rs.
+/// entry points everywhere, stage kernels in ops/backend*.rs, zoo
+/// kernels in ops/linear.rs, and `NativeExecutor::forward` in serve.rs.
 fn hot_functions(sf: &SourceFile) -> Vec<(String, (usize, usize))> {
     let mask = &sf.lex.mask;
     let base = sf.base();
@@ -101,6 +106,9 @@ fn hot_functions(sf: &SourceFile) -> Vec<(String, (usize, usize))> {
         let mut hot = name.ends_with("_into");
         if !hot && base.starts_with("backend") && KERNEL_PREFIXES.iter().any(|p| name.starts_with(p))
         {
+            hot = true;
+        }
+        if !hot && base == "linear.rs" && ZOO_PREFIXES.iter().any(|p| name.starts_with(p)) {
             hot = true;
         }
         if !hot && base == "serve.rs" && name == "forward" {

@@ -1,0 +1,15 @@
+pub fn lowrank_prepare(xs: &[f32]) -> Vec<f32> {
+    let buf: Vec<f32> = Vec::new();
+    let _ = xs;
+    buf
+}
+
+pub fn blockshuffle_gather(xs: &[f32], k: f32) -> f32 {
+    let tmp = xs.to_vec();
+    tmp.iter().sum::<f32>() * k
+}
+
+pub fn unrelated_helper(xs: &[f32]) -> Vec<f32> {
+    // not a zoo kernel: allocation stays fine outside the hot prefixes
+    xs.iter().map(|v| v * 2.0).collect()
+}

@@ -1,0 +1,11 @@
+pub fn lowrank_forward_accum(t: &[f32], u: &[f32], out: &mut [f32]) {
+    for (o, (a, b)) in out.iter_mut().zip(t.iter().zip(u)) {
+        *o += a * b;
+    }
+}
+
+pub fn blockshuffle_scatter(src: &[f32], perm: &[u32], out: &mut [f32]) {
+    for (v, &p) in src.iter().zip(perm) {
+        out[p as usize] = *v;
+    }
+}

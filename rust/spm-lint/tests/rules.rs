@@ -57,6 +57,18 @@ fn r2_alloc_pass_fail_suppressed() {
 }
 
 #[test]
+fn r2_alloc_covers_zoo_kernels_in_linear_rs() {
+    // lowrank_/blockshuffle_ prefixed fns in linear.rs are hot even
+    // without an `_into` suffix (DESIGN.md §19); other fns stay cold
+    assert_clean("alloc/zoo_pass");
+    assert_fires(
+        "alloc/zoo_fail",
+        "alloc",
+        &[("linear.rs", 2), ("linear.rs", 8)],
+    );
+}
+
+#[test]
 fn r2_alloc_suppression_must_be_backed_by_design_15() {
     // suppressed but the fn is absent from §15's exception list: the
     // cross-check fires as a (non-suppressible) consistency finding

@@ -408,11 +408,16 @@ ALLOC_PATTERNS = [
 
 KERNEL_FN = re.compile(r"^(stage_|fwd_|bwd_|lone_)")
 
+# Operator-zoo kernels in ops/linear.rs (DESIGN.md §19): hot by prefix
+# regardless of suffix, so a helper split out of a `*_into` kernel
+# stays under the zero-allocation contract.
+ZOO_FN = re.compile(r"^(lowrank_|blockshuffle_)")
+
 
 def hot_functions(sf):
     """(fn name, body span) for the DESIGN.md §15 hot paths: `*_into`
-    entry points everywhere, stage kernels in ops/backend*.rs, and
-    `NativeExecutor::forward` in serve.rs."""
+    entry points everywhere, stage kernels in ops/backend*.rs, zoo
+    kernels in ops/linear.rs, and `NativeExecutor::forward` in serve.rs."""
     mask = sf.lex.mask
     base = sf.path.rsplit("/", 1)[-1]
     tests = test_regions(mask)
@@ -422,6 +427,8 @@ def hot_functions(sf):
             continue
         hot = name.endswith("_into")
         if not hot and base.startswith("backend") and KERNEL_FN.search(name):
+            hot = True
+        if not hot and base == "linear.rs" and ZOO_FN.search(name):
             hot = True
         if not hot and base == "serve.rs" and name == "forward":
             hdr = impl_header_of(mask, sig_start)
